@@ -1,0 +1,9 @@
+"""Repo-root pytest shim: make `python/` importable so
+`pytest python/tests/` works from the workspace root (the Makefile's
+`make test` runs from inside python/; CI-style invocations run here).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

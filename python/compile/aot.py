@@ -1,0 +1,144 @@
+"""AOT lowering driver: JAX step functions -> HLO text + JSON manifest.
+
+Interchange format is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Per model this emits
+    <model>_train.hlo.txt   (params..., masks..., x, y, lr) ->
+                            (params'..., loss, acc)
+    <model>_eval.hlo.txt    (params..., masks..., x, y) -> (loss, correct)
+    <model>_delta.hlo.txt   (old params..., new params...) ->
+                            (per-group neuron delta vectors...)
+    <model>_manifest.json   shapes + ordering contract for the rust runtime
+
+plus a tiny `smoke.hlo.txt` used by rust runtime unit tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.masked_dense import vmem_footprint_bytes, mxu_utilization_estimate
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+#: local-steps variant baked into the train_multi artifact (§Perf L2);
+#: the rust coordinator uses it whenever cfg.local_steps == this value
+TRAIN_MULTI_K = 4
+
+
+def lower_model(md: M.ModelDef, out_dir: str, *, verbose: bool = True) -> dict:
+    files = {}
+    for mode, fn in (
+        ("train", md.train_step),
+        ("eval", md.eval_step),
+        ("delta", md.delta_step),
+        (f"train_multi:{TRAIN_MULTI_K}", md.train_multi(TRAIN_MULTI_K)),
+    ):
+        args = md.example_args(mode)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{md.name}_{mode.replace(':', '')}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[mode.split(":")[0]] = fname
+        if verbose:
+            print(f"  {fname}: {len(text)} chars, {len(args)} inputs")
+
+    # §Perf analytics for the largest FC layer (DESIGN.md §Hardware-Adaptation)
+    fc_shapes = [s for n, s in md.params if len(s) == 2 and not n.endswith("_b")]
+    big = max(fc_shapes, key=lambda s: s[0] * s[1]) if fc_shapes else (1, 1)
+    perf = {
+        "largest_dense": list(big),
+        "vmem_bytes_per_step": vmem_footprint_bytes(md.batch_size, big[0], big[1]),
+        "mxu_utilization": mxu_utilization_estimate(md.batch_size, big[0], big[1]),
+    }
+
+    manifest = {
+        "model": md.name,
+        "batch_size": md.batch_size,
+        "x_shape": list(md.x_shape),
+        "x_dtype": md.x_dtype,
+        "num_classes": md.num_classes,
+        "params": [{"name": n, "shape": list(s)} for n, s in md.params],
+        "masks": [{"name": n, "size": s} for n, s in md.masks],
+        "delta_groups": [n for n, _, _ in md.delta_views],
+        "delta_inputs": md.delta_param_names(),
+        "artifacts": files,
+        "train_multi_k": TRAIN_MULTI_K,
+        "train_outputs": [n for n, _ in md.params] + ["loss", "acc"],
+        "eval_outputs": ["loss", "correct"],
+        "pallas_perf": perf,
+    }
+    mpath = os.path.join(out_dir, f"{md.name}_manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        nparams = sum(
+            int(jnp.prod(jnp.array(s))) for _, s in md.params
+        )
+        print(f"  {md.name}: {nparams} parameters, manifest -> {mpath}")
+    return manifest
+
+
+def lower_smoke(out_dir: str):
+    """fn(x, y) = (x @ y + 2,) over f32[2,2] — rust runtime smoke test."""
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    with open(os.path.join(out_dir, "smoke.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  smoke.hlo.txt: {len(text)} chars")
+
+
+DEFAULT_MODELS = ["femnist_cnn", "cifar_vgg9", "shakespeare_lstm", "cifar_resnet18"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=DEFAULT_MODELS)
+    ap.add_argument("--out", default=None, help="Makefile stamp file (compat)")
+    args = ap.parse_args(argv)
+
+    out_dir = args.out_dir
+    if args.out:  # `make artifacts` passes the stamp target path
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    lower_smoke(out_dir)
+    for name in args.models:
+        print(f"lowering {name} ...")
+        lower_model(M.build(name), out_dir)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""L1: Pallas kernels for FLuID's compute hot-spots.
+
+`masked_dense` — tiled masked matmul used by every maskable layer.
+`neuron_delta` — per-neuron max relative weight update (invariant scan).
+`ref` — pure-jnp oracles for both.
+"""
+
+from .masked_dense import masked_dense, vmem_footprint_bytes, mxu_utilization_estimate
+from .neuron_delta import neuron_delta
+from . import ref
+
+__all__ = [
+    "masked_dense",
+    "neuron_delta",
+    "ref",
+    "vmem_footprint_bytes",
+    "mxu_utilization_estimate",
+]

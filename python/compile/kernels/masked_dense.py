@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: masked dense layer  y = (x @ w + b) * mask.
+
+This is the compute hot-spot of FLuID's sub-model training: every
+fully-connected layer (and every LSTM gate projection) multiplies its
+output by a per-neuron 0/1 mask so that dropped ("invariant") neurons
+produce no output and — by chain rule — receive exactly zero gradient.
+One compiled artifact therefore serves *every* sub-model size.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * 3-D grid (M-blocks, N-blocks, K-blocks); K is the innermost,
+    sequential dimension accumulating into a VMEM scratch block, the
+    canonical Pallas matmul schedule.
+  * each (bm, bk) x (bk, bn) working set fits VMEM; the inner `jnp.dot`
+    targets the 128x128 MXU systolic array with f32 accumulation.
+  * the neuron mask is applied as an epilogue on the output block while
+    it is still resident in VMEM — invariant dropout's sparsity costs
+    nothing extra on the systolic array. On a real TPU the grid could
+    additionally skip all-zero N-blocks; with interpret=True we keep the
+    dense grid and let the device performance model account for the
+    compute saving (DESIGN.md §2).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; the interpreted lowering emits plain HLO that the rust
+runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: default block sizes. bm/bn target one MXU tile; bk covers 4 K-tiles
+#: per grid step (§Perf L1 iteration 1): the VMEM working set stays far
+#: under budget (~0.7 MiB at 128x512) while the sequential K loop — the
+#: dominant cost of the interpret-mode lowering and a pipeline-latency
+#: serialization on real TPU — shrinks 4x.
+DEFAULT_BM = 128
+DEFAULT_BK = 512
+DEFAULT_BN = 128
+
+
+def _cap(block: int, dim: int) -> int:
+    """Largest block size <= `block` that divides `dim` exactly.
+
+    Exact divisors avoid remainder-block masking; model layer widths are
+    chosen to be friendly (multiples of 8) so this rarely degrades far.
+    """
+    if dim <= block:
+        return dim
+    for b in range(block, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _masked_dense_kernel(x_ref, w_ref, b_ref, m_ref, o_ref, acc_ref, *, nk: int):
+    """One (i, j, k) grid step: accumulate x_blk @ w_blk into VMEM scratch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        # bias + neuron mask fused while the output block is in VMEM
+        o_ref[...] = (acc_ref[...] + b_ref[...][None, :]) * m_ref[...][None, :]
+
+
+def masked_dense(x, w, b, mask, *, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """``y[M,N] = (x[M,K] @ w[K,N] + b[N]) * mask[N]`` — Pallas-tiled.
+
+    ``mask`` is an f32 0/1 vector over output neurons (the paper's unit of
+    dropout: filters for CONV layers, activations for FC layers, hidden
+    units for LSTM layers; CONV is lowered onto this kernel via im2col in
+    model.py so every maskable layer shares one code path).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,) and mask.shape == (n,), (b.shape, mask.shape)
+    bm, bk, bn = _cap(bm, m), _cap(bk, k), _cap(bn, n)
+    nm, nk, nn = m // bm, k // bk, n // bn
+
+    return pl.pallas_call(
+        functools.partial(_masked_dense_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w, b, mask)
+
+
+def vmem_footprint_bytes(m, k, n, *, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """Analytic VMEM working-set estimate for one grid step (f32).
+
+    Used by the §Perf analysis in EXPERIMENTS.md: x-block + w-block +
+    bias/mask blocks + output block + accumulator scratch.
+    """
+    bm, bk, bn = _cap(bm, m), _cap(bk, k), _cap(bn, n)
+    return 4 * (bm * bk + bk * bn + 2 * bn + 2 * bm * bn)
+
+
+def mxu_utilization_estimate(m, k, n, *, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN):
+    """Fraction of each 128x128x128 MXU issue that does useful work."""
+    bm, bk, bn = _cap(bm, m), _cap(bk, k), _cap(bn, n)
+    return (min(bm, 128) * min(bk, 128) * min(bn, 128)) / float(128 ** 3)

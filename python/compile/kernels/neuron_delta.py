@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: per-neuron maximum relative weight update.
+
+FLuID's server identifies *invariant* neurons from the updates of the
+non-straggler clients (paper §5): a neuron whose weights all moved less
+than the drop-threshold ``th`` relative to their previous value is a
+drop candidate.  The per-neuron statistic this kernel computes is
+
+    delta[j] = max_i |w_new[i, j] - w_old[i, j]| / (|w_old[i, j]| + eps)
+
+for a weight matrix laid out as [fan_in, neurons] (CONV kernels are
+reshaped to [kh*kw*cin, cout] by model.py — "neurons" are filters there,
+matching the paper's definition).
+
+TPU mapping: 2-D grid (N-blocks, K-blocks) with K sequential; a VMEM
+scratch row keeps the running per-neuron max, so each step streams one
+(bk, bn) tile from HBM and performs a row-reduction on the VPU. The
+epilogue on the last K step writes the finished (bn,) row out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .masked_dense import _cap
+
+EPS = 1e-8
+
+
+def _neuron_delta_kernel(old_ref, new_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rel = jnp.abs(new_ref[...] - old_ref[...]) / (jnp.abs(old_ref[...]) + EPS)
+    acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(rel, axis=0))
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...]
+
+
+def neuron_delta(w_old, w_new, *, bk: int = 256, bn: int = 256):
+    """``delta[N] = max_K |w_new-w_old| / (|w_old|+eps)`` — Pallas-tiled.
+
+    Both inputs are [K, N] = [fan_in, neurons].
+    """
+    k, n = w_old.shape
+    assert w_new.shape == (k, n), (w_old.shape, w_new.shape)
+    bk, bn = _cap(bk, k), _cap(bn, n)
+    nk, nn = k // bk, n // bn
+
+    return pl.pallas_call(
+        functools.partial(_neuron_delta_kernel, nk=nk),
+        grid=(nn, nk),
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, kk: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.float32)],
+        interpret=True,
+    )(w_old, w_new)

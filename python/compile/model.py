@@ -1,0 +1,513 @@
+"""L2: FLuID's model zoo as masked JAX step functions (build-time only).
+
+Four models matching the paper's evaluation (§6):
+  * ``femnist_cnn``      — 2x conv5x5 (16, 64) + maxpool, FC-120, softmax-62
+  * ``cifar_vgg9``       — VGG-9: conv 32,32,64,64,128,128 + FC-512, FC-256
+  * ``shakespeare_lstm`` — 2-layer LSTM, 128 hidden units, char-level
+  * ``cifar_resnet18``   — ResNet-18 (width-configurable) for the
+                           scalability study (Fig 4c/5)
+
+Every maskable layer (CONV filters, FC activations, LSTM hidden units —
+the paper's definition of "neuron") takes a per-neuron f32 0/1 mask.
+Masking an activation zeroes both its contribution *and all gradients of
+its incident weights* (tested in tests/test_model.py), so a mask is
+numerically identical to the paper's physical sub-model extraction while
+keeping XLA shapes static — one AOT artifact serves every sub-model size.
+
+FC layers and LSTM gate projections run on the L1 Pallas kernel
+(`kernels.masked_dense`) through a custom VJP whose backward pass reuses
+the same kernel; CONV layers use XLA's native convolution with the mask
+applied on output channels (identical gradient semantics, see DESIGN.md).
+
+Exported step functions (all lowered by aot.py):
+  * train_step: (params..., masks..., x, y, lr) -> (params'..., loss, acc)
+  * eval_step:  (params..., masks..., x, y)     -> (loss, correct_count)
+  * delta_step: (old_params..., new_params...)  -> (delta_vec per group...)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.masked_dense import masked_dense
+from .kernels.neuron_delta import neuron_delta
+from .kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+Masks = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# masked dense with custom VJP — backward pass reuses the Pallas kernel
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def masked_dense_op(x, w, b, mask):
+    return masked_dense(x, w, b, mask)
+
+
+def _md_fwd(x, w, b, mask):
+    y = masked_dense(x, w, b, mask)
+    return y, (x, w, mask)
+
+
+def _md_bwd(res, g):
+    x, w, mask = res
+    k = x.shape[1]
+    gm = g * mask[None, :]
+    ones_k = jnp.ones((k,), jnp.float32)
+    zeros_k = jnp.zeros((k,), jnp.float32)
+    # dx = gm @ w.T  and  dw = x.T @ gm — both on the same Pallas kernel
+    dx = masked_dense(gm, w.T, zeros_k, ones_k)
+    dw = masked_dense(x.T, gm, jnp.zeros((g.shape[1],), jnp.float32), mask)
+    db = jnp.sum(gm, axis=0)
+    return dx, dw, db, jnp.zeros_like(mask)
+
+
+masked_dense_op.defvjp(_md_fwd, _md_bwd)
+
+
+def masked_conv(x, w, b, mask, *, stride=1, padding="SAME"):
+    """NHWC conv with per-filter mask on output channels.
+
+    "Neurons" in CONV layers are filters (paper §3.2); masking the output
+    channel zeroes the filter's contribution and all its weight gradients.
+    """
+    y = lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return (y + b[None, None, None, :]) * mask[None, None, None, :]
+
+
+def maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# model definition container
+# --------------------------------------------------------------------------
+
+@dataclass
+class ModelDef:
+    """Everything aot.py needs to lower one model."""
+
+    name: str
+    batch_size: int
+    params: List[Tuple[str, Tuple[int, ...]]]           # (name, shape)
+    masks: List[Tuple[str, int]]                        # (mask name, #neurons)
+    x_shape: Tuple[int, ...]
+    x_dtype: str                                        # "f32" | "i32"
+    forward: Callable[[Params, Masks, jnp.ndarray], jnp.ndarray] = None
+    # per maskable group: (mask_name, weight param name,
+    #   transform(tensor) -> [fan_in, neurons] 2-D view). The delta
+    # artifact takes ONLY these weight tensors (old..., new...) so the
+    # lowered HLO signature is explicit — jax DCEs unused jit args.
+    delta_views: List[Tuple[str, str, Callable[[jnp.ndarray], jnp.ndarray]]] = field(
+        default_factory=list
+    )
+    num_classes: int = 0
+
+    # ---- helpers -----------------------------------------------------------
+    def param_names(self):
+        return [n for n, _ in self.params]
+
+    def mask_names(self):
+        return [n for n, _ in self.masks]
+
+    def unflatten_params(self, flat):
+        return {n: t for (n, _), t in zip(self.params, flat)}
+
+    def unflatten_masks(self, flat):
+        return {n: t for (n, _), t in zip(self.masks, flat)}
+
+    def init_params(self, key) -> Params:
+        """He-uniform init — used by python tests; rust has its own mirror."""
+        out = {}
+        for name, shape in self.params:
+            key, sub = jax.random.split(key)
+            if name.endswith("_b"):
+                out[name] = jnp.zeros(shape, jnp.float32)
+            elif len(shape) >= 2:
+                fan_in = 1
+                for d in shape[:-1]:
+                    fan_in *= d
+                bound = (6.0 / fan_in) ** 0.5
+                out[name] = jax.random.uniform(
+                    sub, shape, jnp.float32, -bound, bound
+                )
+            else:
+                out[name] = jax.random.normal(sub, shape, jnp.float32) * 0.05
+        return out
+
+    # ---- step functions ----------------------------------------------------
+    def train_step(self, *flat):
+        np_, nm = len(self.params), len(self.masks)
+        params = self.unflatten_params(flat[:np_])
+        masks = self.unflatten_masks(flat[np_:np_ + nm])
+        x, y, lr = flat[np_ + nm], flat[np_ + nm + 1], flat[np_ + nm + 2]
+
+        def loss_fn(p):
+            logits = self.forward(p, masks, x)
+            loss = cross_entropy(logits, y)
+            return loss, accuracy(logits, y)
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params = [params[n] - lr * grads[n] for n in self.param_names()]
+        return (*new_params, loss, acc)
+
+    def train_multi(self, k: int):
+        """Build a k-step train function: runs k SGD steps over k stacked
+        batches inside one XLA program (lax.scan over the L2 step).
+
+        §Perf L2 optimization: one host<->device round trip per ROUND
+        instead of per local step — the coordinator's dominant conversion
+        cost at small batch sizes. Outputs mean loss/acc over the k steps.
+        """
+        np_, nm = len(self.params), len(self.masks)
+
+        def fn(*flat):
+            params = list(flat[:np_])
+            masks = flat[np_:np_ + nm]
+            xs, ys, lr = flat[np_ + nm], flat[np_ + nm + 1], flat[np_ + nm + 2]
+
+            def body(carry, xy):
+                ps = carry
+                x, y = xy
+                out = self.train_step(*ps, *masks, x, y, lr)
+                new_ps = list(out[:np_])
+                return new_ps, jnp.stack([out[-2], out[-1]])
+
+            final_ps, stats = jax.lax.scan(body, params, (xs, ys), length=k)
+            mean = jnp.mean(stats, axis=0)
+            return (*final_ps, mean[0], mean[1])
+
+        return fn
+
+    def eval_step(self, *flat):
+        np_, nm = len(self.params), len(self.masks)
+        params = self.unflatten_params(flat[:np_])
+        masks = self.unflatten_masks(flat[np_:np_ + nm])
+        x, y = flat[np_ + nm], flat[np_ + nm + 1]
+        logits = self.forward(params, masks, x)
+        loss = cross_entropy(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return loss, correct
+
+    def delta_param_names(self):
+        return [p for _, p, _ in self.delta_views]
+
+    def delta_step(self, *flat):
+        """flat = (old weight per group..., new weight per group...)."""
+        ng = len(self.delta_views)
+        outs = []
+        for i, (_, _, view) in enumerate(self.delta_views):
+            outs.append(neuron_delta(view(flat[i]), view(flat[ng + i])))
+        return tuple(outs)
+
+    # example args for lowering -------------------------------------------
+    def example_args(self, mode: str):
+        def zeros(shape, dt=jnp.float32):
+            return jax.ShapeDtypeStruct(tuple(shape), dt)
+
+        ps = [zeros(s) for _, s in self.params]
+        ms = [zeros((n,)) for _, n in self.masks]
+        xd = jnp.int32 if self.x_dtype == "i32" else jnp.float32
+        x = zeros(self.x_shape, xd)
+        y = zeros((self.batch_size,), jnp.int32)
+        if mode == "train":
+            return (*ps, *ms, x, y, zeros((), jnp.float32))
+        if mode == "eval":
+            return (*ps, *ms, x, y)
+        if mode == "delta":
+            shapes = dict(self.params)
+            ds = [zeros(shapes[p]) for p in self.delta_param_names()]
+            return (*ds, *ds)
+        if mode.startswith("train_multi"):
+            k = int(mode.split(":")[1])
+            xs = zeros((k, *self.x_shape), xd)
+            ys = zeros((k, self.batch_size), jnp.int32)
+            return (*ps, *ms, xs, ys, zeros((), jnp.float32))
+        raise ValueError(mode)
+
+
+# --------------------------------------------------------------------------
+# delta-view helpers: reshape any weight tensor to [fan_in, neurons]
+# --------------------------------------------------------------------------
+
+def conv_view(w):
+    """[KH,KW,Cin,Cout] -> [KH*KW*Cin, Cout] (neurons = filters)."""
+    kh, kw, ci, co = w.shape
+    return w.reshape(kh * kw * ci, co)
+
+
+def dense_view(w):
+    return w
+
+
+def lstm_view(w):
+    """[(in+H), 4H] -> [4*(in+H), H]: neuron j owns gate columns j,H+j,…"""
+    parts = jnp.split(w, 4, axis=1)          # 4 x [(in+H), H]
+    return jnp.concatenate(parts, axis=0)    # [4*(in+H), H]
+
+
+# --------------------------------------------------------------------------
+# FEMNIST CNN (paper §6: 2x conv5x5 16/64 + 2x2 maxpool, FC-120, out-62)
+# --------------------------------------------------------------------------
+
+def build_femnist_cnn(batch_size: int = 10) -> ModelDef:
+    C = 62
+
+    def forward(p, m, x):
+        h = masked_conv(x, p["conv1_w"], p["conv1_b"], m["conv1"])
+        h = jax.nn.relu(maxpool2(h))
+        h = masked_conv(h, p["conv2_w"], p["conv2_b"], m["conv2"])
+        h = jax.nn.relu(maxpool2(h))
+        h = h.reshape(h.shape[0], -1)                       # [B, 7*7*64]
+        h = jax.nn.relu(masked_dense_op(h, p["fc1_w"], p["fc1_b"], m["fc1"]))
+        ones = jnp.ones((C,), jnp.float32)
+        return masked_dense_op(h, p["out_w"], p["out_b"], ones)
+
+    md = ModelDef(
+        name="femnist_cnn",
+        batch_size=batch_size,
+        params=[
+            ("conv1_w", (5, 5, 1, 16)), ("conv1_b", (16,)),
+            ("conv2_w", (5, 5, 16, 64)), ("conv2_b", (64,)),
+            ("fc1_w", (7 * 7 * 64, 120)), ("fc1_b", (120,)),
+            ("out_w", (120, C)), ("out_b", (C,)),
+        ],
+        masks=[("conv1", 16), ("conv2", 64), ("fc1", 120)],
+        x_shape=(batch_size, 28, 28, 1),
+        x_dtype="f32",
+        num_classes=C,
+    )
+    md.forward = forward
+    md.delta_views = [
+        ("conv1", "conv1_w", conv_view),
+        ("conv2", "conv2_w", conv_view),
+        ("fc1", "fc1_w", dense_view),
+    ]
+    return md
+
+
+# --------------------------------------------------------------------------
+# CIFAR10 VGG-9 (paper §6: conv 32,32,64,64,128,128 + FC-512, FC-256)
+# --------------------------------------------------------------------------
+
+def build_cifar_vgg9(batch_size: int = 16) -> ModelDef:
+    C = 10
+    widths = [32, 32, 64, 64, 128, 128]
+
+    def forward(p, m, x):
+        h = x
+        for i in range(6):
+            h = masked_conv(h, p[f"conv{i+1}_w"], p[f"conv{i+1}_b"], m[f"conv{i+1}"])
+            h = jax.nn.relu(h)
+            if i % 2 == 1:
+                h = maxpool2(h)
+        h = h.reshape(h.shape[0], -1)                       # [B, 4*4*128]
+        h = jax.nn.relu(masked_dense_op(h, p["fc1_w"], p["fc1_b"], m["fc1"]))
+        h = jax.nn.relu(masked_dense_op(h, p["fc2_w"], p["fc2_b"], m["fc2"]))
+        ones = jnp.ones((C,), jnp.float32)
+        return masked_dense_op(h, p["out_w"], p["out_b"], ones)
+
+    params = []
+    cin = 3
+    for i, w in enumerate(widths):
+        params += [(f"conv{i+1}_w", (3, 3, cin, w)), (f"conv{i+1}_b", (w,))]
+        cin = w
+    params += [
+        ("fc1_w", (4 * 4 * 128, 512)), ("fc1_b", (512,)),
+        ("fc2_w", (512, 256)), ("fc2_b", (256,)),
+        ("out_w", (256, C)), ("out_b", (C,)),
+    ]
+    md = ModelDef(
+        name="cifar_vgg9",
+        batch_size=batch_size,
+        params=params,
+        masks=[(f"conv{i+1}", w) for i, w in enumerate(widths)]
+        + [("fc1", 512), ("fc2", 256)],
+        x_shape=(batch_size, 32, 32, 3),
+        x_dtype="f32",
+        num_classes=C,
+    )
+    md.forward = forward
+    md.delta_views = [(f"conv{i+1}", f"conv{i+1}_w", conv_view) for i in range(6)] + [
+        ("fc1", "fc1_w", dense_view),
+        ("fc2", "fc2_w", dense_view),
+    ]
+    return md
+
+
+# --------------------------------------------------------------------------
+# Shakespeare LSTM (paper §6: 2-layer LSTM, 128 hidden, char-level)
+# --------------------------------------------------------------------------
+
+VOCAB = 80          # LEAF Shakespeare character vocabulary size
+EMBED = 8
+
+
+def lstm_layer(x_seq, w, b, mask, hidden):
+    """Scan one LSTM layer over time. x_seq: [T, B, D] -> [T, B, H].
+
+    Gate projections run on the Pallas kernel; the hidden-unit mask is
+    applied to both h and c every step so dropped units contribute
+    nothing and receive zero gradient.
+    """
+    B = x_seq.shape[1]
+    ones4h = jnp.ones((4 * hidden,), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        z = masked_dense_op(jnp.concatenate([x_t, h], axis=1), w, b, ones4h)
+        i, f, g, o = jnp.split(z, 4, axis=1)
+        c = (jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g))
+        c = c * mask[None, :]
+        h = jax.nn.sigmoid(o) * jnp.tanh(c) * mask[None, :]
+        return (h, c), h
+
+    h0 = jnp.zeros((B, hidden), jnp.float32)
+    (_, _), hs = lax.scan(step, (h0, h0), x_seq)
+    return hs
+
+
+def build_shakespeare_lstm(batch_size: int = 16, seq_len: int = 48,
+                           hidden: int = 128) -> ModelDef:
+    def forward(p, m, x):
+        emb = p["emb"][x]                       # [B, T, E]
+        xs = jnp.transpose(emb, (1, 0, 2))      # [T, B, E]
+        h1 = lstm_layer(xs, p["lstm1_w"], p["lstm1_b"], m["lstm1"], hidden)
+        h2 = lstm_layer(h1, p["lstm2_w"], p["lstm2_b"], m["lstm2"], hidden)
+        last = h2[-1]                           # [B, H]
+        ones = jnp.ones((VOCAB,), jnp.float32)
+        return masked_dense_op(last, p["out_w"], p["out_b"], ones)
+
+    md = ModelDef(
+        name="shakespeare_lstm",
+        batch_size=batch_size,
+        params=[
+            ("emb", (VOCAB, EMBED)),
+            ("lstm1_w", (EMBED + hidden, 4 * hidden)), ("lstm1_b", (4 * hidden,)),
+            ("lstm2_w", (hidden + hidden, 4 * hidden)), ("lstm2_b", (4 * hidden,)),
+            ("out_w", (hidden, VOCAB)), ("out_b", (VOCAB,)),
+        ],
+        masks=[("lstm1", hidden), ("lstm2", hidden)],
+        x_shape=(batch_size, seq_len),
+        x_dtype="i32",
+        num_classes=VOCAB,
+    )
+    md.forward = forward
+    md.delta_views = [
+        ("lstm1", "lstm1_w", lstm_view),
+        ("lstm2", "lstm2_w", lstm_view),
+    ]
+    return md
+
+
+# --------------------------------------------------------------------------
+# CIFAR10 ResNet-18 (scalability study, Fig 4c / Fig 5)
+# --------------------------------------------------------------------------
+
+def build_cifar_resnet18(batch_size: int = 8, width_mult: float = 0.5) -> ModelDef:
+    """ResNet-18 (CIFAR stem). Maskable neurons: the *inner* conv of each
+    basic block (standard structured-pruning practice — the residual sum
+    forces the block-output channels to stay aligned with the identity
+    shortcut, so only the block-internal width is free to shrink).
+    """
+    C = 10
+    w64 = max(8, int(64 * width_mult))
+    stage_widths = [w64, w64 * 2, w64 * 4, w64 * 8]
+    blocks_per_stage = 2
+
+    def bn_free_conv(x, w, b, stride=1):
+        ones = jnp.ones((w.shape[-1],), jnp.float32)
+        return masked_conv(x, w, b, ones, stride=stride)
+
+    def forward(p, m, x):
+        h = jax.nn.relu(bn_free_conv(x, p["stem_w"], p["stem_b"]))
+        for s in range(4):
+            for bi in range(blocks_per_stage):
+                name = f"s{s}b{bi}"
+                stride = 2 if (s > 0 and bi == 0) else 1
+                ident = h
+                h1 = masked_conv(h, p[f"{name}_c1_w"], p[f"{name}_c1_b"],
+                                 m[name], stride=stride)
+                h1 = jax.nn.relu(h1)
+                h2 = bn_free_conv(h1, p[f"{name}_c2_w"], p[f"{name}_c2_b"])
+                if stride != 1 or ident.shape[-1] != h2.shape[-1]:
+                    ident = bn_free_conv(ident, p[f"{name}_sc_w"],
+                                         p[f"{name}_sc_b"], stride=stride)
+                h = jax.nn.relu(h2 + ident)
+        h = avgpool_global(h)
+        ones = jnp.ones((C,), jnp.float32)
+        return masked_dense_op(h, p["out_w"], p["out_b"], ones)
+
+    params = [("stem_w", (3, 3, 3, stage_widths[0])), ("stem_b", (stage_widths[0],))]
+    masks, views = [], []
+    cin = stage_widths[0]
+    for s in range(4):
+        w = stage_widths[s]
+        for bi in range(blocks_per_stage):
+            name = f"s{s}b{bi}"
+            stride = 2 if (s > 0 and bi == 0) else 1
+            params += [
+                (f"{name}_c1_w", (3, 3, cin, w)), (f"{name}_c1_b", (w,)),
+                (f"{name}_c2_w", (3, 3, w, w)), (f"{name}_c2_b", (w,)),
+            ]
+            if stride != 1 or cin != w:
+                params += [(f"{name}_sc_w", (1, 1, cin, w)), (f"{name}_sc_b", (w,))]
+            masks.append((name, w))
+            views.append((name, f"{name}_c1_w", conv_view))
+            cin = w
+    params += [("out_w", (stage_widths[3], C)), ("out_b", (C,))]
+
+    md = ModelDef(
+        name="cifar_resnet18",
+        batch_size=batch_size,
+        params=params,
+        masks=masks,
+        x_shape=(batch_size, 32, 32, 3),
+        x_dtype="f32",
+        num_classes=C,
+    )
+    md.forward = forward
+    md.delta_views = views
+    return md
+
+
+# --------------------------------------------------------------------------
+
+BUILDERS = {
+    "femnist_cnn": build_femnist_cnn,
+    "cifar_vgg9": build_cifar_vgg9,
+    "shakespeare_lstm": build_shakespeare_lstm,
+    "cifar_resnet18": build_cifar_resnet18,
+}
+
+
+def build(name: str, **kw) -> ModelDef:
+    return BUILDERS[name](**kw)

@@ -1,0 +1,158 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes/masks/seeds; explicit cases pin the block-tiling
+edge cases (ragged dims that fall back to smaller blocks, single-block,
+multi-block grids).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_dense, neuron_delta, ref
+from compile.kernels.masked_dense import _cap, vmem_footprint_bytes, \
+    mxu_utilization_estimate
+
+
+def rand(key, shape, lo=-2.0, hi=2.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+def make_mask(key, n, keep_prob):
+    return (jax.random.uniform(key, (n,)) < keep_prob).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- masked_dense
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1),
+    (4, 8, 6),
+    (10, 3136, 120),      # femnist fc1 actual shape
+    (16, 512, 256),       # vgg9 fc2 actual shape
+    (7, 13, 11),          # all prime: no clean divisor but _cap falls back
+    (128, 128, 128),      # exactly one MXU tile
+    (256, 384, 256),      # multi-block grid in every dimension
+])
+def test_masked_dense_matches_ref(m, k, n):
+    key = jax.random.PRNGKey(m * 10007 + k * 101 + n)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x, w, b = rand(k1, (m, k)), rand(k2, (k, n)), rand(k3, (n,))
+    mask = make_mask(k4, n, 0.7)
+    got = masked_dense(x, w, b, mask)
+    want = ref.masked_dense_ref(x, w, b, mask)
+    # K-blocked accumulation reorders float adds vs the single-dot oracle
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_masked_dense_all_ones_mask_is_plain_dense():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x, w, b = rand(k1, (8, 32)), rand(k2, (32, 16)), rand(k3, (16,))
+    got = masked_dense(x, w, b, jnp.ones((16,)))
+    np.testing.assert_allclose(got, x @ w + b[None, :], rtol=1e-5, atol=1e-5)
+
+
+def test_masked_dense_zero_mask_kills_columns():
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x, w, b = rand(k1, (8, 32)), rand(k2, (32, 16)), rand(k3, (16,))
+    mask = jnp.zeros((16,)).at[3].set(1.0)
+    got = masked_dense(x, w, b, mask)
+    assert jnp.all(got[:, :3] == 0) and jnp.all(got[:, 4:] == 0)
+    np.testing.assert_allclose(got[:, 3], (x @ w + b)[:, 3], rtol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 192),
+    n=st.integers(1, 96),
+    keep=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    bm=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([16, 64, 128]),
+    bn=st.sampled_from([8, 64, 128]),
+)
+def test_masked_dense_hypothesis(m, k, n, keep, seed, bm, bk, bn):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x, w, b = rand(k1, (m, k)), rand(k2, (k, n)), rand(k3, (n,))
+    mask = make_mask(k4, n, keep)
+    got = masked_dense(x, w, b, mask, bm=bm, bk=bk, bn=bn)
+    want = ref.masked_dense_ref(x, w, b, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------- neuron_delta
+
+@pytest.mark.parametrize("k,n", [
+    (1, 1), (8, 8), (3136, 120), (400, 16), (100, 62), (512, 256), (13, 7),
+])
+def test_neuron_delta_matches_ref(k, n):
+    key = jax.random.PRNGKey(k * 31 + n)
+    k1, k2 = jax.random.split(key)
+    old = rand(k1, (k, n))
+    new = old + rand(k2, (k, n), -0.1, 0.1)
+    got = neuron_delta(old, new)
+    want = ref.neuron_delta_ref(old, new)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_neuron_delta_identical_weights_is_zero():
+    w = rand(jax.random.PRNGKey(7), (64, 32))
+    np.testing.assert_allclose(neuron_delta(w, w), jnp.zeros((32,)), atol=0)
+
+
+def test_neuron_delta_detects_single_moved_neuron():
+    w = jnp.ones((16, 8))
+    w2 = w.at[:, 5].set(2.0)          # neuron 5 doubled: rel change ~1.0
+    d = neuron_delta(w, w2)
+    assert d[5] == pytest.approx(1.0, rel=1e-5)
+    assert jnp.all(d[jnp.arange(8) != 5] == 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 300),
+    n=st.integers(1, 150),
+    scale=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_neuron_delta_hypothesis(k, n, scale, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    old = rand(k1, (k, n))
+    new = old * (1.0 + scale * rand(k2, (k, n), -1.0, 1.0))
+    got = neuron_delta(old, new)
+    want = ref.neuron_delta_ref(old, new)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------- tiling utils
+
+@pytest.mark.parametrize("block,dim,expect", [
+    (128, 64, 64),     # dim smaller than block
+    (128, 128, 128),   # exact
+    (128, 256, 128),   # divisor
+    (128, 120, 120),   # 120 < 128 -> itself
+    (64, 96, 48),      # largest divisor <= 64
+    (128, 3136, 112),  # femnist fc1 fan-in
+])
+def test_cap_block(block, dim, expect):
+    got = _cap(block, dim)
+    assert got == expect
+    assert dim % got == 0
+
+
+def test_vmem_footprint_within_budget():
+    # every model layer must fit the ~16 MiB VMEM budget with default blocks
+    for (k, n) in [(3136, 120), (2048, 512), (512, 256), (256, 128), (120, 62)]:
+        assert vmem_footprint_bytes(128, k, n) < 16 * 2**20
+
+
+def test_mxu_utilization_bounds():
+    u = mxu_utilization_estimate(128, 128, 128)
+    assert u == pytest.approx(1.0)
+    assert 0 < mxu_utilization_estimate(10, 120, 62) <= 1.0

@@ -1,0 +1,222 @@
+"""L2 model semantics: the mask-equals-sub-model equivalence FLuID rests on.
+
+The critical invariant (DESIGN.md §1): masking a neuron must zero BOTH its
+forward contribution AND every gradient of its incident weights, so that
+training with a mask is numerically identical to training the paper's
+physically-extracted sub-model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def small_models():
+    # small batch sizes keep the test fast; same code paths as aot defaults
+    return [
+        M.build("femnist_cnn", batch_size=4),
+        M.build("cifar_vgg9", batch_size=2),
+        M.build("shakespeare_lstm", batch_size=2, seq_len=8),
+        M.build("cifar_resnet18", batch_size=2, width_mult=0.25),
+    ]
+
+
+def make_batch(md, key):
+    if md.x_dtype == "i32":
+        x = jax.random.randint(key, md.x_shape, 0, M.VOCAB, jnp.int32)
+    else:
+        x = jax.random.uniform(key, md.x_shape, jnp.float32)
+    y = jax.random.randint(key, (md.batch_size,), 0, md.num_classes, jnp.int32)
+    return x, y
+
+
+def ones_masks(md):
+    return [jnp.ones((n,), jnp.float32) for _, n in md.masks]
+
+
+@pytest.mark.parametrize("md", small_models(), ids=lambda m: m.name)
+def test_forward_shapes(md):
+    key = jax.random.PRNGKey(0)
+    params = md.init_params(key)
+    masks = md.unflatten_masks(ones_masks(md))
+    x, _ = make_batch(md, key)
+    logits = md.forward(params, masks, x)
+    assert logits.shape == (md.batch_size, md.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("md", small_models(), ids=lambda m: m.name)
+def test_train_step_decreases_loss(md):
+    key = jax.random.PRNGKey(1)
+    params = list(md.init_params(key).values())
+    # NB: dict preserves insertion order == md.params order
+    masks = ones_masks(md)
+    x, y = make_batch(md, key)
+    lr = jnp.float32(0.01)
+    step = jax.jit(md.train_step)
+    out = step(*params, *masks, x, y, lr)
+    loss0 = out[-2]
+    # take 10 more steps on the same batch: loss must drop (early steps may
+    # spike while He-init logits settle, so compare start vs end)
+    for _ in range(10):
+        params = list(out[: len(md.params)])
+        out = step(*params, *masks, x, y, lr)
+    assert float(out[-2]) < float(loss0), (float(loss0), float(out[-2]))
+
+
+@pytest.mark.parametrize("md", small_models(), ids=lambda m: m.name)
+def test_masked_neurons_receive_zero_gradient(md):
+    """THE invariant: a masked neuron's weights are untouched by training."""
+    key = jax.random.PRNGKey(2)
+    params = md.init_params(key)
+    flat_params = [params[n] for n, _ in md.params]
+    # drop ~half the neurons in every maskable group
+    masks = []
+    for i, (_, n) in enumerate(md.masks):
+        m = jnp.ones((n,)).at[: n // 2].set(0.0)
+        masks.append(m)
+    x, y = make_batch(md, key)
+    out = md.train_step(*flat_params, *masks, x, y, jnp.float32(0.1))
+    new_params = md.unflatten_params(out[: len(md.params)])
+
+    for (mask_name, pname, view), m in zip(md.delta_views, masks):
+        old2d = view(params[pname])       # [fan_in, neurons]
+        new2d = view(new_params[pname])
+        dropped = np.where(np.asarray(m) == 0.0)[0]
+        # all incident weights of dropped neurons unchanged
+        np.testing.assert_array_equal(
+            np.asarray(old2d[:, dropped]), np.asarray(new2d[:, dropped]),
+            err_msg=f"{md.name}/{mask_name}: dropped neurons were updated",
+        )
+        # sanity: kept neurons did move
+        kept = np.where(np.asarray(m) == 1.0)[0]
+        assert not np.allclose(
+            np.asarray(old2d[:, kept]), np.asarray(new2d[:, kept])
+        ), f"{md.name}/{mask_name}: kept neurons did not train"
+
+
+@pytest.mark.parametrize("md", small_models(), ids=lambda m: m.name)
+def test_eval_step_counts(md):
+    key = jax.random.PRNGKey(3)
+    params = [md.init_params(key)[n] for n, _ in md.params]
+    masks = ones_masks(md)
+    x, y = make_batch(md, key)
+    loss, correct = md.eval_step(*params, *masks, x, y)
+    assert jnp.isfinite(loss)
+    assert 0 <= float(correct) <= md.batch_size
+
+
+def delta_args(md, params):
+    return [params[p] for p in md.delta_param_names()]
+
+
+@pytest.mark.parametrize("md", small_models(), ids=lambda m: m.name)
+def test_delta_step_shapes_and_zero(md):
+    key = jax.random.PRNGKey(4)
+    params = md.init_params(key)
+    ws = delta_args(md, params)
+    outs = md.delta_step(*ws, *ws)
+    assert len(outs) == len(md.delta_views)
+    for d, (_, n) in zip(outs, md.masks):
+        assert d.shape == (n,)
+        np.testing.assert_allclose(d, np.zeros((n,)), atol=0)
+
+
+def test_delta_step_flags_trained_neurons():
+    md = M.build("femnist_cnn", batch_size=4)
+    key = jax.random.PRNGKey(5)
+    params = md.init_params(key)
+    flat = [params[n] for n, _ in md.params]
+    masks = ones_masks(md)
+    x, y = make_batch(md, key)
+    out = md.train_step(*flat, *masks, x, y, jnp.float32(0.5))
+    new_params = md.unflatten_params(out[: len(md.params)])
+    deltas = md.delta_step(*delta_args(md, params), *delta_args(md, new_params))
+    # with a large lr, some neuron in each group must have moved
+    for d in deltas:
+        assert float(jnp.max(d)) > 0.0
+
+
+def test_mask_equals_submodel_loss():
+    """Masked full model == physically smaller model on the kept slice.
+
+    For the FC layer this is exact: logits depend only on kept neurons.
+    """
+    md = M.build("femnist_cnn", batch_size=4)
+    key = jax.random.PRNGKey(6)
+    params = md.init_params(key)
+    x, _ = make_batch(md, key)
+    keep = 60  # keep first half of fc1
+    masks = md.unflatten_masks(ones_masks(md))
+    masks["fc1"] = jnp.ones((120,)).at[keep:].set(0.0)
+    logits_masked = md.forward(params, masks, x)
+
+    # physically sliced fc1
+    p2 = dict(params)
+    p2["fc1_w"] = params["fc1_w"][:, :keep]
+    p2["fc1_b"] = params["fc1_b"][:keep]
+    p2["out_w"] = params["out_w"][:keep, :]
+
+    def fwd_sliced(p, x):
+        h = M.masked_conv(x, p["conv1_w"], p["conv1_b"], jnp.ones((16,)))
+        h = jax.nn.relu(M.maxpool2(h))
+        h = M.masked_conv(h, p["conv2_w"], p["conv2_b"], jnp.ones((64,)))
+        h = jax.nn.relu(M.maxpool2(h))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ p["fc1_w"] + p["fc1_b"])
+        return h @ p["out_w"] + p["out_b"]
+
+    np.testing.assert_allclose(
+        logits_masked, fwd_sliced(p2, x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_train_multi_matches_sequential_steps():
+    """The fused k-step scan must equal k sequential single steps."""
+    md = M.build("femnist_cnn", batch_size=4)
+    key = jax.random.PRNGKey(8)
+    params = [md.init_params(key)[n] for n, _ in md.params]
+    masks = ones_masks(md)
+    k = 3
+    keys = jax.random.split(key, k)
+    xs = jnp.stack([jax.random.uniform(kk, md.x_shape) for kk in keys])
+    ys = jnp.stack(
+        [jax.random.randint(kk, (md.batch_size,), 0, 62, jnp.int32) for kk in keys]
+    )
+    lr = jnp.float32(0.01)
+
+    multi = md.train_multi(k)
+    out_multi = multi(*params, *masks, xs, ys, lr)
+
+    cur = params
+    losses = []
+    for i in range(k):
+        out = md.train_step(*cur, *masks, xs[i], ys[i], lr)
+        cur = list(out[: len(md.params)])
+        losses.append(float(out[-2]))
+
+    for a, b in zip(out_multi[: len(md.params)], cur):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    assert float(out_multi[-2]) == pytest.approx(
+        sum(losses) / k, rel=1e-5
+    )
+
+
+def test_manifest_contract():
+    """aot manifests must mirror ModelDef exactly (ordering contract)."""
+    import json, os, subprocess, tempfile
+    md = M.build("femnist_cnn")
+    from compile import aot
+    with tempfile.TemporaryDirectory() as d:
+        # lower eval only? full lower is slow; reuse lower_model but smallest model
+        man = aot.lower_model(md, d, verbose=False)
+    assert man["params"] == [
+        {"name": n, "shape": list(s)} for n, s in md.params
+    ]
+    assert [m["name"] for m in man["masks"]] == [n for n, _ in md.masks]
+    assert man["delta_groups"] == [n for n, _, _ in md.delta_views]
+    assert man["delta_inputs"] == md.delta_param_names()
+    assert man["train_outputs"][-2:] == ["loss", "acc"]

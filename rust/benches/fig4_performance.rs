@@ -1,0 +1,108 @@
+//! Figure 4a/4b — FLuID's performance effect.
+//!
+//! (a) straggler training time before (full model) and after FLuID
+//!     (auto-sized sub-model) vs the target time, per dataset.
+//! (b) total training time with stragglers *changing at runtime*
+//!     (background load at the 25/50/75% marks): vanilla FL vs FLuID
+//!     with a static straggler choice vs dynamic FLuID.
+//!
+//! Run: `cargo bench --bench fig4_performance [-- --full]`
+
+use fluid::bench::{experiments as exp, full_mode};
+use fluid::coordinator::{report, ExperimentConfig};
+use fluid::dropout::PolicyKind;
+use fluid::util::stats;
+
+fn main() {
+    let full = full_mode();
+    let sess = exp::session_or_exit();
+    let models: Vec<&str> = if full {
+        vec!["femnist_cnn", "cifar_vgg9", "shakespeare_lstm"]
+    } else {
+        vec!["femnist_cnn"]
+    };
+
+    // ---- (a) straggler time before/after ------------------------------------
+    println!("== Fig 4a: straggler round time vs target (virtual seconds) ==\n");
+    let mut rows = Vec::new();
+    for model in &models {
+        let mut cfg = ExperimentConfig::mobile(model, PolicyKind::Invariant);
+        cfg.rounds = if full { 16 } else { 8 };
+        cfg.samples_per_client = 30;
+        cfg.local_steps = 2;
+        cfg.lr = exp::tuned_lr(model);
+        cfg.eval_every = cfg.rounds;
+        let res = exp::single(&sess, &cfg).unwrap();
+        // "before": round 0 runs everyone on the full model
+        let before = res.records[0].round_time;
+        // "after": steady-state straggler time + target
+        let steady: Vec<&fluid::coordinator::RoundRecord> = res
+            .records
+            .iter()
+            .skip(3)
+            .filter(|r| !r.straggler_ids.is_empty())
+            .collect();
+        let t_target = stats::mean(&steady.iter().map(|r| r.t_target).collect::<Vec<_>>());
+        let after = stats::mean(
+            &steady.iter().map(|r| r.straggler_time).collect::<Vec<_>>(),
+        );
+        rows.push(vec![
+            model.to_string(),
+            format!("{before:.2}"),
+            format!("{after:.2}"),
+            format!("{t_target:.2}"),
+            format!("{:+.1}%", (after / t_target - 1.0) * 100.0),
+        ]);
+    }
+    println!(
+        "{}",
+        report::text_table(
+            &["dataset", "straggler before", "straggler after", "T_target", "after vs target"],
+            &rows
+        )
+    );
+    println!("Expected: before is 10-32% above target; after lands within ~10%.\n");
+
+    // ---- (b) runtime fluctuation ---------------------------------------------
+    println!("== Fig 4b: total training time with stragglers changing at runtime ==\n");
+    let mut rows = Vec::new();
+    for model in &models {
+        let mk = |policy: PolicyKind, static_s: bool| {
+            let mut cfg = ExperimentConfig::mobile(model, policy);
+            cfg.rounds = if full { 24 } else { 12 };
+            cfg.samples_per_client = 30;
+            cfg.local_steps = 2;
+            cfg.lr = exp::tuned_lr(model);
+            cfg.eval_every = cfg.rounds;
+            cfg.fluctuation = true;
+            cfg.static_stragglers = static_s;
+            cfg
+        };
+        let vanilla = exp::single(&sess, &mk(PolicyKind::None, false)).unwrap();
+        let stat = exp::single(&sess, &mk(PolicyKind::Invariant, true)).unwrap();
+        let dynamic = exp::single(&sess, &mk(PolicyKind::Invariant, false)).unwrap();
+        rows.push(vec![
+            model.to_string(),
+            format!("{:.1}", vanilla.total_vtime),
+            format!("{:.1}", stat.total_vtime),
+            format!("{:.1}", dynamic.total_vtime),
+            format!("{:.1}%", (1.0 - dynamic.total_vtime / vanilla.total_vtime) * 100.0),
+            format!("{:.1}%", (1.0 - dynamic.total_vtime / stat.total_vtime) * 100.0),
+        ]);
+    }
+    println!(
+        "{}",
+        report::text_table(
+            &[
+                "dataset",
+                "vanilla",
+                "FLuID static",
+                "FLuID dynamic",
+                "dyn vs vanilla",
+                "dyn vs static"
+            ],
+            &rows
+        )
+    );
+    println!("Expected shape: dynamic fastest (paper: 18-26% vs baseline, 14-18% vs static).");
+}

@@ -1,0 +1,56 @@
+//! Figure 5 (+ Fig 4c/4d) — accuracy at 50-100 clients with the slowest
+//! 20% as stragglers, including the "exclude stragglers" baseline the
+//! paper's scale study compares against.
+//!
+//! Run: `cargo bench --bench fig5_scale [-- --full] [--seeds N]`
+
+use fluid::bench::{experiments as exp, full_mode, seed_count};
+use fluid::coordinator::report;
+use fluid::dropout::PolicyKind;
+
+fn main() {
+    let full = full_mode();
+    let seeds = seed_count().min(2);
+    let sess = exp::session_or_exit();
+
+    let setups: Vec<(&str, usize)> = if full {
+        vec![
+            ("shakespeare_lstm", 50),
+            ("cifar_vgg9", 100),
+            ("femnist_cnn", 100),
+            ("cifar_resnet18", 100),
+        ]
+    } else {
+        vec![("femnist_cnn", 50)]
+    };
+    let policies = [
+        ("Random", PolicyKind::Random),
+        ("Ordered", PolicyKind::Ordered),
+        ("Invariant", PolicyKind::Invariant),
+        ("Exclude", PolicyKind::Exclude),
+    ];
+    let r = 0.75;
+
+    println!(
+        "== Fig 5: accuracy at scale (20% stragglers, r={r}, {seeds} seeds) ==\n"
+    );
+    for (model, clients) in &setups {
+        println!("--- {model}, {clients} clients ---");
+        let mut rows = Vec::new();
+        for (pname, policy) in &policies {
+            let cfg = exp::scale_config(model, *policy, *clients, r, full);
+            match exp::accuracy_over_seeds(&sess, &cfg, seeds) {
+                Ok((mu, sigma, _)) => {
+                    rows.push(vec![pname.to_string(), report::mean_std(mu, sigma)])
+                }
+                Err(e) => {
+                    eprintln!("{pname} failed: {e:#}");
+                    rows.push(vec![pname.to_string(), "ERR".into()]);
+                }
+            }
+        }
+        println!("{}", report::text_table(&["method", "accuracy %"], &rows));
+        println!();
+    }
+    println!("Expected shape: Invariant highest; Exclude (drop stragglers' data) lowest.");
+}

@@ -1,0 +1,57 @@
+//! Figure 7 (Appendix A.3) — training time is linear in sub-model size.
+//!
+//! For each of the five devices and three datasets, sweep r and fit
+//! time(r) by OLS. The paper's claim (which FLuID's `r = 1/speedup`
+//! sizing rule depends on): the relationship is linear and within 10% of
+//! direct proportionality.
+//!
+//! Run: `cargo bench --bench fig7_linearity`
+
+use fluid::coordinator::report;
+use fluid::straggler::{mobile_fleet, FluctuationSchedule, PerfModel};
+use fluid::util::prng::Pcg32;
+use fluid::util::stats;
+
+fn main() {
+    let rates = [0.5, 0.65, 0.75, 0.85, 0.95, 1.0];
+    let quiet = FluctuationSchedule::none();
+
+    for model in ["femnist_cnn", "cifar_vgg9", "shakespeare_lstm"] {
+        println!("== Fig 7: time vs sub-model size ({model}), % of full-model time ==\n");
+        let pm = PerfModel {
+            jitter_sigma: 0.0,
+            ..PerfModel::new(model, 4_000_000)
+        };
+        let mut rows = Vec::new();
+        let mut worst_dev = 0.0f64;
+        for dev in mobile_fleet() {
+            let mut rng = Pcg32::new(1, 1);
+            let t_full = pm.compute_time(&dev, 0, 1.0, 0.0, &quiet, &mut rng);
+            let mut row = vec![dev.name.clone()];
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            for &r in &rates {
+                let t = pm.compute_time(&dev, 0, r, 0.0, &quiet, &mut rng);
+                let frac = t / t_full;
+                worst_dev = worst_dev.max((frac - r).abs());
+                row.push(format!("{:.1}", frac * 100.0));
+                xs.push(r);
+                ys.push(frac);
+            }
+            let (_, slope, r2) = stats::linear_fit(&xs, &ys);
+            row.push(format!("{slope:.3}"));
+            row.push(format!("{r2:.4}"));
+            rows.push(row);
+        }
+        let mut headers = vec!["device"];
+        let labels: Vec<String> = rates.iter().map(|r| format!("r={r}")).collect();
+        headers.extend(labels.iter().map(|s| s.as_str()));
+        headers.push("slope");
+        headers.push("R^2");
+        println!("{}", report::text_table(&headers, &rows));
+        println!(
+            "max |time-fraction - r| across devices: {:.1}% (paper: within 10%)\n",
+            worst_dev * 100.0
+        );
+    }
+}

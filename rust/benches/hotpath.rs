@@ -1,0 +1,170 @@
+//! Runtime hot-path microbenchmarks (§Perf of EXPERIMENTS.md).
+//!
+//! Times the building blocks every experiment is made of:
+//! * `train_step` / `eval_step` / `delta_step` PJRT executions per model
+//! * tensor <-> literal conversion
+//! * masked FedAvg aggregation (plain vs ownership-weighted)
+//! * invariant mask extraction
+//! * one full coordinator round (5 clients)
+//!
+//! Run: `cargo bench --bench hotpath [-- --full]`
+
+use fluid::bench::{experiments as exp, full_mode, Bench};
+use fluid::coordinator::{self, ExperimentConfig};
+use fluid::data::FlData;
+use fluid::dropout::{InvariantConfig, InvariantDropout, MaskSet};
+use fluid::fl::{fedavg, AggregateMode, ClientUpdate};
+use fluid::dropout::PolicyKind;
+use fluid::runtime::Session;
+use fluid::tensor::Tensor;
+use fluid::util::prng::Pcg32;
+
+fn main() {
+    let sess = exp::session_or_exit();
+    let b = if full_mode() {
+        Bench::new(5, 30)
+    } else {
+        Bench::new(2, 8)
+    };
+    let models: Vec<&str> = if full_mode() {
+        vec!["femnist_cnn", "cifar_vgg9", "shakespeare_lstm", "cifar_resnet18"]
+    } else {
+        vec!["femnist_cnn", "shakespeare_lstm"]
+    };
+
+    println!("== hot path microbenchmarks ==\n");
+    for model in &models {
+        step_benches(&sess, model, &b);
+    }
+    aggregation_benches(&sess, &b);
+    coordinator_round_bench(&sess, &b);
+}
+
+fn random_batch(spec: &fluid::model::ModelSpec, seed: u64) -> fluid::runtime::Batch {
+    let data = FlData::for_model(&spec.name, 1, spec.batch_size.max(8), seed);
+    let mut rng = Pcg32::new(seed, 3);
+    data.clients[0].sample_batch(&mut rng, &spec.x_shape)
+}
+
+fn step_benches(sess: &Session, model: &str, b: &Bench) {
+    let runner = match sess.runner(model) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping {model}: {e:#}");
+            return;
+        }
+    };
+    let params = runner.spec.init_params(1);
+    let masks = runner.full_masks();
+    let batch = random_batch(&runner.spec, 11);
+
+    let m = b.run(&format!("{model}/train_step"), || {
+        let out = runner.train_step(&params, &masks, &batch, 0.01).unwrap();
+        std::hint::black_box(out.loss);
+    });
+    println!("{}", m.report());
+    let m = b.run(&format!("{model}/eval_step"), || {
+        let out = runner.eval_step(&params, &masks, &batch).unwrap();
+        std::hint::black_box(out.loss);
+    });
+    println!("{}", m.report());
+    // fused k-step program (§Perf L2 optimization) vs k single steps
+    if runner.multi_k() > 0 {
+        let k = runner.multi_k();
+        let batches: Vec<fluid::runtime::Batch> =
+            (0..k).map(|i| random_batch(&runner.spec, 50 + i as u64)).collect();
+        let m = b.run(&format!("{model}/train_multi (k={k}, fused)"), || {
+            let out = runner.train_multi_step(&params, &masks, &batches, 0.01).unwrap();
+            std::hint::black_box(out.loss);
+        });
+        println!("{}", m.report());
+        let m = b.run(&format!("{model}/train x{k} (sequential)"), || {
+            let mut cur = params.clone();
+            for bt in &batches {
+                cur = runner.train_step(&cur, &masks, bt, 0.01).unwrap().params;
+            }
+            std::hint::black_box(cur.len());
+        });
+        println!("{}", m.report());
+    }
+
+    let new_params = runner.train_step(&params, &masks, &batch, 0.05).unwrap().params;
+    let m = b.run(&format!("{model}/delta_step"), || {
+        let d = runner.delta_step(&params, &new_params).unwrap();
+        std::hint::black_box(d.len());
+    });
+    println!("{}", m.report());
+
+    // conversion cost for the largest parameter
+    let biggest = params
+        .iter()
+        .max_by_key(|t| t.len())
+        .unwrap()
+        .clone();
+    let m = b.run(&format!("{model}/tensor->literal ({} f32)", biggest.len()), || {
+        let lit = fluid::runtime::tensor_to_literal(&biggest).unwrap();
+        std::hint::black_box(&lit);
+    });
+    println!("{}", m.report());
+    println!();
+}
+
+fn aggregation_benches(sess: &Session, b: &Bench) {
+    let Ok(runner) = sess.runner("femnist_cnn") else { return };
+    let spec = &runner.spec;
+    let global = spec.init_params(2);
+    let updates: Vec<ClientUpdate> = (0..5)
+        .map(|i| ClientUpdate {
+            params: spec.init_params(100 + i),
+            weight: 60.0,
+            mask: MaskSet::full(spec),
+        })
+        .collect();
+    let m = b.run("aggregate/fedavg plain (5 clients, 410k params)", || {
+        let out = fedavg(spec, &global, &updates, AggregateMode::Plain);
+        std::hint::black_box(out.len());
+    });
+    println!("{}", m.report());
+    let m = b.run("aggregate/fedavg ownership (5 clients, 410k params)", || {
+        let out = fedavg(spec, &global, &updates, AggregateMode::OwnershipWeighted);
+        std::hint::black_box(out.len());
+    });
+    println!("{}", m.report());
+
+    // invariant mask extraction
+    let mut inv = InvariantDropout::new(spec, InvariantConfig::default());
+    let mut rng = Pcg32::new(5, 5);
+    let deltas: Vec<Vec<Tensor>> = (0..4)
+        .map(|_| {
+            spec.masks
+                .iter()
+                .map(|m| {
+                    Tensor::from_vec(
+                        &[m.size],
+                        (0..m.size).map(|_| rng.next_f32() * 0.2).collect(),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    inv.observe(&deltas);
+    let m = b.run("invariant/make_mask (200 neurons)", || {
+        let mask = inv.make_mask(spec, 0.75);
+        std::hint::black_box(mask.keep_fraction());
+    });
+    println!("{}", m.report());
+    println!();
+}
+
+fn coordinator_round_bench(sess: &Session, b: &Bench) {
+    let mut cfg = ExperimentConfig::mobile("femnist_cnn", PolicyKind::Invariant);
+    cfg.rounds = 1;
+    cfg.samples_per_client = 20;
+    cfg.local_steps = 2;
+    cfg.eval_every = 10; // skip eval inside the timed region
+    let m = b.run("coordinator/full round (5 clients, 2 local steps)", || {
+        let res = coordinator::run(sess, &cfg).unwrap();
+        std::hint::black_box(res.total_vtime);
+    });
+    println!("{}", m.report());
+}

@@ -1,0 +1,49 @@
+//! Table 3 (Appendix A.2) — threshold value vs percentage of invariant
+//! neurons vs final accuracy (FEMNIST, sub-model size 0.75).
+//!
+//! Run: `cargo bench --bench table3_threshold [-- --full]`
+
+use fluid::bench::{experiments as exp, full_mode};
+use fluid::coordinator::report;
+use fluid::dropout::PolicyKind;
+use fluid::util::stats;
+
+fn main() {
+    let full = full_mode();
+    let sess = exp::session_or_exit();
+    let thresholds: Vec<f32> = if full {
+        vec![0.01, 0.03, 0.05, 0.07, 0.08, 0.10]
+    } else {
+        vec![0.01, 0.05, 0.10]
+    };
+
+    println!("== Table 3: threshold vs invariant neurons vs accuracy (FEMNIST, r=0.75) ==\n");
+    let mut rows = Vec::new();
+    for &th in &thresholds {
+        let mut cfg = exp::table2_config("femnist_cnn", PolicyKind::Invariant, 0.75, full);
+        cfg.invariant_th_override = Some(th);
+        let res = exp::single(&sess, &cfg).unwrap();
+        // mean invariant fraction over the second half of training
+        let half = res.records.len() / 2;
+        let inv = stats::mean(
+            &res.records[half..]
+                .iter()
+                .map(|r| r.invariant_fraction)
+                .collect::<Vec<_>>(),
+        );
+        rows.push(vec![
+            format!("{:.0}", th * 100.0),
+            format!("{:.0}", inv * 100.0),
+            format!("{:.2}", res.final_test_acc * 100.0),
+        ]);
+    }
+    println!(
+        "{}",
+        report::text_table(
+            &["threshold (%)", "invariant neurons (%)", "accuracy (%)"],
+            &rows
+        )
+    );
+    println!("\nExpected shape: higher threshold -> more invariant neurons (paper: 3%..31%);");
+    println!("accuracy peaks when #invariant ~= #neurons dropped (25% at r=0.75).");
+}

@@ -1,0 +1,55 @@
+//! Table 5 (Appendix A.6) — scalability with client sampling: FEMNIST,
+//! 1000 clients, 10% sampled per round, sub-model sizes down to 0.40.
+//!
+//! Default runs 100 clients for speed; `--full` runs the paper's 1000.
+//!
+//! Run: `cargo bench --bench table5_sampling [-- --full]`
+
+use fluid::bench::{experiments as exp, full_mode};
+use fluid::coordinator::report;
+use fluid::dropout::PolicyKind;
+
+fn main() {
+    let full = full_mode();
+    let sess = exp::session_or_exit();
+    let clients = if full { 1000 } else { 100 };
+    let rates: Vec<f64> = if full {
+        vec![0.95, 0.85, 0.75, 0.65, 0.40]
+    } else {
+        vec![0.95, 0.75, 0.40]
+    };
+
+    println!(
+        "== Table 5: FEMNIST, {clients} clients, 10% client sampling per round ==\n"
+    );
+    let mut rows = Vec::new();
+    for (pname, policy) in [
+        ("Random", PolicyKind::Random),
+        ("Ordered", PolicyKind::Ordered),
+        ("Invariant", PolicyKind::Invariant),
+    ] {
+        let mut row = vec![pname.to_string()];
+        for &r in &rates {
+            let mut cfg = exp::scale_config("femnist_cnn", policy, clients, r, full);
+            cfg.sample_fraction = 0.1;
+            cfg.samples_per_client = if full { 20 } else { 16 };
+            cfg.rounds = if full { 50 } else { 12 };
+            cfg.eval_every = cfg.rounds;
+            cfg.recalibrate_every = 1; // re-detect within every sampled cohort
+            match exp::single(&sess, &cfg) {
+                Ok(res) => row.push(format!("{:.1}", res.final_test_acc * 100.0)),
+                Err(e) => {
+                    eprintln!("{pname}@r={r}: {e:#}");
+                    row.push("ERR".into());
+                }
+            }
+        }
+        rows.push(row);
+    }
+    let mut headers = vec!["method"];
+    let labels: Vec<String> = rates.iter().map(|r| format!("r={r}")).collect();
+    headers.extend(labels.iter().map(|s| s.as_str()));
+    println!("{}", report::text_table(&headers, &rows));
+    println!("\nExpected shape: Invariant maintains the best accuracy profile at every r");
+    println!("even with sampling (paper: 88.1/88.2/88.0/87.7/87.2).");
+}

@@ -1,0 +1,125 @@
+//! In-repo benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench`] to get
+//! warmup + repeated timed runs with mean/std/min reporting, plus the
+//! experiment-grade sweep helpers the table/figure benches share.
+
+pub mod experiments;
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10.3} ms ± {:>7.3} (min {:>9.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Micro/meso benchmark runner.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters }
+    }
+
+    /// Time `f` (excluding warmup runs).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            f();
+            s.add(t0.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: s.mean(),
+            std_s: s.std_dev(),
+            min_s: s.min,
+        }
+    }
+}
+
+/// Convenience: is `--full` passed to a bench binary? (cargo bench passes
+/// `--bench` after the binary name; ignore unknown flags.)
+pub fn full_mode() -> bool {
+    std::env::args().any(|a| a == "--full")
+}
+
+/// Bench-harness seed list: `--seeds N` (default 3, 5 in full mode).
+pub fn seed_count() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    for i in 0..args.len() {
+        if args[i] == "--seeds" {
+            if let Some(v) = args.get(i + 1).and_then(|s| s.parse().ok()) {
+                return v;
+            }
+        }
+    }
+    if full_mode() {
+        5
+    } else {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new(1, 5);
+        let m = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s);
+        assert_eq!(m.iters, 5);
+        assert!(m.report().contains("spin"));
+    }
+
+    #[test]
+    fn default_config() {
+        let b = Bench::default();
+        assert_eq!(b.warmup, 3);
+        assert_eq!(b.iters, 10);
+    }
+}

@@ -1,0 +1,256 @@
+//! The FLuID coordinator — Algorithm 1 as a rust service.
+//!
+//! [`ExperimentConfig`] describes one federated run (model, dropout
+//! policy, fleet, straggler handling); [`experiment::run`] executes it
+//! against the AOT artifacts and returns an [`ExperimentResult`] with the
+//! per-round history the benches turn into the paper's tables/figures.
+
+pub mod experiment;
+pub mod report;
+
+pub use experiment::run;
+
+use crate::dropout::PolicyKind;
+use crate::fl::AggregateMode;
+use crate::jsonlite::Json;
+
+/// Everything that defines one run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// manifest model name
+    pub model: String,
+    pub policy: PolicyKind,
+    pub rounds: usize,
+    pub clients: usize,
+    pub samples_per_client: usize,
+    /// local SGD steps per round per client
+    pub local_steps: usize,
+    pub lr: f32,
+    /// how much of the fleet may be stragglers (1/5 on mobile, 0.2 at scale)
+    pub straggler_fraction: f64,
+    /// force every straggler to this keep-rate (Table 2 protocol);
+    /// None = FLuID picks per-straggler rates from latency profiling
+    pub fixed_rate: Option<f64>,
+    /// sub-model size menu (paper §7: pre-defined sizes)
+    pub rates_menu: Vec<f64>,
+    /// A.4 clustering: when Some, straggler rates snap to these clusters
+    pub cluster_rates: Option<Vec<f64>>,
+    /// recalibrate stragglers + thresholds every this many rounds
+    pub recalibrate_every: usize,
+    /// enable the §6.1 runtime-fluctuation protocol (Fig 4b)
+    pub fluctuation: bool,
+    /// keep the straggler set fixed after the first detection
+    /// (the "static straggler" baseline of Fig 4b)
+    pub static_stragglers: bool,
+    /// client sampling fraction per round (A.6; 1.0 = all clients)
+    pub sample_fraction: f64,
+    /// evaluate on the test split every this many rounds
+    pub eval_every: usize,
+    pub aggregate: AggregateMode,
+    /// run local steps through the fused k-step artifact when possible
+    /// (§Perf: LSTM-only win on CPU-XLA — see EXPERIMENTS.md)
+    pub use_fused_steps: bool,
+    /// freeze the invariant drop-threshold at this value (Table 3 sweep)
+    pub invariant_th_override: Option<f32>,
+    /// use the 5-phone Table-1 fleet (else a synthetic fleet of `clients`)
+    pub mobile_fleet: bool,
+    pub seed: u64,
+    /// worker threads for parallel client execution
+    pub threads: usize,
+}
+
+impl ExperimentConfig {
+    /// The paper's 5-phone / 1-straggler mobile setup.
+    pub fn mobile(model: &str, policy: PolicyKind) -> Self {
+        Self {
+            model: model.to_string(),
+            policy,
+            rounds: 30,
+            clients: 5,
+            samples_per_client: 60,
+            local_steps: 4,
+            lr: default_lr(model),
+            straggler_fraction: 0.2,
+            fixed_rate: None,
+            rates_menu: crate::straggler::detect::DEFAULT_RATES.to_vec(),
+            cluster_rates: None,
+            recalibrate_every: 1,
+            fluctuation: false,
+            static_stragglers: false,
+            sample_fraction: 1.0,
+            eval_every: 5,
+            aggregate: AggregateMode::OwnershipWeighted,
+            use_fused_steps: model == "shakespeare_lstm",
+            invariant_th_override: None,
+            mobile_fleet: true,
+            seed: 42,
+            threads: crate::util::pool::default_threads(),
+        }
+    }
+
+    /// Scale-study setup (50-100+ synthetic clients, 20% stragglers).
+    pub fn scale(model: &str, policy: PolicyKind, clients: usize) -> Self {
+        Self {
+            clients,
+            mobile_fleet: false,
+            samples_per_client: 30,
+            ..Self::mobile(model, policy)
+        }
+    }
+}
+
+/// Paper learning rates (§6): FEMNIST 0.004, CIFAR 0.01, Shakespeare 0.001.
+/// (We use CIFAR's 0.01 for the ResNet variant as well.)
+pub fn default_lr(model: &str) -> f32 {
+    match model {
+        "femnist_cnn" => 0.004,
+        "cifar_vgg9" | "cifar_resnet18" => 0.01,
+        "shakespeare_lstm" => 0.001,
+        _ => 0.01,
+    }
+}
+
+/// Per-round record for the history (one row of every figure).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// virtual seconds consumed by this round (max client latency)
+    pub round_time: f64,
+    /// cumulative virtual time
+    pub vtime: f64,
+    pub straggler_ids: Vec<usize>,
+    pub straggler_rates: Vec<f64>,
+    /// slowest non-straggler latency (the FLuID target)
+    pub t_target: f64,
+    /// actual slowest-straggler latency this round
+    pub straggler_time: f64,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    /// test metrics (NaN on non-eval rounds)
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// fraction of neurons currently invariant (invariant policy only)
+    pub invariant_fraction: f64,
+    /// wall-clock seconds the server spent on calibration this round
+    pub calibration_secs: f64,
+}
+
+/// Full outcome of one run.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    pub model: String,
+    pub policy: PolicyKind,
+    pub records: Vec<RoundRecord>,
+    pub final_test_acc: f64,
+    pub final_test_loss: f64,
+    pub total_vtime: f64,
+    /// total wall-clock seconds of server-side calibration
+    pub calibration_total: f64,
+    pub seed: u64,
+    /// total wall-clock seconds spent executing client train steps
+    pub train_wall_total: f64,
+}
+
+impl ExperimentResult {
+    /// Calibration overhead relative to actual training compute — the
+    /// §6.1 claim is that FLuID's server-side calibration costs < 5% of
+    /// training time.
+    pub fn calibration_overhead(&self) -> f64 {
+        if self.train_wall_total <= 0.0 {
+            0.0
+        } else {
+            self.calibration_total / self.train_wall_total
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rounds: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("round", r.round)
+                    .set("round_time", r.round_time)
+                    .set("vtime", r.vtime)
+                    .set("t_target", r.t_target)
+                    .set("straggler_time", r.straggler_time)
+                    .set("train_loss", r.train_loss)
+                    .set("train_acc", r.train_acc)
+                    .set("test_loss", if r.test_loss.is_nan() { -1.0 } else { r.test_loss })
+                    .set("test_acc", if r.test_acc.is_nan() { -1.0 } else { r.test_acc })
+                    .set("invariant_fraction", r.invariant_fraction)
+                    .set(
+                        "stragglers",
+                        r.straggler_ids.iter().map(|&i| i as i64).collect::<Vec<i64>>(),
+                    )
+                    .set("rates", r.straggler_rates.clone())
+            })
+            .collect();
+        Json::obj()
+            .set("model", self.model.as_str())
+            .set("policy", self.policy.name())
+            .set("final_test_acc", self.final_test_acc)
+            .set("final_test_loss", self.final_test_loss)
+            .set("total_vtime", self.total_vtime)
+            .set("calibration_overhead", self.calibration_overhead())
+            .set("seed", self.seed as i64)
+            .set("rounds", Json::Arr(rounds))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_lrs_match_paper() {
+        assert_eq!(default_lr("femnist_cnn"), 0.004);
+        assert_eq!(default_lr("cifar_vgg9"), 0.01);
+        assert_eq!(default_lr("shakespeare_lstm"), 0.001);
+    }
+
+    #[test]
+    fn config_presets() {
+        let m = ExperimentConfig::mobile("femnist_cnn", PolicyKind::Invariant);
+        assert!(m.mobile_fleet);
+        assert_eq!(m.clients, 5);
+        let s = ExperimentConfig::scale("cifar_vgg9", PolicyKind::Ordered, 100);
+        assert!(!s.mobile_fleet);
+        assert_eq!(s.clients, 100);
+    }
+
+    #[test]
+    fn result_json_round_trips() {
+        let res = ExperimentResult {
+            model: "femnist_cnn".into(),
+            policy: PolicyKind::Invariant,
+            records: vec![RoundRecord {
+                round: 0,
+                round_time: 3.0,
+                vtime: 3.0,
+                straggler_ids: vec![4],
+                straggler_rates: vec![0.75],
+                t_target: 2.8,
+                straggler_time: 3.0,
+                train_loss: 4.1,
+                train_acc: 0.02,
+                test_loss: f64::NAN,
+                test_acc: f64::NAN,
+                invariant_fraction: 0.0,
+                calibration_secs: 0.001,
+            }],
+            final_test_acc: 0.8,
+            final_test_loss: 0.7,
+            total_vtime: 3.0,
+            calibration_total: 0.001,
+            seed: 1,
+            train_wall_total: 1.0,
+        };
+        let j = res.to_json();
+        let text = j.to_string_pretty();
+        let back = crate::jsonlite::parse(&text).unwrap();
+        assert_eq!(back.req("policy").unwrap().as_str(), Some("invariant"));
+        assert_eq!(back.req("rounds").unwrap().as_arr().unwrap().len(), 1);
+        assert!(res.calibration_overhead() < 0.05);
+    }
+}

@@ -1,0 +1,104 @@
+//! Report emission: markdown tables and aligned text tables for the
+//! bench harnesses (EXPERIMENTS.md is assembled from these).
+
+/// Render a GitHub-flavored markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push('|');
+    for h in headers {
+        s.push_str(&format!(" {h} |"));
+    }
+    s.push('\n');
+    s.push('|');
+    for _ in headers {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for row in rows {
+        s.push('|');
+        for cell in row {
+            s.push_str(&format!(" {cell} |"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render aligned plain-text columns (for terminal bench output).
+pub fn text_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut s = String::new();
+    for (i, h) in headers.iter().enumerate() {
+        s.push_str(&format!("{:<w$}  ", h, w = widths[i]));
+    }
+    s.push('\n');
+    for (i, _) in headers.iter().enumerate() {
+        s.push_str(&format!("{:-<w$}  ", "", w = widths[i]));
+    }
+    s.push('\n');
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            s.push_str(&format!("{:<w$}  ", cell, w = widths[i]));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Format a percentage with one decimal.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+/// Format mean ± std as the paper's (µ, σ) pairs.
+pub fn mean_std(mu: f64, sigma: f64) -> String {
+    format!("{:.1} ± {:.1}", mu * 100.0, sigma * 100.0)
+}
+
+/// Append a section to EXPERIMENTS-style output files.
+pub fn append_section(path: &str, title: &str, body: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "\n## {title}\n\n{body}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], "| a | b |");
+        assert_eq!(lines[1], "|---|---|");
+        assert_eq!(lines[3], "| 3 | 4 |");
+    }
+
+    #[test]
+    fn text_alignment() {
+        let t = text_table(&["name", "x"], &[vec!["longvalue".into(), "1".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("longvalue"));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.8064), "80.6");
+        assert_eq!(mean_std(0.806, 0.002), "80.6 ± 0.2");
+    }
+}

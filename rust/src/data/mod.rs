@@ -1,0 +1,192 @@
+//! Federated datasets.
+//!
+//! The paper evaluates on FEMNIST, CIFAR10 and LEAF-Shakespeare. Those
+//! corpora are not downloadable in this environment, so we build
+//! *deterministic synthetic equivalents* with the same shapes, class
+//! counts and partition structure (DESIGN.md §2): what matters for every
+//! comparison in the paper is that all dropout policies train the same
+//! model on the same heterogeneous client data — the learning-dynamics
+//! ordering (Invariant vs Ordered vs Random) is preserved.
+//!
+//! * [`synthetic::femnist`] — 62-class 28x28x1 images, non-IID by
+//!   "writer" (each client draws a subset of classes with its own style
+//!   transform), mirroring LEAF's by-writer split.
+//! * [`synthetic::cifar10`] — 10-class 32x32x3 images, IID partition
+//!   (Flower's split used by the paper) or Dirichlet non-IID.
+//! * [`shakespeare::load`] — char-level next-character prediction over an
+//!   embedded public-domain Shakespeare excerpt, partitioned by "role"
+//!   (contiguous speaker chunks), mirroring LEAF's by-role split.
+
+pub mod partition;
+pub mod shakespeare;
+pub mod synthetic;
+
+use crate::runtime::{Batch, XData};
+use crate::tensor::Tensor;
+use crate::util::prng::Pcg32;
+
+/// Feature storage for one split (dense f32 or token i32).
+#[derive(Clone, Debug)]
+pub enum XStore {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A set of examples: `feature_len` values per example + one label.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub xs: XStore,
+    pub ys: Vec<i32>,
+    pub feature_len: usize,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+
+    /// Assemble a batch from example indices; `x_shape` is the manifest
+    /// batch shape (x_shape[0] must equal idx.len()).
+    pub fn batch(&self, idx: &[usize], x_shape: &[usize]) -> Batch {
+        assert_eq!(x_shape[0], idx.len(), "batch size mismatch");
+        assert_eq!(
+            x_shape[1..].iter().product::<usize>(),
+            self.feature_len,
+            "feature len mismatch"
+        );
+        let y: Vec<i32> = idx.iter().map(|&i| self.ys[i]).collect();
+        let x = match &self.xs {
+            XStore::F32(data) => {
+                let mut out = Vec::with_capacity(idx.len() * self.feature_len);
+                for &i in idx {
+                    out.extend_from_slice(
+                        &data[i * self.feature_len..(i + 1) * self.feature_len],
+                    );
+                }
+                XData::F32(Tensor::from_vec(x_shape, out))
+            }
+            XStore::I32(data) => {
+                let mut out = Vec::with_capacity(idx.len() * self.feature_len);
+                for &i in idx {
+                    out.extend_from_slice(
+                        &data[i * self.feature_len..(i + 1) * self.feature_len],
+                    );
+                }
+                XData::I32(out)
+            }
+        };
+        Batch { x, y }
+    }
+
+    /// Sample a random batch (without replacement within the batch).
+    pub fn sample_batch(&self, rng: &mut Pcg32, x_shape: &[usize]) -> Batch {
+        let bs = x_shape[0];
+        let idx = if self.len() >= bs {
+            rng.sample_indices(self.len(), bs)
+        } else {
+            // tiny client: sample with replacement
+            (0..bs).map(|_| rng.below_usize(self.len())).collect()
+        };
+        self.batch(&idx, x_shape)
+    }
+
+    /// Class histogram (diagnostics / partition tests).
+    pub fn class_histogram(&self, num_classes: usize) -> Vec<usize> {
+        let mut h = vec![0; num_classes];
+        for &y in &self.ys {
+            h[y as usize] += 1;
+        }
+        h
+    }
+}
+
+/// A federated dataset: one split per client + a held-out test split.
+#[derive(Clone, Debug)]
+pub struct FlData {
+    pub clients: Vec<Split>,
+    pub test: Split,
+    pub num_classes: usize,
+}
+
+impl FlData {
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Total training examples across clients.
+    pub fn total_examples(&self) -> usize {
+        self.clients.iter().map(|c| c.len()).sum()
+    }
+
+    /// Build the dataset matching a model name (dispatch used by the CLI,
+    /// examples and benches).
+    pub fn for_model(
+        model: &str,
+        num_clients: usize,
+        samples_per_client: usize,
+        seed: u64,
+    ) -> FlData {
+        match model {
+            "femnist_cnn" => synthetic::femnist(num_clients, samples_per_client, seed),
+            "cifar_vgg9" | "cifar_resnet18" => {
+                synthetic::cifar10(num_clients, samples_per_client, seed, true)
+            }
+            "shakespeare_lstm" => {
+                shakespeare::load(num_clients, samples_per_client, 48, seed)
+            }
+            other => panic!("unknown model {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_split() -> Split {
+        Split {
+            xs: XStore::F32((0..6 * 4).map(|i| i as f32).collect()),
+            ys: vec![0, 1, 2, 0, 1, 2],
+            feature_len: 4,
+        }
+    }
+
+    #[test]
+    fn batch_assembles_rows() {
+        let s = tiny_split();
+        let b = s.batch(&[2, 0], &[2, 4]);
+        match &b.x {
+            XData::F32(t) => {
+                assert_eq!(t.shape(), &[2, 4]);
+                assert_eq!(&t.data()[..4], &[8.0, 9.0, 10.0, 11.0]);
+                assert_eq!(&t.data()[4..], &[0.0, 1.0, 2.0, 3.0]);
+            }
+            _ => panic!("expected f32"),
+        }
+        assert_eq!(b.y, vec![2, 0]);
+    }
+
+    #[test]
+    fn sample_batch_handles_tiny_clients() {
+        let s = tiny_split();
+        let mut rng = Pcg32::new(1, 1);
+        let b = s.sample_batch(&mut rng, &[10, 4]); // bigger than split
+        assert_eq!(b.y.len(), 10);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let s = tiny_split();
+        assert_eq!(s.class_histogram(3), vec![2, 2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch size mismatch")]
+    fn wrong_batch_size_panics() {
+        tiny_split().batch(&[0], &[2, 4]);
+    }
+}

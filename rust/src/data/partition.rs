@@ -1,0 +1,142 @@
+//! Sample-to-client partitioners.
+//!
+//! * [`iid`] — shuffle and deal evenly (the Flower IID split the paper
+//!   uses for CIFAR10 on mobile devices).
+//! * [`dirichlet`] — per-class Dirichlet(α) proportions (the standard
+//!   FjORD/FedML non-IID protocol): smaller α, more skew.
+//! * [`by_chunks`] — contiguous chunks (LEAF by-writer / by-role shape).
+
+use crate::util::prng::Pcg32;
+
+/// Evenly deal `n` shuffled samples to `k` clients.
+pub fn iid(n: usize, k: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut out = vec![Vec::with_capacity(n / k + 1); k];
+    for (i, s) in idx.into_iter().enumerate() {
+        out[i % k].push(s);
+    }
+    out
+}
+
+/// Dirichlet(α) label-skew partition: for each class, split its samples
+/// across clients with Dirichlet-sampled proportions.
+pub fn dirichlet(labels: &[i32], k: usize, alpha: f64, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+    let num_classes = labels.iter().copied().max().unwrap_or(0) as usize + 1;
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &y) in labels.iter().enumerate() {
+        by_class[y as usize].push(i);
+    }
+    let mut out = vec![Vec::new(); k];
+    for class_samples in by_class.iter_mut() {
+        rng.shuffle(class_samples);
+        let props = rng.dirichlet(alpha, k);
+        // cumulative cut points
+        let n = class_samples.len();
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (c, p) in props.iter().enumerate() {
+            acc += p;
+            let end = if c == k - 1 {
+                n
+            } else {
+                ((acc * n as f64).round() as usize).min(n)
+            };
+            out[c].extend_from_slice(&class_samples[start..end]);
+            start = end;
+        }
+    }
+    out
+}
+
+/// Contiguous chunks of (roughly) equal size — the shape of LEAF's
+/// by-writer / by-role splits over a sequential corpus.
+pub fn by_chunks(n: usize, k: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::with_capacity(k);
+    let base = n / k;
+    let extra = n % k;
+    let mut start = 0;
+    for c in 0..k {
+        let len = base + usize::from(c < extra);
+        out.push((start..start + len).collect());
+        start += len;
+    }
+    out
+}
+
+/// Every sample assigned exactly once — shared invariant of all
+/// partitioners (property-tested in rust/tests/properties.rs).
+pub fn is_exact_cover(parts: &[Vec<usize>], n: usize) -> bool {
+    let mut seen = vec![false; n];
+    for p in parts {
+        for &i in p {
+            if i >= n || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+        }
+    }
+    seen.into_iter().all(|b| b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_is_even_and_complete() {
+        let mut rng = Pcg32::new(1, 1);
+        let parts = iid(103, 5, &mut rng);
+        assert!(is_exact_cover(&parts, 103));
+        let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert!(lens.iter().all(|&l| l == 20 || l == 21), "{lens:?}");
+    }
+
+    #[test]
+    fn dirichlet_complete_and_skewed() {
+        let mut rng = Pcg32::new(2, 1);
+        let labels: Vec<i32> = (0..500).map(|i| (i % 10) as i32).collect();
+        let parts = dirichlet(&labels, 8, 0.3, &mut rng);
+        assert!(is_exact_cover(&parts, 500));
+        // low alpha should create visibly uneven class ownership
+        let mut any_skew = false;
+        for p in &parts {
+            let mut h = [0usize; 10];
+            for &i in p {
+                h[labels[i] as usize] += 1;
+            }
+            let max = *h.iter().max().unwrap() as f64;
+            let sum: usize = h.iter().sum();
+            if sum > 0 && max / sum as f64 > 0.3 {
+                any_skew = true;
+            }
+        }
+        assert!(any_skew, "Dirichlet(0.3) produced near-uniform partitions");
+    }
+
+    #[test]
+    fn dirichlet_high_alpha_is_nearly_uniform() {
+        let mut rng = Pcg32::new(3, 1);
+        let labels: Vec<i32> = (0..1000).map(|i| (i % 10) as i32).collect();
+        let parts = dirichlet(&labels, 4, 1000.0, &mut rng);
+        assert!(is_exact_cover(&parts, 1000));
+        for p in &parts {
+            assert!((200..=300).contains(&p.len()), "{}", p.len());
+        }
+    }
+
+    #[test]
+    fn chunks_cover_exactly() {
+        let parts = by_chunks(10, 3);
+        assert!(is_exact_cover(&parts, 10));
+        assert_eq!(parts[0], vec![0, 1, 2, 3]);
+        assert_eq!(parts[2], vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn cover_detector_catches_bad_partitions() {
+        assert!(!is_exact_cover(&[vec![0, 0]], 2)); // duplicate
+        assert!(!is_exact_cover(&[vec![0]], 2)); // missing
+        assert!(!is_exact_cover(&[vec![5]], 2)); // out of range
+    }
+}

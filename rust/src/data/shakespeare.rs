@@ -1,0 +1,244 @@
+//! Char-level Shakespeare next-character prediction (LEAF stand-in).
+//!
+//! A public-domain excerpt is embedded below; clients are "roles":
+//! contiguous chunks of the corpus (LEAF partitions by speaking role,
+//! which is likewise contiguous text per client). The task matches the
+//! paper's: predict the character following an 80-char (here `seq_len`)
+//! window.
+
+use super::{partition, FlData, Split, XStore};
+use crate::util::prng::Pcg32;
+
+/// Fixed 80-symbol vocabulary (matches model.py VOCAB). Unknown chars map
+/// to the space at index 0.
+pub const ALPHABET: &str =
+    " abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789.,:;'!?-()[]\"&\n";
+
+/// Embedded public-domain corpus (famous soliloquies + sonnets).
+pub const CORPUS: &str = r#"To be, or not to be, that is the question:
+Whether 'tis nobler in the mind to suffer
+The slings and arrows of outrageous fortune,
+Or to take arms against a sea of troubles
+And by opposing end them. To die: to sleep;
+No more; and by a sleep to say we end
+The heart-ache and the thousand natural shocks
+That flesh is heir to, 'tis a consummation
+Devoutly to be wish'd. To die, to sleep;
+To sleep: perchance to dream: ay, there's the rub;
+For in that sleep of death what dreams may come
+When we have shuffled off this mortal coil,
+Must give us pause: there's the respect
+That makes calamity of so long life;
+Tomorrow, and tomorrow, and tomorrow,
+Creeps in this petty pace from day to day
+To the last syllable of recorded time,
+And all our yesterdays have lighted fools
+The way to dusty death. Out, out, brief candle!
+Life's but a walking shadow, a poor player
+That struts and frets his hour upon the stage
+And then is heard no more: it is a tale
+Told by an idiot, full of sound and fury,
+Signifying nothing.
+Shall I compare thee to a summer's day?
+Thou art more lovely and more temperate:
+Rough winds do shake the darling buds of May,
+And summer's lease hath all too short a date:
+Sometime too hot the eye of heaven shines,
+And often is his gold complexion dimm'd;
+And every fair from fair sometime declines,
+By chance or nature's changing course untrimm'd;
+But thy eternal summer shall not fade
+Nor lose possession of that fair thou owest;
+Nor shall Death brag thou wander'st in his shade,
+When in eternal lines to time thou growest:
+So long as men can breathe or eyes can see,
+So long lives this and this gives life to thee.
+Now is the winter of our discontent
+Made glorious summer by this sun of York;
+And all the clouds that lour'd upon our house
+In the deep bosom of the ocean buried.
+Now are our brows bound with victorious wreaths;
+Our bruised arms hung up for monuments;
+Our stern alarums changed to merry meetings,
+Our dreadful marches to delightful measures.
+Friends, Romans, countrymen, lend me your ears;
+I come to bury Caesar, not to praise him.
+The evil that men do lives after them;
+The good is oft interred with their bones;
+So let it be with Caesar. The noble Brutus
+Hath told you Caesar was ambitious:
+If it were so, it was a grievous fault,
+And grievously hath Caesar answer'd it.
+Here, under leave of Brutus and the rest--
+For Brutus is an honourable man;
+So are they all, all honourable men--
+Come I to speak in Caesar's funeral.
+He was my friend, faithful and just to me:
+But Brutus says he was ambitious;
+And Brutus is an honourable man.
+But soft, what light through yonder window breaks?
+It is the east, and Juliet is the sun.
+Arise, fair sun, and kill the envious moon,
+Who is already sick and pale with grief,
+That thou her maid art far more fair than she.
+The quality of mercy is not strain'd,
+It droppeth as the gentle rain from heaven
+Upon the place beneath: it is twice blest;
+It blesseth him that gives and him that takes:
+'Tis mightiest in the mightiest: it becomes
+The throned monarch better than his crown;
+His sceptre shows the force of temporal power,
+The attribute to awe and majesty,
+Wherein doth sit the dread and fear of kings;
+But mercy is above this sceptred sway;
+It is enthroned in the hearts of kings,
+It is an attribute to God himself;
+And earthly power doth then show likest God's
+When mercy seasons justice. All the world's a stage,
+And all the men and women merely players:
+They have their exits and their entrances;
+And one man in his time plays many parts,
+His acts being seven ages. At first the infant,
+Mewling and puking in the nurse's arms.
+And then the whining school-boy, with his satchel
+And shining morning face, creeping like snail
+Unwillingly to school. And then the lover,
+Sighing like furnace, with a woeful ballad
+Made to his mistress' eyebrow. Then a soldier,
+Full of strange oaths and bearded like the pard,
+Jealous in honour, sudden and quick in quarrel,
+Seeking the bubble reputation
+Even in the cannon's mouth. And then the justice,
+In fair round belly with good capon lined,
+With eyes severe and beard of formal cut,
+Full of wise saws and modern instances;
+And so he plays his part.
+"#;
+
+/// Char -> token id over [`ALPHABET`] (unknown -> 0).
+pub fn encode(c: char) -> i32 {
+    ALPHABET.chars().position(|a| a == c).unwrap_or(0) as i32
+}
+
+/// Token id -> char.
+pub fn decode(t: i32) -> char {
+    ALPHABET.chars().nth(t as usize).unwrap_or(' ')
+}
+
+/// Vocabulary size (must stay <= model.py VOCAB = 80).
+pub fn vocab_size() -> usize {
+    ALPHABET.chars().count()
+}
+
+/// Build the federated dataset: contiguous "role" chunks per client;
+/// windows of `seq_len` chars predicting the following char.
+pub fn load(num_clients: usize, samples_per_client: usize, seq_len: usize, seed: u64) -> FlData {
+    let tokens: Vec<i32> = CORPUS.chars().map(encode).collect();
+    let n = tokens.len();
+    assert!(n > seq_len + 2, "corpus too small");
+
+    let chunks = partition::by_chunks(n, num_clients.max(1));
+    let mut clients = Vec::with_capacity(num_clients);
+    for (ci, chunk) in chunks.iter().enumerate().take(num_clients) {
+        let mut rng = Pcg32::new(seed ^ 0x5AE5, ci as u64 + 1);
+        let lo = chunk[0];
+        let hi = chunk[chunk.len() - 1];
+        let mut xs = Vec::with_capacity(samples_per_client * seq_len);
+        let mut ys = Vec::with_capacity(samples_per_client);
+        for _ in 0..samples_per_client {
+            // windows may extend past the chunk edge into the corpus tail —
+            // roles share scene context in LEAF too
+            let max_start = (hi.min(n - seq_len - 2)).max(lo);
+            let start = lo + rng.below_usize((max_start - lo).max(1));
+            let start = start.min(n - seq_len - 1);
+            xs.extend(tokens[start..start + seq_len].iter());
+            ys.push(tokens[start + seq_len]);
+        }
+        clients.push(Split {
+            xs: XStore::I32(xs),
+            ys,
+            feature_len: seq_len,
+        });
+    }
+
+    // test: evenly spaced windows over the whole corpus
+    let test_n = (num_clients * samples_per_client / 5).clamp(32, 1000);
+    let mut xs = Vec::with_capacity(test_n * seq_len);
+    let mut ys = Vec::with_capacity(test_n);
+    let stride = ((n - seq_len - 1) / test_n).max(1);
+    for i in 0..test_n {
+        let start = (i * stride) % (n - seq_len - 1);
+        xs.extend(tokens[start..start + seq_len].iter());
+        ys.push(tokens[start + seq_len]);
+    }
+
+    FlData {
+        clients,
+        test: Split {
+            xs: XStore::I32(xs),
+            ys,
+            feature_len: seq_len,
+        },
+        num_classes: 80,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_model() {
+        assert!(vocab_size() <= 80, "vocab {} > 80", vocab_size());
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        for c in "Hello, World! 'tis".chars() {
+            assert_eq!(decode(encode(c)), c);
+        }
+        // unknown maps to space
+        assert_eq!(encode('@'), 0);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        for c in CORPUS.chars() {
+            let t = encode(c);
+            assert!((0..80).contains(&t), "char {c:?} -> {t}");
+        }
+    }
+
+    #[test]
+    fn load_shapes() {
+        let d = load(5, 20, 48, 9);
+        assert_eq!(d.num_clients(), 5);
+        for c in &d.clients {
+            assert_eq!(c.len(), 20);
+            assert_eq!(c.feature_len, 48);
+            if let XStore::I32(x) = &c.xs {
+                assert_eq!(x.len(), 20 * 48);
+            }
+        }
+    }
+
+    #[test]
+    fn clients_get_different_text() {
+        let d = load(4, 10, 32, 1);
+        let (a, b) = (&d.clients[0].xs, &d.clients[3].xs);
+        match (a, b) {
+            (XStore::I32(x), XStore::I32(y)) => assert_ne!(x, y),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = load(3, 10, 24, 5);
+        let b = load(3, 10, 24, 5);
+        match (&a.clients[2].xs, &b.clients[2].xs) {
+            (XStore::I32(x), XStore::I32(y)) => assert_eq!(x, y),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Invariant Dropout — the paper's contribution (§4, §5, Algorithm 1).
+//!
+//! The server watches the per-neuron relative weight updates of the
+//! **non-straggler** clients (stragglers only train sub-models, so their
+//! updates cannot vote). A neuron is *invariant* when its update falls
+//! below the drop-threshold `th` for the majority of non-stragglers, for
+//! `persistence` consecutive calibration steps ("targets neurons for
+//! dropping whose gradients consistently fall below the threshold over
+//! multiple epochs"). Sub-model extraction drops the lowest-update
+//! invariant neurons first, calibrating `th` upward until the invariant
+//! set covers the number of neurons that must leave the sub-model.
+
+use super::mask::{kept_count, MaskSet};
+use super::threshold;
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+
+/// Tunables for the invariant policy.
+#[derive(Clone, Copy, Debug)]
+pub struct InvariantConfig {
+    /// multiplicative threshold increment per calibration step
+    pub step: f32,
+    /// consecutive below-threshold calibrations before a neuron is a
+    /// first-class drop candidate
+    pub persistence: u32,
+    /// fraction of non-stragglers that must agree a neuron is invariant
+    pub majority: f64,
+    /// max calibration iterations per extraction
+    pub max_iters: usize,
+    /// freeze all group thresholds at this value (Table 3's controlled
+    /// sweep); None = calibrate automatically (Algorithm 1)
+    pub th_override: Option<f32>,
+}
+
+impl Default for InvariantConfig {
+    fn default() -> Self {
+        Self {
+            step: 1.25,
+            persistence: 2,
+            majority: 0.5,
+            max_iters: 200,
+            th_override: None,
+        }
+    }
+}
+
+/// Invariant Dropout state held by the FLuID server.
+pub struct InvariantDropout {
+    pub cfg: InvariantConfig,
+    /// per-group drop threshold (per-layer thresholds, paper §5)
+    th: Vec<f32>,
+    /// per-group per-neuron consecutive below-threshold count
+    streak: Vec<Vec<u32>>,
+    /// per-group per-neuron mean relative update over the last observation
+    score: Vec<Vec<f32>>,
+    observations: usize,
+}
+
+impl InvariantDropout {
+    pub fn new(spec: &ModelSpec, cfg: InvariantConfig) -> Self {
+        Self {
+            cfg,
+            th: vec![0.0; spec.masks.len()],
+            streak: spec.masks.iter().map(|m| vec![0; m.size]).collect(),
+            score: spec.masks.iter().map(|m| vec![0.0; m.size]).collect(),
+            observations: 0,
+        }
+    }
+
+    /// Has the policy seen any non-straggler updates yet? Until then,
+    /// stragglers receive the full model (Algorithm 1's initialization
+    /// epochs).
+    pub fn ready(&self) -> bool {
+        self.observations > 0
+    }
+
+    pub fn thresholds(&self) -> &[f32] {
+        &self.th
+    }
+
+    /// Mean per-neuron update score for group `g` (Fig 6 / Table 3).
+    pub fn scores(&self, g: usize) -> &[f32] {
+        &self.score[g]
+    }
+
+    /// Fraction of all neurons currently below the (per-group) threshold —
+    /// the "percentage of invariant neurons" metric of Fig 6 and Table 3.
+    pub fn invariant_fraction(&self) -> f64 {
+        let mut below = 0usize;
+        let mut total = 0usize;
+        for (g, sc) in self.score.iter().enumerate() {
+            below += threshold::count_below(sc, self.th[g]);
+            total += sc.len();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            below as f64 / total as f64
+        }
+    }
+
+    /// Same metric at an explicit global threshold (Table 3 sweeps).
+    pub fn invariant_fraction_at(&self, th: f32) -> f64 {
+        let mut below = 0usize;
+        let mut total = 0usize;
+        for sc in &self.score {
+            below += threshold::count_below(sc, th);
+            total += sc.len();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            below as f64 / total as f64
+        }
+    }
+
+    /// Override per-group thresholds (Table 3's controlled sweep).
+    pub fn set_thresholds(&mut self, th: f32) {
+        for t in &mut self.th {
+            *t = th;
+        }
+    }
+
+    /// Ingest one round of non-straggler deltas: `per_client[c][g]` is the
+    /// per-neuron relative-update vector of group `g` from client `c`
+    /// (produced by the L1 `neuron_delta` kernel via `delta_step`).
+    pub fn observe(&mut self, per_client: &[Vec<Tensor>]) {
+        if per_client.is_empty() {
+            return;
+        }
+        let clients = per_client.len();
+        let groups = self.score.len();
+        // mean score per neuron
+        for g in 0..groups {
+            let n = self.score[g].len();
+            for i in 0..n {
+                let mut acc = 0.0f64;
+                for c in per_client {
+                    acc += c[g].data()[i] as f64;
+                }
+                self.score[g][i] = (acc / clients as f64) as f32;
+            }
+        }
+        // first observation initializes th per group: mean over clients of
+        // each client's minimum per-neuron update (paper §5)
+        if let Some(th) = self.cfg.th_override {
+            for t in &mut self.th {
+                *t = th;
+            }
+        } else if self.observations == 0 {
+            for g in 0..groups {
+                let per_client_vecs: Vec<Vec<f32>> = per_client
+                    .iter()
+                    .map(|c| c[g].data().to_vec())
+                    .collect();
+                let init = threshold::initial_threshold(&per_client_vecs);
+                // strictly positive so the very first vote can pass
+                self.th[g] = if init > 0.0 { init * 1.5 } else { 1e-6 };
+            }
+        }
+        // majority vote + streak update
+        let quorum = ((clients as f64) * self.cfg.majority).ceil().max(1.0) as usize;
+        for g in 0..groups {
+            let n = self.score[g].len();
+            for i in 0..n {
+                let votes = per_client
+                    .iter()
+                    .filter(|c| c[g].data()[i] < self.th[g])
+                    .count();
+                if votes >= quorum {
+                    self.streak[g][i] = self.streak[g][i].saturating_add(1);
+                } else {
+                    self.streak[g][i] = 0;
+                }
+            }
+        }
+        self.observations += 1;
+    }
+
+    /// Extract a sub-model keeping fraction `r` per group. Neurons are
+    /// dropped in priority order:
+    ///   1. persistent invariant neurons (streak >= persistence), lowest
+    ///      mean update first;
+    ///   2. currently-below-threshold neurons (after calibrating `th`
+    ///      upward until enough candidates exist — Algorithm 1 line 22);
+    ///   3. lowest mean-update neurons regardless (threshold calibration
+    ///      degenerate case: everything still moving).
+    pub fn make_mask(&mut self, spec: &ModelSpec, r: f64) -> MaskSet {
+        if !self.ready() {
+            return MaskSet::full(spec);
+        }
+        let mut keep = Vec::with_capacity(spec.masks.len());
+        for (g, m) in spec.masks.iter().enumerate() {
+            let n = m.size;
+            let n_keep = kept_count(n, r);
+            let n_drop = n - n_keep;
+            if n_drop == 0 {
+                keep.push(vec![true; n]);
+                continue;
+            }
+            // calibrate th until the invariant set is large enough
+            // (skipped when the threshold is frozen for a controlled sweep)
+            if self.cfg.th_override.is_none() {
+                self.th[g] = threshold::calibrate(
+                    &self.score[g],
+                    self.th[g],
+                    n_drop,
+                    self.cfg.step,
+                    self.cfg.max_iters,
+                );
+            }
+
+            // order all neurons by (priority class, score)
+            let mut order: Vec<usize> = (0..n).collect();
+            let class = |i: usize| -> u8 {
+                if self.streak[g][i] >= self.cfg.persistence
+                    && self.score[g][i] < self.th[g]
+                {
+                    0
+                } else if self.score[g][i] < self.th[g] {
+                    1
+                } else {
+                    2
+                }
+            };
+            if self.cfg.th_override.is_some() {
+                // frozen-threshold mode (Table 3 protocol): the server
+                // only has the binary invariant vote. Below-threshold
+                // neurons drop first; if the threshold is too low to
+                // cover the drop budget, the deficit comes from
+                // *arbitrary* still-moving neurons — exactly why the
+                // paper's accuracy peaks when #invariant ≈ #dropped.
+                order.sort_by_key(|&i| (class(i).min(1), i));
+            } else {
+                order.sort_by(|&a, &b| {
+                    class(a)
+                        .cmp(&class(b))
+                        .then(self.score[g][a].partial_cmp(&self.score[g][b]).unwrap())
+                });
+            }
+            let mut k = vec![true; n];
+            for &i in order.iter().take(n_drop) {
+                k[i] = false;
+            }
+            keep.push(k);
+        }
+        MaskSet::from_keep(spec, &keep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::tests::tiny_spec;
+
+    /// deltas where group-0 neurons 0..5 barely move and 5..10 move a lot,
+    /// group-1 neuron 0 barely moves.
+    fn fake_deltas(clients: usize) -> Vec<Vec<Tensor>> {
+        (0..clients)
+            .map(|c| {
+                let jitter = c as f32 * 1e-4;
+                let g0: Vec<f32> = (0..10)
+                    .map(|i| if i < 5 { 0.001 + jitter } else { 0.5 + jitter })
+                    .collect();
+                let g1: Vec<f32> = (0..6)
+                    .map(|i| if i == 0 { 0.002 } else { 0.4 })
+                    .collect();
+                vec![Tensor::from_vec(&[10], g0), Tensor::from_vec(&[6], g1)]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn not_ready_returns_full() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        assert!(!p.ready());
+        assert!(p.make_mask(&spec, 0.5).is_full());
+    }
+
+    #[test]
+    fn drops_low_update_neurons_first() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        for _ in 0..3 {
+            p.observe(&fake_deltas(4));
+        }
+        let m = p.make_mask(&spec, 0.5);
+        // group 0: drop 5 -> exactly the invariant neurons 0..5
+        for i in 0..5 {
+            assert!(!m.is_kept(0, i), "neuron {i} should be dropped");
+        }
+        for i in 5..10 {
+            assert!(m.is_kept(0, i), "neuron {i} should be kept");
+        }
+        // group 1: drop 3, neuron 0 must be among them
+        assert!(!m.is_kept(1, 0));
+        assert_eq!(m.kept(1), 3);
+    }
+
+    #[test]
+    fn exact_drop_counts_per_group() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        p.observe(&fake_deltas(4));
+        for &r in &[0.95, 0.85, 0.75, 0.65, 0.5] {
+            let m = p.make_mask(&spec, r);
+            assert_eq!(m.kept(0), kept_count(10, r), "r={r}");
+            assert_eq!(m.kept(1), kept_count(6, r), "r={r}");
+        }
+    }
+
+    #[test]
+    fn threshold_initialized_from_client_minima() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        p.observe(&fake_deltas(4));
+        // min update in group 0 is ~0.001; init = 1.5x mean-of-minima
+        assert!(p.thresholds()[0] > 0.001 && p.thresholds()[0] < 0.01);
+    }
+
+    #[test]
+    fn streaks_reset_when_neurons_start_moving() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        p.observe(&fake_deltas(4));
+        p.observe(&fake_deltas(4));
+        assert!(p.streak[0][0] >= 2);
+        // now neuron 0 starts moving hard
+        let mut moved = fake_deltas(4);
+        for c in &mut moved {
+            c[0].data_mut()[0] = 0.9;
+        }
+        p.observe(&moved);
+        assert_eq!(p.streak[0][0], 0);
+    }
+
+    #[test]
+    fn invariant_fraction_grows_with_threshold() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        p.observe(&fake_deltas(4));
+        let lo = p.invariant_fraction_at(0.002);
+        let hi = p.invariant_fraction_at(1.0);
+        assert!(lo < hi);
+        assert!((hi - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_raises_threshold_for_aggressive_r() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        p.observe(&fake_deltas(4));
+        let th_before = p.thresholds()[0];
+        // r=0.3 needs 7 drops in group 0 but only 5 neurons are invariant:
+        // calibration must raise th
+        let m = p.make_mask(&spec, 0.3);
+        assert_eq!(m.kept(0), 3);
+        assert!(p.thresholds()[0] > th_before);
+    }
+}

@@ -1,0 +1,147 @@
+//! `MaskSet` — a sub-model as per-group neuron masks.
+
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+
+/// One 0/1 f32 vector per maskable group, aligned with `spec.masks`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MaskSet {
+    masks: Vec<Tensor>,
+}
+
+impl MaskSet {
+    /// Full model: all ones.
+    pub fn full(spec: &ModelSpec) -> MaskSet {
+        MaskSet {
+            masks: spec.masks.iter().map(|m| Tensor::ones(&[m.size])).collect(),
+        }
+    }
+
+    /// Build from explicit keep-decisions per group.
+    pub fn from_keep(spec: &ModelSpec, keep: &[Vec<bool>]) -> MaskSet {
+        assert_eq!(keep.len(), spec.masks.len());
+        let masks = spec
+            .masks
+            .iter()
+            .zip(keep)
+            .map(|(m, k)| {
+                assert_eq!(m.size, k.len(), "group {}", m.name);
+                Tensor::from_vec(
+                    &[m.size],
+                    k.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+                )
+            })
+            .collect();
+        MaskSet { masks }
+    }
+
+    /// Per-group tensors in manifest order (what the runtime takes).
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.masks
+    }
+
+    /// Number of kept neurons in group `g`.
+    pub fn kept(&self, g: usize) -> usize {
+        self.masks[g].data().iter().filter(|&&x| x == 1.0).count()
+    }
+
+    /// Total kept / total neurons.
+    pub fn keep_fraction(&self) -> f64 {
+        let total: usize = self.masks.iter().map(|m| m.len()).sum();
+        let kept: usize = (0..self.masks.len()).map(|g| self.kept(g)).sum();
+        if total == 0 {
+            1.0
+        } else {
+            kept as f64 / total as f64
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// Is neuron `i` of group `g` kept?
+    pub fn is_kept(&self, g: usize, i: usize) -> bool {
+        self.masks[g].data()[i] == 1.0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.masks
+            .iter()
+            .all(|m| m.data().iter().all(|&x| x == 1.0))
+    }
+
+    /// Effective parameter fraction transmitted to a straggler — used by
+    /// the communication model. Computed per maskable group as the kept
+    /// fraction (output layers, biases and unmasked layers count as 1.0,
+    /// conservatively matching the paper's "sub-model as a fraction of
+    /// the global model" definition of r).
+    pub fn comm_fraction(&self) -> f64 {
+        self.keep_fraction()
+    }
+}
+
+/// How many neurons must be *kept* in a group of size `n` at keep-rate
+/// `r` (per-layer rate, paper §4.1). Never drops below 1 neuron.
+pub fn kept_count(n: usize, r: f64) -> usize {
+    ((n as f64 * r).round() as usize).clamp(1, n)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use std::path::Path;
+
+    pub(crate) const MANIFEST: &str = r#"{
+ "model": "tiny", "batch_size": 4,
+ "x_shape": [4, 8], "x_dtype": "f32", "num_classes": 3,
+ "params": [
+   {"name": "fc1_w", "shape": [8, 10]}, {"name": "fc1_b", "shape": [10]},
+   {"name": "fc2_w", "shape": [10, 6]}, {"name": "fc2_b", "shape": [6]},
+   {"name": "out_w", "shape": [6, 3]}, {"name": "out_b", "shape": [3]}
+ ],
+ "masks": [{"name": "fc1", "size": 10}, {"name": "fc2", "size": 6}],
+ "delta_groups": ["fc1", "fc2"],
+ "delta_inputs": ["fc1_w", "fc2_w"],
+ "artifacts": {"train": "t", "eval": "e", "delta": "d"},
+ "train_outputs": []
+}"#;
+
+    pub(crate) fn tiny_spec() -> ModelSpec {
+        ModelSpec::from_json_str(MANIFEST, Path::new("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn full_mask_is_all_ones() {
+        let m = MaskSet::full(&tiny_spec());
+        assert!(m.is_full());
+        assert_eq!(m.keep_fraction(), 1.0);
+        assert_eq!(m.kept(0), 10);
+        assert_eq!(m.kept(1), 6);
+    }
+
+    #[test]
+    fn from_keep_counts() {
+        let spec = tiny_spec();
+        let keep = vec![
+            vec![true, true, true, true, true, false, false, false, false, false],
+            vec![true, true, true, false, false, false],
+        ];
+        let m = MaskSet::from_keep(&spec, &keep);
+        assert_eq!(m.kept(0), 5);
+        assert_eq!(m.kept(1), 3);
+        assert!((m.keep_fraction() - 0.5).abs() < 1e-9);
+        assert!(m.is_kept(0, 0) && !m.is_kept(0, 9));
+        assert!(!m.is_full());
+    }
+
+    #[test]
+    fn kept_count_bounds() {
+        assert_eq!(kept_count(10, 1.0), 10);
+        assert_eq!(kept_count(10, 0.75), 8);
+        assert_eq!(kept_count(10, 0.5), 5);
+        assert_eq!(kept_count(10, 0.0), 1); // never empty
+        assert_eq!(kept_count(1, 0.1), 1);
+    }
+}

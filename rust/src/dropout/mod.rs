@@ -1,0 +1,142 @@
+//! Dropout policies — the paper's contribution and its baselines.
+//!
+//! A *sub-model* is a per-group neuron mask (`MaskSet`): 1.0 keeps a
+//! neuron, 0.0 drops it. Masks feed the AOT train step, where masking is
+//! numerically identical to physical sub-model extraction (DESIGN.md §1).
+//!
+//! * [`invariant::InvariantDropout`] — the paper: drop neurons whose
+//!   weights changed less than a calibrated threshold for the majority of
+//!   non-straggler clients (§4, §5, Algorithm 1).
+//! * [`ordered::OrderedDropout`] — FjORD baseline: keep a fixed prefix.
+//! * [`random::RandomDropout`] — Federated Dropout baseline: random set
+//!   each round.
+//! * `NoDropout` — vanilla FL (stragglers train the full model).
+
+pub mod invariant;
+pub mod mask;
+pub mod ordered;
+pub mod random;
+pub mod threshold;
+
+pub use invariant::{InvariantConfig, InvariantDropout};
+pub use mask::MaskSet;
+pub use ordered::OrderedDropout;
+pub use random::RandomDropout;
+
+use crate::model::ModelSpec;
+
+/// Which dropout technique an experiment runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// vanilla synchronous FL — no sub-models
+    None,
+    /// Federated Dropout [CKMT18]
+    Random,
+    /// Ordered Dropout / FjORD [HLA+21]
+    Ordered,
+    /// Invariant Dropout (this paper)
+    Invariant,
+    /// drop straggler *updates* entirely [KMA+19] — masks stay full, the
+    /// coordinator skips aggregation of straggler deltas
+    Exclude,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "none" | "baseline" => PolicyKind::None,
+            "random" => PolicyKind::Random,
+            "ordered" => PolicyKind::Ordered,
+            "invariant" | "fluid" => PolicyKind::Invariant,
+            "exclude" => PolicyKind::Exclude,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::None => "none",
+            PolicyKind::Random => "random",
+            PolicyKind::Ordered => "ordered",
+            PolicyKind::Invariant => "invariant",
+            PolicyKind::Exclude => "exclude",
+        }
+    }
+}
+
+/// Unified policy object used by the coordinator.
+pub enum Policy {
+    None,
+    Random(RandomDropout),
+    Ordered(OrderedDropout),
+    Invariant(InvariantDropout),
+    Exclude,
+}
+
+impl Policy {
+    pub fn new(kind: PolicyKind, spec: &ModelSpec, seed: u64) -> Policy {
+        Self::new_with(kind, spec, seed, InvariantConfig::default())
+    }
+
+    /// Like [`Policy::new`] but with explicit invariant tunables (used by
+    /// the Table-3 threshold sweep and ablation benches).
+    pub fn new_with(
+        kind: PolicyKind,
+        spec: &ModelSpec,
+        seed: u64,
+        inv: InvariantConfig,
+    ) -> Policy {
+        match kind {
+            PolicyKind::None => Policy::None,
+            PolicyKind::Exclude => Policy::Exclude,
+            PolicyKind::Random => Policy::Random(RandomDropout::new(seed)),
+            PolicyKind::Ordered => Policy::Ordered(OrderedDropout::new()),
+            PolicyKind::Invariant => Policy::Invariant(InvariantDropout::new(spec, inv)),
+        }
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        match self {
+            Policy::None => PolicyKind::None,
+            Policy::Random(_) => PolicyKind::Random,
+            Policy::Ordered(_) => PolicyKind::Ordered,
+            Policy::Invariant(_) => PolicyKind::Invariant,
+            Policy::Exclude => PolicyKind::Exclude,
+        }
+    }
+
+    /// Produce the sub-model mask for one straggler at keep-rate `r`.
+    /// `None`/`Exclude` always return the full mask.
+    pub fn make_mask(&mut self, spec: &ModelSpec, r: f64) -> MaskSet {
+        match self {
+            Policy::None | Policy::Exclude => MaskSet::full(spec),
+            Policy::Random(p) => p.make_mask(spec, r),
+            Policy::Ordered(p) => p.make_mask(spec, r),
+            Policy::Invariant(p) => p.make_mask(spec, r),
+        }
+    }
+
+    /// Feed non-straggler per-neuron deltas (per client, per group) after
+    /// a round — only Invariant uses these.
+    pub fn observe_deltas(&mut self, per_client: &[Vec<crate::tensor::Tensor>]) {
+        if let Policy::Invariant(p) = self {
+            p.observe(per_client);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(PolicyKind::parse("invariant"), Some(PolicyKind::Invariant));
+        assert_eq!(PolicyKind::parse("FLUID"), Some(PolicyKind::Invariant));
+        assert_eq!(PolicyKind::parse("ordered"), Some(PolicyKind::Ordered));
+        assert_eq!(PolicyKind::parse("random"), Some(PolicyKind::Random));
+        assert_eq!(PolicyKind::parse("none"), Some(PolicyKind::None));
+        assert_eq!(PolicyKind::parse("exclude"), Some(PolicyKind::Exclude));
+        assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+}

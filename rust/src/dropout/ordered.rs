@@ -1,0 +1,69 @@
+//! Ordered Dropout baseline (FjORD [HLA+21]): sub-models are nested
+//! prefixes — at keep-rate `r` the first `ceil(r·n)` neurons of every
+//! group are kept, so a smaller sub-model is always contained in a
+//! larger one.
+
+use super::mask::{kept_count, MaskSet};
+use crate::model::ModelSpec;
+
+#[derive(Default)]
+pub struct OrderedDropout;
+
+impl OrderedDropout {
+    pub fn new() -> Self {
+        Self
+    }
+
+    pub fn make_mask(&mut self, spec: &ModelSpec, r: f64) -> MaskSet {
+        let keep: Vec<Vec<bool>> = spec
+            .masks
+            .iter()
+            .map(|m| {
+                let k = kept_count(m.size, r);
+                (0..m.size).map(|i| i < k).collect()
+            })
+            .collect();
+        MaskSet::from_keep(spec, &keep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::tests::tiny_spec;
+
+    #[test]
+    fn keeps_prefix() {
+        let spec = tiny_spec();
+        let mut p = OrderedDropout::new();
+        let m = p.make_mask(&spec, 0.5);
+        for i in 0..5 {
+            assert!(m.is_kept(0, i));
+        }
+        for i in 5..10 {
+            assert!(!m.is_kept(0, i));
+        }
+    }
+
+    #[test]
+    fn sub_models_are_nested() {
+        let spec = tiny_spec();
+        let mut p = OrderedDropout::new();
+        let small = p.make_mask(&spec, 0.5);
+        let large = p.make_mask(&spec, 0.75);
+        for g in 0..small.num_groups() {
+            for i in 0..spec.masks[g].size {
+                if small.is_kept(g, i) {
+                    assert!(large.is_kept(g, i), "nesting violated at {g}/{i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = tiny_spec();
+        let mut p = OrderedDropout::new();
+        assert_eq!(p.make_mask(&spec, 0.65), p.make_mask(&spec, 0.65));
+    }
+}

@@ -1,0 +1,67 @@
+//! Federated Dropout baseline [CKMT18]: drop a uniformly random subset of
+//! neurons per group, re-sampled every time a sub-model is extracted.
+
+use super::mask::{kept_count, MaskSet};
+use crate::model::ModelSpec;
+use crate::util::prng::Pcg32;
+
+pub struct RandomDropout {
+    rng: Pcg32,
+}
+
+impl RandomDropout {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg32::new(seed, 0xD20),
+        }
+    }
+
+    pub fn make_mask(&mut self, spec: &ModelSpec, r: f64) -> MaskSet {
+        let keep: Vec<Vec<bool>> = spec
+            .masks
+            .iter()
+            .map(|m| {
+                let k = kept_count(m.size, r);
+                let chosen = self.rng.sample_indices(m.size, k);
+                let mut v = vec![false; m.size];
+                for i in chosen {
+                    v[i] = true;
+                }
+                v
+            })
+            .collect();
+        MaskSet::from_keep(spec, &keep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::tests::tiny_spec;
+
+    #[test]
+    fn keeps_requested_fraction() {
+        let spec = tiny_spec();
+        let mut p = RandomDropout::new(7);
+        let m = p.make_mask(&spec, 0.5);
+        assert_eq!(m.kept(0), 5);
+        assert_eq!(m.kept(1), 3);
+    }
+
+    #[test]
+    fn resamples_each_call() {
+        let spec = tiny_spec();
+        let mut p = RandomDropout::new(7);
+        let a = p.make_mask(&spec, 0.5);
+        let b = p.make_mask(&spec, 0.5);
+        // overwhelmingly likely to differ (10 choose 5 ways)
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn full_rate_keeps_everything() {
+        let spec = tiny_spec();
+        let mut p = RandomDropout::new(1);
+        assert!(p.make_mask(&spec, 1.0).is_full());
+    }
+}

@@ -1,0 +1,136 @@
+//! Drop-threshold calibration (paper §5, Algorithm 1 lines 9 & 22).
+//!
+//! The threshold `th` classifies a neuron as *invariant* when its
+//! relative weight update is below `th`. FLuID initializes `th` from the
+//! observed update distribution and increments it until the invariant
+//! set is at least as large as the number of neurons that must leave the
+//! sub-model ("it is critical to select a threshold that yields a number
+//! of invariant neurons as close as possible to the number of neurons to
+//! be dropped" — Appendix A.2).
+
+/// Initial threshold: the paper uses "the average of the minimum percent
+/// update of all neurons in the initial few training epochs". Given one
+/// delta vector per (non-straggler) client, that is the mean over clients
+/// of each client's minimum per-neuron update.
+pub fn initial_threshold(per_client_deltas: &[Vec<f32>]) -> f32 {
+    if per_client_deltas.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for c in per_client_deltas {
+        if c.is_empty() {
+            continue;
+        }
+        let min = c.iter().copied().fold(f32::INFINITY, f32::min);
+        if min.is_finite() {
+            acc += min as f64;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (acc / n as f64) as f32
+    }
+}
+
+/// Count of neurons strictly below the threshold.
+pub fn count_below(scores: &[f32], th: f32) -> usize {
+    scores.iter().filter(|&&s| s < th).count()
+}
+
+/// Incrementally raise `th` (multiplicative step) until at least `needed`
+/// neurons fall below it, or `max_iters` is exhausted. Returns the
+/// calibrated threshold. Mirrors `increment_threshold` in Algorithm 1.
+pub fn calibrate(scores: &[f32], mut th: f32, needed: usize, step: f32, max_iters: usize) -> f32 {
+    assert!(step > 1.0, "step must be multiplicative > 1");
+    if needed == 0 || scores.is_empty() {
+        return th;
+    }
+    if th <= 0.0 {
+        // bootstrap from the smallest positive score
+        th = scores
+            .iter()
+            .copied()
+            .filter(|&s| s > 0.0)
+            .fold(f32::INFINITY, f32::min);
+        if !th.is_finite() {
+            th = 1e-6;
+        }
+        th *= 1.01; // strictly above the minimum so count_below >= 1
+    }
+    for _ in 0..max_iters {
+        if count_below(scores, th) >= needed.min(scores.len()) {
+            return th;
+        }
+        th *= step;
+    }
+    th
+}
+
+/// Exact alternative used when the score vector is fully known: the
+/// threshold that yields *exactly* `needed` invariant neurons (the
+/// (needed)-th smallest score, nudged up). Used by the coordinator once
+/// calibration has converged; the incremental path above is what runs
+/// during the initial epochs when scores are still streaming in.
+pub fn exact_threshold(scores: &[f32], needed: usize) -> f32 {
+    if needed == 0 || scores.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = scores.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = needed.min(v.len()) - 1;
+    // strictly above the k-th smallest
+    v[k] * (1.0 + 1e-6) + 1e-12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_is_mean_of_client_minima() {
+        let deltas = vec![vec![0.5, 0.1, 0.9], vec![0.3, 0.7, 0.2]];
+        assert!((initial_threshold(&deltas) - 0.15).abs() < 1e-6);
+    }
+
+    #[test]
+    fn initial_handles_empty() {
+        assert_eq!(initial_threshold(&[]), 0.0);
+        assert_eq!(initial_threshold(&[vec![]]), 0.0);
+    }
+
+    #[test]
+    fn calibrate_reaches_target() {
+        let scores: Vec<f32> = (1..=100).map(|i| i as f32 / 100.0).collect();
+        let th = calibrate(&scores, 0.005, 30, 1.2, 200);
+        assert!(count_below(&scores, th) >= 30);
+        // and not grossly overshooting: one step below would be short
+        assert!(count_below(&scores, th / 1.2) < 30);
+    }
+
+    #[test]
+    fn calibrate_monotone_in_needed() {
+        let scores: Vec<f32> = (1..=50).map(|i| (i * i) as f32 * 1e-4).collect();
+        let th10 = calibrate(&scores, 1e-5, 10, 1.1, 500);
+        let th30 = calibrate(&scores, 1e-5, 30, 1.1, 500);
+        assert!(th30 >= th10);
+    }
+
+    #[test]
+    fn calibrate_bootstraps_zero_threshold() {
+        let scores = vec![0.2, 0.4, 0.6];
+        let th = calibrate(&scores, 0.0, 2, 1.5, 100);
+        assert!(count_below(&scores, th) >= 2);
+    }
+
+    #[test]
+    fn exact_threshold_counts() {
+        let scores = vec![0.5, 0.1, 0.9, 0.3, 0.7];
+        let th = exact_threshold(&scores, 2);
+        assert_eq!(count_below(&scores, th), 2);
+        let th = exact_threshold(&scores, 5);
+        assert_eq!(count_below(&scores, th), 5);
+    }
+}

@@ -1,0 +1,265 @@
+//! Masked FedAvg aggregation.
+//!
+//! Stragglers train sub-models: their dropped-neuron weights come back
+//! *exactly equal* to the broadcast values (zero gradient — verified by
+//! the L2 tests). Two aggregation modes:
+//!
+//! * [`AggregateMode::Plain`] — classic example-weighted FedAvg over the
+//!   full parameter vectors (what Flower does; dropped weights pull
+//!   toward their stale broadcast value, which is a no-op since they
+//!   *are* the broadcast value).
+//! * [`AggregateMode::OwnershipWeighted`] — per-element denominators
+//!   count only the clients whose sub-model actually *trained* the
+//!   element (FjORD-style). For each maskable group we map weight/bias
+//!   elements to their neuron: `{g}_w` columns and `{g}_b` entries
+//!   (LSTM's 4H gate layout maps column c -> neuron c % H). Elements of
+//!   non-group parameters (output layers, shortcuts) are trained by
+//!   every client and use the full denominator.
+
+use crate::dropout::MaskSet;
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+
+/// One client's contribution to a round.
+pub struct ClientUpdate {
+    pub params: Vec<Tensor>,
+    /// FedAvg weight (number of local examples)
+    pub weight: f64,
+    pub mask: MaskSet,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregateMode {
+    Plain,
+    OwnershipWeighted,
+}
+
+/// For parameter `p_idx`, return `(group_idx, per_neuron_span)` when its
+/// elements map onto a maskable group:
+/// * group weight `{g}_w`-like: trailing dim == group size (neuron = col)
+///   or == 4x group size (LSTM gates, neuron = col % H)
+/// * group bias: 1-D with the same correspondence
+fn group_of_param(spec: &ModelSpec, p_idx: usize) -> Option<(usize, usize)> {
+    let p = &spec.params[p_idx];
+    let prefix: &str = p
+        .name
+        .rsplit_once('_')
+        .map(|(a, _)| a)
+        .unwrap_or(&p.name);
+    let g = spec.mask_index(prefix)?;
+    let n = spec.masks[g].size;
+    let cols = *p.shape.last()?;
+    if cols == n {
+        Some((g, 1))
+    } else if cols == 4 * n {
+        Some((g, 4)) // LSTM i|f|g|o blocks of H
+    } else {
+        None
+    }
+}
+
+/// neuron index for a flat element index of a param with trailing dim
+/// `cols`, group size `n` and span (1 = direct, 4 = LSTM gates).
+#[inline]
+fn neuron_of(elem: usize, cols: usize, n: usize, span: usize) -> usize {
+    let col = elem % cols;
+    if span == 1 {
+        col
+    } else {
+        col % n
+    }
+}
+
+/// Aggregate client updates into new global parameters.
+pub fn fedavg(
+    spec: &ModelSpec,
+    global: &[Tensor],
+    updates: &[ClientUpdate],
+    mode: AggregateMode,
+) -> Vec<Tensor> {
+    assert!(!updates.is_empty(), "fedavg with no updates");
+    let total_w: f64 = updates.iter().map(|u| u.weight).sum();
+    assert!(total_w > 0.0);
+
+    let mut out: Vec<Tensor> = Vec::with_capacity(global.len());
+    for (pi, g_t) in global.iter().enumerate() {
+        let group = match mode {
+            AggregateMode::Plain => None,
+            AggregateMode::OwnershipWeighted => group_of_param(spec, pi),
+        };
+        let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+        let len = g_t.len();
+        let mut acc = vec![0.0f64; len];
+        let mut denom = vec![0.0f64; len];
+
+        for u in updates {
+            let data = u.params[pi].data();
+            match group {
+                None => {
+                    for j in 0..len {
+                        acc[j] += u.weight * data[j] as f64;
+                        denom[j] += u.weight;
+                    }
+                }
+                Some((gidx, span)) => {
+                    let n = spec.masks[gidx].size;
+                    for j in 0..len {
+                        let neuron = neuron_of(j, cols, n, span);
+                        if u.mask.is_kept(gidx, neuron) {
+                            acc[j] += u.weight * data[j] as f64;
+                            denom[j] += u.weight;
+                        }
+                    }
+                }
+            }
+        }
+
+        let g_data = g_t.data();
+        let new: Vec<f32> = (0..len)
+            .map(|j| {
+                if denom[j] > 0.0 {
+                    (acc[j] / denom[j]) as f32
+                } else {
+                    g_data[j] // nobody trained it: keep the global value
+                }
+            })
+            .collect();
+        out.push(Tensor::from_vec(g_t.shape(), new));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::tests::tiny_spec;
+
+    fn constant_params(spec: &ModelSpec, v: f32) -> Vec<Tensor> {
+        spec.params
+            .iter()
+            .map(|p| Tensor::full(&p.shape, v))
+            .collect()
+    }
+
+    #[test]
+    fn plain_is_weighted_mean() {
+        let spec = tiny_spec();
+        let global = constant_params(&spec, 0.0);
+        let updates = vec![
+            ClientUpdate {
+                params: constant_params(&spec, 1.0),
+                weight: 1.0,
+                mask: MaskSet::full(&spec),
+            },
+            ClientUpdate {
+                params: constant_params(&spec, 4.0),
+                weight: 3.0,
+                mask: MaskSet::full(&spec),
+            },
+        ];
+        let out = fedavg(&spec, &global, &updates, AggregateMode::Plain);
+        for t in &out {
+            for &x in t.data() {
+                assert!((x - 3.25).abs() < 1e-6); // (1 + 12) / 4
+            }
+        }
+    }
+
+    #[test]
+    fn ownership_excludes_masked_clients() {
+        let spec = tiny_spec();
+        let global = constant_params(&spec, 0.5);
+        // client A trains everything to 1.0; client B is a straggler whose
+        // mask drops fc1 neurons 5..10 — its fc1 columns 5..10 stay at the
+        // broadcast 0.5, and must NOT dilute A's update.
+        let mut keep = vec![vec![true; 10], vec![true; 6]];
+        for k in keep[0].iter_mut().skip(5) {
+            *k = false;
+        }
+        let b_mask = MaskSet::from_keep(&spec, &keep);
+        let updates = vec![
+            ClientUpdate {
+                params: constant_params(&spec, 1.0),
+                weight: 1.0,
+                mask: MaskSet::full(&spec),
+            },
+            ClientUpdate {
+                params: {
+                    // straggler: trained kept cols to 1.0, dropped cols
+                    // still at broadcast 0.5
+                    let mut ps = constant_params(&spec, 1.0);
+                    let (rows, cols) = (8usize, 10usize);
+                    let w = ps[0].data_mut();
+                    for r in 0..rows {
+                        for c in 5..cols {
+                            w[r * cols + c] = 0.5;
+                        }
+                    }
+                    let b = ps[1].data_mut();
+                    for c in 5..10 {
+                        b[c] = 0.5;
+                    }
+                    ps
+                },
+                weight: 1.0,
+                mask: b_mask,
+            },
+        ];
+        let out = fedavg(&spec, &global, &updates, AggregateMode::OwnershipWeighted);
+        // fc1_w col 0 (both trained): mean(1, 1) = 1
+        assert!((out[0].data()[0] - 1.0).abs() < 1e-6);
+        // fc1_w col 7 (only A trained): 1.0, not (1+0.5)/2
+        assert!((out[0].data()[7] - 1.0).abs() < 1e-6);
+        // fc1_b entry 7 likewise
+        assert!((out[1].data()[7] - 1.0).abs() < 1e-6);
+        // compare: plain mode dilutes
+        let plain = fedavg(&spec, &global, &updates, AggregateMode::Plain);
+        assert!((plain[0].data()[7] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nobody_trained_keeps_global() {
+        let spec = tiny_spec();
+        let global = constant_params(&spec, 0.5);
+        let mut keep = vec![vec![true; 10], vec![true; 6]];
+        keep[0][9] = false;
+        let m = MaskSet::from_keep(&spec, &keep);
+        let updates = vec![ClientUpdate {
+            params: constant_params(&spec, 2.0),
+            weight: 1.0,
+            mask: m,
+        }];
+        let out = fedavg(&spec, &global, &updates, AggregateMode::OwnershipWeighted);
+        // col 9 untrained by the only client -> keep global 0.5
+        assert!((out[0].data()[9] - 0.5).abs() < 1e-6);
+        assert!((out[0].data()[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn group_mapping_detects_w_and_b() {
+        let spec = tiny_spec();
+        // fc1_w [8,10] -> group 0 span 1; fc1_b [10] -> group 0
+        assert_eq!(group_of_param(&spec, 0), Some((0, 1)));
+        assert_eq!(group_of_param(&spec, 1), Some((0, 1)));
+        // fc2_w [10,6] -> group fc2
+        assert_eq!(group_of_param(&spec, 2), Some((1, 1)));
+        // out_w [6,3]: "out" is not a mask group
+        assert_eq!(group_of_param(&spec, 4), None);
+    }
+
+    #[test]
+    fn lstm_gate_span() {
+        assert_eq!(neuron_of(0, 512, 128, 4), 0);
+        assert_eq!(neuron_of(128, 512, 128, 4), 0); // f-gate col of neuron 0
+        assert_eq!(neuron_of(130, 512, 128, 4), 2);
+        assert_eq!(neuron_of(512 + 5, 512, 128, 4), 5); // next row
+    }
+
+    #[test]
+    #[should_panic(expected = "no updates")]
+    fn empty_updates_panics() {
+        let spec = tiny_spec();
+        let global = constant_params(&spec, 0.0);
+        fedavg(&spec, &global, &[], AggregateMode::Plain);
+    }
+}

@@ -1,0 +1,113 @@
+//! Simulated FL client: local data + local SGD epochs through the AOT
+//! train step. Virtual *timing* is not computed here — the coordinator
+//! asks the [`crate::straggler::PerfModel`] for it — this is the pure
+//! learning mechanics.
+
+use crate::data::Split;
+use crate::runtime::{StepRunner, TrainOut};
+use crate::tensor::Tensor;
+use crate::util::prng::Pcg32;
+
+/// One client and its local shard.
+pub struct Client {
+    pub id: usize,
+    /// index into the device fleet
+    pub device: usize,
+    pub data: Split,
+}
+
+/// Outcome of a local training pass.
+#[derive(Clone, Debug)]
+pub struct LocalResult {
+    pub params: Vec<Tensor>,
+    pub mean_loss: f64,
+    pub mean_acc: f64,
+    pub steps: usize,
+    /// examples used (FedAvg weight)
+    pub weight: f64,
+}
+
+impl Client {
+    pub fn new(id: usize, device: usize, data: Split) -> Self {
+        Self { id, device, data }
+    }
+
+    /// Run `steps` local SGD steps starting from the broadcast `params`,
+    /// under this client's sub-model `masks`.
+    ///
+    /// `use_fused` selects the fused k-step artifact when `steps` matches
+    /// its k. §Perf verdict: a win for the LSTM (~3%), a large LOSS for
+    /// the CNNs on CPU-XLA (the scan carry copies all parameters every
+    /// step and defeats inter-op parallelism), so it is opt-in via
+    /// `ExperimentConfig::use_fused_steps` — measured in
+    /// `results/bench_hotpath_after.txt` and EXPERIMENTS.md §Perf.
+    pub fn local_train(
+        &self,
+        runner: &StepRunner,
+        params: &[Tensor],
+        masks: &[Tensor],
+        steps: usize,
+        lr: f32,
+        round_seed: u64,
+        use_fused: bool,
+    ) -> crate::Result<LocalResult> {
+        let mut rng = Pcg32::new(round_seed ^ (self.id as u64) << 20, 0xC11E17);
+
+        if use_fused && steps > 0 && steps == runner.multi_k() {
+            let batches: Vec<_> = (0..steps)
+                .map(|_| self.data.sample_batch(&mut rng, &runner.spec.x_shape))
+                .collect();
+            let out = runner.train_multi_step(params, masks, &batches, lr)?;
+            return Ok(LocalResult {
+                params: out.params,
+                mean_loss: out.loss as f64,
+                mean_acc: out.acc as f64,
+                steps,
+                weight: self.data.len() as f64,
+            });
+        }
+
+        let mut cur: Vec<Tensor> = params.to_vec();
+        let mut loss_acc = 0.0f64;
+        let mut acc_acc = 0.0f64;
+        for _ in 0..steps {
+            let batch = self.data.sample_batch(&mut rng, &runner.spec.x_shape);
+            let TrainOut { params: p, loss, acc } =
+                runner.train_step(&cur, masks, &batch, lr)?;
+            cur = p;
+            loss_acc += loss as f64;
+            acc_acc += acc as f64;
+        }
+        let denom = steps.max(1) as f64;
+        Ok(LocalResult {
+            params: cur,
+            mean_loss: loss_acc / denom,
+            mean_acc: acc_acc / denom,
+            steps,
+            weight: self.data.len() as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Split, XStore};
+
+    #[test]
+    fn construction() {
+        let c = Client::new(
+            3,
+            1,
+            Split {
+                xs: XStore::F32(vec![0.0; 8]),
+                ys: vec![0, 1],
+                feature_len: 4,
+            },
+        );
+        assert_eq!(c.id, 3);
+        assert_eq!(c.device, 1);
+        assert_eq!(c.data.len(), 2);
+    }
+    // local_train against real artifacts: rust/tests/integration_fluid.rs
+}

@@ -1,0 +1,279 @@
+//! JSON substrate (serde/serde_json unavailable offline — DESIGN.md §2).
+//!
+//! A complete-enough JSON implementation for this repo's needs: parsing
+//! artifact manifests written by `python/compile/aot.py`, and emitting
+//! experiment results / reports. Supports the full JSON grammar except
+//! `\u` surrogate pairs beyond the BMP (manifests are pure ASCII).
+
+mod parse;
+
+pub use parse::{parse, ParseError};
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value. Object keys are sorted (BTreeMap) so emission is stable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---- constructors -------------------------------------------------------
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
+        if let Json::Obj(ref mut m) = self {
+            m.insert(key.to_string(), val.into());
+        }
+        self
+    }
+
+    // ---- accessors ----------------------------------------------------------
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// `get` that fails loudly with the key name — manifest fields are
+    /// a hard contract with the python side.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing JSON key '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Shape-array helper: `[1, 2, 3]` -> `vec![1, 2, 3]`.
+    pub fn as_shape(&self) -> anyhow::Result<Vec<usize>> {
+        let arr = self
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected array, got {self:?}"))?;
+        arr.iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("expected number in shape"))
+            })
+            .collect()
+    }
+
+    // ---- emission -----------------------------------------------------------
+
+    /// Compact single-line emission.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.emit(&mut s, None, 0);
+        s
+    }
+
+    /// Pretty emission with 2-space indent.
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.emit(&mut s, Some(2), 0);
+        s
+    }
+
+    fn emit(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => emit_string(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline(out, indent, depth + 1);
+                    x.emit(out, indent, depth + 1);
+                }
+                if !v.is_empty() {
+                    newline(out, indent, depth);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline(out, indent, depth + 1);
+                    emit_string(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    x.emit(out, indent, depth + 1);
+                }
+                if !m.is_empty() {
+                    newline(out, indent, depth);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(n) = indent {
+        out.push('\n');
+        for _ in 0..n * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn emit_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Self {
+        Json::Num(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Self {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Self {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Self {
+        Json::Str(x)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Self {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_emit() {
+        let j = Json::obj()
+            .set("name", "fluid")
+            .set("rounds", 100usize)
+            .set("rs", vec![0.5, 0.75])
+            .set("ok", true);
+        assert_eq!(
+            j.to_string_compact(),
+            r#"{"name":"fluid","ok":true,"rounds":100,"rs":[0.5,0.75]}"#
+        );
+    }
+
+    #[test]
+    fn escapes() {
+        let j = Json::Str("a\"b\\c\nd".to_string());
+        assert_eq!(j.to_string_compact(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn round_trip_compact_and_pretty() {
+        let j = Json::obj()
+            .set("arr", vec![1i64, 2, 3])
+            .set("nested", Json::obj().set("x", 1.5));
+        for text in [j.to_string_compact(), j.to_string_pretty()] {
+            assert_eq!(parse(&text).unwrap(), j);
+        }
+    }
+
+    #[test]
+    fn shape_helper() {
+        let j = parse("[5, 5, 1, 16]").unwrap();
+        assert_eq!(j.as_shape().unwrap(), vec![5, 5, 1, 16]);
+    }
+
+    #[test]
+    fn req_reports_key() {
+        let j = Json::obj().set("a", 1i64);
+        let err = j.req("missing").unwrap_err().to_string();
+        assert!(err.contains("missing"));
+    }
+}

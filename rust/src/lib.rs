@@ -1,0 +1,32 @@
+//! # FLuID — Federated Learning using Invariant Dropout
+//!
+//! Production-grade reproduction of *"FLuID: Mitigating Stragglers in
+//! Federated Learning using Invariant Dropout"* (Wang, Nair, Mahajan —
+//! NeurIPS 2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the FLuID coordinator: straggler detection,
+//!   drop-threshold calibration, invariant-neuron identification, masked
+//!   FedAvg aggregation, and a virtual-time heterogeneous device fleet.
+//! * **L2** — JAX model step functions (`python/compile/model.py`),
+//!   AOT-lowered once to `artifacts/*.hlo.txt` and executed here through
+//!   the PJRT CPU client ([`runtime`]). Python never runs at runtime.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the masked
+//!   dense hot path and the per-neuron invariant scan.
+//!
+//! See `DESIGN.md` for the module map and the per-experiment index, and
+//! `EXPERIMENTS.md` for reproduced tables/figures.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod dropout;
+pub mod fl;
+pub mod jsonlite;
+pub mod model;
+pub mod runtime;
+pub mod straggler;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,245 @@
+//! `fluid` — the FLuID coordinator CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//! * `train`   — run one federated experiment and print/save the history
+//! * `devices` — print the device fleet and its per-model epoch times
+//! * `sweep`   — run a policy x rate sweep (Table-2 style) and print a table
+//!
+//! Python never runs here: the binary executes AOT artifacts produced
+//! once by `make artifacts`.
+
+use fluid::coordinator::{self, report, ExperimentConfig};
+use fluid::dropout::PolicyKind;
+use fluid::runtime::Session;
+use fluid::straggler::mobile_fleet;
+use fluid::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let code = match cmd {
+        "train" => cmd_train(&rest),
+        "devices" => cmd_devices(),
+        "sweep" => cmd_sweep(&rest),
+        _ => {
+            println!(
+                "fluid — Federated Learning using Invariant Dropout (NeurIPS 2023 reproduction)\n\n\
+                 usage: fluid <command> [options]\n\n\
+                 commands:\n\
+                 \x20 train     run one federated experiment (--help for options)\n\
+                 \x20 sweep     policy x sub-model-size sweep, Table-2 style\n\
+                 \x20 devices   show the Table-1 device fleet\n"
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn train_args(program: &str) -> Args {
+    Args::new(program, "run one FLuID experiment")
+        .opt("model", "femnist_cnn", "femnist_cnn|cifar_vgg9|shakespeare_lstm|cifar_resnet18")
+        .opt("policy", "invariant", "none|random|ordered|invariant|exclude")
+        .opt("rounds", "30", "federated rounds")
+        .opt("clients", "5", "number of clients")
+        .opt("spc", "60", "samples per client")
+        .opt("local-steps", "4", "local SGD steps per round")
+        .opt("lr", "", "learning rate (default: paper value per model)")
+        .opt("rate", "", "fixed straggler keep-rate r (default: FLuID auto)")
+        .opt("straggler-frac", "0.2", "fraction of fleet treated as stragglers")
+        .opt("sample-frac", "1.0", "client sampling fraction per round")
+        .opt("recalibrate", "1", "recalibration period (rounds)")
+        .opt("seed", "42", "PRNG seed")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .opt("eval-every", "5", "test-eval period (rounds)")
+        .opt("out", "", "write result JSON to this path")
+        .opt("artifacts", "", "artifacts dir (default: ./artifacts or $FLUID_ARTIFACTS)")
+        .flag("fluctuate", "enable the Fig-4b runtime fluctuation protocol")
+        .flag("static-stragglers", "freeze the straggler set after first detection")
+        .flag("synthetic-fleet", "use a synthetic fleet instead of the 5 phones")
+}
+
+fn build_config(a: &Args) -> ExperimentConfig {
+    let model = a.get("model");
+    let policy = PolicyKind::parse(&a.get("policy")).unwrap_or_else(|| {
+        eprintln!("unknown policy {:?}", a.get("policy"));
+        std::process::exit(2);
+    });
+    let mut cfg = ExperimentConfig::mobile(&model, policy);
+    cfg.rounds = a.get_usize("rounds");
+    cfg.clients = a.get_usize("clients");
+    cfg.samples_per_client = a.get_usize("spc");
+    cfg.local_steps = a.get_usize("local-steps");
+    if !a.get("lr").is_empty() {
+        cfg.lr = a.get_f64("lr") as f32;
+    }
+    if !a.get("rate").is_empty() {
+        cfg.fixed_rate = Some(a.get_f64("rate"));
+    }
+    cfg.straggler_fraction = a.get_f64("straggler-frac");
+    cfg.sample_fraction = a.get_f64("sample-frac");
+    cfg.recalibrate_every = a.get_usize("recalibrate").max(1);
+    cfg.seed = a.get_u64("seed");
+    cfg.eval_every = a.get_usize("eval-every").max(1);
+    cfg.fluctuation = a.get_flag("fluctuate");
+    cfg.static_stragglers = a.get_flag("static-stragglers");
+    cfg.mobile_fleet = !a.get_flag("synthetic-fleet");
+    let threads = a.get_usize("threads");
+    if threads > 0 {
+        cfg.threads = threads;
+    }
+    cfg
+}
+
+fn open_session(a: &Args) -> Session {
+    let dir = if a.get("artifacts").is_empty() {
+        Session::default_dir()
+    } else {
+        a.get("artifacts").into()
+    };
+    Session::new(&dir).unwrap_or_else(|e| {
+        eprintln!("failed to open PJRT session at {}: {e:#}", dir.display());
+        std::process::exit(1);
+    })
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let a = match train_args("fluid train").parse_from(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = build_config(&a);
+    let sess = open_session(&a);
+    println!(
+        "fluid train: model={} policy={} clients={} rounds={} (platform={})",
+        cfg.model,
+        cfg.policy.name(),
+        cfg.clients,
+        cfg.rounds,
+        sess.platform()
+    );
+    let res = match coordinator::run(&sess, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("experiment failed: {e:#}");
+            return 1;
+        }
+    };
+    // round table
+    let rows: Vec<Vec<String>> = res
+        .records
+        .iter()
+        .map(|r| {
+            vec![
+                r.round.to_string(),
+                format!("{:.2}", r.round_time),
+                format!("{:.2}", r.vtime),
+                format!("{:.4}", r.train_loss),
+                if r.test_acc.is_nan() {
+                    "-".into()
+                } else {
+                    format!("{:.3}", r.test_acc)
+                },
+                format!("{:?}", r.straggler_ids),
+                format!("{:?}", r.straggler_rates),
+                format!("{:.3}", r.invariant_fraction),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::text_table(
+            &["round", "t_round", "vtime", "loss", "test_acc", "stragglers", "rates", "inv%"],
+            &rows
+        )
+    );
+    println!(
+        "final: test_acc={:.4} test_loss={:.4} vtime={:.1}s calib_overhead={:.2}%",
+        res.final_test_acc,
+        res.final_test_loss,
+        res.total_vtime,
+        res.calibration_overhead() * 100.0
+    );
+    if !a.get("out").is_empty() {
+        let path = a.get("out");
+        if let Err(e) = std::fs::write(&path, res.to_json().to_string_pretty()) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_devices() -> i32 {
+    let rows: Vec<Vec<String>> = mobile_fleet()
+        .iter()
+        .map(|d| {
+            vec![
+                d.name.clone(),
+                d.year.to_string(),
+                format!("{:.1}", d.base_femnist),
+                format!("{:.1}", d.base_cifar),
+                format!("{:.1}", d.base_shakespeare),
+                format!("{:.1}", d.bandwidth_mbps),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        report::text_table(
+            &["device", "year", "femnist s/ep", "cifar s/ep", "shakespeare s/ep", "MB/s"],
+            &rows
+        )
+    );
+    0
+}
+
+fn cmd_sweep(argv: &[String]) -> i32 {
+    let a = match train_args("fluid sweep")
+        .opt("rates", "0.95,0.85,0.75,0.65,0.5", "keep-rates to sweep")
+        .opt("policies", "random,ordered,invariant", "policies to sweep")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let sess = open_session(&a);
+    let base = build_config(&a);
+    let mut rows = Vec::new();
+    for pol in a.get_list("policies") {
+        let Some(policy) = PolicyKind::parse(&pol) else {
+            eprintln!("unknown policy {pol}");
+            return 2;
+        };
+        for &r in &a.get_f64_list("rates") {
+            let mut cfg = base.clone();
+            cfg.policy = policy;
+            cfg.fixed_rate = Some(r);
+            match coordinator::run(&sess, &cfg) {
+                Ok(res) => rows.push(vec![
+                    pol.clone(),
+                    format!("{r:.2}"),
+                    format!("{:.2}", res.final_test_acc * 100.0),
+                    format!("{:.1}", res.total_vtime),
+                ]),
+                Err(e) => {
+                    eprintln!("run failed ({pol}, r={r}): {e:#}");
+                    return 1;
+                }
+            }
+        }
+    }
+    println!(
+        "{}",
+        report::text_table(&["policy", "r", "test acc %", "vtime s"], &rows)
+    );
+    0
+}

@@ -1,0 +1,262 @@
+//! Model specification — the rust mirror of the AOT manifest.
+//!
+//! `ModelSpec` is parsed from `artifacts/<model>_manifest.json` (written
+//! by python/compile/aot.py) and is the *ordering contract* between the
+//! coordinator and the compiled step functions: parameter order, mask
+//! order, delta-group order and the train-output layout all come from
+//! here and must never be reordered independently.
+
+use crate::jsonlite;
+use crate::tensor::{init, Tensor};
+use crate::util::prng::Pcg32;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One named parameter tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One maskable neuron group ("neurons" in the paper's sense: CONV
+/// filters, FC activations, LSTM hidden units).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MaskSpec {
+    pub name: String,
+    pub size: usize,
+}
+
+/// Parsed manifest for one model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub batch_size: usize,
+    pub x_shape: Vec<usize>,
+    pub x_is_int: bool,
+    pub num_classes: usize,
+    pub params: Vec<ParamSpec>,
+    pub masks: Vec<MaskSpec>,
+    /// delta group names, index-aligned with `masks`
+    pub delta_groups: Vec<String>,
+    /// weight param name feeding each delta group (index-aligned with
+    /// `masks`); the delta artifact takes exactly (old..., new...) of these
+    pub delta_inputs: Vec<String>,
+    /// artifact file names relative to the artifacts dir
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub delta_hlo: String,
+    /// optional fused k-step train artifact (§Perf L2 optimization)
+    pub train_multi_hlo: Option<String>,
+    /// the k baked into `train_multi_hlo` (0 when absent)
+    pub train_multi_k: usize,
+    /// directory the manifest was loaded from
+    pub dir: PathBuf,
+}
+
+impl ModelSpec {
+    /// Load `<dir>/<model>_manifest.json`.
+    pub fn load(dir: &Path, model: &str) -> Result<Self> {
+        let path = dir.join(format!("{model}_manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::from_json_str(&text, dir)
+    }
+
+    pub fn from_json_str(text: &str, dir: &Path) -> Result<Self> {
+        let j = jsonlite::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not array"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: p.req("shape")?.as_shape()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let masks = j
+            .req("masks")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("masks not array"))?
+            .iter()
+            .map(|m| {
+                Ok(MaskSpec {
+                    name: m.req("name")?.as_str().unwrap_or_default().to_string(),
+                    size: m.req("size")?.as_usize().unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let delta_groups = j
+            .req("delta_groups")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("delta_groups not array"))?
+            .iter()
+            .map(|g| g.as_str().unwrap_or_default().to_string())
+            .collect::<Vec<_>>();
+        let delta_inputs = j
+            .req("delta_inputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("delta_inputs not array"))?
+            .iter()
+            .map(|g| g.as_str().unwrap_or_default().to_string())
+            .collect::<Vec<_>>();
+        let arts = j.req("artifacts")?;
+        let get_art = |k: &str| -> Result<String> {
+            Ok(arts
+                .req(k)?
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact {k} not a string"))?
+                .to_string())
+        };
+
+        let spec = Self {
+            name: j.req("model")?.as_str().unwrap_or_default().to_string(),
+            batch_size: j.req("batch_size")?.as_usize().unwrap_or(0),
+            x_shape: j.req("x_shape")?.as_shape()?,
+            x_is_int: j.req("x_dtype")?.as_str() == Some("i32"),
+            num_classes: j.req("num_classes")?.as_usize().unwrap_or(0),
+            params,
+            masks,
+            delta_groups,
+            delta_inputs,
+            train_hlo: get_art("train")?,
+            eval_hlo: get_art("eval")?,
+            delta_hlo: get_art("delta")?,
+            train_multi_hlo: arts
+                .get("train_multi")
+                .and_then(|x| x.as_str())
+                .map(str::to_string),
+            train_multi_k: j
+                .get("train_multi_k")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            dir: dir.to_path_buf(),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.params.is_empty() {
+            return Err(anyhow!("model {} has no params", self.name));
+        }
+        if self.masks.len() != self.delta_groups.len() {
+            return Err(anyhow!(
+                "masks ({}) and delta_groups ({}) must align",
+                self.masks.len(),
+                self.delta_groups.len()
+            ));
+        }
+        for (m, g) in self.masks.iter().zip(&self.delta_groups) {
+            if &m.name != g {
+                return Err(anyhow!("mask {} vs delta group {g} mismatch", m.name));
+            }
+        }
+        if self.delta_inputs.len() != self.masks.len() {
+            return Err(anyhow!("delta_inputs must align with masks"));
+        }
+        for p in &self.delta_inputs {
+            if self.param_index(p).is_none() {
+                return Err(anyhow!("delta input {p} not a model param"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Total maskable neuron count.
+    pub fn num_neurons(&self) -> usize {
+        self.masks.iter().map(|m| m.size).sum()
+    }
+
+    /// Model size in bytes (f32) — used by the communication model.
+    pub fn size_bytes(&self) -> usize {
+        self.num_params() * 4
+    }
+
+    /// Deterministically initialize all parameters (mirrors python init).
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Pcg32::new(seed, 0x1217);
+        self.params
+            .iter()
+            .map(|p| init::init_param(&mut rng, &p.name, &p.shape))
+            .collect()
+    }
+
+    pub fn mask_index(&self, name: &str) -> Option<usize> {
+        self.masks.iter().position(|m| m.name == name)
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+ "model": "tiny", "batch_size": 4,
+ "x_shape": [4, 8], "x_dtype": "f32", "num_classes": 3,
+ "params": [
+   {"name": "fc1_w", "shape": [8, 6]}, {"name": "fc1_b", "shape": [6]},
+   {"name": "out_w", "shape": [6, 3]}, {"name": "out_b", "shape": [3]}
+ ],
+ "masks": [{"name": "fc1", "size": 6}],
+ "delta_groups": ["fc1"],
+ "delta_inputs": ["fc1_w"],
+ "artifacts": {"train": "t.hlo.txt", "eval": "e.hlo.txt", "delta": "d.hlo.txt"},
+ "train_outputs": ["fc1_w", "fc1_b", "out_w", "out_b", "loss", "acc"]
+}"#;
+
+    #[test]
+    fn parses_manifest() {
+        let s = ModelSpec::from_json_str(MANIFEST, Path::new("/tmp")).unwrap();
+        assert_eq!(s.name, "tiny");
+        assert_eq!(s.batch_size, 4);
+        assert_eq!(s.num_params(), 8 * 6 + 6 + 6 * 3 + 3);
+        assert_eq!(s.num_neurons(), 6);
+        assert_eq!(s.size_bytes(), s.num_params() * 4);
+        assert!(!s.x_is_int);
+        assert_eq!(s.mask_index("fc1"), Some(0));
+        assert_eq!(s.param_index("out_w"), Some(2));
+    }
+
+    #[test]
+    fn init_matches_spec_shapes() {
+        let s = ModelSpec::from_json_str(MANIFEST, Path::new("/tmp")).unwrap();
+        let ps = s.init_params(42);
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0].shape(), &[8, 6]);
+        assert!(ps[1].data().iter().all(|&x| x == 0.0)); // bias zero
+        // deterministic
+        assert_eq!(ps, s.init_params(42));
+        assert_ne!(ps[0], s.init_params(43)[0]);
+    }
+
+    #[test]
+    fn misaligned_masks_rejected() {
+        let bad = MANIFEST.replace(r#""delta_groups": ["fc1"]"#, r#""delta_groups": []"#);
+        assert!(ModelSpec::from_json_str(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_key_rejected() {
+        let bad = MANIFEST.replace(r#""batch_size": 4,"#, "");
+        let err = ModelSpec::from_json_str(&bad, Path::new("/tmp"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("batch_size"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Host [`Tensor`] ⇄ XLA [`Literal`] conversion.
+
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Tensor -> f32 literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // rank-0: reshape a [1] literal to []
+        return Ok(lit.reshape(&[])?);
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// i32 slice -> literal of the given shape.
+pub fn i32s_to_literal(xs: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), xs.len());
+    let lit = xla::Literal::vec1(xs);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// f32 literal -> Tensor (reads the literal's own shape).
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Scalar f32 from a rank-0 literal.
+pub fn literal_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_2d() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn round_trip_scalar() {
+        let t = Tensor::scalar(3.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_scalar(&lit).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn round_trip_4d() {
+        let data: Vec<f32> = (0..2 * 3 * 4 * 5).map(|i| i as f32).collect();
+        let t = Tensor::from_vec(&[2, 3, 4, 5], data);
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_literal_shape() {
+        let lit = i32s_to_literal(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+}

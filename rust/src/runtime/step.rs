@@ -1,0 +1,358 @@
+//! Step execution: train / eval / delta over one model's artifacts.
+//!
+//! The argument and result layouts are the manifest ordering contract
+//! (see [`crate::model::ModelSpec`]):
+//!
+//! * train: `(params..., masks..., x, y, lr)` → `(params'..., loss, acc)`
+//! * eval:  `(params..., masks..., x, y)`     → `(loss, correct)`
+//! * delta: `(old params..., new params...)`  → per-group delta vectors
+
+use super::convert::{i32s_to_literal, literal_scalar, literal_to_tensor, tensor_to_literal};
+use super::Session;
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// Input features for one batch.
+#[derive(Clone, Debug)]
+pub enum XData {
+    /// dense features, shape = spec.x_shape
+    F32(Tensor),
+    /// token ids, logical shape = spec.x_shape
+    I32(Vec<i32>),
+}
+
+/// One training/eval batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: XData,
+    pub y: Vec<i32>,
+}
+
+/// Result of a train step.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub params: Vec<Tensor>,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Result of an eval step.
+#[derive(Clone, Debug, Copy)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// Compiled step functions for one model.
+pub struct StepRunner {
+    pub spec: ModelSpec,
+    train: Arc<xla::PjRtLoadedExecutable>,
+    eval: Arc<xla::PjRtLoadedExecutable>,
+    delta: Arc<xla::PjRtLoadedExecutable>,
+    /// fused k-step train program (§Perf L2): one host<->device round
+    /// trip per round instead of per local step
+    train_multi: Option<Arc<xla::PjRtLoadedExecutable>>,
+}
+
+// SAFETY: see Session — executables are immutable post-compile and the
+// TFRT CPU client's execute path is thread-compatible. Validated by the
+// `parallel_exec_stress` integration test.
+unsafe impl Send for StepRunner {}
+unsafe impl Sync for StepRunner {}
+
+impl StepRunner {
+    pub(super) fn new(sess: &Session, spec: ModelSpec) -> Result<Self> {
+        let train = sess.load(&spec.train_hlo)?;
+        let eval = sess.load(&spec.eval_hlo)?;
+        let delta = sess.load(&spec.delta_hlo)?;
+        let train_multi = match &spec.train_multi_hlo {
+            Some(f) => Some(sess.load(f)?),
+            None => None,
+        };
+        Ok(Self {
+            spec,
+            train,
+            eval,
+            delta,
+            train_multi,
+        })
+    }
+
+    /// k of the fused multi-step program (0 = unavailable).
+    pub fn multi_k(&self) -> usize {
+        if self.train_multi.is_some() {
+            self.spec.train_multi_k
+        } else {
+            0
+        }
+    }
+
+    fn x_literal(&self, x: &XData) -> Result<xla::Literal> {
+        match x {
+            XData::F32(t) => {
+                if t.shape() != self.spec.x_shape.as_slice() {
+                    return Err(anyhow!(
+                        "x shape {:?} != manifest {:?}",
+                        t.shape(),
+                        self.spec.x_shape
+                    ));
+                }
+                tensor_to_literal(t)
+            }
+            XData::I32(v) => i32s_to_literal(v, &self.spec.x_shape),
+        }
+    }
+
+    fn check_params(&self, params: &[Tensor]) -> Result<()> {
+        if params.len() != self.spec.params.len() {
+            return Err(anyhow!(
+                "{} params given, manifest has {}",
+                params.len(),
+                self.spec.params.len()
+            ));
+        }
+        for (t, p) in params.iter().zip(&self.spec.params) {
+            if t.shape() != p.shape.as_slice() {
+                return Err(anyhow!(
+                    "param {} shape {:?} != manifest {:?}",
+                    p.name,
+                    t.shape(),
+                    p.shape
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_masks(&self, masks: &[Tensor]) -> Result<()> {
+        if masks.len() != self.spec.masks.len() {
+            return Err(anyhow!(
+                "{} masks given, manifest has {}",
+                masks.len(),
+                self.spec.masks.len()
+            ));
+        }
+        for (t, m) in masks.iter().zip(&self.spec.masks) {
+            if t.len() != m.size {
+                return Err(anyhow!(
+                    "mask {} len {} != manifest {}",
+                    m.name,
+                    t.len(),
+                    m.size
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one local SGD step.
+    pub fn train_step(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<TrainOut> {
+        self.check_params(params)?;
+        self.check_masks(masks)?;
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(params.len() + masks.len() + 3);
+        for t in params {
+            args.push(tensor_to_literal(t)?);
+        }
+        for m in masks {
+            args.push(tensor_to_literal(m)?);
+        }
+        args.push(self.x_literal(&batch.x)?);
+        args.push(i32s_to_literal(&batch.y, &[self.spec.batch_size])?);
+        args.push(tensor_to_literal(&Tensor::scalar(lr))?);
+
+        let outs = self
+            .train
+            .execute::<xla::Literal>(&args)
+            .context("train_step execute")?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        let want = self.spec.params.len() + 2;
+        if outs.len() != want {
+            return Err(anyhow!("train returned {} outputs, want {want}", outs.len()));
+        }
+        let mut new_params = Vec::with_capacity(self.spec.params.len());
+        for lit in &outs[..self.spec.params.len()] {
+            new_params.push(literal_to_tensor(lit)?);
+        }
+        let loss = literal_scalar(&outs[outs.len() - 2])?;
+        let acc = literal_scalar(&outs[outs.len() - 1])?;
+        Ok(TrainOut {
+            params: new_params,
+            loss,
+            acc,
+        })
+    }
+
+    /// Execute the fused k-step train program over `k` stacked batches.
+    /// `batches.len()` must equal `self.multi_k()`. Returns the final
+    /// params and the mean loss/acc over the k steps.
+    pub fn train_multi_step(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        batches: &[Batch],
+        lr: f32,
+    ) -> Result<TrainOut> {
+        let exe = self
+            .train_multi
+            .as_ref()
+            .ok_or_else(|| anyhow!("no train_multi artifact for {}", self.spec.name))?;
+        let k = self.spec.train_multi_k;
+        if batches.len() != k {
+            return Err(anyhow!("train_multi needs {k} batches, got {}", batches.len()));
+        }
+        self.check_params(params)?;
+        self.check_masks(masks)?;
+
+        // stack xs: [k, *x_shape]; ys: [k, bs]
+        let mut xs_shape = vec![k];
+        xs_shape.extend_from_slice(&self.spec.x_shape);
+        let x_lit = match &batches[0].x {
+            XData::F32(_) => {
+                let mut flat: Vec<f32> = Vec::new();
+                for b in batches {
+                    match &b.x {
+                        XData::F32(t) => flat.extend_from_slice(t.data()),
+                        _ => return Err(anyhow!("mixed batch dtypes")),
+                    }
+                }
+                tensor_to_literal(&Tensor::from_vec(&xs_shape, flat))?
+            }
+            XData::I32(_) => {
+                let mut flat: Vec<i32> = Vec::new();
+                for b in batches {
+                    match &b.x {
+                        XData::I32(v) => flat.extend_from_slice(v),
+                        _ => return Err(anyhow!("mixed batch dtypes")),
+                    }
+                }
+                i32s_to_literal(&flat, &xs_shape)?
+            }
+        };
+        let mut ys: Vec<i32> = Vec::with_capacity(k * self.spec.batch_size);
+        for b in batches {
+            ys.extend_from_slice(&b.y);
+        }
+
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(params.len() + masks.len() + 3);
+        for t in params {
+            args.push(tensor_to_literal(t)?);
+        }
+        for m in masks {
+            args.push(tensor_to_literal(m)?);
+        }
+        args.push(x_lit);
+        args.push(i32s_to_literal(&ys, &[k, self.spec.batch_size])?);
+        args.push(tensor_to_literal(&Tensor::scalar(lr))?);
+
+        let outs = exe
+            .execute::<xla::Literal>(&args)
+            .context("train_multi execute")?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        let want = self.spec.params.len() + 2;
+        if outs.len() != want {
+            return Err(anyhow!("train_multi returned {} outputs, want {want}", outs.len()));
+        }
+        let mut new_params = Vec::with_capacity(self.spec.params.len());
+        for lit in &outs[..self.spec.params.len()] {
+            new_params.push(literal_to_tensor(lit)?);
+        }
+        Ok(TrainOut {
+            params: new_params,
+            loss: literal_scalar(&outs[outs.len() - 2])?,
+            acc: literal_scalar(&outs[outs.len() - 1])?,
+        })
+    }
+
+    /// Evaluate one batch: mean loss + number of correct predictions.
+    pub fn eval_step(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        batch: &Batch,
+    ) -> Result<EvalOut> {
+        self.check_params(params)?;
+        self.check_masks(masks)?;
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(params.len() + masks.len() + 2);
+        for t in params {
+            args.push(tensor_to_literal(t)?);
+        }
+        for m in masks {
+            args.push(tensor_to_literal(m)?);
+        }
+        args.push(self.x_literal(&batch.x)?);
+        args.push(i32s_to_literal(&batch.y, &[self.spec.batch_size])?);
+
+        let outs = self
+            .eval
+            .execute::<xla::Literal>(&args)
+            .context("eval_step execute")?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        if outs.len() != 2 {
+            return Err(anyhow!("eval returned {} outputs, want 2", outs.len()));
+        }
+        Ok(EvalOut {
+            loss: literal_scalar(&outs[0])?,
+            correct: literal_scalar(&outs[1])?,
+        })
+    }
+
+    /// Per-neuron max relative update between two parameter sets
+    /// (the L1 `neuron_delta` Pallas kernel). Takes the *full* parameter
+    /// lists and extracts the per-group weight tensors the delta artifact
+    /// expects (manifest `delta_inputs`). Returns one vector per maskable
+    /// group, aligned with `spec.masks`.
+    pub fn delta_step(&self, old: &[Tensor], new: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_params(old)?;
+        self.check_params(new)?;
+        let idx: Vec<usize> = self
+            .spec
+            .delta_inputs
+            .iter()
+            .map(|p| self.spec.param_index(p).expect("validated at load"))
+            .collect();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(idx.len() * 2);
+        for &i in &idx {
+            args.push(tensor_to_literal(&old[i])?);
+        }
+        for &i in &idx {
+            args.push(tensor_to_literal(&new[i])?);
+        }
+        let outs = self
+            .delta
+            .execute::<xla::Literal>(&args)
+            .context("delta_step execute")?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        if outs.len() != self.spec.masks.len() {
+            return Err(anyhow!(
+                "delta returned {} outputs, want {}",
+                outs.len(),
+                self.spec.masks.len()
+            ));
+        }
+        outs.iter().map(literal_to_tensor).collect()
+    }
+
+    /// All-ones masks (full model).
+    pub fn full_masks(&self) -> Vec<Tensor> {
+        self.spec
+            .masks
+            .iter()
+            .map(|m| Tensor::ones(&[m.size]))
+            .collect()
+    }
+}

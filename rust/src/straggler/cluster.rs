@@ -1,0 +1,77 @@
+//! Straggler clustering (Appendix A.4): when many stragglers have
+//! different capabilities, FLuID groups them into a small number of
+//! sub-model-size clusters instead of sizing each individually or
+//! punishing everyone with the slowest device's sub-model.
+
+use super::detect::snap_rate;
+
+/// Assign each straggler (by desired keep-rate 1/speedup) to one of the
+/// `cluster_rates` — the A.4 experiment uses {0.65, 0.75, 0.85, 0.95}.
+/// Returns the per-straggler cluster rate (aligned with input order).
+pub fn cluster_stragglers(speedups: &[f64], cluster_rates: &[f64]) -> Vec<f64> {
+    speedups
+        .iter()
+        .map(|&s| snap_rate(1.0 / s.max(1.0), cluster_rates))
+        .collect()
+}
+
+/// Quantize into k equal-occupancy clusters by speedup rank, then map
+/// each cluster to a rate (slowest cluster -> smallest rate). The A.4
+/// "4 equal-sized clusters" protocol.
+pub fn equal_size_clusters(speedups: &[f64], cluster_rates: &[f64]) -> Vec<f64> {
+    let n = speedups.len();
+    if n == 0 {
+        return vec![];
+    }
+    let k = cluster_rates.len().max(1);
+    let mut order: Vec<usize> = (0..n).collect();
+    // slowest (largest speedup needed) first
+    order.sort_by(|&a, &b| speedups[b].partial_cmp(&speedups[a]).unwrap());
+    let mut rates_sorted = cluster_rates.to_vec();
+    rates_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap()); // smallest first
+    let mut out = vec![1.0; n];
+    for (rank, &idx) in order.iter().enumerate() {
+        let cluster = (rank * k) / n;
+        out[idx] = rates_sorted[cluster.min(k - 1)];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A4_RATES: &[f64] = &[0.65, 0.75, 0.85, 0.95];
+
+    #[test]
+    fn capability_based_assignment() {
+        // speedups 1.05 (barely slow) .. 1.6 (very slow)
+        let rates = cluster_stragglers(&[1.05, 1.18, 1.35, 1.6], A4_RATES);
+        assert_eq!(rates, vec![0.95, 0.85, 0.75, 0.65]);
+    }
+
+    #[test]
+    fn faster_than_target_gets_largest_rate() {
+        let rates = cluster_stragglers(&[0.9], A4_RATES);
+        assert_eq!(rates, vec![0.95]);
+    }
+
+    #[test]
+    fn equal_clusters_are_balanced() {
+        let speedups: Vec<f64> = (0..8).map(|i| 1.1 + i as f64 * 0.1).collect();
+        let rates = equal_size_clusters(&speedups, A4_RATES);
+        // 8 stragglers, 4 clusters -> 2 each
+        for &r in A4_RATES {
+            assert_eq!(rates.iter().filter(|&&x| x == r).count(), 2);
+        }
+        // slowest straggler gets the smallest sub-model
+        assert_eq!(rates[7], 0.65);
+        assert_eq!(rates[0], 0.95);
+    }
+
+    #[test]
+    fn empty() {
+        assert!(equal_size_clusters(&[], A4_RATES).is_empty());
+        assert!(cluster_stragglers(&[], A4_RATES).is_empty());
+    }
+}

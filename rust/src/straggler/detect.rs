@@ -1,0 +1,155 @@
+//! Straggler detection and sub-model sizing (Algorithm 1 lines 18-22).
+//!
+//! From measured end-to-end latencies the server marks the slowest
+//! fraction as stragglers, sets `T_target` to the next-slowest
+//! (non-straggler) client's time — the paper's choice that minimizes
+//! non-straggler idle time — and sizes each straggler's sub-model as the
+//! available rate closest to `1/speedup` (Appendix A.3 linearity).
+
+/// Result of one detection pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Detection {
+    /// client ids flagged as stragglers, slowest first
+    pub stragglers: Vec<usize>,
+    /// the target time: slowest non-straggler latency
+    pub t_target: f64,
+    /// per-straggler required speedup (aligned with `stragglers`)
+    pub speedups: Vec<f64>,
+    /// per-straggler keep-rate r (aligned with `stragglers`)
+    pub rates: Vec<f64>,
+}
+
+/// The paper's pre-defined sub-model sizes (§7: "FLuID currently only
+/// uses pre-defined sub-model sizes").
+pub const DEFAULT_RATES: &[f64] = &[0.5, 0.65, 0.75, 0.85, 0.95, 1.0];
+
+/// Snap a desired keep-rate to the closest available sub-model size.
+pub fn snap_rate(desired: f64, available: &[f64]) -> f64 {
+    let mut best = 1.0;
+    let mut best_d = f64::INFINITY;
+    for &r in available {
+        let d = (r - desired).abs();
+        if d < best_d {
+            best_d = d;
+            best = r;
+        }
+    }
+    best
+}
+
+/// Detect stragglers from end-to-end latencies.
+///
+/// * `latencies[i]` — client i's last-round latency.
+/// * `straggler_fraction` — how much of the fleet may be treated as
+///   stragglers (paper: 1 of 5 on mobile, 20% in the scale study).
+/// * `margin` — a client is only a straggler if it is at least this much
+///   slower than `T_target` (avoids flapping when times are tied).
+/// * `available` — the sub-model size menu.
+pub fn detect_stragglers(
+    latencies: &[f64],
+    straggler_fraction: f64,
+    margin: f64,
+    available: &[f64],
+) -> Detection {
+    let n = latencies.len();
+    if n == 0 {
+        return Detection {
+            stragglers: vec![],
+            t_target: 0.0,
+            speedups: vec![],
+            rates: vec![],
+        };
+    }
+    let max_stragglers = ((n as f64 * straggler_fraction).floor() as usize).min(n - 1);
+
+    // order clients slowest-first
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| latencies[b].partial_cmp(&latencies[a]).unwrap());
+
+    // T_target = slowest latency outside the straggler candidate set
+    let t_target = latencies[order[max_stragglers.min(order.len() - 1)]];
+
+    let mut stragglers = Vec::new();
+    let mut speedups = Vec::new();
+    let mut rates = Vec::new();
+    for &c in order.iter().take(max_stragglers) {
+        let speedup = latencies[c] / t_target;
+        if speedup <= 1.0 + margin {
+            continue; // not meaningfully slower than the target
+        }
+        stragglers.push(c);
+        speedups.push(speedup);
+        rates.push(snap_rate(1.0 / speedup, available));
+    }
+    Detection {
+        stragglers,
+        t_target,
+        speedups,
+        rates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snap_picks_closest() {
+        assert_eq!(snap_rate(0.78, DEFAULT_RATES), 0.75);
+        assert_eq!(snap_rate(0.81, DEFAULT_RATES), 0.85);
+        assert_eq!(snap_rate(0.97, DEFAULT_RATES), 0.95);
+        assert_eq!(snap_rate(0.99, DEFAULT_RATES), 1.0);
+        assert_eq!(snap_rate(0.2, DEFAULT_RATES), 0.5);
+    }
+
+    #[test]
+    fn five_clients_one_straggler() {
+        // the mobile-fleet shape: Pixel 3 ~25% slower than S9
+        let lat = [62.0, 66.0, 72.0, 80.0, 100.0];
+        let d = detect_stragglers(&lat, 0.2, 0.02, DEFAULT_RATES);
+        assert_eq!(d.stragglers, vec![4]);
+        assert_eq!(d.t_target, 80.0);
+        assert!((d.speedups[0] - 1.25).abs() < 1e-9);
+        // 1/1.25 = 0.8 -> snaps to 0.85 or 0.75; 0.8 is equidistant,
+        // first-closest wins deterministically
+        assert!(d.rates[0] == 0.75 || d.rates[0] == 0.85);
+    }
+
+    #[test]
+    fn homogeneous_fleet_has_no_stragglers() {
+        let lat = [50.0, 50.2, 49.9, 50.1, 50.0];
+        let d = detect_stragglers(&lat, 0.2, 0.05, DEFAULT_RATES);
+        assert!(d.stragglers.is_empty());
+    }
+
+    #[test]
+    fn twenty_percent_of_large_fleet() {
+        let mut lat: Vec<f64> = (0..100).map(|i| 50.0 + i as f64 * 0.01).collect();
+        // make the top 20 clearly slower
+        for l in lat.iter_mut().skip(80) {
+            *l *= 1.5;
+        }
+        let d = detect_stragglers(&lat, 0.2, 0.02, DEFAULT_RATES);
+        assert_eq!(d.stragglers.len(), 20);
+        // slowest first
+        assert!(lat[d.stragglers[0]] >= lat[d.stragglers[19]]);
+        // all rates < 1
+        assert!(d.rates.iter().all(|&r| r < 1.0));
+    }
+
+    #[test]
+    fn target_is_next_slowest() {
+        let lat = [10.0, 20.0, 30.0, 40.0, 100.0];
+        let d = detect_stragglers(&lat, 0.2, 0.02, DEFAULT_RATES);
+        assert_eq!(d.t_target, 40.0);
+        assert_eq!(d.stragglers, vec![4]);
+        assert_eq!(d.speedups[0], 2.5);
+        assert_eq!(d.rates[0], 0.5); // 1/2.5 = 0.4 -> closest is 0.5
+    }
+
+    #[test]
+    fn empty_input() {
+        let d = detect_stragglers(&[], 0.2, 0.02, DEFAULT_RATES);
+        assert!(d.stragglers.is_empty());
+    }
+}

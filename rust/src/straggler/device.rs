@@ -1,0 +1,122 @@
+//! Device profiles — the five Table-1 phones plus synthetic fleets.
+//!
+//! Base per-epoch training times are calibrated to Figure 2a's shape:
+//! up to ~2x spread between 2018 and 2020 devices, with std deviations of
+//! ~0.5 s (FEMNIST), ~22 s (CIFAR10) and ~21 s (Shakespeare). The
+//! slowest device (Pixel 3) sits 10-32% above the next slowest, matching
+//! §6.1 "the straggler's training time is typically 10% to 32% longer
+//! than the target time".
+
+use crate::util::prng::Pcg32;
+
+/// Static description of one client device.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: String,
+    pub year: u32,
+    /// seconds per local epoch at r = 1.0, per model family
+    pub base_femnist: f64,
+    pub base_cifar: f64,
+    pub base_shakespeare: f64,
+    /// network bandwidth in MB/s (up + down combined model)
+    pub bandwidth_mbps: f64,
+}
+
+impl DeviceProfile {
+    /// Base epoch time for a model name (manifest names).
+    pub fn base_time(&self, model: &str) -> f64 {
+        match model {
+            "femnist_cnn" => self.base_femnist,
+            "cifar_vgg9" => self.base_cifar,
+            "cifar_resnet18" => self.base_cifar * 1.6, // deeper model
+            "shakespeare_lstm" => self.base_shakespeare,
+            _ => self.base_cifar,
+        }
+    }
+}
+
+/// The five real phones of Table 1.
+pub fn mobile_fleet() -> Vec<DeviceProfile> {
+    let mk = |name: &str, year, f, c, s, bw| DeviceProfile {
+        name: name.to_string(),
+        year,
+        base_femnist: f,
+        base_cifar: c,
+        base_shakespeare: s,
+        bandwidth_mbps: bw,
+    };
+    vec![
+        mk("LG Velvet 5G", 2020, 2.0, 55.0, 60.0, 12.0),
+        mk("Google Pixel 4", 2019, 2.2, 60.0, 65.0, 11.0),
+        mk("Samsung Galaxy S10", 2019, 2.4, 66.0, 72.0, 10.0),
+        mk("Samsung Galaxy S9", 2018, 2.8, 80.0, 90.0, 9.0),
+        mk("Google Pixel 3", 2018, 3.2, 100.0, 112.0, 8.0),
+    ]
+}
+
+/// A synthetic heterogeneous fleet of `n` devices for the scalability
+/// studies (§6.1 "simulated clients ranging from 50 to 100", A.6 1000).
+/// Speeds follow a lognormal spread around the mobile fleet's mid-range;
+/// the slowest tail plays the straggler role.
+pub fn synthetic_fleet(n: usize, seed: u64) -> Vec<DeviceProfile> {
+    let mut rng = Pcg32::new(seed, 0xDE5);
+    (0..n)
+        .map(|i| {
+            let slow = rng.lognormal(0.35) as f64; // median 1.0
+            DeviceProfile {
+                name: format!("sim-{i:04}"),
+                year: 2018 + (i % 3) as u32,
+                base_femnist: 2.4 * slow,
+                base_cifar: 68.0 * slow,
+                base_shakespeare: 75.0 * slow,
+                bandwidth_mbps: (10.0 / slow).clamp(2.0, 20.0),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn fleet_matches_fig2a_shape() {
+        let fleet = mobile_fleet();
+        assert_eq!(fleet.len(), 5);
+        let fem: Vec<f64> = fleet.iter().map(|d| d.base_femnist).collect();
+        let cif: Vec<f64> = fleet.iter().map(|d| d.base_cifar).collect();
+        let shk: Vec<f64> = fleet.iter().map(|d| d.base_shakespeare).collect();
+        // paper: std 0.5 / 22 / 21 s (FEMNIST / CIFAR10 / Shakespeare)
+        assert!((stats::std_dev(&fem) - 0.5).abs() < 0.15, "{}", stats::std_dev(&fem));
+        assert!((stats::std_dev(&cif) - 22.0).abs() < 8.0, "{}", stats::std_dev(&cif));
+        assert!((stats::std_dev(&shk) - 21.0).abs() < 8.0, "{}", stats::std_dev(&shk));
+        // straggler 10-32% slower than next-slowest
+        for xs in [&fem, &cif, &shk] {
+            let mut v = (*xs).clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ratio = v[4] / v[3];
+            assert!((1.10..=1.35).contains(&ratio), "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn base_time_dispatch() {
+        let d = &mobile_fleet()[0];
+        assert_eq!(d.base_time("femnist_cnn"), 2.0);
+        assert_eq!(d.base_time("cifar_vgg9"), 55.0);
+        assert!(d.base_time("cifar_resnet18") > d.base_time("cifar_vgg9"));
+        assert_eq!(d.base_time("shakespeare_lstm"), 60.0);
+    }
+
+    #[test]
+    fn synthetic_fleet_is_heterogeneous_and_deterministic() {
+        let a = synthetic_fleet(50, 3);
+        let b = synthetic_fleet(50, 3);
+        assert_eq!(a.len(), 50);
+        assert_eq!(a[17].base_cifar, b[17].base_cifar);
+        let times: Vec<f64> = a.iter().map(|d| d.base_cifar).collect();
+        let spread = stats::max(&times) / stats::min(&times);
+        assert!(spread > 1.5, "fleet too homogeneous: {spread}");
+    }
+}

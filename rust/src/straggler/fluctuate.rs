@@ -1,0 +1,133 @@
+//! Runtime condition fluctuation (§6.1 "Varying stragglers at runtime").
+//!
+//! The paper emulates shifting runtime conditions by starting a
+//! background process on random clients at the 25%, 50% and 75% marks of
+//! training. A [`LoadEvent`] is exactly that: a client, an active window
+//! in training-progress fractions, and a compute multiplier.
+
+use crate::util::prng::Pcg32;
+
+/// One background-load episode on one client.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadEvent {
+    pub client: usize,
+    /// active window in training progress fractions [start, end)
+    pub start_frac: f64,
+    pub end_frac: f64,
+    /// compute-time multiplier while active (> 1 slows the client)
+    pub multiplier: f64,
+}
+
+/// The set of load events for one run.
+#[derive(Clone, Debug, Default)]
+pub struct FluctuationSchedule {
+    pub events: Vec<LoadEvent>,
+}
+
+impl FluctuationSchedule {
+    /// No fluctuation — stable devices (Table 2 experiments).
+    pub fn none() -> Self {
+        Self { events: vec![] }
+    }
+
+    /// The paper's protocol: at each of the 25/50/75% marks, pick a
+    /// random client (excluding `exclude`, the natural straggler, so the
+    /// straggler *changes*) and run a background load until the next mark.
+    pub fn paper_marks(num_clients: usize, exclude: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0xF1C);
+        let mut events = Vec::new();
+        for (i, start) in [0.25, 0.5, 0.75].into_iter().enumerate() {
+            let mut client = rng.below_usize(num_clients);
+            if num_clients > 1 {
+                while client == exclude {
+                    client = rng.below_usize(num_clients);
+                }
+            }
+            events.push(LoadEvent {
+                client,
+                start_frac: start,
+                end_frac: if i == 2 { 1.0 } else { start + 0.25 },
+                multiplier: 1.5 + rng.next_f64() * 1.0, // 1.5x – 2.5x
+            });
+        }
+        Self { events }
+    }
+
+    /// Compute multiplier for `client` at training progress `t_frac`.
+    pub fn load_multiplier(&self, client: usize, t_frac: f64) -> f64 {
+        let mut m = 1.0;
+        for e in &self.events {
+            if e.client == client && t_frac >= e.start_frac && t_frac < e.end_frac {
+                m *= e.multiplier;
+            }
+        }
+        m
+    }
+
+    /// Does any event change the straggler set during the run?
+    pub fn is_dynamic(&self) -> bool {
+        !self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let s = FluctuationSchedule::none();
+        assert_eq!(s.load_multiplier(0, 0.3), 1.0);
+        assert!(!s.is_dynamic());
+    }
+
+    #[test]
+    fn window_semantics() {
+        let s = FluctuationSchedule {
+            events: vec![LoadEvent {
+                client: 2,
+                start_frac: 0.25,
+                end_frac: 0.5,
+                multiplier: 2.0,
+            }],
+        };
+        assert_eq!(s.load_multiplier(2, 0.2), 1.0);
+        assert_eq!(s.load_multiplier(2, 0.25), 2.0);
+        assert_eq!(s.load_multiplier(2, 0.49), 2.0);
+        assert_eq!(s.load_multiplier(2, 0.5), 1.0);
+        assert_eq!(s.load_multiplier(1, 0.3), 1.0); // other client untouched
+    }
+
+    #[test]
+    fn paper_marks_cover_quarters() {
+        let s = FluctuationSchedule::paper_marks(5, 4, 7);
+        assert_eq!(s.events.len(), 3);
+        assert!(s.is_dynamic());
+        for e in &s.events {
+            assert_ne!(e.client, 4, "natural straggler excluded");
+            assert!(e.multiplier >= 1.5 && e.multiplier <= 2.5);
+        }
+        assert_eq!(s.events[0].start_frac, 0.25);
+        assert_eq!(s.events[2].end_frac, 1.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        assert_eq!(
+            FluctuationSchedule::paper_marks(5, 0, 9).events,
+            FluctuationSchedule::paper_marks(5, 0, 9).events
+        );
+    }
+
+    #[test]
+    fn overlapping_events_multiply() {
+        let s = FluctuationSchedule {
+            events: vec![
+                LoadEvent { client: 0, start_frac: 0.0, end_frac: 1.0, multiplier: 1.5 },
+                LoadEvent { client: 0, start_frac: 0.4, end_frac: 0.6, multiplier: 2.0 },
+            ],
+        };
+        assert_eq!(s.load_multiplier(0, 0.5), 3.0);
+        assert_eq!(s.load_multiplier(0, 0.1), 1.5);
+    }
+}

@@ -1,0 +1,19 @@
+//! Straggler subsystem: the heterogeneous device fleet, its performance
+//! model, and FLuID's straggler detection / sub-model sizing.
+//!
+//! The paper measures five Android phones (Table 1); we reproduce their
+//! *relative* performance as device profiles (DESIGN.md §2) and drive all
+//! timing off a virtual clock — wall-clock results in the paper are a
+//! function of device heterogeneity, which the model preserves.
+
+pub mod cluster;
+pub mod detect;
+pub mod device;
+pub mod fluctuate;
+pub mod perfmodel;
+
+pub use cluster::cluster_stragglers;
+pub use detect::{detect_stragglers, snap_rate, Detection};
+pub use device::{mobile_fleet, synthetic_fleet, DeviceProfile};
+pub use fluctuate::{FluctuationSchedule, LoadEvent};
+pub use perfmodel::PerfModel;

@@ -1,0 +1,163 @@
+//! Virtual-time performance model.
+//!
+//! End-to-end client latency per round (paper §5: "End-to-end training
+//! includes upload/download latency and communication time"):
+//!
+//! ```text
+//! latency = compute + communication
+//! compute = base_epoch_time(model) · (α + (1-α)·r) · load(t) · jitter
+//! communication = 2 · model_bytes · comm_fraction(r) / bandwidth
+//! ```
+//!
+//! The `(α + (1-α)·r)` term encodes Appendix A.3's measurement that
+//! training time decreases *linearly* with sub-model size and stays
+//! within 10% of proportionality — α is the fixed overhead share
+//! (default 0.05, keeping the fit inside the paper's 10% envelope).
+
+use super::device::DeviceProfile;
+use super::fluctuate::FluctuationSchedule;
+use crate::util::prng::Pcg32;
+
+/// Latency model over a device fleet.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    pub model: String,
+    /// fixed-overhead fraction of compute (A.3 linearity intercept)
+    pub alpha: f64,
+    /// lognormal jitter sigma on compute time (run-to-run variation)
+    pub jitter_sigma: f32,
+    /// bytes of the full global model (from the manifest)
+    pub model_bytes: usize,
+    /// local epochs per round
+    pub local_epochs: usize,
+}
+
+impl PerfModel {
+    pub fn new(model: &str, model_bytes: usize) -> Self {
+        Self {
+            model: model.to_string(),
+            alpha: 0.05,
+            jitter_sigma: 0.03,
+            model_bytes,
+            local_epochs: 1,
+        }
+    }
+
+    /// Compute seconds for one round on `dev` with keep-rate `r` at
+    /// progress `t_frac` ∈ [0,1] (for fluctuation lookup).
+    pub fn compute_time(
+        &self,
+        dev: &DeviceProfile,
+        client: usize,
+        r: f64,
+        t_frac: f64,
+        sched: &FluctuationSchedule,
+        rng: &mut Pcg32,
+    ) -> f64 {
+        let base = dev.base_time(&self.model) * self.local_epochs as f64;
+        let shape = self.alpha + (1.0 - self.alpha) * r.clamp(0.0, 1.0);
+        let load = sched.load_multiplier(client, t_frac);
+        let jitter = rng.lognormal(self.jitter_sigma) as f64;
+        base * shape * load * jitter
+    }
+
+    /// Up+down transfer seconds for a sub-model of comm fraction `f`.
+    pub fn comm_time(&self, dev: &DeviceProfile, comm_fraction: f64) -> f64 {
+        let bytes = 2.0 * self.model_bytes as f64 * comm_fraction.clamp(0.0, 1.0);
+        bytes / (dev.bandwidth_mbps * 1e6)
+    }
+
+    /// Total end-to-end round latency.
+    #[allow(clippy::too_many_arguments)]
+    pub fn round_latency(
+        &self,
+        dev: &DeviceProfile,
+        client: usize,
+        r: f64,
+        comm_fraction: f64,
+        t_frac: f64,
+        sched: &FluctuationSchedule,
+        rng: &mut Pcg32,
+    ) -> f64 {
+        self.compute_time(dev, client, r, t_frac, sched, rng) + self.comm_time(dev, comm_fraction)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::straggler::device::mobile_fleet;
+    use crate::util::stats;
+
+    fn quiet() -> FluctuationSchedule {
+        FluctuationSchedule::none()
+    }
+
+    #[test]
+    fn linear_in_r_within_10_percent() {
+        // Appendix A.3: time(r)/time(1.0) within 10% of r itself
+        let pm = PerfModel {
+            jitter_sigma: 0.0,
+            ..PerfModel::new("cifar_vgg9", 4_000_000)
+        };
+        let dev = &mobile_fleet()[0];
+        let mut rng = Pcg32::new(1, 1);
+        let t_full = pm.compute_time(dev, 0, 1.0, 0.0, &quiet(), &mut rng);
+        for &r in &[0.5, 0.65, 0.75, 0.85, 0.95] {
+            let t = pm.compute_time(dev, 0, r, 0.0, &quiet(), &mut rng);
+            let frac = t / t_full;
+            assert!((frac - r).abs() <= 0.10, "r={r} frac={frac}");
+        }
+        // and a strict linear fit
+        let rs = [0.5, 0.65, 0.75, 0.85, 1.0];
+        let ts: Vec<f64> = rs
+            .iter()
+            .map(|&r| pm.compute_time(dev, 0, r, 0.0, &quiet(), &mut rng))
+            .collect();
+        let (_, slope, r2) = stats::linear_fit(&rs, &ts);
+        assert!(slope > 0.0);
+        assert!(r2 > 0.999, "not linear: r2={r2}");
+    }
+
+    #[test]
+    fn comm_time_scales_with_fraction_and_bandwidth() {
+        let pm = PerfModel::new("femnist_cnn", 1_640_088);
+        let fast = &mobile_fleet()[0];
+        let slow = &mobile_fleet()[4];
+        let full = pm.comm_time(fast, 1.0);
+        let half = pm.comm_time(fast, 0.5);
+        assert!((half - full / 2.0).abs() < 1e-12);
+        assert!(pm.comm_time(slow, 1.0) > full);
+    }
+
+    #[test]
+    fn straggler_is_slowest_end_to_end() {
+        let pm = PerfModel::new("cifar_vgg9", 5_879_976);
+        let fleet = mobile_fleet();
+        let mut rng = Pcg32::new(2, 2);
+        let lat: Vec<f64> = fleet
+            .iter()
+            .enumerate()
+            .map(|(i, d)| pm.round_latency(d, i, 1.0, 1.0, 0.0, &quiet(), &mut rng))
+            .collect();
+        let max_idx = lat
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 4, "Pixel 3 must be the straggler: {lat:?}");
+    }
+
+    #[test]
+    fn jitter_is_modest() {
+        let pm = PerfModel::new("femnist_cnn", 1_000_000);
+        let dev = &mobile_fleet()[2];
+        let mut rng = Pcg32::new(3, 3);
+        let xs: Vec<f64> = (0..500)
+            .map(|_| pm.compute_time(dev, 0, 1.0, 0.0, &quiet(), &mut rng))
+            .collect();
+        let cv = stats::std_dev(&xs) / stats::mean(&xs);
+        assert!(cv < 0.06, "cv {cv}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Weight initializers — rust mirror of `ModelDef.init_params` in
+//! python/compile/model.py: biases zero, matrices He-uniform over fan-in,
+//! vectors small-normal. Keeping the schemes aligned means python-side
+//! training dynamics (validated by pytest) carry over to the runtime.
+
+use super::Tensor;
+use crate::util::prng::Pcg32;
+
+/// He-uniform: U(-sqrt(6/fan_in), +sqrt(6/fan_in)); fan_in = prod(shape[..-1]).
+pub fn he_uniform(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let fan_in: usize = shape[..shape.len() - 1].iter().product::<usize>().max(1);
+    let bound = (6.0 / fan_in as f32).sqrt();
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.uniform(-bound, bound)).collect();
+    Tensor::from_vec(shape, data)
+}
+
+/// N(0, 0.05) — embeddings / 1-D parameter vectors.
+pub fn small_normal(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| rng.normal() * 0.05).collect();
+    Tensor::from_vec(shape, data)
+}
+
+/// Initialize one named parameter the way model.py does.
+pub fn init_param(rng: &mut Pcg32, name: &str, shape: &[usize]) -> Tensor {
+    if name.ends_with("_b") {
+        Tensor::zeros(shape)
+    } else if shape.len() >= 2 {
+        he_uniform(rng, shape)
+    } else {
+        small_normal(rng, shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_is_zero() {
+        let mut rng = Pcg32::new(1, 1);
+        let t = init_param(&mut rng, "conv1_b", &[16]);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn he_uniform_within_bound() {
+        let mut rng = Pcg32::new(2, 1);
+        let t = init_param(&mut rng, "fc1_w", &[3136, 120]);
+        let bound = (6.0f32 / 3136.0).sqrt();
+        assert!(t.data().iter().all(|&x| x.abs() <= bound));
+        // roughly centered
+        let mean: f32 = t.data().iter().sum::<f32>() / t.len() as f32;
+        assert!(mean.abs() < bound * 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn conv_fan_in_uses_all_leading_dims() {
+        let mut rng = Pcg32::new(3, 1);
+        let t = he_uniform(&mut rng, &[5, 5, 16, 64]);
+        let bound = (6.0f32 / (5.0 * 5.0 * 16.0)).sqrt();
+        assert!(t.max_abs() <= bound);
+    }
+
+    #[test]
+    fn embedding_uses_small_normal() {
+        let mut rng = Pcg32::new(4, 1);
+        let t = init_param(&mut rng, "emb", &[80]);
+        assert!(t.max_abs() < 0.5);
+        assert!(t.data().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = init_param(&mut Pcg32::new(5, 1), "w", &[10, 10]);
+        let b = init_param(&mut Pcg32::new(5, 1), "w", &[10, 10]);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,215 @@
+//! Host-side f32 tensor substrate.
+//!
+//! The coordinator owns all model state between PJRT executions as plain
+//! row-major `Tensor`s. Deliberately minimal: shape bookkeeping, the
+//! element-wise ops aggregation needs, and the weight initializers that
+//! mirror `ModelDef.init_params` on the python side.
+
+pub mod init;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::full(shape, 1.0)
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    // ---- accessors ----------------------------------------------------------
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Reinterpret the buffer with a new shape of the same element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// View a weight tensor as [fan_in, neurons] — the delta-view layout
+    /// used by the invariant scan (matches python `conv_view`/`dense_view`:
+    /// row-major [KH,KW,Cin,Cout] flattens to exactly [KH*KW*Cin, Cout]).
+    pub fn as_2d_neurons(&self) -> (usize, usize) {
+        assert!(!self.shape.is_empty());
+        let neurons = *self.shape.last().unwrap();
+        (self.data.len() / neurons, neurons)
+    }
+
+    // ---- element-wise ops ----------------------------------------------------
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// a += w * b (axpy).
+    pub fn axpy(&mut self, w: f32, b: &Tensor) {
+        assert_eq!(self.shape, b.shape);
+        for (a, x) in self.data.iter_mut().zip(&b.data) {
+            *a += w * x;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn has_nan(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// Count of exactly-zero entries (mask diagnostics).
+    pub fn count_zeros(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(Tensor::scalar(4.0).item(), 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_from_vec_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[11.0, 22.0, 33.0]);
+        a.scale(0.5);
+        assert_eq!(a.data(), &[5.5, 11.0, 16.5]);
+        let d = b.sub(&a);
+        assert_eq!(d.data(), &[4.5, 9.0, 13.5]);
+        let mut c = Tensor::zeros(&[3]);
+        c.axpy(2.0, &b);
+        assert_eq!(c.data(), &[20.0, 40.0, 60.0]);
+    }
+
+    #[test]
+    fn neurons_view() {
+        let t = Tensor::zeros(&[5, 5, 1, 16]);
+        assert_eq!(t.as_2d_neurons(), (25, 16));
+        let t = Tensor::zeros(&[120, 62]);
+        assert_eq!(t.as_2d_neurons(), (120, 62));
+    }
+
+    #[test]
+    fn diagnostics() {
+        let t = Tensor::from_vec(&[4], vec![0.0, -2.0, 1.0, 0.0]);
+        assert_eq!(t.count_zeros(), 2);
+        assert_eq!(t.max_abs(), 2.0);
+        assert!(!t.has_nan());
+        let nan = Tensor::from_vec(&[1], vec![f32::NAN]);
+        assert!(nan.has_nan());
+        assert!((t.l2_norm() - 5.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reshape_keeps_data() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).reshape(&[4]);
+        assert_eq!(t.shape(), &[4]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,243 @@
+//! Minimal declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! defaults, and auto-generated `--help`. Used by the `fluid` binary, the
+//! examples, and every bench harness (`--full`, `--seeds`, ...).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative arg spec + parsed values.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse `std::env::args()`; prints help and exits on `--help`.
+    pub fn parse(self) -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse from an explicit argv (testable).
+    pub fn parse_from(mut self, argv: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.help_text()))?
+                    .clone();
+                let val = if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .ok_or_else(|| format!("option --{key} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<26}{}{def}\n", o.help));
+        }
+        s.push_str("  --help                  show this help\n");
+        s
+    }
+
+    // ---- typed getters -----------------------------------------------------
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            vec![]
+        } else {
+            v.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+
+    pub fn get_f64_list(&self, name: &str) -> Vec<f64> {
+        self.get_list(name)
+            .iter()
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name}: bad number {s}")))
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .opt("rounds", "10", "rounds")
+            .opt("model", "femnist_cnn", "model name")
+            .opt("rs", "0.5,0.75", "r list")
+            .flag("full", "full sweep")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse_from(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("rounds"), 10);
+        assert_eq!(a.get("model"), "femnist_cnn");
+        assert!(!a.get_flag("full"));
+    }
+
+    #[test]
+    fn values_override() {
+        let a = spec()
+            .parse_from(&argv(&["--rounds", "25", "--full", "--model=vgg9"]))
+            .unwrap();
+        assert_eq!(a.get_usize("rounds"), 25);
+        assert!(a.get_flag("full"));
+        assert_eq!(a.get("model"), "vgg9");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = spec().parse_from(&argv(&["--rs", "0.95, 0.85,0.5"])).unwrap();
+        assert_eq!(a.get_f64_list("rs"), vec![0.95, 0.85, 0.5]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse_from(&argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = spec().parse_from(&argv(&["cmd", "--rounds", "5", "x"])).unwrap();
+        assert_eq!(a.positional(), &["cmd".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse_from(&argv(&["--rounds"])).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! General substrates built in-repo (the offline registry has no rand /
+//! clap / proptest — see DESIGN.md §2).
+
+pub mod cli;
+pub mod pool;
+pub mod prng;
+pub mod proptest;
+pub mod stats;

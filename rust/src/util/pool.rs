@@ -1,0 +1,98 @@
+//! Scoped thread-pool substrate (tokio unavailable offline; the FL round
+//! loop is embarrassingly parallel over clients, so a simple fork-join
+//! `scope_map` over std threads is all the coordinator needs).
+//!
+//! Work is chunked over at most `threads` OS threads via
+//! `std::thread::scope`, so borrowed data needs no `'static` bound.
+
+/// Map `f` over `items` in parallel, preserving order.
+///
+/// `threads == 1` (or a single item) degrades to a plain sequential map,
+/// which keeps PJRT executions serialized when the runtime is not
+/// thread-safe-enough to share (see `runtime::Session::parallelism`).
+pub fn scope_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut start = 0usize;
+        for slot in out.chunks_mut(chunk) {
+            let begin = start;
+            let end = begin + slot.len();
+            start = end;
+            let items = &items[begin..end];
+            s.spawn(move || {
+                for (k, item) in items.iter().enumerate() {
+                    slot[k] = Some(f(begin + k, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker panicked")).collect()
+}
+
+/// Number of worker threads to use by default (cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn maps_in_order() {
+        let xs: Vec<usize> = (0..103).collect();
+        let ys = scope_map(&xs, 8, |i, x| {
+            assert_eq!(i, *x);
+            x * 2
+        });
+        assert_eq!(ys, (0..103).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_path() {
+        let xs = vec![1, 2, 3];
+        assert_eq!(scope_map(&xs, 1, |_, x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<u32> = vec![];
+        assert!(scope_map(&xs, 4, |_, x| *x).is_empty());
+    }
+
+    #[test]
+    fn actually_parallel() {
+        let counter = AtomicUsize::new(0);
+        let xs: Vec<usize> = (0..64).collect();
+        scope_map(&xs, 8, |_, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let xs = vec![5, 6];
+        assert_eq!(scope_map(&xs, 16, |_, x| *x), vec![5, 6]);
+    }
+}

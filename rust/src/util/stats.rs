@@ -1,0 +1,239 @@
+//! Statistics substrate: summary stats, Welch's t-test (the paper claims
+//! significance at α < 0.05 for Table 2), and ordinary least squares (the
+//! Appendix A.3 "training time is linear in sub-model size" fit).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Percentile in [0, 100] by linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Welch's unequal-variance t-test. Returns (t, approx two-sided p).
+///
+/// The p-value uses the normal approximation of the t distribution with
+/// Welch–Satterthwaite dof — adequate for the n≈5..10 seed comparisons
+/// in Table 2 significance checks (we only gate on p < 0.05).
+pub fn welch_t_test(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    if na < 2.0 || nb < 2.0 {
+        return (0.0, 1.0);
+    }
+    let (ma, mb) = (mean(a), mean(b));
+    let (va, vb) = (std_dev(a).powi(2), std_dev(b).powi(2));
+    let se = (va / na + vb / nb).sqrt();
+    if se == 0.0 {
+        return if ma == mb { (0.0, 1.0) } else { (f64::INFINITY, 0.0) };
+    }
+    let t = (ma - mb) / se;
+    let dof = (va / na + vb / nb).powi(2)
+        / ((va / na).powi(2) / (na - 1.0) + (vb / nb).powi(2) / (nb - 1.0));
+    // t -> z via Cornish-Fisher-ish correction, then two-sided normal tail
+    let z = t * (1.0 - 1.0 / (4.0 * dof)) / (1.0 + t * t / (2.0 * dof)).sqrt();
+    let p = 2.0 * normal_sf(z.abs());
+    (t, p)
+}
+
+/// Standard normal survival function via Abramowitz–Stegun 7.1.26.
+pub fn normal_sf(z: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.2316419 * z);
+    let poly = t
+        * (0.319381530
+            + t * (-0.356563782 + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+    let pdf = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+    (pdf * poly).clamp(0.0, 1.0)
+}
+
+/// OLS fit y = a + b x. Returns (intercept, slope, r^2).
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.len() < 2 {
+        return (mean(y), 0.0, 1.0);
+    }
+    let (mx, my) = (mean(x), mean(y));
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    if sxx == 0.0 {
+        return (my, 0.0, 1.0);
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_tot: f64 = y.iter().map(|b| (b - my) * (b - my)).sum();
+    let ss_res: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let pred = intercept + slope * a;
+            (b - pred) * (b - pred)
+        })
+        .sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    let _ = n;
+    (intercept, slope, r2)
+}
+
+/// Running aggregator for streams of observations.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    m: f64,
+    s: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            m: 0.0,
+            s: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Welford online update.
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.m;
+        self.m += d / self.n as f64;
+        self.s += d * (x - self.m);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.m
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.s / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welch_detects_difference() {
+        let a = [10.0, 10.1, 9.9, 10.2, 9.8];
+        let b = [12.0, 12.1, 11.9, 12.2, 11.8];
+        let (_, p) = welch_t_test(&a, &b);
+        assert!(p < 0.001, "p = {p}");
+    }
+
+    #[test]
+    fn welch_same_distribution_not_significant() {
+        let a = [1.0, 1.1, 0.9, 1.05, 0.95];
+        let b = [1.02, 1.08, 0.92, 1.03, 0.97];
+        let (_, p) = welch_t_test(&a, &b);
+        assert!(p > 0.05, "p = {p}");
+    }
+
+    #[test]
+    fn normal_sf_reference_values() {
+        assert!((normal_sf(0.0) - 0.5).abs() < 1e-6);
+        assert!((normal_sf(1.96) - 0.025).abs() < 2e-4);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let x = [0.5, 0.65, 0.75, 0.85, 1.0];
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 2.0 * v).collect();
+        let (a, b, r2) = linear_fit(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.add(x);
+        }
+        assert!((s.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((s.std_dev() - std_dev(&xs)).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 6.0);
+    }
+}

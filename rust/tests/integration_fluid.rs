@@ -1,0 +1,199 @@
+//! Integration: the full FLuID coordinator over real artifacts.
+//!
+//! Requires `make artifacts`; every test skips gracefully otherwise.
+
+use fluid::coordinator::{self, ExperimentConfig};
+use fluid::dropout::PolicyKind;
+use fluid::runtime::Session;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(model: &str) -> bool {
+    artifacts_dir().join(format!("{model}_manifest.json")).exists()
+}
+
+fn quick_cfg(policy: PolicyKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mobile("femnist_cnn", policy);
+    cfg.rounds = 8;
+    cfg.samples_per_client = 30;
+    cfg.local_steps = 2;
+    cfg.eval_every = 4;
+    cfg.lr = 0.01;
+    cfg
+}
+
+#[test]
+fn full_loop_invariant_policy() {
+    if !have("femnist_cnn") {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let res = coordinator::run(&sess, &quick_cfg(PolicyKind::Invariant)).unwrap();
+    assert_eq!(res.records.len(), 8);
+    // loss must drop over the run
+    let first = res.records.first().unwrap().train_loss;
+    let last = res.records.last().unwrap().train_loss;
+    assert!(last < first, "loss did not drop: {first} -> {last}");
+    // a straggler must be detected after round 0 and get a sub-model
+    let det_rounds = res
+        .records
+        .iter()
+        .skip(1)
+        .filter(|r| !r.straggler_ids.is_empty())
+        .count();
+    assert!(det_rounds >= 6, "straggler detected in only {det_rounds}/7 rounds");
+    for r in res.records.iter().skip(2) {
+        for &rate in &r.straggler_rates {
+            assert!(rate < 1.0, "straggler kept the full model");
+        }
+    }
+    // invariant fraction becomes non-trivial
+    assert!(res.records.last().unwrap().invariant_fraction > 0.01);
+    assert!(res.final_test_acc.is_finite());
+}
+
+#[test]
+fn straggler_time_within_10pct_of_target() {
+    // Fig 4a claim: with FLuID the straggler lands within ~10% of T_target.
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let mut cfg = quick_cfg(PolicyKind::Invariant);
+    cfg.rounds = 10;
+    let res = coordinator::run(&sess, &cfg).unwrap();
+    // skip warmup rounds; look at steady state
+    let steady: Vec<&fluid::coordinator::RoundRecord> = res
+        .records
+        .iter()
+        .skip(3)
+        .filter(|r| !r.straggler_ids.is_empty())
+        .collect();
+    assert!(!steady.is_empty());
+    let mut ok = 0;
+    for r in &steady {
+        if (r.straggler_time - r.t_target).abs() / r.t_target <= 0.15 {
+            ok += 1;
+        }
+    }
+    assert!(
+        ok * 2 >= steady.len(),
+        "straggler within target band in only {ok}/{} rounds",
+        steady.len()
+    );
+}
+
+#[test]
+fn fluid_is_faster_than_vanilla() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let fluid_res = coordinator::run(&sess, &quick_cfg(PolicyKind::Invariant)).unwrap();
+    let vanilla = coordinator::run(&sess, &quick_cfg(PolicyKind::None)).unwrap();
+    assert!(
+        fluid_res.total_vtime < vanilla.total_vtime,
+        "FLuID {:.1}s not faster than vanilla {:.1}s",
+        fluid_res.total_vtime,
+        vanilla.total_vtime
+    );
+}
+
+#[test]
+fn all_policies_complete_and_learn() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    for policy in [
+        PolicyKind::None,
+        PolicyKind::Random,
+        PolicyKind::Ordered,
+        PolicyKind::Invariant,
+        PolicyKind::Exclude,
+    ] {
+        let mut cfg = quick_cfg(policy);
+        cfg.fixed_rate = Some(0.75);
+        let res = coordinator::run(&sess, &cfg)
+            .unwrap_or_else(|e| panic!("{} failed: {e:#}", policy.name()));
+        let first = res.records.first().unwrap().train_loss;
+        let last = res.records.last().unwrap().train_loss;
+        assert!(
+            last < first,
+            "{}: loss did not drop ({first} -> {last})",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn fluctuation_changes_straggler_identity() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let mut cfg = quick_cfg(PolicyKind::Invariant);
+    cfg.rounds = 16;
+    cfg.fluctuation = true;
+    let res = coordinator::run(&sess, &cfg).unwrap();
+    let ids: std::collections::BTreeSet<usize> = res
+        .records
+        .iter()
+        .flat_map(|r| r.straggler_ids.iter().copied())
+        .collect();
+    assert!(
+        ids.len() >= 2,
+        "straggler identity never changed despite fluctuation: {ids:?}"
+    );
+}
+
+#[test]
+fn client_sampling_runs() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let mut cfg = ExperimentConfig::scale("femnist_cnn", PolicyKind::Invariant, 40);
+    cfg.rounds = 5;
+    cfg.sample_fraction = 0.25;
+    cfg.samples_per_client = 12;
+    cfg.local_steps = 1;
+    cfg.eval_every = 5;
+    cfg.lr = 0.01;
+    let res = coordinator::run(&sess, &cfg).unwrap();
+    assert_eq!(res.records.len(), 5);
+    // sampled stragglers never exceed 20% of the sampled cohort (10)
+    for r in &res.records {
+        assert!(r.straggler_ids.len() <= 2, "{:?}", r.straggler_ids);
+    }
+}
+
+#[test]
+fn missing_model_fails_cleanly() {
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let mut cfg = quick_cfg(PolicyKind::None);
+    cfg.model = "not_a_model".into();
+    let err = coordinator::run(&sess, &cfg).unwrap_err().to_string();
+    assert!(err.contains("not_a_model"), "{err}");
+}
+
+#[test]
+fn exclude_policy_skips_straggler_updates() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let mut cfg = quick_cfg(PolicyKind::Exclude);
+    cfg.rounds = 6;
+    let res = coordinator::run(&sess, &cfg).unwrap();
+    // straggler still detected (timing), but masks stay full
+    assert!(res
+        .records
+        .iter()
+        .skip(2)
+        .all(|r| r.straggler_rates.iter().all(|&x| x < 1.0 || x == 1.0)));
+    assert!(res.final_test_acc.is_finite());
+}

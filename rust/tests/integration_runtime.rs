@@ -1,0 +1,212 @@
+//! Integration: real artifacts end-to-end through the PJRT runtime.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! note) otherwise so `cargo test` stays green on a fresh checkout.
+
+use fluid::runtime::{Batch, Session, XData};
+use fluid::tensor::Tensor;
+use fluid::util::prng::Pcg32;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(model: &str) -> bool {
+    artifacts_dir()
+        .join(format!("{model}_manifest.json"))
+        .exists()
+}
+
+fn random_batch(spec: &fluid::model::ModelSpec, seed: u64) -> Batch {
+    let mut rng = Pcg32::new(seed, 99);
+    let n: usize = spec.x_shape.iter().product();
+    let x = if spec.x_is_int {
+        XData::I32((0..n).map(|_| rng.below(80) as i32).collect())
+    } else {
+        XData::F32(Tensor::from_vec(
+            &spec.x_shape,
+            (0..n).map(|_| rng.next_f32()).collect(),
+        ))
+    };
+    let y = (0..spec.batch_size)
+        .map(|_| rng.below(spec.num_classes as u32) as i32)
+        .collect();
+    Batch { x, y }
+}
+
+#[test]
+fn femnist_train_loss_decreases() {
+    if !have("femnist_cnn") {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let runner = sess.runner("femnist_cnn").unwrap();
+    let mut params = runner.spec.init_params(42);
+    let masks = runner.full_masks();
+    let batch = random_batch(&runner.spec, 7);
+
+    let first = runner.train_step(&params, &masks, &batch, 0.01).unwrap();
+    params = first.params;
+    let mut last = first.loss;
+    for _ in 0..10 {
+        let out = runner.train_step(&params, &masks, &batch, 0.01).unwrap();
+        params = out.params;
+        last = out.loss;
+    }
+    assert!(last.is_finite());
+    assert!(
+        last < first.loss,
+        "loss did not decrease: {} -> {last}",
+        first.loss
+    );
+}
+
+#[test]
+fn masked_neurons_do_not_update_via_runtime() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let runner = sess.runner("femnist_cnn").unwrap();
+    let params = runner.spec.init_params(1);
+    // mask out the first half of fc1 (mask index 2)
+    let mut masks = runner.full_masks();
+    let n = masks[2].len();
+    for i in 0..n / 2 {
+        masks[2].data_mut()[i] = 0.0;
+    }
+    let batch = random_batch(&runner.spec, 3);
+    let out = runner.train_step(&params, &masks, &batch, 0.1).unwrap();
+
+    // fc1_w is params[4] with shape [3136, 120]; dropped columns unchanged
+    let (fan_in, neurons) = params[4].as_2d_neurons();
+    assert_eq!(neurons, n);
+    let old = params[4].data();
+    let new = out.params[4].data();
+    for r in 0..fan_in {
+        for c in 0..n / 2 {
+            assert_eq!(old[r * neurons + c], new[r * neurons + c]);
+        }
+    }
+    // and some kept column moved
+    let mut any_moved = false;
+    for r in 0..fan_in {
+        for c in n / 2..n {
+            if old[r * neurons + c] != new[r * neurons + c] {
+                any_moved = true;
+            }
+        }
+    }
+    assert!(any_moved);
+}
+
+#[test]
+fn delta_step_matches_host_computation() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let runner = sess.runner("femnist_cnn").unwrap();
+    let old = runner.spec.init_params(5);
+    let masks = runner.full_masks();
+    let batch = random_batch(&runner.spec, 11);
+    let new = runner.train_step(&old, &masks, &batch, 0.05).unwrap().params;
+
+    let deltas = runner.delta_step(&old, &new).unwrap();
+    assert_eq!(deltas.len(), runner.spec.masks.len());
+
+    // host recomputation for the fc1 group (params[4], delta index 2)
+    let (fan_in, neurons) = old[4].as_2d_neurons();
+    let mut want = vec![0.0f32; neurons];
+    for r in 0..fan_in {
+        for c in 0..neurons {
+            let o = old[4].data()[r * neurons + c];
+            let nw = new[4].data()[r * neurons + c];
+            let rel = (nw - o).abs() / (o.abs() + 1e-8);
+            if rel > want[c] {
+                want[c] = rel;
+            }
+        }
+    }
+    let got = deltas[2].data();
+    for c in 0..neurons {
+        assert!(
+            (got[c] - want[c]).abs() <= 1e-5 * (1.0 + want[c].abs()),
+            "neuron {c}: got {} want {}",
+            got[c],
+            want[c]
+        );
+    }
+}
+
+#[test]
+fn eval_step_counts_are_sane() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let runner = sess.runner("femnist_cnn").unwrap();
+    let params = runner.spec.init_params(8);
+    let masks = runner.full_masks();
+    let batch = random_batch(&runner.spec, 13);
+    let out = runner.eval_step(&params, &masks, &batch).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0);
+    assert!(out.correct >= 0.0 && out.correct <= runner.spec.batch_size as f32);
+}
+
+#[test]
+fn lstm_int_input_path() {
+    if !have("shakespeare_lstm") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let runner = sess.runner("shakespeare_lstm").unwrap();
+    let params = runner.spec.init_params(21);
+    let masks = runner.full_masks();
+    let batch = random_batch(&runner.spec, 17);
+    let out = runner.train_step(&params, &masks, &batch, 0.01).unwrap();
+    assert!(out.loss.is_finite());
+    assert_eq!(out.params.len(), runner.spec.params.len());
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let runner = sess.runner("femnist_cnn").unwrap();
+    let mut params = runner.spec.init_params(2);
+    params[0] = Tensor::zeros(&[1, 1, 1, 1]); // wrong shape
+    let masks = runner.full_masks();
+    let batch = random_batch(&runner.spec, 1);
+    assert!(runner.train_step(&params, &masks, &batch, 0.01).is_err());
+}
+
+#[test]
+fn parallel_exec_stress() {
+    // validates the Send/Sync claims in runtime::step — many threads
+    // sharing one compiled executable.
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    let runner = std::sync::Arc::new(sess.runner("femnist_cnn").unwrap());
+    let params = std::sync::Arc::new(runner.spec.init_params(3));
+    let masks = std::sync::Arc::new(runner.full_masks());
+
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let (r, p, m) = (runner.clone(), params.clone(), masks.clone());
+            std::thread::spawn(move || {
+                let batch = random_batch(&r.spec, 100 + i);
+                let out = r.train_step(&p, &m, &batch, 0.01).unwrap();
+                assert!(out.loss.is_finite());
+                out.loss
+            })
+        })
+        .collect();
+    let losses: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(losses.len(), 8);
+}

@@ -1,0 +1,373 @@
+//! Property-based tests on the coordinator's pure invariants, using the
+//! in-repo `util::proptest` harness (DESIGN.md §7).
+
+use fluid::data::partition;
+use fluid::dropout::mask::kept_count;
+use fluid::dropout::{threshold, MaskSet, OrderedDropout, RandomDropout};
+use fluid::fl::{fedavg, AggregateMode, ClientUpdate};
+use fluid::jsonlite::{self, Json};
+use fluid::model::ModelSpec;
+use fluid::straggler::{detect_stragglers, snap_rate};
+use fluid::tensor::Tensor;
+use fluid::util::proptest::{check, shrink_vec, Config, Gen};
+
+fn spec_with_groups(sizes: &[usize]) -> ModelSpec {
+    // synthesize a manifest with one dense layer per group
+    let mut params = String::new();
+    let mut masks = String::new();
+    let mut groups = String::new();
+    let mut dins = String::new();
+    for (i, &n) in sizes.iter().enumerate() {
+        let fan_in = 4 + i;
+        params.push_str(&format!(
+            r#"{{"name": "fc{i}_w", "shape": [{fan_in}, {n}]}}, {{"name": "fc{i}_b", "shape": [{n}]}}, "#
+        ));
+        masks.push_str(&format!(r#"{{"name": "fc{i}", "size": {n}}}, "#));
+        groups.push_str(&format!(r#""fc{i}", "#));
+        dins.push_str(&format!(r#""fc{i}_w", "#));
+    }
+    let text = format!(
+        r#"{{
+ "model": "syn", "batch_size": 2, "x_shape": [2, 4], "x_dtype": "f32",
+ "num_classes": 3,
+ "params": [{} {{"name": "out_w", "shape": [4, 3]}}, {{"name": "out_b", "shape": [3]}}],
+ "masks": [{}],
+ "delta_groups": [{}],
+ "delta_inputs": [{}],
+ "artifacts": {{"train": "t", "eval": "e", "delta": "d"}},
+ "train_outputs": []
+}}"#,
+        params,
+        masks.trim_end_matches(", "),
+        groups.trim_end_matches(", "),
+        dins.trim_end_matches(", "),
+    );
+    ModelSpec::from_json_str(&text, std::path::Path::new("/tmp")).unwrap()
+}
+
+#[test]
+fn prop_mask_sizes_exact_for_all_policies() {
+    check(
+        Config { cases: 80, ..Default::default() },
+        |g: &mut Gen| {
+            let ngroups = g.usize_in(1, 4);
+            let sizes: Vec<usize> = (0..ngroups).map(|_| g.usize_in(1, 64)).collect();
+            let r = g.f32_in(0.05, 1.0) as f64;
+            let seed = g.rng.next_u64();
+            (sizes, r, seed)
+        },
+        |_| vec![],
+        |(sizes, r, seed)| {
+            let spec = spec_with_groups(sizes);
+            let mut rd = RandomDropout::new(*seed);
+            let mut od = OrderedDropout::new();
+            for m in [rd.make_mask(&spec, *r), od.make_mask(&spec, *r)] {
+                for (g, &n) in sizes.iter().enumerate() {
+                    let want = kept_count(n, *r);
+                    if m.kept(g) != want {
+                        return Err(format!(
+                            "group {g} size {n} r {r}: kept {} want {want}",
+                            m.kept(g)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plain_fedavg_preserves_constant_consensus() {
+    // if every client reports the same params, aggregation returns them
+    check(
+        Config { cases: 60, ..Default::default() },
+        |g: &mut Gen| {
+            let sizes = vec![g.usize_in(1, 16)];
+            let v = g.f32_in(-5.0, 5.0);
+            let nclients = g.usize_in(1, 6);
+            let weights: Vec<f64> =
+                (0..nclients).map(|_| g.f32_in(0.1, 10.0) as f64).collect();
+            (sizes, v, weights)
+        },
+        |_| vec![],
+        |(sizes, v, weights)| {
+            let spec = spec_with_groups(sizes);
+            let params: Vec<Tensor> = spec
+                .params
+                .iter()
+                .map(|p| Tensor::full(&p.shape, *v))
+                .collect();
+            let updates: Vec<ClientUpdate> = weights
+                .iter()
+                .map(|&w| ClientUpdate {
+                    params: params.clone(),
+                    weight: w,
+                    mask: MaskSet::full(&spec),
+                })
+                .collect();
+            for mode in [AggregateMode::Plain, AggregateMode::OwnershipWeighted] {
+                let out = fedavg(&spec, &params, &updates, mode);
+                for (t, p) in out.iter().zip(&params) {
+                    for (a, b) in t.data().iter().zip(p.data()) {
+                        if (a - b).abs() > 1e-4 {
+                            return Err(format!("consensus broken: {a} vs {b}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ownership_aggregation_keeps_untrained_at_global() {
+    // elements dropped by EVERY client must stay exactly at the global value
+    check(
+        Config { cases: 60, ..Default::default() },
+        |g: &mut Gen| {
+            let n = g.usize_in(2, 24);
+            let drop_idx = g.usize_in(0, n - 1);
+            let nclients = g.usize_in(1, 5);
+            let seed = g.rng.next_u64();
+            (vec![n], drop_idx, nclients, seed)
+        },
+        |_| vec![],
+        |(sizes, drop_idx, nclients, seed)| {
+            let spec = spec_with_groups(sizes);
+            let n = sizes[0];
+            let global: Vec<Tensor> = spec
+                .params
+                .iter()
+                .map(|p| Tensor::full(&p.shape, 0.5))
+                .collect();
+            let mut rng = fluid::util::prng::Pcg32::new(*seed, 5);
+            let updates: Vec<ClientUpdate> = (0..*nclients)
+                .map(|_| {
+                    let mut keep = vec![true; n];
+                    keep[*drop_idx] = false;
+                    // clients may drop extra random neurons too
+                    for k in keep.iter_mut() {
+                        if rng.next_f32() < 0.2 {
+                            *k = false;
+                        }
+                    }
+                    keep[*drop_idx] = false;
+                    ClientUpdate {
+                        params: spec
+                            .params
+                            .iter()
+                            .map(|p| Tensor::full(&p.shape, 2.0))
+                            .collect(),
+                        weight: 1.0,
+                        mask: MaskSet::from_keep(&spec, &[keep]),
+                    }
+                })
+                .collect();
+            let out = fedavg(&spec, &global, &updates, AggregateMode::OwnershipWeighted);
+            // fc0_w column drop_idx and fc0_b entry drop_idx stay 0.5
+            let cols = n;
+            let w = out[0].data();
+            for row in 0..w.len() / cols {
+                let x = w[row * cols + drop_idx];
+                if (x - 0.5).abs() > 1e-6 {
+                    return Err(format!("w[{row},{drop_idx}] = {x}, want 0.5"));
+                }
+            }
+            let b = out[1].data()[*drop_idx];
+            if (b - 0.5).abs() > 1e-6 {
+                return Err(format!("b[{drop_idx}] = {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partitioners_cover_exactly() {
+    check(
+        Config { cases: 80, ..Default::default() },
+        |g: &mut Gen| {
+            let n = g.usize_in(1, 300);
+            let k = g.usize_in(1, 12);
+            let alpha = g.f32_in(0.1, 5.0) as f64;
+            let seed = g.rng.next_u64();
+            (n, k, alpha, seed)
+        },
+        |_| vec![],
+        |(n, k, alpha, seed)| {
+            let mut rng = fluid::util::prng::Pcg32::new(*seed, 1);
+            let labels: Vec<i32> = (0..*n).map(|i| (i % 7) as i32).collect();
+            for parts in [
+                partition::iid(*n, *k, &mut rng),
+                partition::dirichlet(&labels, *k, *alpha, &mut rng),
+                partition::by_chunks(*n, *k),
+            ] {
+                if !partition::is_exact_cover(&parts, *n) {
+                    return Err(format!("not an exact cover: n={n} k={k}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_threshold_calibration_reaches_target() {
+    check(
+        Config { cases: 80, ..Default::default() },
+        |g: &mut Gen| {
+            let n = g.usize_in(1, 200);
+            let scores = g.vec_f32(n, 0.0, 2.0);
+            let needed = g.usize_in(0, n);
+            (scores, needed)
+        },
+        |(s, n)| {
+            shrink_vec(s)
+                .into_iter()
+                .filter(|v| !v.is_empty())
+                .map(|v| {
+                    let nn = (*n).min(v.len());
+                    (v, nn)
+                })
+                .collect()
+        },
+        |(scores, needed)| {
+            let th = threshold::calibrate(scores, 1e-6, *needed, 1.3, 10_000);
+            let got = threshold::count_below(scores, th);
+            // zero scores can never fall strictly below any threshold that
+            // started positive only if all scores are 0 -> count stalls
+            let reachable = scores.iter().filter(|&&s| s < f32::INFINITY).count();
+            if got < (*needed).min(reachable) && scores.iter().any(|&s| s > 0.0) {
+                return Err(format!("needed {needed}, got {got} below th={th}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_snap_rate_is_idempotent_and_closest() {
+    check(
+        Config { cases: 100, ..Default::default() },
+        |g: &mut Gen| {
+            let n = g.usize_in(1, 6);
+            let mut menu: Vec<f64> = (0..n).map(|_| g.f32_in(0.1, 1.0) as f64).collect();
+            menu.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let x = g.f32_in(0.0, 1.2) as f64;
+            (menu, x)
+        },
+        |_| vec![],
+        |(menu, x)| {
+            let s = snap_rate(*x, menu);
+            if !menu.contains(&s) {
+                return Err(format!("snapped {s} not in menu"));
+            }
+            // idempotent
+            if snap_rate(s, menu) != s {
+                return Err("not idempotent".into());
+            }
+            // closest
+            for &m in menu {
+                if (m - x).abs() + 1e-12 < (s - x).abs() {
+                    return Err(format!("{m} closer to {x} than {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_detection_never_flags_fastest_client() {
+    check(
+        Config { cases: 80, ..Default::default() },
+        |g: &mut Gen| {
+            let n = g.usize_in(2, 40);
+            let lat = g.vec_f32(n, 1.0, 100.0);
+            let frac = g.f32_in(0.05, 0.5) as f64;
+            (lat, frac)
+        },
+        |(l, f)| {
+            shrink_vec(l)
+                .into_iter()
+                .filter(|v| v.len() >= 2)
+                .map(|v| (v, *f))
+                .collect()
+        },
+        |(lat, frac)| {
+            let lat64: Vec<f64> = lat.iter().map(|&x| x as f64).collect();
+            let d = detect_stragglers(&lat64, *frac, 0.02, &[0.5, 0.75, 1.0]);
+            let fastest = lat64
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if d.stragglers.contains(&fastest) && lat64.iter().any(|&x| x != lat64[fastest])
+            {
+                return Err(format!("fastest client {fastest} flagged"));
+            }
+            // every straggler needs r <= 1
+            if d.rates.iter().any(|&r| r > 1.0) {
+                return Err("rate > 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_round_trip() {
+    check(
+        Config { cases: 100, ..Default::default() },
+        |g: &mut Gen| random_json(g, 3),
+        |_| vec![],
+        |j| {
+            let text = j.to_string_pretty();
+            let back = jsonlite::parse(&text).map_err(|e| e.to_string())?;
+            if &back != j {
+                return Err(format!("round trip mismatch: {j:?} vs {back:?}"));
+            }
+            let compact = j.to_string_compact();
+            let back2 = jsonlite::parse(&compact).map_err(|e| e.to_string())?;
+            if &back2 != j {
+                return Err("compact round trip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    let pick = g.usize_in(0, if depth == 0 { 3 } else { 5 });
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        // grid-aligned numbers avoid float-text round-trip fuzz
+        2 => Json::Num((g.usize_in(0, 1_000_000) as f64) / 64.0),
+        3 => {
+            let n = g.usize_in(0, 8);
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = g.usize_in(32, 126) as u8 as char;
+                    c
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let n = g.usize_in(0, 4);
+            Json::Arr((0..n).map(|_| random_json(g, depth - 1)).collect())
+        }
+        _ => {
+            let n = g.usize_in(0, 4);
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..n {
+                m.insert(format!("k{i}"), random_json(g, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
