@@ -95,17 +95,20 @@ fn step_benches(sess: &Session, model: &str, b: &Bench) {
     });
     println!("{}", m.report());
 
-    // conversion cost for the largest parameter
-    let biggest = params
-        .iter()
-        .max_by_key(|t| t.len())
-        .unwrap()
-        .clone();
-    let m = b.run(&format!("{model}/tensor->literal ({} f32)", biggest.len()), || {
-        let lit = fluid::runtime::tensor_to_literal(&biggest).unwrap();
-        std::hint::black_box(&lit);
-    });
-    println!("{}", m.report());
+    // conversion cost for the largest parameter (PJRT builds only)
+    #[cfg(feature = "xla")]
+    {
+        let biggest = params
+            .iter()
+            .max_by_key(|t| t.len())
+            .unwrap()
+            .clone();
+        let m = b.run(&format!("{model}/tensor->literal ({} f32)", biggest.len()), || {
+            let lit = fluid::runtime::tensor_to_literal(&biggest).unwrap();
+            std::hint::black_box(&lit);
+        });
+        println!("{}", m.report());
+    }
     println!();
 }
 
@@ -118,6 +121,7 @@ fn aggregation_benches(sess: &Session, b: &Bench) {
             params: spec.init_params(100 + i),
             weight: 60.0,
             mask: MaskSet::full(spec),
+            staleness: 0,
         })
         .collect();
     let m = b.run("aggregate/fedavg plain (5 clients, 410k params)", || {

@@ -1,4 +1,4 @@
-//! The FLuID round loop (Algorithm 1).
+//! The FLuID round loop (Algorithm 1) — thin wrapper over the engine.
 //!
 //! Per calibration step: profile client latencies → determine stragglers
 //! and `T_target` (next-slowest) → size each straggler's sub-model
@@ -6,298 +6,24 @@
 //! invariant-neuron masking → broadcast → local training → masked FedAvg
 //! → observe non-straggler deltas (the L1 `neuron_delta` kernel) to
 //! refresh the invariant sets and thresholds.
+//!
+//! The mechanics live in [`crate::engine`]: this function only opens the
+//! model's step runner and hands the config to a [`RoundEngine`] backed
+//! by the in-process [`LocalExecutor`]. Round synchronization follows
+//! [`ExperimentConfig::sync_mode`] — the default `FullBarrier` reproduces
+//! the historical monolithic loop bit-for-bit (pinned by
+//! `tests/engine_regression.rs`).
 
-use super::{ExperimentConfig, ExperimentResult, RoundRecord};
-use crate::data::FlData;
-use crate::dropout::{MaskSet, Policy, PolicyKind};
-use crate::fl::{self, fedavg, Client, ClientUpdate};
+use super::{ExperimentConfig, ExperimentResult};
+use crate::engine::{LocalExecutor, RoundEngine};
 use crate::runtime::Session;
-use crate::straggler::{
-    detect_stragglers, mobile_fleet, snap_rate, synthetic_fleet, Detection,
-    FluctuationSchedule, PerfModel,
-};
-use crate::util::pool::scope_map;
-use crate::util::prng::Pcg32;
 use anyhow::Context;
-use std::time::Instant;
-
-/// Cap on how many non-stragglers vote on invariance per calibration —
-/// the information saturates quickly and each voter costs one
-/// `delta_step` execution (documented server-side optimization).
-const MAX_DELTA_VOTERS: usize = 16;
 
 /// Run one experiment to completion.
 pub fn run(sess: &Session, cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
     let runner = sess
         .runner(&cfg.model)
         .with_context(|| format!("loading artifacts for {}", cfg.model))?;
-    let spec = runner.spec.clone();
-
-    // fleet + data + clients -------------------------------------------------
-    let fleet = if cfg.mobile_fleet {
-        let base = mobile_fleet();
-        (0..cfg.clients).map(|i| base[i % base.len()].clone()).collect::<Vec<_>>()
-    } else {
-        synthetic_fleet(cfg.clients, cfg.seed ^ 0xF1EE7)
-    };
-    let data = FlData::for_model(&cfg.model, cfg.clients, cfg.samples_per_client, cfg.seed);
-    let clients: Vec<Client> = data
-        .clients
-        .iter()
-        .enumerate()
-        .map(|(i, split)| Client::new(i, i % fleet.len(), split.clone()))
-        .collect();
-
-    let perf = PerfModel::new(&cfg.model, spec.size_bytes());
-    // the natural straggler is the slowest base device — excluded from the
-    // fluctuation protocol so that the straggler identity really changes
-    let natural_straggler = (0..cfg.clients)
-        .max_by(|&a, &b| {
-            fleet[a % fleet.len()]
-                .base_time(&cfg.model)
-                .partial_cmp(&fleet[b % fleet.len()].base_time(&cfg.model))
-                .unwrap()
-        })
-        .unwrap_or(0);
-    let sched = if cfg.fluctuation {
-        FluctuationSchedule::paper_marks(cfg.clients, natural_straggler, cfg.seed ^ 0xF1C)
-    } else {
-        FluctuationSchedule::none()
-    };
-
-    let inv_cfg = crate::dropout::InvariantConfig {
-        th_override: cfg.invariant_th_override,
-        ..Default::default()
-    };
-    let mut policy = Policy::new_with(cfg.policy, &spec, cfg.seed ^ 0xD20, inv_cfg);
-    let mut params = spec.init_params(cfg.seed);
-    let full_mask = MaskSet::full(&spec);
-
-    let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
-    let mut vtime = 0.0f64;
-    let mut calib_total = 0.0f64;
-    let mut train_wall = 0.0f64;
-    let mut detection: Option<Detection> = None;
-    // measured end-to-end latency of the last round (actual, with masks)
-    let mut last_latencies: Vec<f64> = vec![0.0; cfg.clients];
-    // the same latencies normalized to r = 1.0 — what the client *would*
-    // take on the full model. Detection must use these, otherwise a
-    // straggler that got a sub-model looks fast next round and flaps in
-    // and out of the straggler set.
-    let mut last_full_latencies: Vec<f64> = vec![0.0; cfg.clients];
-
-    for round in 0..cfg.rounds {
-        let t_frac = round as f64 / cfg.rounds.max(1) as f64;
-        let mut rng = Pcg32::new(cfg.seed ^ 0xA0_0000, round as u64);
-
-        // --- client sampling (A.6) ------------------------------------------
-        let selected: Vec<usize> = if cfg.sample_fraction >= 1.0 {
-            (0..cfg.clients).collect()
-        } else {
-            let k = ((cfg.clients as f64 * cfg.sample_fraction).ceil() as usize)
-                .clamp(1, cfg.clients);
-            let mut s = rng.sample_indices(cfg.clients, k);
-            s.sort_unstable();
-            s
-        };
-
-        // --- straggler recalibration (Algorithm 1 lines 18-22) --------------
-        let recalibrate = round > 0
-            && round % cfg.recalibrate_every == 0
-            && !(cfg.static_stragglers && detection.is_some());
-        if recalibrate {
-            let lat: Vec<f64> = selected.iter().map(|&c| last_full_latencies[c]).collect();
-            let det = detect_stragglers(
-                &lat,
-                cfg.straggler_fraction,
-                0.02,
-                &cfg.rates_menu,
-            );
-            // map sample-local ids back to client ids
-            detection = Some(Detection {
-                stragglers: det.stragglers.iter().map(|&i| selected[i]).collect(),
-                ..det
-            });
-        }
-
-        // --- sub-model assignment --------------------------------------------
-        let calib_start = Instant::now();
-        let mut masks: Vec<MaskSet> = vec![full_mask.clone(); cfg.clients];
-        let mut rates: Vec<f64> = vec![1.0; cfg.clients];
-        let mut straggler_ids: Vec<usize> = Vec::new();
-        if let Some(det) = &detection {
-            for (k, &c) in det.stragglers.iter().enumerate() {
-                let desired = cfg.fixed_rate.unwrap_or(det.rates[k]);
-                let r = match &cfg.cluster_rates {
-                    Some(menu) => snap_rate(desired, menu),
-                    None => desired,
-                };
-                if cfg.policy != PolicyKind::None && cfg.policy != PolicyKind::Exclude {
-                    let m = policy.make_mask(&spec, r);
-                    // the straggler only speeds up if it actually received
-                    // a sub-model (invariant dropout returns the full mask
-                    // until its first calibration observation)
-                    if !m.is_full() {
-                        rates[c] = r;
-                        masks[c] = m;
-                    }
-                }
-                straggler_ids.push(c);
-            }
-        }
-        let mut calib_secs = calib_start.elapsed().as_secs_f64();
-
-        // --- local training (parallel over clients) --------------------------
-        // Exclude policy: stragglers neither train nor aggregate.
-        let participants: Vec<usize> = selected
-            .iter()
-            .copied()
-            .filter(|c| cfg.policy != PolicyKind::Exclude || !straggler_ids.contains(c))
-            .collect();
-        let round_seed = cfg.seed ^ ((round as u64) << 32);
-        let t0 = Instant::now();
-        let results: Vec<crate::Result<fl::LocalResult>> =
-            scope_map(&participants, cfg.threads, |_, &c| {
-                clients[c].local_train(
-                    &runner,
-                    &params,
-                    masks[c].tensors(),
-                    cfg.local_steps,
-                    cfg.lr,
-                    round_seed,
-                    cfg.use_fused_steps,
-                )
-            });
-        train_wall += t0.elapsed().as_secs_f64();
-        let mut updates: Vec<(usize, fl::LocalResult)> = Vec::with_capacity(results.len());
-        for (i, r) in results.into_iter().enumerate() {
-            updates.push((participants[i], r?));
-        }
-
-        // --- virtual latency of every selected client -------------------------
-        for &c in &selected {
-            let dev = &fleet[clients[c].device];
-            let mut lrng = Pcg32::new(round_seed ^ 0x7A7, c as u64);
-            let mut lrng_full = lrng.clone(); // same jitter draw for both
-            last_latencies[c] = perf.round_latency(
-                dev,
-                c,
-                rates[c],
-                masks[c].comm_fraction(),
-                t_frac,
-                &sched,
-                &mut lrng,
-            );
-            last_full_latencies[c] =
-                perf.round_latency(dev, c, 1.0, 1.0, t_frac, &sched, &mut lrng_full);
-        }
-        // Exclude baseline does not wait for stragglers: the round
-        // advances as soon as the participants finish.
-        let timed: &[usize] = if cfg.policy == PolicyKind::Exclude {
-            &participants
-        } else {
-            &selected
-        };
-        let round_time = timed
-            .iter()
-            .map(|&c| last_latencies[c])
-            .fold(0.0f64, f64::max);
-        vtime += round_time;
-
-        let straggler_time = straggler_ids
-            .iter()
-            .map(|&c| last_latencies[c])
-            .fold(0.0f64, f64::max);
-        let t_target = detection.as_ref().map(|d| d.t_target).unwrap_or(round_time);
-
-        // --- aggregation -------------------------------------------------------
-        let mean_loss = crate::util::stats::mean(
-            &updates.iter().map(|(_, u)| u.mean_loss).collect::<Vec<_>>(),
-        );
-        let mean_acc = crate::util::stats::mean(
-            &updates.iter().map(|(_, u)| u.mean_acc).collect::<Vec<_>>(),
-        );
-        let client_updates: Vec<ClientUpdate> = updates
-            .iter()
-            .map(|(c, u)| ClientUpdate {
-                params: u.params.clone(),
-                weight: u.weight,
-                mask: masks[*c].clone(),
-            })
-            .collect();
-        let new_params = fedavg(&spec, &params, &client_updates, cfg.aggregate);
-
-        // --- invariant observation (non-straggler deltas, L1 kernel) ----------
-        let is_calib_round = round % cfg.recalibrate_every == 0;
-        if is_calib_round && matches!(policy, Policy::Invariant(_)) {
-            let t0 = Instant::now();
-            let voters: Vec<&(usize, fl::LocalResult)> = updates
-                .iter()
-                .filter(|(c, _)| !straggler_ids.contains(c))
-                .take(MAX_DELTA_VOTERS)
-                .collect();
-            // §Perf L3: voters execute the delta kernel concurrently —
-            // calibration cost drops from #voters x delta_latency to
-            // roughly one delta_latency (paper claims < 5% overhead)
-            let per_client: Vec<crate::Result<Vec<crate::tensor::Tensor>>> =
-                scope_map(&voters, cfg.threads, |_, (_, u)| {
-                    runner.delta_step(&params, &u.params)
-                });
-            let per_client = per_client
-                .into_iter()
-                .collect::<crate::Result<Vec<_>>>()?;
-            policy.observe_deltas(&per_client);
-            calib_secs += t0.elapsed().as_secs_f64();
-        }
-        params = new_params;
-        calib_total += calib_secs;
-
-        // --- evaluation ---------------------------------------------------------
-        let (test_loss, test_acc) = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds
-        {
-            fl::evaluate_split(&runner, &params, full_mask.tensors(), &data.test)?
-        } else {
-            (f64::NAN, f64::NAN)
-        };
-
-        let invariant_fraction = match &policy {
-            Policy::Invariant(p) => p.invariant_fraction(),
-            _ => 0.0,
-        };
-
-        records.push(RoundRecord {
-            round,
-            round_time,
-            vtime,
-            straggler_ids: straggler_ids.clone(),
-            straggler_rates: straggler_ids.iter().map(|&c| rates[c]).collect(),
-            t_target,
-            straggler_time,
-            train_loss: mean_loss,
-            train_acc: mean_acc,
-            test_loss,
-            test_acc,
-            invariant_fraction,
-            calibration_secs: calib_secs,
-        });
-    }
-
-    let last_eval = records
-        .iter()
-        .rev()
-        .find(|r| !r.test_acc.is_nan())
-        .map(|r| (r.test_loss, r.test_acc))
-        .unwrap_or((f64::NAN, f64::NAN));
-
-    Ok(ExperimentResult {
-        model: cfg.model.clone(),
-        policy: cfg.policy,
-        records,
-        final_test_acc: last_eval.1,
-        final_test_loss: last_eval.0,
-        total_vtime: vtime,
-        calibration_total: calib_total,
-        seed: cfg.seed,
-        train_wall_total: train_wall,
-    })
+    let engine = RoundEngine::new(&runner, cfg, LocalExecutor::new(cfg.threads))?;
+    engine.run()
 }

@@ -11,6 +11,7 @@ pub mod report;
 pub use experiment::run;
 
 use crate::dropout::PolicyKind;
+use crate::engine::SyncMode;
 use crate::fl::AggregateMode;
 use crate::jsonlite::Json;
 
@@ -54,6 +55,9 @@ pub struct ExperimentConfig {
     pub invariant_th_override: Option<f32>,
     /// use the 5-phone Table-1 fleet (else a synthetic fleet of `clients`)
     pub mobile_fleet: bool,
+    /// round-synchronization policy (full barrier / deadline / buffered
+    /// semi-async — see [`SyncMode`])
+    pub sync_mode: SyncMode,
     pub seed: u64,
     /// worker threads for parallel client execution
     pub threads: usize,
@@ -83,6 +87,7 @@ impl ExperimentConfig {
             use_fused_steps: model == "shakespeare_lstm",
             invariant_th_override: None,
             mobile_fleet: true,
+            sync_mode: SyncMode::FullBarrier,
             seed: 42,
             threads: crate::util::pool::default_threads(),
         }
@@ -133,6 +138,12 @@ pub struct RoundRecord {
     pub invariant_fraction: f64,
     /// wall-clock seconds the server spent on calibration this round
     pub calibration_secs: f64,
+    /// updates folded into this round's aggregation (fresh + stale)
+    pub aggregated: usize,
+    /// late updates discarded by a Deadline barrier
+    pub dropped_updates: usize,
+    /// buffered semi-async updates folded in with a staleness discount
+    pub stale_folded: usize,
 }
 
 /// Full outcome of one run.
@@ -184,6 +195,9 @@ impl ExperimentResult {
                         r.straggler_ids.iter().map(|&i| i as i64).collect::<Vec<i64>>(),
                     )
                     .set("rates", r.straggler_rates.clone())
+                    .set("aggregated", r.aggregated)
+                    .set("dropped", r.dropped_updates)
+                    .set("stale", r.stale_folded)
             })
             .collect();
         Json::obj()
@@ -214,6 +228,7 @@ mod tests {
         let m = ExperimentConfig::mobile("femnist_cnn", PolicyKind::Invariant);
         assert!(m.mobile_fleet);
         assert_eq!(m.clients, 5);
+        assert_eq!(m.sync_mode, SyncMode::FullBarrier);
         let s = ExperimentConfig::scale("cifar_vgg9", PolicyKind::Ordered, 100);
         assert!(!s.mobile_fleet);
         assert_eq!(s.clients, 100);
@@ -238,6 +253,9 @@ mod tests {
                 test_acc: f64::NAN,
                 invariant_fraction: 0.0,
                 calibration_secs: 0.001,
+                aggregated: 5,
+                dropped_updates: 0,
+                stale_folded: 0,
             }],
             final_test_acc: 0.8,
             final_test_loss: 0.7,

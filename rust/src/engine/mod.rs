@@ -1,0 +1,579 @@
+//! The round engine — Algorithm 1 decomposed into composable layers.
+//!
+//! The historical coordinator ran one ~300-line function that hard-coded
+//! a fully synchronous barrier. This module splits that loop along four
+//! seams so that round *policy* and round *mechanics* evolve separately:
+//!
+//! * [`ClientExecutor`] — where per-client work executes
+//!   ([`LocalExecutor`] is the in-process thread-pool backend; sharded /
+//!   remote backends plug in here).
+//! * [`EventScheduler`] — the virtual-time model: per-client latencies
+//!   become arrival *events*, and each [`SyncMode`] resolves those events
+//!   into a barrier decision instead of an implicit `fold(max)`.
+//! * [`RoundPlan`] / [`RoundOutcome`] — the narrow calibration interface
+//!   through which `dropout::Policy` and `straggler::detect` drive the
+//!   engine.
+//! * [`SyncMode`] — the round-synchronization policy: classic full
+//!   barrier (bit-identical to the historical loop), SALF-style deadline
+//!   rounds, or FedBuff-style buffered semi-async rounds.
+//!
+//! See DESIGN.md §3 for the layering diagram and the exact SyncMode
+//! semantics.
+
+pub mod executor;
+pub mod plan;
+pub mod sched;
+
+pub use executor::{ClientExecutor, LocalExecutor, TrainJob};
+pub use plan::{RoundOutcome, RoundPlan};
+pub use sched::{ClientArrival, EventScheduler, Resolution};
+
+use crate::coordinator::{ExperimentConfig, ExperimentResult, RoundRecord};
+use crate::data::{FlData, Split};
+use crate::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
+use crate::fl::{self, fedavg, staleness_discount, Client, ClientUpdate};
+use crate::runtime::StepRunner;
+use crate::straggler::{
+    detect_stragglers, mobile_fleet, snap_rate, synthetic_fleet, Detection, DeviceProfile,
+    FluctuationSchedule, PerfModel,
+};
+use crate::tensor::Tensor;
+use crate::util::prng::Pcg32;
+use crate::util::stats;
+use std::time::Instant;
+
+/// Cap on how many non-stragglers vote on invariance per calibration —
+/// the information saturates quickly and each voter costs one
+/// `delta_step` execution (documented server-side optimization).
+const MAX_DELTA_VOTERS: usize = 16;
+
+/// Round-synchronization policy: when does a round end, and what happens
+/// to updates that arrive after it does?
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum SyncMode {
+    /// Wait for every participant (the paper's protocol, and the
+    /// pre-engine behavior bit-for-bit).
+    #[default]
+    FullBarrier,
+    /// SALF-style deadline round: aggregate whatever arrived by
+    /// `multiple_of_t_target · T_target`; late updates are discarded and
+    /// their clients start fresh next round.
+    Deadline { multiple_of_t_target: f64 },
+    /// FedBuff-style semi-async round: aggregate as soon as `k` updates
+    /// arrive. Late updates are buffered and fold into a later
+    /// aggregation with a staleness-discounted weight; their clients stay
+    /// busy (skip participation) until the update lands.
+    Buffered { k: usize },
+}
+
+impl SyncMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncMode::FullBarrier => "full-barrier",
+            SyncMode::Deadline { .. } => "deadline",
+            SyncMode::Buffered { .. } => "buffered",
+        }
+    }
+}
+
+/// A buffered late update awaiting a future aggregation (Buffered mode).
+struct StaleUpdate {
+    result: fl::LocalResult,
+    mask: MaskSet,
+    /// absolute virtual time the update lands at the server
+    arrives_at: f64,
+    /// round whose broadcast params the update was trained from
+    born_round: usize,
+}
+
+/// The layered round loop: owns all cross-round state and executes
+/// [`ExperimentConfig::rounds`] rounds through an executor and the event
+/// scheduler.
+pub struct RoundEngine<'a, E: ClientExecutor> {
+    cfg: &'a ExperimentConfig,
+    runner: &'a StepRunner,
+    executor: E,
+    fleet: Vec<DeviceProfile>,
+    device_of: Vec<usize>,
+    clients: Vec<Client>,
+    test_split: Split,
+    scheduler: EventScheduler,
+    policy: Policy,
+    detection: Option<Detection>,
+    params: Vec<Tensor>,
+    full_mask: MaskSet,
+    /// actual end-to-end latency each client last reported (under its
+    /// assigned sub-model) — `straggler_time` reads the last-known value
+    /// even for stragglers not sampled this round, as the pre-engine
+    /// loop did
+    last_latencies: Vec<f64>,
+    /// full-model-normalized latency each client last reported — the
+    /// profile straggler detection reads (see `PerfModel::client_timing`)
+    last_full_latencies: Vec<f64>,
+    vtime: f64,
+    calib_total: f64,
+    train_wall: f64,
+    /// buffered late updates (Buffered mode only)
+    stale: Vec<StaleUpdate>,
+    /// absolute virtual time each client becomes free; a client busy past
+    /// a round's start skips that round's participation
+    free_at: Vec<f64>,
+}
+
+impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
+    pub fn new(
+        runner: &'a StepRunner,
+        cfg: &'a ExperimentConfig,
+        executor: E,
+    ) -> crate::Result<Self> {
+        let spec = &runner.spec;
+
+        // fleet + data + clients ---------------------------------------------
+        let fleet = if cfg.mobile_fleet {
+            let base = mobile_fleet();
+            (0..cfg.clients)
+                .map(|i| base[i % base.len()].clone())
+                .collect::<Vec<_>>()
+        } else {
+            synthetic_fleet(cfg.clients, cfg.seed ^ 0xF1EE7)
+        };
+        let data = FlData::for_model(&cfg.model, cfg.clients, cfg.samples_per_client, cfg.seed);
+        let test_split = data.test.clone();
+        let clients: Vec<Client> = data
+            .clients
+            .iter()
+            .enumerate()
+            .map(|(i, split)| Client::new(i, i % fleet.len(), split.clone()))
+            .collect();
+        let device_of: Vec<usize> = clients.iter().map(|c| c.device).collect();
+
+        let perf = PerfModel::new(&cfg.model, spec.size_bytes());
+        // the natural straggler is the slowest base device — excluded from
+        // the fluctuation protocol so that the straggler identity really
+        // changes
+        let natural_straggler = (0..cfg.clients)
+            .max_by(|&a, &b| {
+                fleet[a % fleet.len()]
+                    .base_time(&cfg.model)
+                    .partial_cmp(&fleet[b % fleet.len()].base_time(&cfg.model))
+                    .unwrap()
+            })
+            .unwrap_or(0);
+        let fluct = if cfg.fluctuation {
+            FluctuationSchedule::paper_marks(cfg.clients, natural_straggler, cfg.seed ^ 0xF1C)
+        } else {
+            FluctuationSchedule::none()
+        };
+
+        let inv_cfg = InvariantConfig {
+            th_override: cfg.invariant_th_override,
+            ..Default::default()
+        };
+        let policy = Policy::new_with(cfg.policy, spec, cfg.seed ^ 0xD20, inv_cfg);
+        let params = spec.init_params(cfg.seed);
+        let full_mask = MaskSet::full(spec);
+
+        Ok(Self {
+            cfg,
+            runner,
+            executor,
+            fleet,
+            device_of,
+            clients,
+            test_split,
+            scheduler: EventScheduler::new(perf, fluct),
+            policy,
+            detection: None,
+            params,
+            full_mask,
+            last_latencies: vec![0.0; cfg.clients],
+            last_full_latencies: vec![0.0; cfg.clients],
+            vtime: 0.0,
+            calib_total: 0.0,
+            train_wall: 0.0,
+            stale: Vec::new(),
+            free_at: vec![0.0; cfg.clients],
+        })
+    }
+
+    /// Run every round to completion.
+    pub fn run(mut self) -> crate::Result<ExperimentResult> {
+        let cfg = self.cfg;
+        let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
+        for round in 0..cfg.rounds {
+            let plan = self.plan_round(round);
+            let o = self.run_round(&plan)?;
+            self.calib_total += o.calibration_secs;
+            records.push(RoundRecord {
+                round,
+                round_time: o.round_time,
+                vtime: self.vtime,
+                straggler_ids: plan.straggler_ids.clone(),
+                straggler_rates: plan.straggler_ids.iter().map(|&c| plan.rates[c]).collect(),
+                t_target: o.t_target,
+                straggler_time: o.straggler_time,
+                train_loss: o.train_loss,
+                train_acc: o.train_acc,
+                test_loss: o.test_loss,
+                test_acc: o.test_acc,
+                invariant_fraction: o.invariant_fraction,
+                calibration_secs: o.calibration_secs,
+                aggregated: o.aggregated,
+                dropped_updates: o.dropped_updates,
+                stale_folded: o.stale_folded,
+            });
+        }
+
+        let last_eval = records
+            .iter()
+            .rev()
+            .find(|r| !r.test_acc.is_nan())
+            .map(|r| (r.test_loss, r.test_acc))
+            .unwrap_or((f64::NAN, f64::NAN));
+
+        Ok(ExperimentResult {
+            model: cfg.model.clone(),
+            policy: cfg.policy,
+            records,
+            final_test_acc: last_eval.1,
+            final_test_loss: last_eval.0,
+            total_vtime: self.vtime,
+            calibration_total: self.calib_total,
+            seed: cfg.seed,
+            train_wall_total: self.train_wall,
+        })
+    }
+
+    /// Server-side planning: sampling, straggler recalibration, and
+    /// sub-model assignment (Algorithm 1 lines 18-22).
+    fn plan_round(&mut self, round: usize) -> RoundPlan {
+        let cfg = self.cfg;
+        let t_frac = round as f64 / cfg.rounds.max(1) as f64;
+        let round_seed = cfg.seed ^ ((round as u64) << 32);
+        let mut rng = Pcg32::new(cfg.seed ^ 0xA0_0000, round as u64);
+
+        // --- client sampling (A.6) ------------------------------------------
+        let selected: Vec<usize> = if cfg.sample_fraction >= 1.0 {
+            (0..cfg.clients).collect()
+        } else {
+            let k = ((cfg.clients as f64 * cfg.sample_fraction).ceil() as usize)
+                .clamp(1, cfg.clients);
+            let mut s = rng.sample_indices(cfg.clients, k);
+            s.sort_unstable();
+            s
+        };
+
+        // --- straggler recalibration ----------------------------------------
+        let recalibrate = round > 0
+            && round % cfg.recalibrate_every == 0
+            && !(cfg.static_stragglers && self.detection.is_some());
+        if recalibrate {
+            let lat: Vec<f64> = selected
+                .iter()
+                .map(|&c| self.last_full_latencies[c])
+                .collect();
+            let det = detect_stragglers(&lat, cfg.straggler_fraction, 0.02, &cfg.rates_menu);
+            // map sample-local ids back to client ids
+            self.detection = Some(Detection {
+                stragglers: det.stragglers.iter().map(|&i| selected[i]).collect(),
+                ..det
+            });
+        }
+
+        // --- sub-model assignment -------------------------------------------
+        let calib_start = Instant::now();
+        let mut masks: Vec<MaskSet> = vec![self.full_mask.clone(); cfg.clients];
+        let mut rates: Vec<f64> = vec![1.0; cfg.clients];
+        let mut straggler_ids: Vec<usize> = Vec::new();
+        if let Some(det) = &self.detection {
+            for (k, &c) in det.stragglers.iter().enumerate() {
+                let desired = cfg.fixed_rate.unwrap_or(det.rates[k]);
+                let r = match &cfg.cluster_rates {
+                    Some(menu) => snap_rate(desired, menu),
+                    None => desired,
+                };
+                if cfg.policy != PolicyKind::None && cfg.policy != PolicyKind::Exclude {
+                    let m = self.policy.make_mask(&self.runner.spec, r);
+                    // the straggler only speeds up if it actually received
+                    // a sub-model (invariant dropout returns the full mask
+                    // until its first calibration observation)
+                    if !m.is_full() {
+                        rates[c] = r;
+                        masks[c] = m;
+                    }
+                }
+                straggler_ids.push(c);
+            }
+        }
+        let calib_secs = calib_start.elapsed().as_secs_f64();
+
+        // --- participation --------------------------------------------------
+        // Semi-async: a client still finishing a previous round's work is
+        // busy and sits this round out; its buffered update folds in when
+        // it lands. Synchronous modes never mark anyone busy.
+        let round_start = self.vtime;
+        let active: Vec<usize> = selected
+            .iter()
+            .copied()
+            .filter(|&c| self.free_at[c] <= round_start)
+            .collect();
+        // Exclude policy: stragglers neither train nor aggregate.
+        let participants: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|c| cfg.policy != PolicyKind::Exclude || !straggler_ids.contains(c))
+            .collect();
+
+        RoundPlan {
+            round,
+            t_frac,
+            round_seed,
+            selected,
+            active,
+            participants,
+            straggler_ids,
+            rates,
+            masks,
+            t_target: self.detection.as_ref().map(|d| d.t_target),
+            is_calib_round: round % cfg.recalibrate_every == 0,
+            calib_secs,
+        }
+    }
+
+    /// Execute one planned round: train, schedule arrivals, resolve the
+    /// barrier, aggregate (folding matured stale updates), observe
+    /// deltas, evaluate.
+    fn run_round(&mut self, plan: &RoundPlan) -> crate::Result<RoundOutcome> {
+        let cfg = self.cfg;
+        let mut calib_secs = plan.calib_secs;
+
+        // --- local training (through the executor seam) ---------------------
+        let jobs: Vec<TrainJob> = plan
+            .participants
+            .iter()
+            .map(|&c| TrainJob {
+                client: c,
+                steps: cfg.local_steps,
+                lr: cfg.lr,
+                seed: plan.round_seed,
+                use_fused: cfg.use_fused_steps,
+            })
+            .collect();
+        let t0 = Instant::now();
+        let results = self.executor.run_clients(
+            self.runner,
+            &self.clients,
+            &plan.masks,
+            &self.params,
+            &jobs,
+        );
+        self.train_wall += t0.elapsed().as_secs_f64();
+        let mut updates: Vec<(usize, fl::LocalResult)> = Vec::with_capacity(results.len());
+        for (i, r) in results.into_iter().enumerate() {
+            updates.push((plan.participants[i], r?));
+        }
+
+        // --- virtual-time arrival events ------------------------------------
+        let comm_fractions: Vec<f64> = plan.masks.iter().map(|m| m.comm_fraction()).collect();
+        let arrivals = self.scheduler.arrivals(
+            &self.fleet,
+            &self.device_of,
+            &plan.active,
+            &plan.rates,
+            &comm_fractions,
+            plan.t_frac,
+            plan.round_seed,
+        );
+        for a in &arrivals {
+            self.last_latencies[a.client] = a.at;
+            self.last_full_latencies[a.client] = a.full_latency;
+        }
+
+        // membership bitmaps: the scale path runs thousands of clients,
+        // so per-arrival Vec::contains scans would be quadratic
+        let mut is_participant = vec![false; cfg.clients];
+        for &c in &plan.participants {
+            is_participant[c] = true;
+        }
+
+        // the barrier only waits on clients that actually train; with the
+        // Exclude policy the round advances as soon as participants finish
+        let participant_arrivals: Vec<ClientArrival> = arrivals
+            .iter()
+            .filter(|a| is_participant[a.client])
+            .copied()
+            .collect();
+        let res = EventScheduler::resolve(cfg.sync_mode, &participant_arrivals, plan.t_target);
+        let mut is_on_time = vec![false; cfg.clients];
+        for &c in &res.on_time {
+            is_on_time[c] = true;
+        }
+        let mut late_at: Vec<Option<f64>> = vec![None; cfg.clients];
+        for a in &res.late {
+            late_at[a.client] = Some(a.at);
+        }
+
+        let round_start = self.vtime;
+        let mut round_time = res.round_time;
+        if plan.participants.is_empty() {
+            // degenerate semi-async corner: everyone is busy. Advance the
+            // clock to the earliest buffered arrival so time still moves
+            // and the buffer drains.
+            if let Some(earliest) = self
+                .stale
+                .iter()
+                .map(|s| s.arrives_at)
+                .min_by(|a, b| a.partial_cmp(b).unwrap())
+            {
+                round_time = (earliest - round_start).max(0.0);
+            }
+        }
+        let round_end = round_start + round_time;
+        self.vtime = round_end;
+
+        // last-known straggler latency, whether or not the straggler was
+        // sampled this round (the pre-engine convention)
+        let straggler_time = plan
+            .straggler_ids
+            .iter()
+            .map(|&c| self.last_latencies[c])
+            .fold(0.0f64, f64::max);
+        let t_target = plan.t_target.unwrap_or(round_time);
+
+        // --- aggregation set: fresh on-time updates, then matured stale ------
+        let mut agg: Vec<ClientUpdate> = Vec::with_capacity(updates.len());
+        let mut losses: Vec<f64> = Vec::new();
+        let mut accs: Vec<f64> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
+        let mut dropped_updates = 0usize;
+        for (c, u) in &updates {
+            if is_on_time[*c] {
+                agg.push(ClientUpdate {
+                    params: u.params.clone(),
+                    weight: u.weight,
+                    mask: plan.masks[*c].clone(),
+                    staleness: 0,
+                });
+                losses.push(u.mean_loss);
+                accs.push(u.mean_acc);
+                weights.push(u.weight);
+            } else {
+                match cfg.sync_mode {
+                    // late under a deadline: the update is discarded and
+                    // the client abandons the round (free immediately)
+                    SyncMode::Deadline { .. } => dropped_updates += 1,
+                    // late under buffering: the update keeps computing
+                    // and the client stays busy until it lands
+                    SyncMode::Buffered { .. } => {
+                        let at = late_at[*c].expect("late participant has an arrival");
+                        self.stale.push(StaleUpdate {
+                            result: u.clone(),
+                            mask: plan.masks[*c].clone(),
+                            arrives_at: round_start + at,
+                            born_round: plan.round,
+                        });
+                        self.free_at[*c] = round_start + at;
+                    }
+                    // a full barrier never produces late arrivals
+                    SyncMode::FullBarrier => unreachable!(),
+                }
+            }
+        }
+
+        // fold in previously-buffered updates that landed by round_end;
+        // this round's lates were pushed above but cannot mature yet
+        // (their arrival is past this round's own barrier)
+        let mut stale_folded = 0usize;
+        let mut still: Vec<StaleUpdate> = Vec::with_capacity(self.stale.len());
+        for s in std::mem::take(&mut self.stale) {
+            if s.born_round < plan.round && s.arrives_at <= round_end {
+                let staleness = plan.round - s.born_round;
+                // metrics carry the same staleness-discounted weight
+                // the aggregation applies
+                losses.push(s.result.mean_loss);
+                accs.push(s.result.mean_acc);
+                weights.push(s.result.weight * staleness_discount(staleness));
+                agg.push(ClientUpdate {
+                    params: s.result.params,
+                    weight: s.result.weight,
+                    mask: s.mask,
+                    staleness,
+                });
+                stale_folded += 1;
+            } else {
+                still.push(s);
+            }
+        }
+        self.stale = still;
+
+        // --- metrics + masked FedAvg ----------------------------------------
+        // example-weighted train metrics, matching FedAvg's weighting
+        // (uniform shards reduce to the historical unweighted mean)
+        let (train_loss, train_acc) = if agg.is_empty() {
+            (f64::NAN, f64::NAN)
+        } else {
+            (
+                stats::weighted_mean(&losses, &weights),
+                stats::weighted_mean(&accs, &weights),
+            )
+        };
+        let new_params = if agg.is_empty() {
+            self.params.clone()
+        } else {
+            fedavg(&self.runner.spec, &self.params, &agg, cfg.aggregate)
+        };
+
+        // --- invariant observation (non-straggler deltas, L1 kernel) --------
+        if plan.is_calib_round && matches!(self.policy, Policy::Invariant(_)) {
+            let t0 = Instant::now();
+            let voters: Vec<&[Tensor]> = updates
+                .iter()
+                .filter(|(c, _)| is_on_time[*c] && !plan.straggler_ids.contains(c))
+                .take(MAX_DELTA_VOTERS)
+                .map(|(_, u)| u.params.as_slice())
+                .collect();
+            let per_client = self
+                .executor
+                .run_deltas(self.runner, &self.params, &voters);
+            let per_client = per_client
+                .into_iter()
+                .collect::<crate::Result<Vec<_>>>()?;
+            self.policy.observe_deltas(&per_client);
+            calib_secs += t0.elapsed().as_secs_f64();
+        }
+        self.params = new_params;
+
+        // --- evaluation -----------------------------------------------------
+        let (test_loss, test_acc) =
+            if plan.round % cfg.eval_every == 0 || plan.round + 1 == cfg.rounds {
+                fl::evaluate_split(
+                    self.runner,
+                    &self.params,
+                    self.full_mask.tensors(),
+                    &self.test_split,
+                )?
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+
+        let invariant_fraction = match &self.policy {
+            Policy::Invariant(p) => p.invariant_fraction(),
+            _ => 0.0,
+        };
+
+        Ok(RoundOutcome {
+            round_time,
+            t_target,
+            straggler_time,
+            train_loss,
+            train_acc,
+            test_loss,
+            test_acc,
+            invariant_fraction,
+            aggregated: agg.len(),
+            dropped_updates,
+            stale_folded,
+            calibration_secs: calib_secs,
+        })
+    }
+}

@@ -1,0 +1,68 @@
+//! The calibration interface between policy and mechanics.
+//!
+//! [`RoundPlan`] is everything the server decides *before* any client
+//! runs: sampling, straggler assignments, sub-model masks, the barrier
+//! target. [`RoundOutcome`] is everything the round produced. Together
+//! they are the narrow seam through which `dropout::Policy` and
+//! `straggler::detect` drive the engine — round mechanics never reach
+//! back into policy state.
+
+use crate::dropout::MaskSet;
+
+/// Server-side decisions for one round, fixed before execution.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    pub round: usize,
+    /// training progress fraction (fluctuation schedule lookup)
+    pub t_frac: f64,
+    /// per-round seed for client PRNGs and latency jitter
+    pub round_seed: u64,
+    /// clients sampled this round (A.6)
+    pub selected: Vec<usize>,
+    /// selected clients that are free to run (semi-async modes may leave
+    /// a straggler busy finishing a previous round)
+    pub active: Vec<usize>,
+    /// active clients that actually train (Exclude policy removes
+    /// stragglers here)
+    pub participants: Vec<usize>,
+    /// current straggler set, slowest first
+    pub straggler_ids: Vec<usize>,
+    /// per-client keep-rate table (1.0 = full model)
+    pub rates: Vec<f64>,
+    /// per-client sub-model masks
+    pub masks: Vec<MaskSet>,
+    /// detection's target time, when a detection exists
+    pub t_target: Option<f64>,
+    /// does the invariant policy observe deltas this round?
+    pub is_calib_round: bool,
+    /// wall-clock seconds spent on server-side planning
+    pub calib_secs: f64,
+}
+
+/// Everything one executed round produced, before it is folded into the
+/// experiment history.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// virtual seconds the round occupied the server
+    pub round_time: f64,
+    /// effective target time (round max when no detection exists)
+    pub t_target: f64,
+    /// slowest straggler arrival this round
+    pub straggler_time: f64,
+    /// example-weighted mean train loss over aggregated updates
+    pub train_loss: f64,
+    /// example-weighted mean train accuracy over aggregated updates
+    pub train_acc: f64,
+    /// test metrics (NaN on non-eval rounds)
+    pub test_loss: f64,
+    pub test_acc: f64,
+    pub invariant_fraction: f64,
+    /// updates folded into this round's FedAvg (fresh + stale)
+    pub aggregated: usize,
+    /// late updates discarded by the Deadline barrier
+    pub dropped_updates: usize,
+    /// buffered stale updates folded in with a staleness discount
+    pub stale_folded: usize,
+    /// wall-clock seconds of planning + delta observation
+    pub calibration_secs: f64,
+}

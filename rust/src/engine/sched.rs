@@ -1,0 +1,283 @@
+//! Virtual-time event scheduling.
+//!
+//! The historical loop collapsed per-client latencies into a single
+//! `fold(max)` — correct for a full barrier, useless for anything else.
+//! [`EventScheduler`] instead turns the [`PerfModel`]'s per-client
+//! latencies into explicit *arrival events* (round-relative virtual
+//! seconds), and [`EventScheduler::resolve`] decides, per
+//! [`SyncMode`], when the round ends and which arrivals make it into the
+//! aggregation. The resolution is pure over the arrival list, so every
+//! barrier policy is unit- and property-testable without a runtime.
+
+use super::SyncMode;
+use crate::straggler::{DeviceProfile, FluctuationSchedule, PerfModel};
+
+/// One client's arrival event for a round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientArrival {
+    pub client: usize,
+    /// arrival time in round-relative virtual seconds
+    pub at: f64,
+    /// the same draw normalized to the full model (straggler profiling)
+    pub full_latency: f64,
+}
+
+/// How one round's barrier resolved.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Resolution {
+    /// virtual seconds this round occupies the server
+    pub round_time: f64,
+    /// clients whose updates aggregate this round
+    pub on_time: Vec<usize>,
+    /// arrivals that missed the barrier (discarded under `Deadline`,
+    /// buffered as stale updates under `Buffered`)
+    pub late: Vec<ClientArrival>,
+}
+
+/// Turns per-client latencies into arrival events and resolves barriers.
+#[derive(Clone, Debug)]
+pub struct EventScheduler {
+    pub perf: PerfModel,
+    pub fluct: FluctuationSchedule,
+}
+
+impl EventScheduler {
+    pub fn new(perf: PerfModel, fluct: FluctuationSchedule) -> Self {
+        Self { perf, fluct }
+    }
+
+    /// Arrival events for every active client this round, in `active`
+    /// order. `device_of[c]` maps a client to its fleet device; `rates`
+    /// and `comm_fractions` are full per-client tables.
+    #[allow(clippy::too_many_arguments)]
+    pub fn arrivals(
+        &self,
+        fleet: &[DeviceProfile],
+        device_of: &[usize],
+        active: &[usize],
+        rates: &[f64],
+        comm_fractions: &[f64],
+        t_frac: f64,
+        round_seed: u64,
+    ) -> Vec<ClientArrival> {
+        active
+            .iter()
+            .map(|&c| {
+                let t = self.perf.client_timing(
+                    &fleet[device_of[c]],
+                    c,
+                    rates[c],
+                    comm_fractions[c],
+                    t_frac,
+                    &self.fluct,
+                    round_seed,
+                );
+                ClientArrival {
+                    client: c,
+                    at: t.latency,
+                    full_latency: t.full_latency,
+                }
+            })
+            .collect()
+    }
+
+    /// Decide when the round ends and which arrivals aggregate.
+    ///
+    /// * [`SyncMode::FullBarrier`] — wait for everyone: `round_time` is
+    ///   the max arrival, nothing is late.
+    /// * [`SyncMode::Deadline`] — SALF-style cutoff at
+    ///   `multiple_of_t_target · T_target`. Arrivals past the cutoff are
+    ///   late; the round ends at the cutoff when anyone is late, else at
+    ///   the last arrival. Before the first straggler detection there is
+    ///   no `T_target`, so the round degrades to a full barrier. If *no*
+    ///   arrival meets the cutoff the server must still make progress: it
+    ///   waits for the earliest arrival alone.
+    /// * [`SyncMode::Buffered`] — semi-async: the round ends as soon as
+    ///   `k` updates arrived (k clamped to the arrival count); the rest
+    ///   are late.
+    pub fn resolve(
+        mode: SyncMode,
+        arrivals: &[ClientArrival],
+        t_target: Option<f64>,
+    ) -> Resolution {
+        if arrivals.is_empty() {
+            return Resolution {
+                round_time: 0.0,
+                on_time: Vec::new(),
+                late: Vec::new(),
+            };
+        }
+        let full_barrier = |arrivals: &[ClientArrival]| Resolution {
+            round_time: arrivals.iter().map(|a| a.at).fold(0.0f64, f64::max),
+            on_time: arrivals.iter().map(|a| a.client).collect(),
+            late: Vec::new(),
+        };
+        match mode {
+            SyncMode::FullBarrier => full_barrier(arrivals),
+            SyncMode::Deadline { multiple_of_t_target } => {
+                let Some(tt) = t_target else {
+                    return full_barrier(arrivals);
+                };
+                let cutoff = multiple_of_t_target * tt;
+                let (on, late): (Vec<&ClientArrival>, Vec<&ClientArrival>) =
+                    arrivals.iter().partition(|a| a.at <= cutoff);
+                if on.is_empty() {
+                    // nobody met the cutoff: wait for the single earliest
+                    // arrival so the round aggregates at least one update
+                    let first = arrivals
+                        .iter()
+                        .min_by(|a, b| {
+                            a.at.partial_cmp(&b.at)
+                                .unwrap()
+                                .then(a.client.cmp(&b.client))
+                        })
+                        .unwrap();
+                    return Resolution {
+                        round_time: first.at,
+                        on_time: vec![first.client],
+                        late: arrivals
+                            .iter()
+                            .filter(|a| a.client != first.client)
+                            .copied()
+                            .collect(),
+                    };
+                }
+                let round_time = if late.is_empty() {
+                    on.iter().map(|a| a.at).fold(0.0f64, f64::max)
+                } else {
+                    cutoff
+                };
+                Resolution {
+                    round_time,
+                    on_time: on.iter().map(|a| a.client).collect(),
+                    late: late.into_iter().copied().collect(),
+                }
+            }
+            SyncMode::Buffered { k } => {
+                let mut sorted: Vec<ClientArrival> = arrivals.to_vec();
+                sorted.sort_by(|a, b| {
+                    a.at.partial_cmp(&b.at)
+                        .unwrap()
+                        .then(a.client.cmp(&b.client))
+                });
+                let k_eff = k.clamp(1, sorted.len());
+                Resolution {
+                    round_time: sorted[k_eff - 1].at,
+                    on_time: sorted[..k_eff].iter().map(|a| a.client).collect(),
+                    late: sorted[k_eff..].to_vec(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr(pairs: &[(usize, f64)]) -> Vec<ClientArrival> {
+        pairs
+            .iter()
+            .map(|&(client, at)| ClientArrival {
+                client,
+                at,
+                full_latency: at,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_barrier_waits_for_everyone() {
+        let a = arr(&[(0, 3.0), (1, 9.0), (2, 5.0)]);
+        let r = EventScheduler::resolve(SyncMode::FullBarrier, &a, Some(5.0));
+        assert_eq!(r.round_time, 9.0);
+        assert_eq!(r.on_time, vec![0, 1, 2]);
+        assert!(r.late.is_empty());
+    }
+
+    #[test]
+    fn deadline_drops_late_arrivals_and_ends_at_cutoff() {
+        let a = arr(&[(0, 3.0), (1, 9.0), (2, 5.0)]);
+        let r = EventScheduler::resolve(
+            SyncMode::Deadline { multiple_of_t_target: 1.2 },
+            &a,
+            Some(5.0), // cutoff = 6.0
+        );
+        assert_eq!(r.round_time, 6.0);
+        assert_eq!(r.on_time, vec![0, 2]);
+        assert_eq!(r.late.len(), 1);
+        assert_eq!(r.late[0].client, 1);
+    }
+
+    #[test]
+    fn deadline_with_everyone_on_time_ends_at_last_arrival() {
+        let a = arr(&[(0, 3.0), (1, 4.0)]);
+        let r = EventScheduler::resolve(
+            SyncMode::Deadline { multiple_of_t_target: 2.0 },
+            &a,
+            Some(5.0), // cutoff = 10.0 — nobody late
+        );
+        assert_eq!(r.round_time, 4.0);
+        assert_eq!(r.on_time, vec![0, 1]);
+        assert!(r.late.is_empty());
+    }
+
+    #[test]
+    fn deadline_without_detection_is_a_full_barrier() {
+        let a = arr(&[(0, 3.0), (1, 9.0)]);
+        let r = EventScheduler::resolve(
+            SyncMode::Deadline { multiple_of_t_target: 1.0 },
+            &a,
+            None,
+        );
+        assert_eq!(r.round_time, 9.0);
+        assert_eq!(r.on_time.len(), 2);
+    }
+
+    #[test]
+    fn deadline_nobody_on_time_waits_for_first() {
+        let a = arr(&[(0, 8.0), (1, 7.0)]);
+        let r = EventScheduler::resolve(
+            SyncMode::Deadline { multiple_of_t_target: 1.0 },
+            &a,
+            Some(2.0), // cutoff = 2.0 — everyone late
+        );
+        assert_eq!(r.round_time, 7.0);
+        assert_eq!(r.on_time, vec![1]);
+        assert_eq!(r.late.len(), 1);
+        assert_eq!(r.late[0].client, 0);
+    }
+
+    #[test]
+    fn buffered_ends_at_kth_arrival() {
+        let a = arr(&[(0, 3.0), (1, 9.0), (2, 5.0), (3, 1.0)]);
+        let r = EventScheduler::resolve(SyncMode::Buffered { k: 2 }, &a, None);
+        assert_eq!(r.round_time, 3.0);
+        assert_eq!(r.on_time, vec![3, 0]); // arrival order
+        assert_eq!(r.late.len(), 2);
+        let late_ids: Vec<usize> = r.late.iter().map(|a| a.client).collect();
+        assert_eq!(late_ids, vec![2, 1]);
+    }
+
+    #[test]
+    fn buffered_k_clamps_to_arrival_count() {
+        let a = arr(&[(0, 3.0), (1, 9.0)]);
+        let r = EventScheduler::resolve(SyncMode::Buffered { k: 10 }, &a, None);
+        assert_eq!(r.round_time, 9.0);
+        assert_eq!(r.on_time.len(), 2);
+        assert!(r.late.is_empty());
+    }
+
+    #[test]
+    fn empty_arrivals_resolve_to_nothing() {
+        for mode in [
+            SyncMode::FullBarrier,
+            SyncMode::Deadline { multiple_of_t_target: 1.0 },
+            SyncMode::Buffered { k: 3 },
+        ] {
+            let r = EventScheduler::resolve(mode, &[], Some(1.0));
+            assert_eq!(r.round_time, 0.0);
+            assert!(r.on_time.is_empty() && r.late.is_empty());
+        }
+    }
+}

@@ -26,6 +26,36 @@ pub struct ClientUpdate {
     /// FedAvg weight (number of local examples)
     pub weight: f64,
     pub mask: MaskSet,
+    /// rounds elapsed since the global params this update was trained
+    /// from were broadcast. 0 = synchronous (the usual case); > 0 for
+    /// buffered semi-async updates that missed their round's barrier and
+    /// fold into a later aggregation ([`staleness_discount`]).
+    pub staleness: usize,
+}
+
+/// Staleness discount for semi-async aggregation: a polynomial decay
+/// `1/sqrt(1+s)` (the FedBuff/FedAsync family's standard choice — gentle
+/// enough that one-round-late updates still contribute, strong enough
+/// that ancient updates cannot drag the global model back).
+///
+/// Exactly 1.0 at s = 0 so synchronous aggregation is untouched.
+pub fn staleness_discount(staleness: usize) -> f64 {
+    if staleness == 0 {
+        1.0
+    } else {
+        1.0 / (1.0 + staleness as f64).sqrt()
+    }
+}
+
+/// Effective FedAvg weight of an update after staleness discounting.
+/// Skips the multiply entirely for fresh updates, so synchronous rounds
+/// are bit-identical to pre-staleness aggregation.
+fn effective_weight(u: &ClientUpdate) -> f64 {
+    if u.staleness == 0 {
+        u.weight
+    } else {
+        u.weight * staleness_discount(u.staleness)
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,7 +108,7 @@ pub fn fedavg(
     mode: AggregateMode,
 ) -> Vec<Tensor> {
     assert!(!updates.is_empty(), "fedavg with no updates");
-    let total_w: f64 = updates.iter().map(|u| u.weight).sum();
+    let total_w: f64 = updates.iter().map(effective_weight).sum();
     assert!(total_w > 0.0);
 
     let mut out: Vec<Tensor> = Vec::with_capacity(global.len());
@@ -93,12 +123,13 @@ pub fn fedavg(
         let mut denom = vec![0.0f64; len];
 
         for u in updates {
+            let w = effective_weight(u);
             let data = u.params[pi].data();
             match group {
                 None => {
                     for j in 0..len {
-                        acc[j] += u.weight * data[j] as f64;
-                        denom[j] += u.weight;
+                        acc[j] += w * data[j] as f64;
+                        denom[j] += w;
                     }
                 }
                 Some((gidx, span)) => {
@@ -106,8 +137,8 @@ pub fn fedavg(
                     for j in 0..len {
                         let neuron = neuron_of(j, cols, n, span);
                         if u.mask.is_kept(gidx, neuron) {
-                            acc[j] += u.weight * data[j] as f64;
-                            denom[j] += u.weight;
+                            acc[j] += w * data[j] as f64;
+                            denom[j] += w;
                         }
                     }
                 }
@@ -150,11 +181,13 @@ mod tests {
                 params: constant_params(&spec, 1.0),
                 weight: 1.0,
                 mask: MaskSet::full(&spec),
+                staleness: 0,
             },
             ClientUpdate {
                 params: constant_params(&spec, 4.0),
                 weight: 3.0,
                 mask: MaskSet::full(&spec),
+                staleness: 0,
             },
         ];
         let out = fedavg(&spec, &global, &updates, AggregateMode::Plain);
@@ -182,6 +215,7 @@ mod tests {
                 params: constant_params(&spec, 1.0),
                 weight: 1.0,
                 mask: MaskSet::full(&spec),
+                staleness: 0,
             },
             ClientUpdate {
                 params: {
@@ -203,6 +237,7 @@ mod tests {
                 },
                 weight: 1.0,
                 mask: b_mask,
+                staleness: 0,
             },
         ];
         let out = fedavg(&spec, &global, &updates, AggregateMode::OwnershipWeighted);
@@ -228,6 +263,7 @@ mod tests {
             params: constant_params(&spec, 2.0),
             weight: 1.0,
             mask: m,
+            staleness: 0,
         }];
         let out = fedavg(&spec, &global, &updates, AggregateMode::OwnershipWeighted);
         // col 9 untrained by the only client -> keep global 0.5
@@ -261,5 +297,51 @@ mod tests {
         let spec = tiny_spec();
         let global = constant_params(&spec, 0.0);
         fedavg(&spec, &global, &[], AggregateMode::Plain);
+    }
+
+    #[test]
+    fn staleness_discount_shape() {
+        assert_eq!(staleness_discount(0), 1.0);
+        let d1 = staleness_discount(1);
+        let d4 = staleness_discount(4);
+        assert!((d1 - 1.0 / 2f64.sqrt()).abs() < 1e-12);
+        assert!(d4 < d1 && d1 < 1.0);
+        assert!(d4 > 0.0);
+    }
+
+    #[test]
+    fn stale_update_contributes_less_than_fresh() {
+        let spec = tiny_spec();
+        let global = constant_params(&spec, 0.0);
+        let mk = |v: f32, staleness: usize| ClientUpdate {
+            params: constant_params(&spec, v),
+            weight: 1.0,
+            mask: MaskSet::full(&spec),
+            staleness,
+        };
+        // fresh at 0.0, stale at 4.0: a synchronous pair would average to
+        // 2.0; discounting the stale half must land strictly below that.
+        let out = fedavg(
+            &spec,
+            &global,
+            &[mk(0.0, 0), mk(4.0, 3)],
+            AggregateMode::Plain,
+        );
+        let d = staleness_discount(3);
+        let want = (4.0 * d / (1.0 + d)) as f32;
+        for t in &out {
+            for &x in t.data() {
+                assert!((x - want).abs() < 1e-5, "{x} vs {want}");
+                assert!(x < 2.0);
+            }
+        }
+        // staleness 0 everywhere reproduces the plain weighted mean
+        let sync = fedavg(
+            &spec,
+            &global,
+            &[mk(0.0, 0), mk(4.0, 0)],
+            AggregateMode::Plain,
+        );
+        assert!((sync[0].data()[0] - 2.0).abs() < 1e-6);
     }
 }

@@ -6,16 +6,68 @@
 pub mod aggregate;
 pub mod client;
 
-pub use aggregate::{fedavg, AggregateMode, ClientUpdate};
+pub use aggregate::{fedavg, staleness_discount, AggregateMode, ClientUpdate};
 pub use client::{Client, LocalResult};
 
 use crate::data::Split;
-use crate::runtime::StepRunner;
+use crate::runtime::{EvalOut, StepRunner};
 use crate::tensor::Tensor;
+
+/// Accumulates per-batch eval outputs under one *exact-fraction*
+/// convention: a wrapped tail batch with `real` genuine examples out of
+/// `bs` contributes exactly `frac = real/bs` of its whole-batch totals —
+/// for the loss **and** for the correct count alike.
+///
+/// `eval_step` returns the whole-batch *mean* loss and the whole-batch
+/// *total* correct count, so the two need different scale factors to land
+/// on the same convention: `mean·real ≡ total·frac` for the loss, and
+/// `total·frac` directly for correctness. Full batches have `frac = 1`
+/// and are exact; on wrapped batches the duplicated head examples are
+/// proportionally excluded rather than double-counted.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalAccum {
+    loss_sum: f64,
+    correct: f64,
+    counted: usize,
+}
+
+impl EvalAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one batch result in; `real` is the number of non-duplicated
+    /// examples in this batch (`real == bs` for all but the tail).
+    pub fn push(&mut self, out: EvalOut, real: usize, bs: usize) {
+        assert!(real > 0 && real <= bs, "real {real} out of range for bs {bs}");
+        let frac = real as f64 / bs as f64;
+        // whole-batch loss total is out.loss * bs; times frac == loss * real
+        self.loss_sum += out.loss as f64 * real as f64;
+        self.correct += out.correct as f64 * frac;
+        self.counted += real;
+    }
+
+    pub fn counted(&self) -> usize {
+        self.counted
+    }
+
+    /// (mean loss per example, accuracy).
+    pub fn finish(&self) -> (f64, f64) {
+        if self.counted == 0 {
+            (0.0, 0.0)
+        } else {
+            (
+                self.loss_sum / self.counted as f64,
+                self.correct / self.counted as f64,
+            )
+        }
+    }
+}
 
 /// Evaluate `params` over an entire split in manifest-sized batches.
 /// Returns (mean loss, accuracy). The tail partial batch is padded by
-/// wrapping (its duplicated examples are excluded from the counts).
+/// wrapping; [`EvalAccum`] excludes the duplicated examples from both
+/// counts under the exact-fraction convention.
 pub fn evaluate_split(
     runner: &StepRunner,
     params: &[Tensor],
@@ -27,31 +79,63 @@ pub fn evaluate_split(
     if n == 0 {
         return Ok((0.0, 0.0));
     }
-    let mut loss_sum = 0.0f64;
-    let mut correct = 0.0f64;
-    let mut counted = 0usize;
+    let mut acc = EvalAccum::new();
     let mut start = 0usize;
     while start < n {
         let idx: Vec<usize> = (0..bs).map(|k| (start + k) % n).collect();
         let real = bs.min(n - start);
         let batch = split.batch(&idx, &runner.spec.x_shape);
         let out = runner.eval_step(params, masks, &batch)?;
-        // eval_step returns batch-mean loss and total correct; when the
-        // tail wraps we can only use whole-batch numbers, so scale by the
-        // real fraction (wrapped duplicates bias is negligible for the
-        // test splits we use, and exact for full batches)
-        let frac = real as f64 / bs as f64;
-        loss_sum += out.loss as f64 * real as f64;
-        correct += out.correct as f64 * frac;
-        counted += real;
+        acc.push(out, real, bs);
         start += bs;
     }
-    Ok((loss_sum / counted as f64, correct / counted as f64))
+    debug_assert_eq!(acc.counted(), n);
+    Ok(acc.finish())
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     // evaluate_split is exercised against real artifacts in
-    // rust/tests/integration_fluid.rs; unit tests for the pure pieces
-    // live in aggregate.rs / client.rs.
+    // rust/tests/integration_fluid.rs; the accumulator's tail-batch
+    // accounting is pure and tested here.
+
+    #[test]
+    fn tail_batch_accounting_is_exact() {
+        // n = 5, bs = 2 -> batches of real = [2, 2, 1]; the tail wraps one
+        // duplicate. Per-example loss is L everywhere and every prediction
+        // is correct, so the exact answer is (L, 1.0) regardless of the
+        // wrap — any convention mismatch between loss and correct scaling
+        // breaks one of the two.
+        let l = 0.75f32;
+        let mut acc = EvalAccum::new();
+        for real in [2usize, 2, 1] {
+            let out = EvalOut {
+                loss: l,               // whole-batch mean
+                correct: 2.0,          // whole-batch total (bs = 2)
+            };
+            acc.push(out, real, 2);
+        }
+        assert_eq!(acc.counted(), 5);
+        let (loss, acc_frac) = acc.finish();
+        assert!((loss - l as f64).abs() < 1e-12, "loss {loss}");
+        assert!((acc_frac - 1.0).abs() < 1e-12, "acc {acc_frac}");
+    }
+
+    #[test]
+    fn wrapped_duplicates_are_proportionally_excluded() {
+        // one batch, bs = 4, real = 1: whole-batch total correct of 2
+        // contributes 2 * 1/4 = 0.5 of one counted example.
+        let mut acc = EvalAccum::new();
+        acc.push(EvalOut { loss: 1.0, correct: 2.0 }, 1, 4);
+        let (loss, a) = acc.finish();
+        assert!((loss - 1.0).abs() < 1e-12);
+        assert!((a - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_accum_is_zero() {
+        assert_eq!(EvalAccum::new().finish(), (0.0, 0.0));
+    }
 }

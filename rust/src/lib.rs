@@ -6,7 +6,9 @@
 //!
 //! * **L3 (this crate)** — the FLuID coordinator: straggler detection,
 //!   drop-threshold calibration, invariant-neuron identification, masked
-//!   FedAvg aggregation, and a virtual-time heterogeneous device fleet.
+//!   FedAvg aggregation, and a virtual-time heterogeneous device fleet,
+//!   executed by the layered [`engine`] (pluggable client executors,
+//!   event-scheduled virtual time, sync / deadline / buffered rounds).
 //! * **L2** — JAX model step functions (`python/compile/model.py`),
 //!   AOT-lowered once to `artifacts/*.hlo.txt` and executed here through
 //!   the PJRT CPU client ([`runtime`]). Python never runs at runtime.
@@ -20,6 +22,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod dropout;
+pub mod engine;
 pub mod fl;
 pub mod jsonlite;
 pub mod model;

@@ -10,6 +10,7 @@
 
 use fluid::coordinator::{self, report, ExperimentConfig};
 use fluid::dropout::PolicyKind;
+use fluid::engine::SyncMode;
 use fluid::runtime::Session;
 use fluid::straggler::mobile_fleet;
 use fluid::util::cli::Args;
@@ -50,6 +51,9 @@ fn train_args(program: &str) -> Args {
         .opt("straggler-frac", "0.2", "fraction of fleet treated as stragglers")
         .opt("sample-frac", "1.0", "client sampling fraction per round")
         .opt("recalibrate", "1", "recalibration period (rounds)")
+        .opt("sync-mode", "full", "round barrier: full|deadline|buffered")
+        .opt("deadline-mult", "1.25", "deadline cutoff as a multiple of T_target")
+        .opt("buffer-k", "0", "buffered: aggregate after k updates (0 = 80% of clients)")
         .opt("seed", "42", "PRNG seed")
         .opt("threads", "0", "worker threads (0 = auto)")
         .opt("eval-every", "5", "test-eval period (rounds)")
@@ -80,6 +84,30 @@ fn build_config(a: &Args) -> ExperimentConfig {
     cfg.straggler_fraction = a.get_f64("straggler-frac");
     cfg.sample_fraction = a.get_f64("sample-frac");
     cfg.recalibrate_every = a.get_usize("recalibrate").max(1);
+    cfg.sync_mode = match a.get("sync-mode").as_str() {
+        "full" | "barrier" | "sync" => SyncMode::FullBarrier,
+        "deadline" => SyncMode::Deadline {
+            multiple_of_t_target: a.get_f64("deadline-mult"),
+        },
+        "buffered" | "async" => {
+            let k = a.get_usize("buffer-k");
+            // default: wait for 80% of the clients that actually
+            // participate per round (sampling included) — otherwise a
+            // sampled run would clamp k to the arrival count and
+            // silently degenerate to a full barrier
+            let k = if k == 0 {
+                let per_round = (cfg.clients as f64 * cfg.sample_fraction.min(1.0)).ceil();
+                (per_round * 0.8).ceil() as usize
+            } else {
+                k
+            };
+            SyncMode::Buffered { k: k.max(1) }
+        }
+        other => {
+            eprintln!("unknown sync mode {other:?} (full|deadline|buffered)");
+            std::process::exit(2);
+        }
+    };
     cfg.seed = a.get_u64("seed");
     cfg.eval_every = a.get_usize("eval-every").max(1);
     cfg.fluctuation = a.get_flag("fluctuate");
@@ -115,11 +143,12 @@ fn cmd_train(argv: &[String]) -> i32 {
     let cfg = build_config(&a);
     let sess = open_session(&a);
     println!(
-        "fluid train: model={} policy={} clients={} rounds={} (platform={})",
+        "fluid train: model={} policy={} clients={} rounds={} sync={} (platform={})",
         cfg.model,
         cfg.policy.name(),
         cfg.clients,
         cfg.rounds,
+        cfg.sync_mode.name(),
         sess.platform()
     );
     let res = match coordinator::run(&sess, &cfg) {

@@ -5,150 +5,33 @@
 //! `client.compile` → `execute`. HLO **text** is the interchange format;
 //! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos.
 //!
-//! The runtime is the only module that touches the `xla` crate. Everything
-//! above it works in host [`Tensor`]s.
+//! The runtime is the only module that touches the `xla` crate, and every
+//! xla-dependent piece is gated behind the default-on `xla` cargo
+//! feature. Building with `--no-default-features` swaps in [`stub`]'s
+//! API-identical placeholders so the pure coordinator/engine layers (and
+//! their tests) compile where the PJRT native library is absent.
+//! Everything above the runtime works in host [`crate::tensor::Tensor`]s.
 
+mod types;
+
+pub use types::{Batch, EvalOut, TrainOut, XData};
+
+#[cfg(feature = "xla")]
 mod convert;
+#[cfg(feature = "xla")]
+mod session;
+#[cfg(feature = "xla")]
 mod step;
 
-pub use convert::{tensor_to_literal, literal_to_tensor, i32s_to_literal};
-pub use step::{Batch, EvalOut, StepRunner, TrainOut, XData};
+#[cfg(feature = "xla")]
+pub use convert::{i32s_to_literal, literal_to_tensor, tensor_to_literal};
+#[cfg(feature = "xla")]
+pub use session::Session;
+#[cfg(feature = "xla")]
+pub use step::StepRunner;
 
-use crate::model::ModelSpec;
-use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(not(feature = "xla"))]
+mod stub;
 
-/// A PJRT CPU session with a compile cache.
-///
-/// Compilation of a VGG-9 train step takes O(100ms); experiments run the
-/// same artifacts for thousands of virtual clients, so executables are
-/// compiled once and shared.
-pub struct Session {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Session {
-    /// Create a CPU session rooted at an artifacts directory.
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    /// Default artifacts dir: `$FLUID_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("FLUID_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
-    }
-
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.artifacts_dir
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO-text artifact (cached by file name).
-    pub fn load(&self, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(file) {
-            return Ok(exe.clone());
-        }
-        let path = self.artifacts_dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(file.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Build a [`StepRunner`] for a model: loads its manifest and compiles
-    /// train/eval/delta executables.
-    pub fn runner(&self, model: &str) -> Result<StepRunner> {
-        let spec = ModelSpec::load(&self.artifacts_dir, model)?;
-        StepRunner::new(self, spec)
-    }
-
-    pub fn runner_for_spec(&self, spec: ModelSpec) -> Result<StepRunner> {
-        StepRunner::new(self, spec)
-    }
-}
-
-// SAFETY: the PJRT CPU client is internally synchronized (TFRT CPU client);
-// executables are immutable after compilation and `execute` is documented
-// thread-compatible. The compile cache is Mutex-guarded. We gate actual
-// multi-threaded use behind `runtime::stress` tests before relying on it.
-unsafe impl Send for Session {}
-unsafe impl Sync for Session {}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn artifacts() -> PathBuf {
-        // tests run from the workspace root via `cargo test`
-        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        p
-    }
-
-    fn have_artifacts() -> bool {
-        artifacts().join("smoke.hlo.txt").exists()
-    }
-
-    #[test]
-    fn smoke_round_trip() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let sess = Session::new(artifacts()).unwrap();
-        assert_eq!(sess.platform(), "cpu");
-        let exe = sess.load("smoke.hlo.txt").unwrap();
-        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
-        let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
-        let out = exe.execute::<xla::Literal>(&[x, y]).unwrap()[0][0]
-            .to_literal_sync()
-            .unwrap();
-        let v = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
-        assert_eq!(v, vec![5., 5., 9., 9.]);
-    }
-
-    #[test]
-    fn load_is_cached() {
-        if !have_artifacts() {
-            return;
-        }
-        let sess = Session::new(artifacts()).unwrap();
-        let a = sess.load("smoke.hlo.txt").unwrap();
-        let b = sess.load("smoke.hlo.txt").unwrap();
-        assert!(std::sync::Arc::ptr_eq(&a, &b));
-    }
-
-    #[test]
-    fn missing_artifact_is_context_error() {
-        let sess = Session::new(artifacts()).unwrap();
-        let err = match sess.load("nope.hlo.txt") {
-            Ok(_) => panic!("expected error"),
-            Err(e) => e.to_string(),
-        };
-        assert!(err.contains("nope.hlo.txt"), "{err}");
-    }
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::{Session, StepRunner};

@@ -8,42 +8,12 @@
 //! * delta: `(old params..., new params...)`  → per-group delta vectors
 
 use super::convert::{i32s_to_literal, literal_scalar, literal_to_tensor, tensor_to_literal};
+use super::types::{Batch, EvalOut, TrainOut, XData};
 use super::Session;
 use crate::model::ModelSpec;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
-
-/// Input features for one batch.
-#[derive(Clone, Debug)]
-pub enum XData {
-    /// dense features, shape = spec.x_shape
-    F32(Tensor),
-    /// token ids, logical shape = spec.x_shape
-    I32(Vec<i32>),
-}
-
-/// One training/eval batch.
-#[derive(Clone, Debug)]
-pub struct Batch {
-    pub x: XData,
-    pub y: Vec<i32>,
-}
-
-/// Result of a train step.
-#[derive(Clone, Debug)]
-pub struct TrainOut {
-    pub params: Vec<Tensor>,
-    pub loss: f32,
-    pub acc: f32,
-}
-
-/// Result of an eval step.
-#[derive(Clone, Debug, Copy)]
-pub struct EvalOut {
-    pub loss: f32,
-    pub correct: f32,
-}
 
 /// Compiled step functions for one model.
 pub struct StepRunner {

@@ -1,0 +1,111 @@
+//! API-identical placeholders compiled when the `xla` feature is off.
+//!
+//! The pure layers (data pipeline, dropout policies, straggler model,
+//! round engine) never touch PJRT; gating only the runtime lets
+//! `cargo build --no-default-features` succeed on machines without the
+//! xla_extension native library. [`Session::new`] fails with a clear
+//! message, so anything that would actually execute an artifact reports
+//! the missing feature instead of failing to link.
+
+use super::types::{Batch, EvalOut, TrainOut};
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+const NO_XLA: &str =
+    "fluid was built without the `xla` feature; the PJRT runtime is unavailable \
+     (rebuild with default features to execute artifacts)";
+
+/// Placeholder for the PJRT session. Construction always fails, so a
+/// [`StepRunner`] can never be obtained from this backend.
+pub struct Session {
+    artifacts_dir: PathBuf,
+}
+
+impl Session {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = artifacts_dir.as_ref();
+        bail!(NO_XLA)
+    }
+
+    /// Default artifacts dir: `$FLUID_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FLUID_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    pub fn platform(&self) -> String {
+        "none".to_string()
+    }
+
+    pub fn runner(&self, model: &str) -> Result<StepRunner> {
+        let spec = ModelSpec::load(&self.artifacts_dir, model)?;
+        self.runner_for_spec(spec)
+    }
+
+    pub fn runner_for_spec(&self, _spec: ModelSpec) -> Result<StepRunner> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Placeholder step runner: same surface as the PJRT-backed one, every
+/// execution path errors. Unreachable in practice (no [`Session`] can be
+/// constructed) but keeps downstream code compiling unchanged.
+pub struct StepRunner {
+    pub spec: ModelSpec,
+}
+
+impl StepRunner {
+    /// k of the fused multi-step program (0 = unavailable).
+    pub fn multi_k(&self) -> usize {
+        0
+    }
+
+    pub fn train_step(
+        &self,
+        _params: &[Tensor],
+        _masks: &[Tensor],
+        _batch: &Batch,
+        _lr: f32,
+    ) -> Result<TrainOut> {
+        bail!(NO_XLA)
+    }
+
+    pub fn train_multi_step(
+        &self,
+        _params: &[Tensor],
+        _masks: &[Tensor],
+        _batches: &[Batch],
+        _lr: f32,
+    ) -> Result<TrainOut> {
+        bail!(NO_XLA)
+    }
+
+    pub fn eval_step(
+        &self,
+        _params: &[Tensor],
+        _masks: &[Tensor],
+        _batch: &Batch,
+    ) -> Result<EvalOut> {
+        bail!(NO_XLA)
+    }
+
+    pub fn delta_step(&self, _old: &[Tensor], _new: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!(NO_XLA)
+    }
+
+    /// All-ones masks (full model).
+    pub fn full_masks(&self) -> Vec<Tensor> {
+        self.spec
+            .masks
+            .iter()
+            .map(|m| Tensor::ones(&[m.size]))
+            .collect()
+    }
+}

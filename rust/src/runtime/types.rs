@@ -1,0 +1,36 @@
+//! Runtime data types shared by the PJRT-backed step runner and the
+//! no-`xla` stub: these carry no PJRT state, so everything above the
+//! runtime (data pipeline, clients, engine) compiles with either backend.
+
+use crate::tensor::Tensor;
+
+/// Input features for one batch.
+#[derive(Clone, Debug)]
+pub enum XData {
+    /// dense features, shape = spec.x_shape
+    F32(Tensor),
+    /// token ids, logical shape = spec.x_shape
+    I32(Vec<i32>),
+}
+
+/// One training/eval batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: XData,
+    pub y: Vec<i32>,
+}
+
+/// Result of a train step.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub params: Vec<Tensor>,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Result of an eval step.
+#[derive(Clone, Debug, Copy)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub correct: f32,
+}

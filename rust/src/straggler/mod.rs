@@ -16,4 +16,4 @@ pub use cluster::cluster_stragglers;
 pub use detect::{detect_stragglers, snap_rate, Detection};
 pub use device::{mobile_fleet, synthetic_fleet, DeviceProfile};
 pub use fluctuate::{FluctuationSchedule, LoadEvent};
-pub use perfmodel::PerfModel;
+pub use perfmodel::{ClientTiming, PerfModel};

@@ -81,6 +81,47 @@ impl PerfModel {
     ) -> f64 {
         self.compute_time(dev, client, r, t_frac, sched, rng) + self.comm_time(dev, comm_fraction)
     }
+
+    /// One client's arrival timing for a round, as the engine's event
+    /// scheduler consumes it: the *actual* end-to-end latency under the
+    /// client's assigned keep-rate, plus the same latency normalized to
+    /// `r = 1.0` (what the client would take on the full model).
+    ///
+    /// Straggler detection must see the normalized number — a straggler
+    /// that got a sub-model looks fast the next round and would flap in
+    /// and out of the straggler set otherwise. Both draws share the same
+    /// jitter stream (cloned PRNG seeded from `round_seed` and the client
+    /// id), so the pair differs only by the sub-model terms.
+    #[allow(clippy::too_many_arguments)]
+    pub fn client_timing(
+        &self,
+        dev: &DeviceProfile,
+        client: usize,
+        r: f64,
+        comm_fraction: f64,
+        t_frac: f64,
+        sched: &FluctuationSchedule,
+        round_seed: u64,
+    ) -> ClientTiming {
+        let mut rng = Pcg32::new(round_seed ^ 0x7A7, client as u64);
+        let mut rng_full = rng.clone(); // same jitter draw for both
+        ClientTiming {
+            latency: self.round_latency(dev, client, r, comm_fraction, t_frac, sched, &mut rng),
+            full_latency: self
+                .round_latency(dev, client, 1.0, 1.0, t_frac, sched, &mut rng_full),
+        }
+    }
+}
+
+/// Per-client round timing: when the update arrives (round-relative
+/// virtual seconds) and the full-model-normalized latency that straggler
+/// detection profiles.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientTiming {
+    /// end-to-end latency under the assigned sub-model
+    pub latency: f64,
+    /// the same draw normalized to the full model (r = 1, full comm)
+    pub full_latency: f64,
 }
 
 #[cfg(test)]
@@ -147,6 +188,21 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(max_idx, 4, "Pixel 3 must be the straggler: {lat:?}");
+    }
+
+    #[test]
+    fn client_timing_pair_shares_jitter() {
+        let pm = PerfModel::new("cifar_vgg9", 5_879_976);
+        let dev = &mobile_fleet()[4];
+        // at r = 1 and full comm, the pair must be bit-identical — the
+        // clone-the-stream protocol guarantees the same jitter draw
+        let t = pm.client_timing(dev, 3, 1.0, 1.0, 0.0, &quiet(), 99);
+        assert_eq!(t.latency.to_bits(), t.full_latency.to_bits());
+        // a sub-model strictly reduces actual latency but never the
+        // normalized one
+        let s = pm.client_timing(dev, 3, 0.5, 0.5, 0.0, &quiet(), 99);
+        assert!(s.latency < s.full_latency);
+        assert_eq!(s.full_latency.to_bits(), t.full_latency.to_bits());
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //!
 //! Work is chunked over at most `threads` OS threads via
 //! `std::thread::scope`, so borrowed data needs no `'static` bound.
+//! The engine's [`crate::engine::LocalExecutor`] is the in-process
+//! backend built on this substrate; alternative `ClientExecutor`
+//! implementations bypass it entirely.
 
 /// Map `f` over `items` in parallel, preserving order.
 ///

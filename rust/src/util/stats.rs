@@ -10,6 +10,28 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Weighted mean of `xs` under `weights` (0 for empty).
+///
+/// Uniform weights reduce to the plain [`mean`] *through the same code
+/// path*, so example-weighted round metrics are bit-identical to the
+/// historical unweighted ones whenever every client holds the same number
+/// of examples (the standard fleet setup).
+pub fn weighted_mean(xs: &[f64], weights: &[f64]) -> f64 {
+    assert_eq!(xs.len(), weights.len(), "weighted_mean length mismatch");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let uniform = weights.windows(2).all(|w| w[0] == w[1]);
+    if uniform {
+        return mean(xs);
+    }
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        return mean(xs);
+    }
+    xs.iter().zip(weights).map(|(x, w)| x * w).sum::<f64>() / wsum
+}
+
 /// Sample standard deviation (n-1 denominator; 0 for n < 2).
 pub fn std_dev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
@@ -235,5 +257,16 @@ mod tests {
         assert!((s.std_dev() - std_dev(&xs)).abs() < 1e-12);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 6.0);
+    }
+
+    #[test]
+    fn weighted_mean_basics() {
+        let xs = [1.0, 3.0];
+        // uniform weights == plain mean, bitwise
+        assert_eq!(weighted_mean(&xs, &[60.0, 60.0]).to_bits(), mean(&xs).to_bits());
+        // non-uniform weights pull toward the heavier sample
+        assert!((weighted_mean(&xs, &[1.0, 3.0]) - 2.5).abs() < 1e-12);
+        // empty is 0
+        assert_eq!(weighted_mean(&[], &[]), 0.0);
     }
 }

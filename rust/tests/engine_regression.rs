@@ -1,0 +1,428 @@
+//! Pins the engine's `SyncMode::FullBarrier` against the pre-engine
+//! monolithic round loop, preserved below verbatim (modulo `fluid::`
+//! paths) as the reference implementation. For a fixed seed the two must
+//! produce **bit-identical** `ExperimentResult` histories — virtual
+//! times, straggler sets, losses, accuracies — across policies.
+//!
+//! Wall-clock fields (`calibration_secs`, `train_wall_total`) are
+//! excluded: they measure the host, not the algorithm.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise. A second test
+//! exercises the Deadline/Buffered modes end-to-end and checks the
+//! virtual-time dominance argument: with per-client latency draws
+//! independent of the barrier policy, both relaxed modes can never be
+//! slower than the full barrier.
+
+use fluid::coordinator::{ExperimentConfig, ExperimentResult, RoundRecord};
+use fluid::data::FlData;
+use fluid::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
+use fluid::engine::SyncMode;
+use fluid::fl::{self, fedavg, Client, ClientUpdate};
+use fluid::runtime::Session;
+use fluid::straggler::{
+    detect_stragglers, mobile_fleet, snap_rate, synthetic_fleet, Detection,
+    FluctuationSchedule, PerfModel,
+};
+use fluid::util::pool::scope_map;
+use fluid::util::prng::Pcg32;
+use fluid::util::stats;
+use std::time::Instant;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(model: &str) -> bool {
+    // without the xla feature the runtime is a stub: Session::new always
+    // fails, so artifact presence alone is not enough to run
+    cfg!(feature = "xla") && artifacts_dir().join(format!("{model}_manifest.json")).exists()
+}
+
+const MAX_DELTA_VOTERS: usize = 16;
+
+/// The pre-engine round loop, kept as the regression reference.
+fn reference_run(sess: &Session, cfg: &ExperimentConfig) -> fluid::Result<ExperimentResult> {
+    let runner = sess.runner(&cfg.model)?;
+    let spec = runner.spec.clone();
+
+    let fleet = if cfg.mobile_fleet {
+        let base = mobile_fleet();
+        (0..cfg.clients).map(|i| base[i % base.len()].clone()).collect::<Vec<_>>()
+    } else {
+        synthetic_fleet(cfg.clients, cfg.seed ^ 0xF1EE7)
+    };
+    let data = FlData::for_model(&cfg.model, cfg.clients, cfg.samples_per_client, cfg.seed);
+    let clients: Vec<Client> = data
+        .clients
+        .iter()
+        .enumerate()
+        .map(|(i, split)| Client::new(i, i % fleet.len(), split.clone()))
+        .collect();
+
+    let perf = PerfModel::new(&cfg.model, spec.size_bytes());
+    let natural_straggler = (0..cfg.clients)
+        .max_by(|&a, &b| {
+            fleet[a % fleet.len()]
+                .base_time(&cfg.model)
+                .partial_cmp(&fleet[b % fleet.len()].base_time(&cfg.model))
+                .unwrap()
+        })
+        .unwrap_or(0);
+    let sched = if cfg.fluctuation {
+        FluctuationSchedule::paper_marks(cfg.clients, natural_straggler, cfg.seed ^ 0xF1C)
+    } else {
+        FluctuationSchedule::none()
+    };
+
+    let inv_cfg = InvariantConfig {
+        th_override: cfg.invariant_th_override,
+        ..Default::default()
+    };
+    let mut policy = Policy::new_with(cfg.policy, &spec, cfg.seed ^ 0xD20, inv_cfg);
+    let mut params = spec.init_params(cfg.seed);
+    let full_mask = MaskSet::full(&spec);
+
+    let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
+    let mut vtime = 0.0f64;
+    let mut calib_total = 0.0f64;
+    let mut train_wall = 0.0f64;
+    let mut detection: Option<Detection> = None;
+    let mut last_latencies: Vec<f64> = vec![0.0; cfg.clients];
+    let mut last_full_latencies: Vec<f64> = vec![0.0; cfg.clients];
+
+    for round in 0..cfg.rounds {
+        let t_frac = round as f64 / cfg.rounds.max(1) as f64;
+        let mut rng = Pcg32::new(cfg.seed ^ 0xA0_0000, round as u64);
+
+        let selected: Vec<usize> = if cfg.sample_fraction >= 1.0 {
+            (0..cfg.clients).collect()
+        } else {
+            let k = ((cfg.clients as f64 * cfg.sample_fraction).ceil() as usize)
+                .clamp(1, cfg.clients);
+            let mut s = rng.sample_indices(cfg.clients, k);
+            s.sort_unstable();
+            s
+        };
+
+        let recalibrate = round > 0
+            && round % cfg.recalibrate_every == 0
+            && !(cfg.static_stragglers && detection.is_some());
+        if recalibrate {
+            let lat: Vec<f64> = selected.iter().map(|&c| last_full_latencies[c]).collect();
+            let det = detect_stragglers(&lat, cfg.straggler_fraction, 0.02, &cfg.rates_menu);
+            detection = Some(Detection {
+                stragglers: det.stragglers.iter().map(|&i| selected[i]).collect(),
+                ..det
+            });
+        }
+
+        let calib_start = Instant::now();
+        let mut masks: Vec<MaskSet> = vec![full_mask.clone(); cfg.clients];
+        let mut rates: Vec<f64> = vec![1.0; cfg.clients];
+        let mut straggler_ids: Vec<usize> = Vec::new();
+        if let Some(det) = &detection {
+            for (k, &c) in det.stragglers.iter().enumerate() {
+                let desired = cfg.fixed_rate.unwrap_or(det.rates[k]);
+                let r = match &cfg.cluster_rates {
+                    Some(menu) => snap_rate(desired, menu),
+                    None => desired,
+                };
+                if cfg.policy != PolicyKind::None && cfg.policy != PolicyKind::Exclude {
+                    let m = policy.make_mask(&spec, r);
+                    if !m.is_full() {
+                        rates[c] = r;
+                        masks[c] = m;
+                    }
+                }
+                straggler_ids.push(c);
+            }
+        }
+        let mut calib_secs = calib_start.elapsed().as_secs_f64();
+
+        let participants: Vec<usize> = selected
+            .iter()
+            .copied()
+            .filter(|c| cfg.policy != PolicyKind::Exclude || !straggler_ids.contains(c))
+            .collect();
+        let round_seed = cfg.seed ^ ((round as u64) << 32);
+        let t0 = Instant::now();
+        let results: Vec<fluid::Result<fl::LocalResult>> =
+            scope_map(&participants, cfg.threads, |_, &c| {
+                clients[c].local_train(
+                    &runner,
+                    &params,
+                    masks[c].tensors(),
+                    cfg.local_steps,
+                    cfg.lr,
+                    round_seed,
+                    cfg.use_fused_steps,
+                )
+            });
+        train_wall += t0.elapsed().as_secs_f64();
+        let mut updates: Vec<(usize, fl::LocalResult)> = Vec::with_capacity(results.len());
+        for (i, r) in results.into_iter().enumerate() {
+            updates.push((participants[i], r?));
+        }
+
+        for &c in &selected {
+            let dev = &fleet[clients[c].device];
+            let mut lrng = Pcg32::new(round_seed ^ 0x7A7, c as u64);
+            let mut lrng_full = lrng.clone();
+            last_latencies[c] = perf.round_latency(
+                dev,
+                c,
+                rates[c],
+                masks[c].comm_fraction(),
+                t_frac,
+                &sched,
+                &mut lrng,
+            );
+            last_full_latencies[c] =
+                perf.round_latency(dev, c, 1.0, 1.0, t_frac, &sched, &mut lrng_full);
+        }
+        let timed: &[usize] = if cfg.policy == PolicyKind::Exclude {
+            &participants
+        } else {
+            &selected
+        };
+        let round_time = timed
+            .iter()
+            .map(|&c| last_latencies[c])
+            .fold(0.0f64, f64::max);
+        vtime += round_time;
+
+        let straggler_time = straggler_ids
+            .iter()
+            .map(|&c| last_latencies[c])
+            .fold(0.0f64, f64::max);
+        let t_target = detection.as_ref().map(|d| d.t_target).unwrap_or(round_time);
+
+        let mean_loss = stats::mean(
+            &updates.iter().map(|(_, u)| u.mean_loss).collect::<Vec<_>>(),
+        );
+        let mean_acc = stats::mean(
+            &updates.iter().map(|(_, u)| u.mean_acc).collect::<Vec<_>>(),
+        );
+        let client_updates: Vec<ClientUpdate> = updates
+            .iter()
+            .map(|(c, u)| ClientUpdate {
+                params: u.params.clone(),
+                weight: u.weight,
+                mask: masks[*c].clone(),
+                staleness: 0,
+            })
+            .collect();
+        let new_params = fedavg(&spec, &params, &client_updates, cfg.aggregate);
+
+        let is_calib_round = round % cfg.recalibrate_every == 0;
+        if is_calib_round && matches!(policy, Policy::Invariant(_)) {
+            let t0 = Instant::now();
+            let voters: Vec<&(usize, fl::LocalResult)> = updates
+                .iter()
+                .filter(|(c, _)| !straggler_ids.contains(c))
+                .take(MAX_DELTA_VOTERS)
+                .collect();
+            let per_client: Vec<fluid::Result<Vec<fluid::tensor::Tensor>>> =
+                scope_map(&voters, cfg.threads, |_, (_, u)| {
+                    runner.delta_step(&params, &u.params)
+                });
+            let per_client = per_client
+                .into_iter()
+                .collect::<fluid::Result<Vec<_>>>()?;
+            policy.observe_deltas(&per_client);
+            calib_secs += t0.elapsed().as_secs_f64();
+        }
+        params = new_params;
+        calib_total += calib_secs;
+
+        let (test_loss, test_acc) = if round % cfg.eval_every == 0 || round + 1 == cfg.rounds
+        {
+            fl::evaluate_split(&runner, &params, full_mask.tensors(), &data.test)?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        let invariant_fraction = match &policy {
+            Policy::Invariant(p) => p.invariant_fraction(),
+            _ => 0.0,
+        };
+
+        records.push(RoundRecord {
+            round,
+            round_time,
+            vtime,
+            straggler_ids: straggler_ids.clone(),
+            straggler_rates: straggler_ids.iter().map(|&c| rates[c]).collect(),
+            t_target,
+            straggler_time,
+            train_loss: mean_loss,
+            train_acc: mean_acc,
+            test_loss,
+            test_acc,
+            invariant_fraction,
+            calibration_secs: calib_secs,
+            aggregated: updates.len(),
+            dropped_updates: 0,
+            stale_folded: 0,
+        });
+    }
+
+    let last_eval = records
+        .iter()
+        .rev()
+        .find(|r| !r.test_acc.is_nan())
+        .map(|r| (r.test_loss, r.test_acc))
+        .unwrap_or((f64::NAN, f64::NAN));
+
+    Ok(ExperimentResult {
+        model: cfg.model.clone(),
+        policy: cfg.policy,
+        records,
+        final_test_acc: last_eval.1,
+        final_test_loss: last_eval.0,
+        total_vtime: vtime,
+        calibration_total: calib_total,
+        seed: cfg.seed,
+        train_wall_total: train_wall,
+    })
+}
+
+/// NaN-aware bitwise equality.
+fn eq_f64(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn assert_history_identical(reference: &ExperimentResult, engine: &ExperimentResult) {
+    assert_eq!(reference.records.len(), engine.records.len());
+    for (r, e) in reference.records.iter().zip(&engine.records) {
+        let ctx = format!("round {}", r.round);
+        assert_eq!(r.round, e.round, "{ctx}");
+        assert!(
+            eq_f64(r.round_time, e.round_time),
+            "{ctx}: round_time {} vs {}",
+            r.round_time,
+            e.round_time
+        );
+        assert!(eq_f64(r.vtime, e.vtime), "{ctx}: vtime {} vs {}", r.vtime, e.vtime);
+        assert_eq!(r.straggler_ids, e.straggler_ids, "{ctx}");
+        assert_eq!(r.straggler_rates, e.straggler_rates, "{ctx}");
+        assert!(
+            eq_f64(r.t_target, e.t_target),
+            "{ctx}: t_target {} vs {}",
+            r.t_target,
+            e.t_target
+        );
+        assert!(eq_f64(r.straggler_time, e.straggler_time), "{ctx}: straggler_time");
+        assert!(
+            eq_f64(r.train_loss, e.train_loss),
+            "{ctx}: train_loss {} vs {}",
+            r.train_loss,
+            e.train_loss
+        );
+        assert!(eq_f64(r.train_acc, e.train_acc), "{ctx}: train_acc");
+        assert!(
+            eq_f64(r.test_loss, e.test_loss),
+            "{ctx}: test_loss {} vs {}",
+            r.test_loss,
+            e.test_loss
+        );
+        assert!(eq_f64(r.test_acc, e.test_acc), "{ctx}: test_acc");
+        assert!(
+            eq_f64(r.invariant_fraction, e.invariant_fraction),
+            "{ctx}: invariant_fraction"
+        );
+        assert_eq!(r.aggregated, e.aggregated, "{ctx}: aggregated");
+        assert_eq!(r.dropped_updates, e.dropped_updates, "{ctx}");
+        assert_eq!(r.stale_folded, e.stale_folded, "{ctx}");
+    }
+    assert!(eq_f64(reference.final_test_acc, engine.final_test_acc));
+    assert!(eq_f64(reference.final_test_loss, engine.final_test_loss));
+    assert!(eq_f64(reference.total_vtime, engine.total_vtime));
+    assert_eq!(reference.seed, engine.seed);
+}
+
+fn quick_cfg(policy: PolicyKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mobile("femnist_cnn", policy);
+    cfg.rounds = 6;
+    cfg.samples_per_client = 30;
+    cfg.local_steps = 2;
+    cfg.eval_every = 3;
+    cfg.lr = 0.01;
+    cfg
+}
+
+#[test]
+fn full_barrier_is_bit_identical_to_the_pre_engine_loop() {
+    if !have("femnist_cnn") {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    // a sampled config pins the path where stragglers sit out rounds and
+    // straggler_time must read their last-known latency
+    let mut sampled = quick_cfg(PolicyKind::Invariant);
+    sampled.clients = 8;
+    sampled.sample_fraction = 0.6;
+    sampled.recalibrate_every = 2;
+    let configs = [
+        quick_cfg(PolicyKind::Invariant),
+        quick_cfg(PolicyKind::Exclude),
+        sampled,
+    ];
+    for mut cfg in configs {
+        cfg.sync_mode = SyncMode::FullBarrier;
+        let reference = reference_run(&sess, &cfg).unwrap();
+        let engine = fluid::coordinator::run(&sess, &cfg).unwrap();
+        assert_history_identical(&reference, &engine);
+    }
+}
+
+#[test]
+fn deadline_and_buffered_run_and_never_exceed_barrier_vtime() {
+    if !have("femnist_cnn") {
+        return;
+    }
+    let sess = Session::new(artifacts_dir()).unwrap();
+    // vanilla policy (full masks everywhere) keeps per-client latency
+    // draws identical across modes, making vtime dominance exact
+    let mut base = ExperimentConfig::scale("femnist_cnn", PolicyKind::None, 10);
+    base.rounds = 6;
+    base.samples_per_client = 16;
+    base.local_steps = 1;
+    base.eval_every = base.rounds;
+    base.recalibrate_every = 2;
+
+    let barrier = fluid::coordinator::run(&sess, &base).unwrap();
+
+    let mut deadline_cfg = base.clone();
+    deadline_cfg.sync_mode = SyncMode::Deadline { multiple_of_t_target: 1.0 };
+    let deadline = fluid::coordinator::run(&sess, &deadline_cfg).unwrap();
+    assert_eq!(deadline.records.len(), base.rounds);
+    assert!(
+        deadline.total_vtime <= barrier.total_vtime + 1e-9,
+        "deadline {:.2} > barrier {:.2}",
+        deadline.total_vtime,
+        barrier.total_vtime
+    );
+    let dropped: usize = deadline.records.iter().map(|r| r.dropped_updates).sum();
+    assert!(dropped > 0, "a t_target-level cutoff must drop some straggler update");
+    assert!(deadline.final_test_acc.is_finite());
+
+    let mut buffered_cfg = base.clone();
+    buffered_cfg.sync_mode = SyncMode::Buffered { k: 8 };
+    let buffered = fluid::coordinator::run(&sess, &buffered_cfg).unwrap();
+    assert_eq!(buffered.records.len(), base.rounds);
+    assert!(
+        buffered.total_vtime <= barrier.total_vtime + 1e-9,
+        "buffered {:.2} > barrier {:.2}",
+        buffered.total_vtime,
+        barrier.total_vtime
+    );
+    let stale: usize = buffered.records.iter().map(|r| r.stale_folded).sum();
+    assert!(stale > 0, "k=8 of 10 must buffer and later fold some update");
+    assert!(buffered.final_test_acc.is_finite());
+    // every update is eventually aggregated or still buffered — never
+    // silently dropped in Buffered mode
+    let dropped_b: usize = buffered.records.iter().map(|r| r.dropped_updates).sum();
+    assert_eq!(dropped_b, 0);
+}

@@ -4,6 +4,7 @@
 use fluid::data::partition;
 use fluid::dropout::mask::kept_count;
 use fluid::dropout::{threshold, MaskSet, OrderedDropout, RandomDropout};
+use fluid::engine::{ClientArrival, EventScheduler, SyncMode};
 use fluid::fl::{fedavg, AggregateMode, ClientUpdate};
 use fluid::jsonlite::{self, Json};
 use fluid::model::ModelSpec;
@@ -104,6 +105,7 @@ fn prop_plain_fedavg_preserves_constant_consensus() {
                     params: params.clone(),
                     weight: w,
                     mask: MaskSet::full(&spec),
+                    staleness: 0,
                 })
                 .collect();
             for mode in [AggregateMode::Plain, AggregateMode::OwnershipWeighted] {
@@ -162,6 +164,7 @@ fn prop_ownership_aggregation_keeps_untrained_at_global() {
                             .collect(),
                         weight: 1.0,
                         mask: MaskSet::from_keep(&spec, &[keep]),
+                        staleness: 0,
                     }
                 })
                 .collect();
@@ -312,6 +315,139 @@ fn prop_detection_never_flags_fastest_client() {
             // every straggler needs r <= 1
             if d.rates.iter().any(|&r| r > 1.0) {
                 return Err("rate > 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn gen_arrivals(g: &mut Gen) -> Vec<ClientArrival> {
+    let n = g.usize_in(1, 30);
+    (0..n)
+        .map(|client| ClientArrival {
+            client,
+            at: g.f32_in(0.1, 100.0) as f64,
+            full_latency: g.f32_in(0.1, 100.0) as f64,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_full_barrier_round_time_is_max_arrival() {
+    check(
+        Config { cases: 100, ..Default::default() },
+        gen_arrivals,
+        |_| vec![],
+        |arrivals| {
+            let r = EventScheduler::resolve(SyncMode::FullBarrier, arrivals, None);
+            let max = arrivals.iter().map(|a| a.at).fold(0.0f64, f64::max);
+            if r.round_time != max {
+                return Err(format!("round_time {} != max arrival {max}", r.round_time));
+            }
+            if r.on_time.len() != arrivals.len() || !r.late.is_empty() {
+                return Err(format!(
+                    "full barrier must include everyone: on_time {} late {}",
+                    r.on_time.len(),
+                    r.late.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deadline_never_aggregates_after_cutoff() {
+    check(
+        Config { cases: 120, ..Default::default() },
+        |g: &mut Gen| {
+            let arrivals = gen_arrivals(g);
+            let t_target = g.f32_in(0.1, 100.0) as f64;
+            let mult = g.f32_in(0.5, 3.0) as f64;
+            (arrivals, t_target, mult)
+        },
+        |_| vec![],
+        |(arrivals, t_target, mult)| {
+            let cutoff = mult * t_target;
+            let r = EventScheduler::resolve(
+                SyncMode::Deadline { multiple_of_t_target: *mult },
+                arrivals,
+                Some(*t_target),
+            );
+            let at_of = |c: usize| arrivals.iter().find(|a| a.client == c).unwrap().at;
+            if arrivals.iter().any(|a| a.at <= cutoff) {
+                // the stated invariant: nothing aggregating arrived late
+                for &c in &r.on_time {
+                    if at_of(c) > cutoff {
+                        return Err(format!(
+                            "client {c} aggregated at {} after cutoff {cutoff}",
+                            at_of(c)
+                        ));
+                    }
+                }
+                for a in &r.late {
+                    if a.at <= cutoff {
+                        return Err(format!("client {} marked late at {}", a.client, a.at));
+                    }
+                }
+                if r.round_time > cutoff + 1e-12 {
+                    return Err(format!("round ran past the cutoff: {}", r.round_time));
+                }
+            } else {
+                // degenerate guard: the server waits for exactly the
+                // earliest arrival so the round still makes progress
+                if r.on_time.len() != 1 {
+                    return Err(format!("want 1 fallback arrival, got {}", r.on_time.len()));
+                }
+                let min = arrivals.iter().map(|a| a.at).fold(f64::INFINITY, f64::min);
+                if at_of(r.on_time[0]) != min {
+                    return Err("fallback is not the earliest arrival".into());
+                }
+            }
+            // conservation: every arrival is either on time or late
+            if r.on_time.len() + r.late.len() != arrivals.len() {
+                return Err("arrival lost by the barrier".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_buffered_round_time_is_kth_arrival() {
+    check(
+        Config { cases: 100, ..Default::default() },
+        |g: &mut Gen| {
+            let arrivals = gen_arrivals(g);
+            let k = g.usize_in(1, arrivals.len() + 4);
+            (arrivals, k)
+        },
+        |_| vec![],
+        |(arrivals, k)| {
+            let r =
+                EventScheduler::resolve(SyncMode::Buffered { k: *k }, arrivals, None);
+            let mut times: Vec<f64> = arrivals.iter().map(|a| a.at).collect();
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let k_eff = (*k).clamp(1, arrivals.len());
+            if r.round_time != times[k_eff - 1] {
+                return Err(format!(
+                    "round_time {} != {}-th arrival {}",
+                    r.round_time,
+                    k_eff,
+                    times[k_eff - 1]
+                ));
+            }
+            if r.on_time.len() != k_eff {
+                return Err(format!("on_time {} != k_eff {k_eff}", r.on_time.len()));
+            }
+            // nobody on time arrived after anyone late
+            let latest_on = r
+                .on_time
+                .iter()
+                .map(|&c| arrivals.iter().find(|a| a.client == c).unwrap().at)
+                .fold(0.0f64, f64::max);
+            if r.late.iter().any(|a| a.at < latest_on) {
+                return Err("late arrival earlier than an on-time one".into());
             }
             Ok(())
         },
