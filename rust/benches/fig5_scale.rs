@@ -2,15 +2,84 @@
 //! 20% as stragglers, including the "exclude stragglers" baseline the
 //! paper's scale study compares against.
 //!
+//! Since the fleet refactor this bench also exercises the *population*
+//! regime first: a 50k-client fleet (5k in quick mode) with 256 clients
+//! sampled per round under a scripted churn+drift scenario, run through
+//! the runtime-free simulation backend — no artifacts needed, so the
+//! fleet section always runs, and its throughput (descriptor bookkeeping,
+//! sampling, lazy hydration, virtual timing, masked FedAvg) is the thing
+//! being measured.
+//!
 //! Run: `cargo bench --bench fig5_scale [-- --full] [--seeds N]`
 
 use fluid::bench::{experiments as exp, full_mode, seed_count};
-use fluid::coordinator::report;
+use fluid::coordinator::{self, report, ExperimentConfig};
 use fluid::dropout::PolicyKind;
+use fluid::engine::ScenarioConfig;
+use std::time::Instant;
+
+fn fleet_section(full: bool) {
+    let fleet_size = if full { 50_000 } else { 5_000 };
+    let sample_k = 256;
+    let mut cfg = ExperimentConfig::fleet(
+        "femnist_cnn",
+        PolicyKind::Invariant,
+        fleet_size,
+        sample_k,
+    );
+    cfg.rounds = if full { 12 } else { 6 };
+    cfg.samples_per_client = 8;
+    cfg.local_steps = 1;
+    cfg.eval_every = cfg.rounds;
+    cfg.scenario = ScenarioConfig::parse("storm").expect("preset parses");
+
+    println!(
+        "== Fleet scale: {fleet_size} clients, {sample_k}/round, storm scenario (sim backend) ==\n"
+    );
+    let t0 = Instant::now();
+    match coordinator::run_sim(&cfg) {
+        Ok(res) => {
+            let wall = t0.elapsed().as_secs_f64();
+            let rows: Vec<Vec<String>> = res
+                .records
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.round.to_string(),
+                        r.cohort.len().to_string(),
+                        r.straggler_ids.len().to_string(),
+                        format!("{:.1}", r.round_time),
+                        format!("{}", r.aggregated),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                report::text_table(
+                    &["round", "cohort", "stragglers", "t_round s", "aggregated"],
+                    &rows
+                )
+            );
+            let client_rounds: usize =
+                res.records.iter().map(|r| r.cohort.len()).sum();
+            println!(
+                "wall {wall:.2}s  vtime {:.0}s  {:.0} client-rounds/s\n",
+                res.total_vtime,
+                client_rounds as f64 / wall.max(1e-9)
+            );
+        }
+        Err(e) => eprintln!("fleet section failed: {e:#}"),
+    }
+}
 
 fn main() {
     let full = full_mode();
     let seeds = seed_count().min(2);
+
+    // population regime first: needs no artifacts
+    fleet_section(full);
+
+    // classic Fig-5 accuracy study over real artifacts
     let sess = exp::session_or_exit();
 
     let setups: Vec<(&str, usize)> = if full {

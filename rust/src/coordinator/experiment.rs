@@ -7,23 +7,37 @@
 //! → observe non-straggler deltas (the L1 `neuron_delta` kernel) to
 //! refresh the invariant sets and thresholds.
 //!
-//! The mechanics live in [`crate::engine`]: this function only opens the
-//! model's step runner and hands the config to a [`RoundEngine`] backed
-//! by the in-process [`LocalExecutor`]. Round synchronization follows
-//! [`ExperimentConfig::sync_mode`] — the default `FullBarrier` reproduces
-//! the historical monolithic loop bit-for-bit (pinned by
-//! `tests/engine_regression.rs`).
+//! The mechanics live in [`crate::engine`]: these functions only pick an
+//! executor backend and hand the config to a [`RoundEngine`].
+//!
+//! * [`run`] — PJRT-backed execution over real artifacts
+//!   ([`LocalExecutor`]). Round synchronization follows
+//!   [`ExperimentConfig::sync_mode`] — the default `FullBarrier`
+//!   reproduces the historical monolithic loop bit-for-bit (pinned by
+//!   `tests/engine_regression.rs`).
+//! * [`run_sim`] — runtime-free deterministic simulation
+//!   ([`crate::engine::SimExecutor`]): no artifacts, no `xla` feature.
+//!   Timing, sampling, churn and aggregation flow through the identical
+//!   engine paths; local training is pseudo. This is the backend for
+//!   fleet-scale scenario studies and the determinism suite.
 
 use super::{ExperimentConfig, ExperimentResult};
-use crate::engine::{LocalExecutor, RoundEngine};
+use crate::engine::{LocalExecutor, RoundEngine, SimExecutor};
+use crate::model::sim_spec;
 use crate::runtime::Session;
 use anyhow::Context;
 
-/// Run one experiment to completion.
+/// Run one experiment to completion against real artifacts.
 pub fn run(sess: &Session, cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
     let runner = sess
         .runner(&cfg.model)
         .with_context(|| format!("loading artifacts for {}", cfg.model))?;
-    let engine = RoundEngine::new(&runner, cfg, LocalExecutor::new(cfg.threads))?;
+    let engine = RoundEngine::new(cfg, LocalExecutor::new(&runner, cfg.threads))?;
+    engine.run()
+}
+
+/// Run one experiment through the runtime-free simulation backend.
+pub fn run_sim(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
+    let engine = RoundEngine::new(cfg, SimExecutor::new(sim_spec(&cfg.model), cfg.threads))?;
     engine.run()
 }

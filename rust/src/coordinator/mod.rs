@@ -8,11 +8,11 @@
 pub mod experiment;
 pub mod report;
 
-pub use experiment::run;
+pub use experiment::{run, run_sim};
 
 use crate::dropout::PolicyKind;
-use crate::engine::SyncMode;
-use crate::fl::AggregateMode;
+use crate::engine::{ScenarioConfig, SyncMode};
+use crate::fl::{AggregateMode, SamplerKind};
 use crate::jsonlite::Json;
 
 /// Everything that defines one run.
@@ -58,6 +58,18 @@ pub struct ExperimentConfig {
     /// round-synchronization policy (full barrier / deadline / buffered
     /// semi-async — see [`SyncMode`])
     pub sync_mode: SyncMode,
+    /// fleet-scale mode: simulate this many clients as lightweight
+    /// descriptors with per-round cohort sampling and lazy shard
+    /// hydration (None = classic path, every client materialized)
+    pub fleet_size: Option<usize>,
+    /// sampled cohort size per round (fleet mode; clamped to [1, fleet])
+    pub sample_k: usize,
+    /// per-round client-sampling policy (fleet mode)
+    pub sampler: SamplerKind,
+    /// scripted fleet dynamics: churn, straggler drift, speed
+    /// fluctuation (see `engine::scenario`; takes precedence over the
+    /// paper's `fluctuation` protocol when set)
+    pub scenario: Option<ScenarioConfig>,
     pub seed: u64,
     /// worker threads for parallel client execution
     pub threads: usize,
@@ -88,6 +100,10 @@ impl ExperimentConfig {
             invariant_th_override: None,
             mobile_fleet: true,
             sync_mode: SyncMode::FullBarrier,
+            fleet_size: None,
+            sample_k: 0,
+            sampler: SamplerKind::Uniform,
+            scenario: None,
             seed: 42,
             threads: crate::util::pool::default_threads(),
         }
@@ -99,6 +115,27 @@ impl ExperimentConfig {
             clients,
             mobile_fleet: false,
             samples_per_client: 30,
+            ..Self::mobile(model, policy)
+        }
+    }
+
+    /// Fleet-scale preset: a population of `fleet_size` descriptor-only
+    /// clients, `sample_k` of them sampled per round, shards hydrated
+    /// lazily. Pair with [`ExperimentConfig::scenario`] for scripted
+    /// churn / drift and `coordinator::run_sim` for runtime-free runs.
+    pub fn fleet(
+        model: &str,
+        policy: PolicyKind,
+        fleet_size: usize,
+        sample_k: usize,
+    ) -> Self {
+        Self {
+            fleet_size: Some(fleet_size),
+            sample_k: sample_k.max(1),
+            sampler: SamplerKind::Uniform,
+            mobile_fleet: false,
+            samples_per_client: 16,
+            recalibrate_every: 1,
             ..Self::mobile(model, policy)
         }
     }
@@ -123,6 +160,8 @@ pub struct RoundRecord {
     pub round_time: f64,
     /// cumulative virtual time
     pub vtime: f64,
+    /// clients sampled into this round's cohort (id order)
+    pub cohort: Vec<usize>,
     pub straggler_ids: Vec<usize>,
     pub straggler_rates: Vec<f64>,
     /// slowest non-straggler latency (the FLuID target)
@@ -194,6 +233,10 @@ impl ExperimentResult {
                         "stragglers",
                         r.straggler_ids.iter().map(|&i| i as i64).collect::<Vec<i64>>(),
                     )
+                    .set(
+                        "cohort",
+                        r.cohort.iter().map(|&i| i as i64).collect::<Vec<i64>>(),
+                    )
                     .set("rates", r.straggler_rates.clone())
                     .set("aggregated", r.aggregated)
                     .set("dropped", r.dropped_updates)
@@ -229,9 +272,16 @@ mod tests {
         assert!(m.mobile_fleet);
         assert_eq!(m.clients, 5);
         assert_eq!(m.sync_mode, SyncMode::FullBarrier);
+        assert_eq!(m.fleet_size, None);
         let s = ExperimentConfig::scale("cifar_vgg9", PolicyKind::Ordered, 100);
         assert!(!s.mobile_fleet);
         assert_eq!(s.clients, 100);
+        let f = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 10_000, 128);
+        assert_eq!(f.fleet_size, Some(10_000));
+        assert_eq!(f.sample_k, 128);
+        assert_eq!(f.sampler, SamplerKind::Uniform);
+        assert!(f.scenario.is_none());
+        assert!(!f.mobile_fleet);
     }
 
     #[test]
@@ -243,6 +293,7 @@ mod tests {
                 round: 0,
                 round_time: 3.0,
                 vtime: 3.0,
+                cohort: vec![0, 1, 2, 3, 4],
                 straggler_ids: vec![4],
                 straggler_rates: vec![0.75],
                 t_target: 2.8,

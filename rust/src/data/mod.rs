@@ -143,6 +143,55 @@ impl FlData {
     }
 }
 
+/// Lazy shard hydration — the fleet-scale data seam.
+///
+/// A source knows how many shards exist and how big each is *without*
+/// materializing any of them; [`ShardSource::hydrate`] renders one
+/// shard's [`Split`] on demand. The round engine hydrates only the
+/// sampled cohort each round, so peak resident data is proportional to
+/// the cohort, never the fleet.
+pub trait ShardSource: Send + Sync {
+    fn num_shards(&self) -> usize;
+
+    /// Examples in `shard` (known without hydration — descriptor data).
+    fn shard_len(&self, shard: usize) -> usize;
+
+    /// Materialize one shard's data.
+    fn hydrate(&self, shard: usize) -> Split;
+
+    /// The shared held-out test split (materialized once).
+    fn test(&self) -> &Split;
+
+    fn num_classes(&self) -> usize;
+}
+
+/// Model names the built-in synthetic datasets can serve. The classic
+/// artifact path accepts anything with a manifest on disk; the sim and
+/// fleet paths are limited to these and validate up front.
+pub fn is_known_model(model: &str) -> bool {
+    matches!(
+        model,
+        "femnist_cnn" | "cifar_vgg9" | "cifar_resnet18" | "shakespeare_lstm"
+    )
+}
+
+/// Lazy source matching a model name, with heterogeneous per-shard sizes
+/// (the fleet counterpart of [`FlData::for_model`]).
+pub fn shard_source_for_model(
+    model: &str,
+    sizes: Vec<usize>,
+    seed: u64,
+) -> Box<dyn ShardSource> {
+    match model {
+        "femnist_cnn" => Box::new(synthetic::FemnistShards::new(sizes, seed)),
+        "cifar_vgg9" | "cifar_resnet18" => {
+            Box::new(synthetic::CifarShards::new(sizes, seed))
+        }
+        "shakespeare_lstm" => Box::new(shakespeare::ShakespeareShards::new(sizes, 48, seed)),
+        other => panic!("unknown model {other}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -52,16 +52,41 @@ pub fn dirichlet(labels: &[i32], k: usize, alpha: f64, rng: &mut Pcg32) -> Vec<V
 /// Contiguous chunks of (roughly) equal size — the shape of LEAF's
 /// by-writer / by-role splits over a sequential corpus.
 pub fn by_chunks(n: usize, k: usize) -> Vec<Vec<usize>> {
-    let mut out = Vec::with_capacity(k);
+    (0..k)
+        .map(|c| {
+            let (start, end) = chunk_bounds(n, k, c);
+            (start..end).collect()
+        })
+        .collect()
+}
+
+/// Bounds `[start, end)` of chunk `shard` in a `by_chunks(n, k)`
+/// partition, computed in O(1) without materializing any index vector —
+/// the lazy-hydration primitive for fleet-scale chunk partitions (only
+/// the sampled cohort's chunks ever become data).
+pub fn chunk_bounds(n: usize, k: usize, shard: usize) -> (usize, usize) {
+    assert!(shard < k, "shard {shard} out of range for {k} chunks");
     let base = n / k;
     let extra = n % k;
-    let mut start = 0;
-    for c in 0..k {
-        let len = base + usize::from(c < extra);
-        out.push((start..start + len).collect());
-        start += len;
-    }
-    out
+    // chunks [0, extra) have base+1 elements, the rest have base
+    let start = shard * base + shard.min(extra);
+    let len = base + usize::from(shard < extra);
+    (start, start + len)
+}
+
+/// Heterogeneous per-shard example counts for fleet-scale partitions:
+/// a lognormal spread around `base` (LEAF-style size skew), deterministic
+/// in `seed`. Sizes never drop below 2 so every shard can fill a batch by
+/// wrapping.
+pub fn lognormal_shard_sizes(k: usize, base: usize, sigma: f32, seed: u64) -> Vec<usize> {
+    let mut rng = Pcg32::new(seed ^ 0x51AD5, 0x512E5);
+    let cap = base.saturating_mul(6).max(4);
+    (0..k)
+        .map(|_| {
+            let s = (base as f64 * rng.lognormal(sigma) as f64).round() as usize;
+            s.clamp(2, cap)
+        })
+        .collect()
 }
 
 /// Every sample assigned exactly once — shared invariant of all
@@ -131,6 +156,34 @@ mod tests {
         assert!(is_exact_cover(&parts, 10));
         assert_eq!(parts[0], vec![0, 1, 2, 3]);
         assert_eq!(parts[2], vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn chunk_bounds_match_materialized_chunks() {
+        for (n, k) in [(10, 3), (103, 7), (5, 8), (0, 2), (64, 64)] {
+            let parts = by_chunks(n, k);
+            for (c, part) in parts.iter().enumerate() {
+                let (start, end) = chunk_bounds(n, k, c);
+                assert_eq!(end - start, part.len(), "n={n} k={k} c={c}");
+                if !part.is_empty() {
+                    assert_eq!(part[0], start);
+                    assert_eq!(*part.last().unwrap(), end - 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_sizes_are_deterministic_and_spread() {
+        let a = lognormal_shard_sizes(1000, 20, 0.45, 7);
+        let b = lognormal_shard_sizes(1000, 20, 0.45, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&s| (2..=120).contains(&s)));
+        let min = *a.iter().min().unwrap();
+        let max = *a.iter().max().unwrap();
+        assert!(max > min, "no size heterogeneity");
+        let mean = a.iter().sum::<usize>() as f64 / a.len() as f64;
+        assert!((10.0..=40.0).contains(&mean), "mean {mean}");
     }
 
     #[test]

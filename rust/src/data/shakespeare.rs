@@ -6,7 +6,7 @@
 //! paper's: predict the character following an 80-char (here `seq_len`)
 //! window.
 
-use super::{partition, FlData, Split, XStore};
+use super::{partition, FlData, ShardSource, Split, XStore};
 use crate::util::prng::Pcg32;
 
 /// Fixed 80-symbol vocabulary (matches model.py VOCAB). Unknown chars map
@@ -183,6 +183,98 @@ pub fn load(num_clients: usize, samples_per_client: usize, seq_len: usize, seed:
     }
 }
 
+/// Lazy Shakespeare "role" shards for the fleet-scale path: the corpus
+/// tokens are encoded once; each shard's windows render on demand from a
+/// contiguous chunk ([`partition::chunk_bounds`], O(1) per shard). With
+/// more shards than usable chunks (a 50k fleet over a small corpus),
+/// shards cycle through the chunk ring — many "roles" can read the same
+/// scene, as LEAF's by-role split also allows.
+pub struct ShakespeareShards {
+    tokens: Vec<i32>,
+    sizes: Vec<usize>,
+    seq_len: usize,
+    /// number of distinct chunks the corpus supports
+    ring: usize,
+    seed: u64,
+    test: Split,
+}
+
+impl ShakespeareShards {
+    pub fn new(sizes: Vec<usize>, seq_len: usize, seed: u64) -> Self {
+        let tokens: Vec<i32> = CORPUS.chars().map(encode).collect();
+        let n = tokens.len();
+        assert!(n > seq_len + 2, "corpus too small");
+        // each chunk should hold at least a couple of window starts
+        let ring = (n / (seq_len / 2).max(8)).max(1).min(sizes.len().max(1));
+
+        let total: usize = sizes.iter().sum();
+        let test_n = (total / 5).clamp(32, 500);
+        let mut xs = Vec::with_capacity(test_n * seq_len);
+        let mut ys = Vec::with_capacity(test_n);
+        let stride = ((n - seq_len - 1) / test_n).max(1);
+        for i in 0..test_n {
+            let start = (i * stride) % (n - seq_len - 1);
+            xs.extend(tokens[start..start + seq_len].iter());
+            ys.push(tokens[start + seq_len]);
+        }
+        let test = Split {
+            xs: XStore::I32(xs),
+            ys,
+            feature_len: seq_len,
+        };
+        Self {
+            tokens,
+            sizes,
+            seq_len,
+            ring,
+            seed,
+            test,
+        }
+    }
+}
+
+impl ShardSource for ShakespeareShards {
+    fn num_shards(&self) -> usize {
+        self.sizes.len()
+    }
+
+    fn shard_len(&self, shard: usize) -> usize {
+        self.sizes[shard]
+    }
+
+    fn hydrate(&self, shard: usize) -> Split {
+        let n = self.tokens.len();
+        let seq_len = self.seq_len;
+        let (lo, hi_excl) = partition::chunk_bounds(n, self.ring, shard % self.ring);
+        let lo = lo.min(n - seq_len - 2);
+        let hi = hi_excl.saturating_sub(1).max(lo);
+        let samples = self.sizes[shard];
+        let mut rng = Pcg32::new(self.seed ^ 0x5AE5_F1, shard as u64 + 1);
+        let mut xs = Vec::with_capacity(samples * seq_len);
+        let mut ys = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let max_start = (hi.min(n - seq_len - 2)).max(lo);
+            let start = lo + rng.below_usize((max_start - lo).max(1));
+            let start = start.min(n - seq_len - 1);
+            xs.extend(self.tokens[start..start + seq_len].iter());
+            ys.push(self.tokens[start + seq_len]);
+        }
+        Split {
+            xs: XStore::I32(xs),
+            ys,
+            feature_len: seq_len,
+        }
+    }
+
+    fn test(&self) -> &Split {
+        &self.test
+    }
+
+    fn num_classes(&self) -> usize {
+        80
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,5 +332,27 @@ mod tests {
             (XStore::I32(x), XStore::I32(y)) => assert_eq!(x, y),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn lazy_shards_hydrate_valid_windows_even_past_the_corpus() {
+        // more shards than the corpus has distinct chunks: the ring cycles
+        let src = ShakespeareShards::new(vec![6; 10_000], 48, 3);
+        assert_eq!(src.num_shards(), 10_000);
+        for &shard in &[0usize, 1, 137, 9_999] {
+            let s = src.hydrate(shard);
+            assert_eq!(s.len(), 6);
+            assert_eq!(s.feature_len, 48);
+            if let XStore::I32(x) = &s.xs {
+                assert!(x.iter().all(|&t| (0..80).contains(&t)));
+            }
+            assert!(s.ys.iter().all(|&t| (0..80).contains(&t)));
+        }
+        // replayable
+        let a = src.hydrate(42);
+        let b = src.hydrate(42);
+        assert_eq!(a.ys, b.ys);
+        assert!(!src.test().is_empty());
+        assert_eq!(src.num_classes(), 80);
     }
 }

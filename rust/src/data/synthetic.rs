@@ -7,7 +7,7 @@
 //! exhibiting LEAF-style non-IID structure (writers own class subsets and
 //! styles).
 
-use super::{FlData, Split, XStore};
+use super::{FlData, ShardSource, Split, XStore};
 use crate::util::prng::Pcg32;
 
 pub const FEMNIST_CLASSES: usize = 62;
@@ -56,40 +56,45 @@ fn render_femnist(
     }
 }
 
-/// LEAF-style by-writer FEMNIST: each client is a "writer" with a class
-/// subset (~20 of 62) and a persistent style (shift/scale); the test set
-/// is style-neutral.
-pub fn femnist(num_clients: usize, samples_per_client: usize, seed: u64) -> FlData {
-    let templates: Vec<_> = (0..FEMNIST_CLASSES).map(femnist_template).collect();
+/// One writer's shard, generated independently of every other shard
+/// (each writer owns its own PRNG stream) — the unit of lazy hydration.
+fn femnist_client_split(
+    templates: &[Vec<(f32, f32, f32, f32)>],
+    c: usize,
+    samples: usize,
+    seed: u64,
+) -> Split {
     let feature_len = FEMNIST_SIDE * FEMNIST_SIDE;
+    let mut rng = Pcg32::new(seed ^ 0xFE31, c as u64 + 1);
+    // writer's class subset (non-IID): 16..24 classes
+    let k = 16 + rng.below_usize(9);
+    let classes = rng.sample_indices(FEMNIST_CLASSES, k);
+    // writer style
+    let (dx, dy) = (rng.uniform(-2.5, 2.5), rng.uniform(-2.5, 2.5));
+    let scale = rng.uniform(0.85, 1.15);
 
-    let mut clients = Vec::with_capacity(num_clients);
-    for c in 0..num_clients {
-        let mut rng = Pcg32::new(seed ^ 0xFE31, c as u64 + 1);
-        // writer's class subset (non-IID): 16..24 classes
-        let k = 16 + rng.below_usize(9);
-        let classes = rng.sample_indices(FEMNIST_CLASSES, k);
-        // writer style
-        let (dx, dy) = (rng.uniform(-2.5, 2.5), rng.uniform(-2.5, 2.5));
-        let scale = rng.uniform(0.85, 1.15);
-
-        let mut xs = Vec::with_capacity(samples_per_client * feature_len);
-        let mut ys = Vec::with_capacity(samples_per_client);
-        for _ in 0..samples_per_client {
-            let class = classes[rng.below_usize(classes.len())];
-            render_femnist(&templates[class], dx, dy, scale, 0.15, &mut rng, &mut xs);
-            ys.push(class as i32);
-        }
-        clients.push(Split {
-            xs: XStore::F32(xs),
-            ys,
-            feature_len,
-        });
+    let mut xs = Vec::with_capacity(samples * feature_len);
+    let mut ys = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let class = classes[rng.below_usize(classes.len())];
+        render_femnist(&templates[class], dx, dy, scale, 0.15, &mut rng, &mut xs);
+        ys.push(class as i32);
     }
+    Split {
+        xs: XStore::F32(xs),
+        ys,
+        feature_len,
+    }
+}
 
-    // style-neutral balanced test split
+/// Style-neutral balanced test pool of `test_n` examples.
+fn femnist_test(
+    templates: &[Vec<(f32, f32, f32, f32)>],
+    test_n: usize,
+    seed: u64,
+) -> Split {
+    let feature_len = FEMNIST_SIDE * FEMNIST_SIDE;
     let mut rng = Pcg32::new(seed ^ 0xFE32, 0);
-    let test_n = (num_clients * samples_per_client / 5).clamp(FEMNIST_CLASSES, 2000);
     let mut xs = Vec::with_capacity(test_n * feature_len);
     let mut ys = Vec::with_capacity(test_n);
     for i in 0..test_n {
@@ -97,15 +102,75 @@ pub fn femnist(num_clients: usize, samples_per_client: usize, seed: u64) -> FlDa
         render_femnist(&templates[class], 0.0, 0.0, 1.0, 0.15, &mut rng, &mut xs);
         ys.push(class as i32);
     }
+    Split {
+        xs: XStore::F32(xs),
+        ys,
+        feature_len,
+    }
+}
 
+/// LEAF-style by-writer FEMNIST: each client is a "writer" with a class
+/// subset (~20 of 62) and a persistent style (shift/scale); the test set
+/// is style-neutral.
+pub fn femnist(num_clients: usize, samples_per_client: usize, seed: u64) -> FlData {
+    let templates: Vec<_> = (0..FEMNIST_CLASSES).map(femnist_template).collect();
+    let clients = (0..num_clients)
+        .map(|c| femnist_client_split(&templates, c, samples_per_client, seed))
+        .collect();
+    let test_n = (num_clients * samples_per_client / 5).clamp(FEMNIST_CLASSES, 2000);
     FlData {
         clients,
-        test: Split {
-            xs: XStore::F32(xs),
-            ys,
-            feature_len,
-        },
+        test: femnist_test(&templates, test_n, seed),
         num_classes: FEMNIST_CLASSES,
+    }
+}
+
+/// Lazy FEMNIST shards for the fleet-scale path: per-writer generation is
+/// seed-independent across writers, so a shard renders on demand and only
+/// the sampled cohort's pixels are ever resident.
+pub struct FemnistShards {
+    templates: Vec<Vec<(f32, f32, f32, f32)>>,
+    sizes: Vec<usize>,
+    seed: u64,
+    test: Split,
+}
+
+impl FemnistShards {
+    pub fn new(sizes: Vec<usize>, seed: u64) -> Self {
+        let templates: Vec<_> = (0..FEMNIST_CLASSES).map(femnist_template).collect();
+        let total: usize = sizes.iter().sum();
+        // smaller cap than the eager path: the fleet test pool is a smoke
+        // gauge, not an accuracy benchmark
+        let test_n = (total / 5).clamp(FEMNIST_CLASSES, 800);
+        let test = femnist_test(&templates, test_n, seed);
+        Self {
+            templates,
+            sizes,
+            seed,
+            test,
+        }
+    }
+}
+
+impl ShardSource for FemnistShards {
+    fn num_shards(&self) -> usize {
+        self.sizes.len()
+    }
+
+    fn shard_len(&self, shard: usize) -> usize {
+        self.sizes[shard]
+    }
+
+    fn hydrate(&self, shard: usize) -> Split {
+        femnist_client_split(&self.templates, shard, self.sizes[shard], self.seed)
+    }
+
+    fn test(&self) -> &Split {
+        &self.test
+    }
+
+    fn num_classes(&self) -> usize {
+        FEMNIST_CLASSES
     }
 }
 
@@ -195,6 +260,79 @@ pub fn cifar10(num_clients: usize, samples_per_client: usize, seed: u64, iid: bo
     }
 }
 
+/// Lazy CIFAR shards for the fleet-scale path. The eager [`cifar10`]
+/// builds a global pool and partitions it — inherently O(fleet) memory —
+/// so the fleet regime switches to per-client generation: each client
+/// renders from its own PRNG stream with a 6-of-10 class subset
+/// (Dirichlet-like label skew without a shared pool).
+pub struct CifarShards {
+    sizes: Vec<usize>,
+    seed: u64,
+    test: Split,
+}
+
+impl CifarShards {
+    pub fn new(sizes: Vec<usize>, seed: u64) -> Self {
+        let feature_len = CIFAR_SIDE * CIFAR_SIDE * 3;
+        let total: usize = sizes.iter().sum();
+        let test_n = (total / 5).clamp(CIFAR_CLASSES, 500);
+        let mut rng = Pcg32::new(seed ^ 0xC1FA_7E57, 1);
+        let mut xs = Vec::with_capacity(test_n * feature_len);
+        let mut ys = Vec::with_capacity(test_n);
+        for i in 0..test_n {
+            let class = i % CIFAR_CLASSES;
+            render_cifar(class, 0.1, &mut rng, &mut xs);
+            ys.push(class as i32);
+        }
+        Self {
+            sizes,
+            seed,
+            test: Split {
+                xs: XStore::F32(xs),
+                ys,
+                feature_len,
+            },
+        }
+    }
+}
+
+impl ShardSource for CifarShards {
+    fn num_shards(&self) -> usize {
+        self.sizes.len()
+    }
+
+    fn shard_len(&self, shard: usize) -> usize {
+        self.sizes[shard]
+    }
+
+    fn hydrate(&self, shard: usize) -> Split {
+        let feature_len = CIFAR_SIDE * CIFAR_SIDE * 3;
+        let samples = self.sizes[shard];
+        let mut rng = Pcg32::new(self.seed ^ 0xC1FA_0D, shard as u64 + 1);
+        let classes = rng.sample_indices(CIFAR_CLASSES, 6);
+        let mut xs = Vec::with_capacity(samples * feature_len);
+        let mut ys = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let class = classes[rng.below_usize(classes.len())];
+            render_cifar(class, 0.1, &mut rng, &mut xs);
+            ys.push(class as i32);
+        }
+        Split {
+            xs: XStore::F32(xs),
+            ys,
+            feature_len,
+        }
+    }
+
+    fn test(&self) -> &Split {
+        &self.test
+    }
+
+    fn num_classes(&self) -> usize {
+        CIFAR_CLASSES
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +392,48 @@ mod tests {
         // dirichlet split is uneven but complete
         let lens: Vec<usize> = d.clients.iter().map(|c| c.len()).collect();
         assert!(lens.iter().any(|&l| l != 30), "{lens:?}");
+    }
+
+    #[test]
+    fn lazy_femnist_shards_match_the_eager_build() {
+        // hydrate(c) must reproduce the exact split femnist() materializes
+        let eager = femnist(4, 12, 77);
+        let src = FemnistShards::new(vec![12; 4], 77);
+        assert_eq!(src.num_shards(), 4);
+        for c in 0..4 {
+            let lazy = src.hydrate(c);
+            assert_eq!(lazy.ys, eager.clients[c].ys, "client {c}");
+            match (&lazy.xs, &eager.clients[c].xs) {
+                (XStore::F32(a), XStore::F32(b)) => assert_eq!(a, b, "client {c}"),
+                _ => panic!(),
+            }
+        }
+        assert_eq!(src.num_classes(), 62);
+    }
+
+    #[test]
+    fn lazy_shards_honor_heterogeneous_sizes() {
+        let sizes = vec![3, 9, 5];
+        let fem = FemnistShards::new(sizes.clone(), 5);
+        let cif = CifarShards::new(sizes.clone(), 5);
+        for (c, &s) in sizes.iter().enumerate() {
+            assert_eq!(fem.shard_len(c), s);
+            assert_eq!(fem.hydrate(c).len(), s);
+            assert_eq!(cif.shard_len(c), s);
+            assert_eq!(cif.hydrate(c).len(), s);
+        }
+        assert!(!fem.test().is_empty());
+        assert!(!cif.test().is_empty());
+    }
+
+    #[test]
+    fn lazy_cifar_shards_are_deterministic_and_skewed() {
+        let a = CifarShards::new(vec![30; 2], 9).hydrate(1);
+        let b = CifarShards::new(vec![30; 2], 9).hydrate(1);
+        assert_eq!(a.ys, b.ys);
+        // 6-of-10 class subset: some class must be absent
+        let h = a.class_histogram(10);
+        assert!(h.iter().any(|&c| c == 0), "no label skew: {h:?}");
     }
 
     #[test]

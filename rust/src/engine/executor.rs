@@ -1,22 +1,41 @@
 //! The client-execution seam.
 //!
-//! [`ClientExecutor`] is where the engine hands a batch of per-client
-//! work to a backend. [`LocalExecutor`] runs it on the in-process
-//! fork-join pool (`util::pool::scope_map`), exactly as the historical
-//! round loop did; the trait boundary is where sharded / multi-process /
-//! remote backends plug in without the round logic changing.
+//! [`ClientExecutor`] is where the engine hands a round's per-client work
+//! to a backend — and, since the fleet refactor, the *only* layer that
+//! touches a runtime at all: the engine itself never sees a `StepRunner`.
+//! Two backends ship in-tree:
+//!
+//! * [`LocalExecutor`] — the PJRT-backed in-process fork-join pool
+//!   (`util::pool::scope_map`), exactly as the historical round loop ran;
+//!   sharded / multi-process / remote backends plug in at the same seam.
+//! * [`SimExecutor`] — a runtime-free deterministic backend for
+//!   population-scale simulation: pseudo-training perturbs parameters
+//!   from a per-(client, round) PRNG stream, the delta kernel is an exact
+//!   host reimplementation, and evaluation returns pseudo-metrics derived
+//!   from the parameter state. It needs no artifacts and no `xla`
+//!   feature, which is what lets the 50k-client determinism suite run on
+//!   CI hardware.
+//!
+//! Cohort slices are *job-aligned*: `cohort[i]` / `masks[i]` belong to
+//! `jobs[i]`. The engine hydrates only the sampled cohort, so executors
+//! never index by global client id.
 
+use crate::data::Split;
 use crate::dropout::MaskSet;
-use crate::fl::{Client, LocalResult};
+use crate::fl::{self, Client, LocalResult};
+use crate::model::ModelSpec;
 use crate::runtime::StepRunner;
 use crate::tensor::Tensor;
 use crate::util::pool::scope_map;
+use crate::util::prng::Pcg32;
 
 /// One client's local-training work item for a round.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainJob {
-    /// client id (index into the engine's client/mask tables)
+    /// global client id (PRNG salt + bookkeeping)
     pub client: usize,
+    /// round index (sim backends shape pseudo-metrics with it)
+    pub round: usize,
     /// local SGD steps
     pub steps: usize,
     pub lr: f32,
@@ -32,14 +51,16 @@ pub struct TrainJob {
 /// failures stay per-client so a future backend can surface partial
 /// progress instead of poisoning the round.
 pub trait ClientExecutor: Sync {
-    /// Run local training for every job. `masks` is the full per-client
-    /// mask table (indexed by `TrainJob::client`), `params` the current
-    /// global model.
+    /// The model's ordering contract (params / masks / delta groups).
+    fn spec(&self) -> &ModelSpec;
+
+    /// Run local training for every job. `cohort[i]` and `masks[i]` are
+    /// the client and sub-model of `jobs[i]`; `params` the current global
+    /// model.
     fn run_clients(
         &self,
-        runner: &StepRunner,
-        clients: &[Client],
-        masks: &[MaskSet],
+        cohort: &[&Client],
+        masks: &[&MaskSet],
         params: &[Tensor],
         jobs: &[TrainJob],
     ) -> Vec<crate::Result<LocalResult>>;
@@ -48,39 +69,52 @@ pub trait ClientExecutor: Sync {
     /// against the pre-aggregation globals.
     fn run_deltas(
         &self,
-        runner: &StepRunner,
         old: &[Tensor],
         news: &[&[Tensor]],
     ) -> Vec<crate::Result<Vec<Tensor>>>;
+
+    /// Evaluate `params` over a split: (mean loss, accuracy).
+    fn evaluate(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        split: &Split,
+    ) -> crate::Result<(f64, f64)>;
 }
 
 /// In-process executor over the scoped thread pool — the historical
 /// `scope_map` execution path behind the trait seam.
-#[derive(Clone, Copy, Debug)]
-pub struct LocalExecutor {
+/// (No `Debug` derive: the PJRT-backed `StepRunner` holds executable
+/// handles that don't implement it.)
+#[derive(Clone, Copy)]
+pub struct LocalExecutor<'r> {
+    runner: &'r StepRunner,
     pub threads: usize,
 }
 
-impl LocalExecutor {
-    pub fn new(threads: usize) -> Self {
-        Self { threads }
+impl<'r> LocalExecutor<'r> {
+    pub fn new(runner: &'r StepRunner, threads: usize) -> Self {
+        Self { runner, threads }
     }
 }
 
-impl ClientExecutor for LocalExecutor {
+impl ClientExecutor for LocalExecutor<'_> {
+    fn spec(&self) -> &ModelSpec {
+        &self.runner.spec
+    }
+
     fn run_clients(
         &self,
-        runner: &StepRunner,
-        clients: &[Client],
-        masks: &[MaskSet],
+        cohort: &[&Client],
+        masks: &[&MaskSet],
         params: &[Tensor],
         jobs: &[TrainJob],
     ) -> Vec<crate::Result<LocalResult>> {
-        scope_map(jobs, self.threads, |_, job| {
-            clients[job.client].local_train(
-                runner,
+        scope_map(jobs, self.threads, |i, job| {
+            cohort[i].local_train(
+                self.runner,
                 params,
-                masks[job.client].tensors(),
+                masks[i].tensors(),
                 job.steps,
                 job.lr,
                 job.seed,
@@ -91,13 +125,268 @@ impl ClientExecutor for LocalExecutor {
 
     fn run_deltas(
         &self,
-        runner: &StepRunner,
         old: &[Tensor],
         news: &[&[Tensor]],
     ) -> Vec<crate::Result<Vec<Tensor>>> {
         // §Perf L3: voters execute the delta kernel concurrently —
         // calibration cost drops from #voters x delta_latency to roughly
         // one delta_latency (paper claims < 5% overhead)
-        scope_map(news, self.threads, |_, new| runner.delta_step(old, new))
+        scope_map(news, self.threads, |_, new| self.runner.delta_step(old, new))
+    }
+
+    fn evaluate(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        split: &Split,
+    ) -> crate::Result<(f64, f64)> {
+        fl::evaluate_split(self.runner, params, masks, split)
+    }
+}
+
+/// Runtime-free deterministic backend for population-scale simulation.
+///
+/// Learning here is *pseudo*: what the backend guarantees is exact
+/// replayability — every output is a pure function of `(global params,
+/// job)` with no cross-client or cross-thread coupling, so a run is
+/// bit-identical across thread counts and across replays of the same
+/// seed. Timing, sampling, churn and aggregation (the things the fleet
+/// layer actually studies) flow through the identical engine paths a
+/// PJRT-backed run uses.
+#[derive(Clone, Debug)]
+pub struct SimExecutor {
+    spec: ModelSpec,
+    pub threads: usize,
+}
+
+impl SimExecutor {
+    pub fn new(spec: ModelSpec, threads: usize) -> Self {
+        Self { spec, threads }
+    }
+}
+
+/// FNV-1a over parameter bit patterns — the deterministic state digest
+/// sim evaluation seeds from.
+fn param_digest(params: &[Tensor]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for t in params {
+        for &v in t.data() {
+            h ^= v.to_bits() as u64;
+            h = h.wrapping_mul(0x1_0000_0001_B3);
+        }
+    }
+    h
+}
+
+/// Host reimplementation of the L1 `neuron_delta` kernel: per-neuron max
+/// relative weight change of each delta-input param (the same math the
+/// runtime integration test checks the artifact against).
+fn host_delta(spec: &ModelSpec, old: &[Tensor], new: &[Tensor]) -> Vec<Tensor> {
+    spec.masks
+        .iter()
+        .enumerate()
+        .map(|(g, m)| {
+            let pi = spec
+                .param_index(&spec.delta_inputs[g])
+                .expect("delta input resolves (spec validated)");
+            let (fan_in, neurons) = old[pi].as_2d_neurons();
+            debug_assert_eq!(neurons, m.size);
+            let o = old[pi].data();
+            let n = new[pi].data();
+            let mut out = vec![0.0f32; neurons];
+            for r in 0..fan_in {
+                for c in 0..neurons {
+                    let ov = o[r * neurons + c];
+                    let rel = (n[r * neurons + c] - ov).abs() / (ov.abs() + 1e-8);
+                    if rel > out[c] {
+                        out[c] = rel;
+                    }
+                }
+            }
+            Tensor::from_vec(&[neurons], out)
+        })
+        .collect()
+}
+
+impl ClientExecutor for SimExecutor {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn run_clients(
+        &self,
+        cohort: &[&Client],
+        _masks: &[&MaskSet],
+        params: &[Tensor],
+        jobs: &[TrainJob],
+    ) -> Vec<crate::Result<LocalResult>> {
+        scope_map(jobs, self.threads, |i, job| {
+            // client id as the PCG *stream* (like the latency-jitter
+            // stream) — XOR-salting it into the seed would collide with
+            // the round bits for ids >= 4096 at fleet scale
+            let mut rng = Pcg32::new(job.seed ^ 0x51AB_17, job.client as u64);
+            let step_scale = job.lr * 0.05 * (job.steps.max(1) as f32).sqrt();
+            let new_params: Vec<Tensor> = params
+                .iter()
+                .map(|p| {
+                    let mut q = p.clone();
+                    for v in q.data_mut() {
+                        *v += step_scale * (rng.next_f32() - 0.5);
+                    }
+                    q
+                })
+                .collect();
+            // pseudo learning curve: decays with rounds, jitters per client
+            let base = 2.5 / (1.0 + 0.15 * job.round as f64);
+            let mean_loss = base * (0.9 + 0.2 * rng.next_f64());
+            let mean_acc =
+                ((1.0 - base / 2.5) * 0.9 + 0.05 * rng.next_f64()).clamp(0.0, 1.0);
+            Ok(LocalResult {
+                params: new_params,
+                mean_loss,
+                mean_acc,
+                steps: job.steps,
+                weight: cohort[i].data.len() as f64,
+            })
+        })
+    }
+
+    fn run_deltas(
+        &self,
+        old: &[Tensor],
+        news: &[&[Tensor]],
+    ) -> Vec<crate::Result<Vec<Tensor>>> {
+        scope_map(news, self.threads, |_, new| {
+            Ok(host_delta(&self.spec, old, new))
+        })
+    }
+
+    fn evaluate(
+        &self,
+        params: &[Tensor],
+        _masks: &[Tensor],
+        split: &Split,
+    ) -> crate::Result<(f64, f64)> {
+        // pseudo-metrics: a pure function of the parameter state, so a
+        // replay evaluates bit-identically. Drift of the parameter vector
+        // away from zero stands in for learning progress.
+        let mut abs_sum = 0.0f64;
+        let mut count = 0usize;
+        for t in params {
+            for &v in t.data() {
+                abs_sum += v.abs() as f64;
+                count += 1;
+            }
+        }
+        let drift = if count == 0 { 0.0 } else { abs_sum / count as f64 };
+        let mut rng = Pcg32::new(param_digest(params), 0xE7A1);
+        let loss = (2.3 / (1.0 + 8.0 * drift)).max(0.05) + 0.01 * rng.next_f64();
+        let acc = (1.0 - loss / 2.4).clamp(0.0, 1.0);
+        let _ = split;
+        Ok((loss, acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::XStore;
+    use crate::model::sim_spec;
+
+    fn sim_cohort(n: usize) -> Vec<Client> {
+        (0..n)
+            .map(|i| {
+                Client::new(
+                    i * 3, // non-contiguous global ids, as fleet cohorts have
+                    0,
+                    Split {
+                        xs: XStore::F32(vec![0.0; 4 * (i + 2)]),
+                        ys: vec![0; i + 2],
+                        feature_len: 4,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sim_training_is_thread_count_invariant() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(7);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(6);
+        let cohort: Vec<&Client> = clients.iter().collect();
+        let masks: Vec<&MaskSet> = clients.iter().map(|_| &full).collect();
+        let jobs: Vec<TrainJob> = clients
+            .iter()
+            .map(|c| TrainJob {
+                client: c.id,
+                round: 2,
+                steps: 3,
+                lr: 0.01,
+                seed: 99,
+                use_fused: false,
+            })
+            .collect();
+        let a: Vec<LocalResult> = SimExecutor::new(spec.clone(), 1)
+            .run_clients(&cohort, &masks, &params, &jobs)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        let b: Vec<LocalResult> = SimExecutor::new(spec, 8)
+            .run_clients(&cohort, &masks, &params, &jobs)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.params, y.params);
+            assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits());
+            assert_eq!(x.weight, y.weight);
+        }
+        // per-client streams differ
+        assert_ne!(a[0].params, a[1].params);
+        // weight is the shard size
+        assert_eq!(a[0].weight, 2.0);
+        assert_eq!(a[5].weight, 7.0);
+    }
+
+    #[test]
+    fn sim_delta_matches_host_math() {
+        let spec = sim_spec("femnist_cnn");
+        let old = spec.init_params(1);
+        let mut new = old.clone();
+        // move fc1_w column 0 hard, leave column 1 untouched
+        let pi = spec.param_index("fc1_w").unwrap();
+        let (fan_in, neurons) = new[pi].as_2d_neurons();
+        for r in 0..fan_in {
+            new[pi].data_mut()[r * neurons] += 1.0;
+        }
+        let ex = SimExecutor::new(spec.clone(), 2);
+        let news: Vec<&[Tensor]> = vec![new.as_slice()];
+        let deltas = ex.run_deltas(&old, &news).pop().unwrap().unwrap();
+        assert_eq!(deltas.len(), spec.masks.len());
+        assert_eq!(deltas[0].len(), spec.masks[0].size);
+        assert!(deltas[0].data()[0] > deltas[0].data()[1]);
+        assert_eq!(deltas[0].data()[1], 0.0);
+    }
+
+    #[test]
+    fn sim_eval_is_deterministic_in_param_state() {
+        let spec = sim_spec("cifar_vgg9");
+        let ex = SimExecutor::new(spec.clone(), 1);
+        let params = spec.init_params(3);
+        let split = Split {
+            xs: XStore::F32(vec![0.0; 8]),
+            ys: vec![0, 1],
+            feature_len: 4,
+        };
+        let full: Vec<Tensor> = MaskSet::full(&spec).tensors().to_vec();
+        let (l1, a1) = ex.evaluate(&params, &full, &split).unwrap();
+        let (l2, a2) = ex.evaluate(&params, &full, &split).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(a1.to_bits(), a2.to_bits());
+        let other = spec.init_params(4);
+        let (l3, _) = ex.evaluate(&other, &full, &split).unwrap();
+        assert_ne!(l1.to_bits(), l3.to_bits());
     }
 }

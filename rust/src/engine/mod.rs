@@ -1,12 +1,13 @@
 //! The round engine — Algorithm 1 decomposed into composable layers.
 //!
 //! The historical coordinator ran one ~300-line function that hard-coded
-//! a fully synchronous barrier. This module splits that loop along four
+//! a fully synchronous barrier. This module splits that loop along five
 //! seams so that round *policy* and round *mechanics* evolve separately:
 //!
-//! * [`ClientExecutor`] — where per-client work executes
-//!   ([`LocalExecutor`] is the in-process thread-pool backend; sharded /
-//!   remote backends plug in here).
+//! * [`ClientExecutor`] — where per-client work executes, and the only
+//!   layer that touches a runtime: [`LocalExecutor`] is the PJRT-backed
+//!   in-process thread-pool backend, [`SimExecutor`] the runtime-free
+//!   deterministic simulation backend (fleet-scale determinism suite).
 //! * [`EventScheduler`] — the virtual-time model: per-client latencies
 //!   become arrival *events*, and each [`SyncMode`] resolves those events
 //!   into a barrier decision instead of an implicit `fold(max)`.
@@ -16,27 +17,33 @@
 //! * [`SyncMode`] — the round-synchronization policy: classic full
 //!   barrier (bit-identical to the historical loop), SALF-style deadline
 //!   rounds, or FedBuff-style buffered semi-async rounds.
+//! * the **fleet seam** — with `ExperimentConfig::fleet_size` set, the
+//!   engine holds a [`Fleet`] of lightweight descriptors, samples a
+//!   per-round cohort through [`crate::fl::sample_cohort`], hydrates only
+//!   that cohort's shards ([`crate::data::ShardSource`]), and lets a
+//!   seeded [`scenario::ScenarioSim`] script churn / straggler drift /
+//!   speed fluctuation. Peak resident data tracks the cohort, never the
+//!   fleet.
 //!
-//! See DESIGN.md §3 for the layering diagram and the exact SyncMode
-//! semantics.
+//! See DESIGN.md §3 and §5 for the layering diagram, the exact SyncMode
+//! semantics and the RNG-stream layout.
 
 pub mod executor;
 pub mod plan;
+pub mod scenario;
 pub mod sched;
 
-pub use executor::{ClientExecutor, LocalExecutor, TrainJob};
-pub use plan::{RoundOutcome, RoundPlan};
+pub use executor::{ClientExecutor, LocalExecutor, SimExecutor, TrainJob};
+pub use plan::{MaskTable, RoundOutcome, RoundPlan};
+pub use scenario::{ScenarioConfig, ScenarioSim};
 pub use sched::{ClientArrival, EventScheduler, Resolution};
 
 use crate::coordinator::{ExperimentConfig, ExperimentResult, RoundRecord};
-use crate::data::{FlData, Split};
+use crate::data::{partition, FlData, ShardSource, Split};
 use crate::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
-use crate::fl::{self, fedavg, staleness_discount, Client, ClientUpdate};
-use crate::runtime::StepRunner;
-use crate::straggler::{
-    detect_stragglers, mobile_fleet, snap_rate, synthetic_fleet, Detection, DeviceProfile,
-    FluctuationSchedule, PerfModel,
-};
+use crate::fl::{self, fedavg, sample_cohort, staleness_discount, Client, ClientUpdate, Fleet};
+use crate::model::ModelSpec;
+use crate::straggler::{detect_stragglers, snap_rate, Detection, FluctuationSchedule, PerfModel};
 use crate::tensor::Tensor;
 use crate::util::prng::Pcg32;
 use crate::util::stats;
@@ -86,18 +93,32 @@ struct StaleUpdate {
     born_round: usize,
 }
 
+/// Where client shards live.
+///
+/// Classic runs materialize every client once (the pre-fleet behavior,
+/// bit-identical); fleet runs hydrate the sampled cohort per round and
+/// drop it at round end.
+enum ClientStore {
+    Eager(Vec<Client>),
+    Lazy(Box<dyn ShardSource>),
+}
+
 /// The layered round loop: owns all cross-round state and executes
 /// [`ExperimentConfig::rounds`] rounds through an executor and the event
 /// scheduler.
 pub struct RoundEngine<'a, E: ClientExecutor> {
     cfg: &'a ExperimentConfig,
-    runner: &'a StepRunner,
     executor: E,
-    fleet: Vec<DeviceProfile>,
+    spec: ModelSpec,
+    /// population size: `fleet_size` in fleet mode, `cfg.clients` classic
+    n: usize,
+    fleet: Fleet,
+    /// client -> device index (what the scheduler consumes)
     device_of: Vec<usize>,
-    clients: Vec<Client>,
+    store: ClientStore,
     test_split: Split,
     scheduler: EventScheduler,
+    scenario: Option<ScenarioSim>,
     policy: Policy,
     detection: Option<Detection>,
     params: Vec<Tensor>,
@@ -121,46 +142,88 @@ pub struct RoundEngine<'a, E: ClientExecutor> {
 }
 
 impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
-    pub fn new(
-        runner: &'a StepRunner,
+    pub fn new(cfg: &'a ExperimentConfig, executor: E) -> crate::Result<Self> {
+        let source = if let Some(n) = cfg.fleet_size {
+            let sizes = partition::lognormal_shard_sizes(
+                n,
+                cfg.samples_per_client.max(2),
+                0.45,
+                cfg.seed,
+            );
+            Some(crate::data::shard_source_for_model(&cfg.model, sizes, cfg.seed))
+        } else {
+            None
+        };
+        Self::build(cfg, executor, source)
+    }
+
+    /// Fleet-mode constructor with an explicit shard source (tests wrap
+    /// the built-in sources to observe hydration).
+    pub fn with_shard_source(
         cfg: &'a ExperimentConfig,
         executor: E,
+        source: Box<dyn ShardSource>,
     ) -> crate::Result<Self> {
-        let spec = &runner.spec;
+        anyhow::ensure!(
+            cfg.fleet_size.is_some(),
+            "with_shard_source requires fleet mode (fleet_size set)"
+        );
+        Self::build(cfg, executor, Some(source))
+    }
+
+    fn build(
+        cfg: &'a ExperimentConfig,
+        executor: E,
+        source: Option<Box<dyn ShardSource>>,
+    ) -> crate::Result<Self> {
+        let spec = executor.spec().clone();
+        let n = cfg.fleet_size.unwrap_or(cfg.clients);
+        anyhow::ensure!(n > 0, "experiment needs at least one client");
 
         // fleet + data + clients ---------------------------------------------
-        let fleet = if cfg.mobile_fleet {
-            let base = mobile_fleet();
-            (0..cfg.clients)
-                .map(|i| base[i % base.len()].clone())
-                .collect::<Vec<_>>()
-        } else {
-            synthetic_fleet(cfg.clients, cfg.seed ^ 0xF1EE7)
+        let (fleet, store, test_split) = match source {
+            Some(src) => {
+                anyhow::ensure!(
+                    src.num_shards() == n,
+                    "shard source has {} shards for a fleet of {n}",
+                    src.num_shards()
+                );
+                let mut fleet = Fleet::synthetic_pool(n, cfg.seed ^ 0xF1EE7);
+                for d in fleet.clients.iter_mut() {
+                    d.data_len = src.shard_len(d.shard);
+                }
+                let test = src.test().clone();
+                (fleet, ClientStore::Lazy(src), test)
+            }
+            None => {
+                let fleet = Fleet::classic(n, cfg.mobile_fleet, cfg.seed ^ 0xF1EE7);
+                let data =
+                    FlData::for_model(&cfg.model, n, cfg.samples_per_client, cfg.seed);
+                let test = data.test.clone();
+                let clients: Vec<Client> = data
+                    .clients
+                    .iter()
+                    .enumerate()
+                    .map(|(i, split)| Client::new(i, fleet.device_of(i), split.clone()))
+                    .collect();
+                (fleet, ClientStore::Eager(clients), test)
+            }
         };
-        let data = FlData::for_model(&cfg.model, cfg.clients, cfg.samples_per_client, cfg.seed);
-        let test_split = data.test.clone();
-        let clients: Vec<Client> = data
-            .clients
-            .iter()
-            .enumerate()
-            .map(|(i, split)| Client::new(i, i % fleet.len(), split.clone()))
-            .collect();
-        let device_of: Vec<usize> = clients.iter().map(|c| c.device).collect();
+        let device_of = fleet.device_map();
 
         let perf = PerfModel::new(&cfg.model, spec.size_bytes());
         // the natural straggler is the slowest base device — excluded from
         // the fluctuation protocol so that the straggler identity really
         // changes
-        let natural_straggler = (0..cfg.clients)
-            .max_by(|&a, &b| {
-                fleet[a % fleet.len()]
-                    .base_time(&cfg.model)
-                    .partial_cmp(&fleet[b % fleet.len()].base_time(&cfg.model))
-                    .unwrap()
-            })
-            .unwrap_or(0);
-        let fluct = if cfg.fluctuation {
-            FluctuationSchedule::paper_marks(cfg.clients, natural_straggler, cfg.seed ^ 0xF1C)
+        let natural_straggler = fleet.slowest(&cfg.model);
+        let scenario = cfg
+            .scenario
+            .as_ref()
+            .map(|sc| ScenarioSim::new(sc.clone(), cfg.seed ^ 0x5CE0));
+        let fluct = if let Some(sim) = &scenario {
+            sim.fluctuation()
+        } else if cfg.fluctuation {
+            FluctuationSchedule::paper_marks(n, natural_straggler, cfg.seed ^ 0xF1C)
         } else {
             FluctuationSchedule::none()
         };
@@ -169,31 +232,37 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             th_override: cfg.invariant_th_override,
             ..Default::default()
         };
-        let policy = Policy::new_with(cfg.policy, spec, cfg.seed ^ 0xD20, inv_cfg);
+        let policy = Policy::new_with(cfg.policy, &spec, cfg.seed ^ 0xD20, inv_cfg);
         let params = spec.init_params(cfg.seed);
-        let full_mask = MaskSet::full(spec);
+        let full_mask = MaskSet::full(&spec);
 
         Ok(Self {
             cfg,
-            runner,
             executor,
+            spec,
+            n,
             fleet,
             device_of,
-            clients,
+            store,
             test_split,
             scheduler: EventScheduler::new(perf, fluct),
+            scenario,
             policy,
             detection: None,
             params,
             full_mask,
-            last_latencies: vec![0.0; cfg.clients],
-            last_full_latencies: vec![0.0; cfg.clients],
+            last_latencies: vec![0.0; n],
+            last_full_latencies: vec![0.0; n],
             vtime: 0.0,
             calib_total: 0.0,
             train_wall: 0.0,
             stale: Vec::new(),
-            free_at: vec![0.0; cfg.clients],
+            free_at: vec![0.0; n],
         })
+    }
+
+    fn fleet_mode(&self) -> bool {
+        self.cfg.fleet_size.is_some()
     }
 
     /// Run every round to completion.
@@ -208,6 +277,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 round,
                 round_time: o.round_time,
                 vtime: self.vtime,
+                cohort: plan.selected.clone(),
                 straggler_ids: plan.straggler_ids.clone(),
                 straggler_rates: plan.straggler_ids.iter().map(|&c| plan.rates[c]).collect(),
                 t_target: o.t_target,
@@ -244,21 +314,32 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         })
     }
 
-    /// Server-side planning: sampling, straggler recalibration, and
-    /// sub-model assignment (Algorithm 1 lines 18-22).
+    /// Server-side planning: scenario tick, sampling, straggler
+    /// recalibration, and sub-model assignment (Algorithm 1 lines 18-22).
     fn plan_round(&mut self, round: usize) -> RoundPlan {
         let cfg = self.cfg;
+        let n = self.n;
         let t_frac = round as f64 / cfg.rounds.max(1) as f64;
         let round_seed = cfg.seed ^ ((round as u64) << 32);
-        let mut rng = Pcg32::new(cfg.seed ^ 0xA0_0000, round as u64);
 
-        // --- client sampling (A.6) ------------------------------------------
-        let selected: Vec<usize> = if cfg.sample_fraction >= 1.0 {
-            (0..cfg.clients).collect()
+        // --- scenario tick (fleet dynamics) ---------------------------------
+        if let Some(sim) = &self.scenario {
+            sim.apply_churn(round, &mut self.fleet);
+        }
+
+        // --- client sampling (A.6 / fleet cohort) ---------------------------
+        let selected: Vec<usize> = if self.fleet_mode() {
+            let k = cfg.sample_k.clamp(1, n);
+            let mut rng = Pcg32::new(cfg.seed ^ 0x5A_3917, round as u64);
+            let mut s = sample_cohort(&self.fleet, cfg.sampler, k, &mut rng);
+            s.sort_unstable();
+            s
+        } else if cfg.sample_fraction >= 1.0 {
+            (0..n).collect()
         } else {
-            let k = ((cfg.clients as f64 * cfg.sample_fraction).ceil() as usize)
-                .clamp(1, cfg.clients);
-            let mut s = rng.sample_indices(cfg.clients, k);
+            let mut rng = Pcg32::new(cfg.seed ^ 0xA0_0000, round as u64);
+            let k = ((n as f64 * cfg.sample_fraction).ceil() as usize).clamp(1, n);
+            let mut s = rng.sample_indices(n, k);
             s.sort_unstable();
             s
         };
@@ -268,22 +349,38 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             && round % cfg.recalibrate_every == 0
             && !(cfg.static_stragglers && self.detection.is_some());
         if recalibrate {
-            let lat: Vec<f64> = selected
-                .iter()
-                .map(|&c| self.last_full_latencies[c])
-                .collect();
-            let det = detect_stragglers(&lat, cfg.straggler_fraction, 0.02, &cfg.rates_menu);
-            // map sample-local ids back to client ids
-            self.detection = Some(Detection {
-                stragglers: det.stragglers.iter().map(|&i| selected[i]).collect(),
-                ..det
-            });
+            // Fleet mode: a fresh cohort is mostly *unmeasured* (latency
+            // still 0.0) — zeros would both collapse t_target to 0 and
+            // flag every measured client as a straggler, so detection
+            // only reads clients with a real measurement. The classic
+            // path keeps the historic behavior bit-for-bit (zeros
+            // included), as pinned by tests/engine_regression.rs.
+            let pool: Vec<usize> = if self.fleet_mode() {
+                selected
+                    .iter()
+                    .copied()
+                    .filter(|&c| self.last_full_latencies[c] > 0.0)
+                    .collect()
+            } else {
+                selected.clone()
+            };
+            if !pool.is_empty() {
+                let lat: Vec<f64> =
+                    pool.iter().map(|&c| self.last_full_latencies[c]).collect();
+                let det =
+                    detect_stragglers(&lat, cfg.straggler_fraction, 0.02, &cfg.rates_menu);
+                // map sample-local ids back to client ids
+                self.detection = Some(Detection {
+                    stragglers: det.stragglers.iter().map(|&i| pool[i]).collect(),
+                    ..det
+                });
+            }
         }
 
         // --- sub-model assignment -------------------------------------------
         let calib_start = Instant::now();
-        let mut masks: Vec<MaskSet> = vec![self.full_mask.clone(); cfg.clients];
-        let mut rates: Vec<f64> = vec![1.0; cfg.clients];
+        let mut masks = MaskTable::new(self.full_mask.clone());
+        let mut rates: Vec<f64> = vec![1.0; n];
         let mut straggler_ids: Vec<usize> = Vec::new();
         if let Some(det) = &self.detection {
             for (k, &c) in det.stragglers.iter().enumerate() {
@@ -293,13 +390,13 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     None => desired,
                 };
                 if cfg.policy != PolicyKind::None && cfg.policy != PolicyKind::Exclude {
-                    let m = self.policy.make_mask(&self.runner.spec, r);
+                    let m = self.policy.make_mask(&self.spec, r);
                     // the straggler only speeds up if it actually received
                     // a sub-model (invariant dropout returns the full mask
                     // until its first calibration observation)
                     if !m.is_full() {
                         rates[c] = r;
-                        masks[c] = m;
+                        masks.set(c, m);
                     }
                 }
                 straggler_ids.push(c);
@@ -308,14 +405,15 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let calib_secs = calib_start.elapsed().as_secs_f64();
 
         // --- participation --------------------------------------------------
-        // Semi-async: a client still finishing a previous round's work is
-        // busy and sits this round out; its buffered update folds in when
-        // it lands. Synchronous modes never mark anyone busy.
+        // A selected client sits a round out when it churned away (fleet
+        // scenarios) or is still busy finishing a previous semi-async
+        // round; its buffered update folds in when it lands. Classic
+        // synchronous runs mark nobody unavailable or busy.
         let round_start = self.vtime;
         let active: Vec<usize> = selected
             .iter()
             .copied()
-            .filter(|&c| self.free_at[c] <= round_start)
+            .filter(|&c| self.fleet.is_available(c) && self.free_at[c] <= round_start)
             .collect();
         // Exclude policy: stragglers neither train nor aggregate.
         let participants: Vec<usize> = active
@@ -340,11 +438,12 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         }
     }
 
-    /// Execute one planned round: train, schedule arrivals, resolve the
-    /// barrier, aggregate (folding matured stale updates), observe
-    /// deltas, evaluate.
+    /// Execute one planned round: hydrate the cohort, train, schedule
+    /// arrivals, resolve the barrier, aggregate (folding matured stale
+    /// updates), observe deltas, evaluate.
     fn run_round(&mut self, plan: &RoundPlan) -> crate::Result<RoundOutcome> {
         let cfg = self.cfg;
+        let n = self.n;
         let mut calib_secs = plan.calib_secs;
 
         // --- local training (through the executor seam) ---------------------
@@ -353,30 +452,64 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             .iter()
             .map(|&c| TrainJob {
                 client: c,
+                round: plan.round,
                 steps: cfg.local_steps,
                 lr: cfg.lr,
                 seed: plan.round_seed,
                 use_fused: cfg.use_fused_steps,
             })
             .collect();
+        // fleet mode: only the sampled cohort's shards become data, and
+        // they are dropped again at the end of the round
+        let cohort_owned: Vec<Client> = match &self.store {
+            ClientStore::Lazy(src) => plan
+                .participants
+                .iter()
+                // hydrate through the descriptor's shard id — client id
+                // and shard id coincide for the built-in fleets but the
+                // indirection is part of the descriptor contract
+                .map(|&c| {
+                    Client::new(
+                        c,
+                        self.device_of[c],
+                        src.hydrate(self.fleet.clients[c].shard),
+                    )
+                })
+                .collect(),
+            ClientStore::Eager(_) => Vec::new(),
+        };
+        let cohort: Vec<&Client> = match &self.store {
+            ClientStore::Eager(clients) => {
+                plan.participants.iter().map(|&c| &clients[c]).collect()
+            }
+            ClientStore::Lazy(_) => cohort_owned.iter().collect(),
+        };
+        let cohort_masks: Vec<&MaskSet> = plan
+            .participants
+            .iter()
+            .map(|&c| plan.masks.get(c))
+            .collect();
         let t0 = Instant::now();
-        let results = self.executor.run_clients(
-            self.runner,
-            &self.clients,
-            &plan.masks,
-            &self.params,
-            &jobs,
-        );
+        let results = self
+            .executor
+            .run_clients(&cohort, &cohort_masks, &self.params, &jobs);
         self.train_wall += t0.elapsed().as_secs_f64();
+        drop(cohort);
+        drop(cohort_owned);
         let mut updates: Vec<(usize, fl::LocalResult)> = Vec::with_capacity(results.len());
         for (i, r) in results.into_iter().enumerate() {
             updates.push((plan.participants[i], r?));
         }
 
         // --- virtual-time arrival events ------------------------------------
-        let comm_fractions: Vec<f64> = plan.masks.iter().map(|m| m.comm_fraction()).collect();
+        // dense comm-fraction table reconstructed from the sparse mask
+        // overrides (non-stragglers transmit the full model: fraction 1.0)
+        let mut comm_fractions = vec![1.0f64; n];
+        for (c, m) in plan.masks.overrides() {
+            comm_fractions[*c] = m.comm_fraction();
+        }
         let arrivals = self.scheduler.arrivals(
-            &self.fleet,
+            &self.fleet.devices,
             &self.device_of,
             &plan.active,
             &plan.rates,
@@ -391,7 +524,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
 
         // membership bitmaps: the scale path runs thousands of clients,
         // so per-arrival Vec::contains scans would be quadratic
-        let mut is_participant = vec![false; cfg.clients];
+        let mut is_participant = vec![false; n];
         for &c in &plan.participants {
             is_participant[c] = true;
         }
@@ -404,11 +537,11 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             .copied()
             .collect();
         let res = EventScheduler::resolve(cfg.sync_mode, &participant_arrivals, plan.t_target);
-        let mut is_on_time = vec![false; cfg.clients];
+        let mut is_on_time = vec![false; n];
         for &c in &res.on_time {
             is_on_time[c] = true;
         }
-        let mut late_at: Vec<Option<f64>> = vec![None; cfg.clients];
+        let mut late_at: Vec<Option<f64>> = vec![None; n];
         for a in &res.late {
             late_at[a.client] = Some(a.at);
         }
@@ -451,7 +584,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 agg.push(ClientUpdate {
                     params: u.params.clone(),
                     weight: u.weight,
-                    mask: plan.masks[*c].clone(),
+                    mask: plan.masks.get(*c).clone(),
                     staleness: 0,
                 });
                 losses.push(u.mean_loss);
@@ -468,7 +601,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                         let at = late_at[*c].expect("late participant has an arrival");
                         self.stale.push(StaleUpdate {
                             result: u.clone(),
-                            mask: plan.masks[*c].clone(),
+                            mask: plan.masks.get(*c).clone(),
                             arrives_at: round_start + at,
                             born_round: plan.round,
                         });
@@ -520,7 +653,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let new_params = if agg.is_empty() {
             self.params.clone()
         } else {
-            fedavg(&self.runner.spec, &self.params, &agg, cfg.aggregate)
+            fedavg(&self.spec, &self.params, &agg, cfg.aggregate)
         };
 
         // --- invariant observation (non-straggler deltas, L1 kernel) --------
@@ -532,9 +665,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 .take(MAX_DELTA_VOTERS)
                 .map(|(_, u)| u.params.as_slice())
                 .collect();
-            let per_client = self
-                .executor
-                .run_deltas(self.runner, &self.params, &voters);
+            let per_client = self.executor.run_deltas(&self.params, &voters);
             let per_client = per_client
                 .into_iter()
                 .collect::<crate::Result<Vec<_>>>()?;
@@ -546,8 +677,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         // --- evaluation -----------------------------------------------------
         let (test_loss, test_acc) =
             if plan.round % cfg.eval_every == 0 || plan.round + 1 == cfg.rounds {
-                fl::evaluate_split(
-                    self.runner,
+                self.executor.evaluate(
                     &self.params,
                     self.full_mask.tensors(),
                     &self.test_split,

@@ -9,6 +9,50 @@
 
 use crate::dropout::MaskSet;
 
+/// Per-client sub-model masks, stored sparsely: only stragglers carry a
+/// non-full mask, so a 100k-client fleet costs a handful of override
+/// entries instead of 100k `MaskSet` clones per round.
+#[derive(Clone, Debug)]
+pub struct MaskTable {
+    full: MaskSet,
+    /// (client, mask) overrides, sorted by client id
+    overrides: Vec<(usize, MaskSet)>,
+}
+
+impl MaskTable {
+    pub fn new(full: MaskSet) -> Self {
+        Self {
+            full,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Install a non-full mask for `client` (replaces a prior override).
+    pub fn set(&mut self, client: usize, mask: MaskSet) {
+        match self.overrides.binary_search_by_key(&client, |(c, _)| *c) {
+            Ok(i) => self.overrides[i].1 = mask,
+            Err(i) => self.overrides.insert(i, (client, mask)),
+        }
+    }
+
+    /// The mask `client` trains under this round.
+    pub fn get(&self, client: usize) -> &MaskSet {
+        match self.overrides.binary_search_by_key(&client, |(c, _)| *c) {
+            Ok(i) => &self.overrides[i].1,
+            Err(_) => &self.full,
+        }
+    }
+
+    /// All non-full assignments (stragglers with sub-models).
+    pub fn overrides(&self) -> &[(usize, MaskSet)] {
+        &self.overrides
+    }
+
+    pub fn full_mask(&self) -> &MaskSet {
+        &self.full
+    }
+}
+
 /// Server-side decisions for one round, fixed before execution.
 #[derive(Clone, Debug)]
 pub struct RoundPlan {
@@ -17,10 +61,11 @@ pub struct RoundPlan {
     pub t_frac: f64,
     /// per-round seed for client PRNGs and latency jitter
     pub round_seed: u64,
-    /// clients sampled this round (A.6)
+    /// clients sampled this round (A.6 / fleet cohort)
     pub selected: Vec<usize>,
     /// selected clients that are free to run (semi-async modes may leave
-    /// a straggler busy finishing a previous round)
+    /// a straggler busy finishing a previous round; fleet churn removes
+    /// unavailable clients here)
     pub active: Vec<usize>,
     /// active clients that actually train (Exclude policy removes
     /// stragglers here)
@@ -29,8 +74,8 @@ pub struct RoundPlan {
     pub straggler_ids: Vec<usize>,
     /// per-client keep-rate table (1.0 = full model)
     pub rates: Vec<f64>,
-    /// per-client sub-model masks
-    pub masks: Vec<MaskSet>,
+    /// per-client sub-model masks (sparse over the full mask)
+    pub masks: MaskTable,
     /// detection's target time, when a detection exists
     pub t_target: Option<f64>,
     /// does the invariant policy observe deltas this round?
@@ -65,4 +110,33 @@ pub struct RoundOutcome {
     pub stale_folded: usize,
     /// wall-clock seconds of planning + delta observation
     pub calibration_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::tests::tiny_spec;
+
+    #[test]
+    fn mask_table_is_sparse_over_full() {
+        let spec = tiny_spec();
+        let mut t = MaskTable::new(MaskSet::full(&spec));
+        assert!(t.get(7).is_full());
+        assert!(t.overrides().is_empty());
+
+        let keep = vec![vec![true; 10], vec![true, true, true, false, false, false]];
+        let m = MaskSet::from_keep(&spec, &keep);
+        t.set(3, m.clone());
+        t.set(1, m.clone());
+        assert_eq!(t.overrides().len(), 2);
+        assert_eq!(t.overrides()[0].0, 1, "overrides sorted by client");
+        assert_eq!(t.get(3).kept(1), 3);
+        assert!(t.get(2).is_full());
+        assert!(t.full_mask().is_full());
+
+        // replacing an override keeps the table deduplicated
+        t.set(3, MaskSet::full(&spec));
+        assert_eq!(t.overrides().len(), 2);
+        assert!(t.get(3).is_full());
+    }
 }

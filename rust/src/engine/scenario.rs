@@ -1,0 +1,249 @@
+//! Seeded, declarative fleet-dynamics scripting.
+//!
+//! Every ROADMAP scenario — clients joining and leaving mid-run, the
+//! straggler population drifting, device speeds fluctuating — used to be
+//! bespoke bench code. A [`ScenarioConfig`] is the declarative,
+//! replayable alternative: named presets (or `name:rate` overrides on the
+//! CLI) compile to
+//!
+//! * per-round **churn** applied to [`Fleet`] availability
+//!   ([`ScenarioSim::apply_churn`], seeded per round so a replay of the
+//!   same experiment seed reproduces the same population trajectory), and
+//! * a procedural [`FluctuationSchedule`]
+//!   (`straggler::fluctuate::ProceduralLoad`) for straggler-population
+//!   drift and device-speed jitter — O(phases) per latency lookup, no
+//!   per-client event storage, viable at 100k clients.
+
+use crate::fl::Fleet;
+use crate::straggler::{FluctuationSchedule, ProceduralLoad, ProceduralPhase};
+use crate::util::prng::Pcg32;
+
+/// Declarative description of one scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    /// preset name (diagnostics / reports)
+    pub name: String,
+    /// per-round probability that an available client churns out
+    pub churn_out: f64,
+    /// per-round probability that a churned-out client rejoins
+    pub rejoin: f64,
+    /// straggler-drift / speed-fluctuation phases
+    pub phases: Vec<ProceduralPhase>,
+}
+
+impl ScenarioConfig {
+    fn preset(name: &str) -> Option<ScenarioConfig> {
+        let quiet = ScenarioConfig {
+            name: name.to_string(),
+            churn_out: 0.0,
+            rejoin: 0.0,
+            phases: vec![],
+        };
+        Some(match name {
+            // clients leave and rejoin; timing stays calm
+            "churn" => ScenarioConfig {
+                churn_out: 0.05,
+                rejoin: 0.30,
+                ..quiet
+            },
+            // the straggler *population* shifts each quarter of training
+            "drift" => ScenarioConfig {
+                phases: drift_phases(0.15, 0.0),
+                ..quiet
+            },
+            // every device's speed wobbles round to round
+            "flux" => ScenarioConfig {
+                phases: vec![ProceduralPhase {
+                    start_frac: 0.0,
+                    end_frac: 1.0,
+                    slow_fraction: 0.0,
+                    multiplier_lo: 1.0,
+                    multiplier_hi: 1.0,
+                    jitter: 0.25,
+                }],
+                ..quiet
+            },
+            // everything at once: churn + drift + jitter
+            "storm" => ScenarioConfig {
+                churn_out: 0.10,
+                rejoin: 0.25,
+                phases: drift_phases(0.15, 0.10),
+                ..quiet
+            },
+            _ => return None,
+        })
+    }
+
+    /// Parse a CLI scenario spec: `none`, a preset name, or
+    /// `preset:rate` where `rate` overrides the preset's headline knob
+    /// (churn-out rate for `churn`/`storm`, slow fraction for `drift`,
+    /// jitter sigma for `flux`).
+    pub fn parse(spec: &str) -> Result<Option<ScenarioConfig>, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(None);
+        }
+        let (name, rate) = match spec.split_once(':') {
+            Some((n, r)) => {
+                let rate: f64 = r
+                    .parse()
+                    .map_err(|_| format!("scenario rate {r:?} is not a number"))?;
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(format!("scenario rate {rate} outside [0, 1]"));
+                }
+                (n, Some(rate))
+            }
+            None => (spec, None),
+        };
+        let mut cfg = ScenarioConfig::preset(name).ok_or_else(|| {
+            format!("unknown scenario {name:?} (none|churn|drift|flux|storm[:rate])")
+        })?;
+        if let Some(rate) = rate {
+            match name {
+                "churn" | "storm" => cfg.churn_out = rate,
+                "drift" => {
+                    for p in &mut cfg.phases {
+                        p.slow_fraction = rate;
+                    }
+                }
+                "flux" => {
+                    for p in &mut cfg.phases {
+                        p.jitter = rate;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(Some(cfg))
+    }
+}
+
+/// Four quarter-phases, each with its own (seed-selected) slow subset —
+/// the straggler population drifts at every quarter mark.
+fn drift_phases(slow_fraction: f64, jitter: f64) -> Vec<ProceduralPhase> {
+    (0..4)
+        .map(|q| ProceduralPhase {
+            start_frac: q as f64 * 0.25,
+            end_frac: if q == 3 { 1.0 } else { (q + 1) as f64 * 0.25 },
+            slow_fraction,
+            multiplier_lo: 1.5,
+            multiplier_hi: 2.5,
+            jitter,
+        })
+        .collect()
+}
+
+/// A scenario bound to an experiment seed — the replayable executor of a
+/// [`ScenarioConfig`].
+#[derive(Clone, Debug)]
+pub struct ScenarioSim {
+    pub cfg: ScenarioConfig,
+    seed: u64,
+}
+
+impl ScenarioSim {
+    pub fn new(cfg: ScenarioConfig, seed: u64) -> Self {
+        Self { cfg, seed }
+    }
+
+    /// The timing side of the scenario, as the perf model consumes it.
+    pub fn fluctuation(&self) -> FluctuationSchedule {
+        FluctuationSchedule::procedural(ProceduralLoad {
+            seed: self.seed ^ 0xD21F_7A11,
+            phases: self.cfg.phases.clone(),
+        })
+    }
+
+    /// Apply one round of join/leave churn. Deterministic in
+    /// `(scenario seed, round)`: replaying a seed replays the exact
+    /// population trajectory.
+    pub fn apply_churn(&self, round: usize, fleet: &mut Fleet) {
+        if self.cfg.churn_out <= 0.0 && self.cfg.rejoin <= 0.0 {
+            return;
+        }
+        let mut rng = Pcg32::new(self.seed ^ 0xC4_0212, round as u64);
+        for d in fleet.clients.iter_mut() {
+            let x = rng.next_f64();
+            if d.available {
+                if x < self.cfg.churn_out {
+                    d.available = false;
+                }
+            } else if x < self.cfg.rejoin {
+                d.available = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_none_is_none() {
+        assert_eq!(ScenarioConfig::parse("none").unwrap(), None);
+        assert_eq!(ScenarioConfig::parse("").unwrap(), None);
+        for name in ["churn", "drift", "flux", "storm"] {
+            let sc = ScenarioConfig::parse(name).unwrap().unwrap();
+            assert_eq!(sc.name, name);
+        }
+        assert!(ScenarioConfig::parse("bogus").is_err());
+        assert!(ScenarioConfig::parse("churn:2.0").is_err());
+        assert!(ScenarioConfig::parse("churn:x").is_err());
+    }
+
+    #[test]
+    fn rate_override_hits_the_headline_knob() {
+        let c = ScenarioConfig::parse("churn:0.2").unwrap().unwrap();
+        assert_eq!(c.churn_out, 0.2);
+        let d = ScenarioConfig::parse("drift:0.4").unwrap().unwrap();
+        assert!(d.phases.iter().all(|p| p.slow_fraction == 0.4));
+        let f = ScenarioConfig::parse("flux:0.5").unwrap().unwrap();
+        assert!(f.phases.iter().all(|p| p.jitter == 0.5));
+    }
+
+    #[test]
+    fn drift_phases_cover_the_run() {
+        let ph = drift_phases(0.1, 0.0);
+        assert_eq!(ph.len(), 4);
+        assert_eq!(ph[0].start_frac, 0.0);
+        assert_eq!(ph[3].end_frac, 1.0);
+        for w in ph.windows(2) {
+            assert_eq!(w[0].end_frac, w[1].start_frac);
+        }
+    }
+
+    #[test]
+    fn churn_is_replayable_and_moves_the_population() {
+        let sim = ScenarioSim::new(
+            ScenarioConfig::parse("churn").unwrap().unwrap(),
+            42,
+        );
+        let mut a = Fleet::synthetic_pool(2000, 1);
+        let mut b = Fleet::synthetic_pool(2000, 1);
+        for round in 0..10 {
+            sim.apply_churn(round, &mut a);
+            sim.apply_churn(round, &mut b);
+            assert_eq!(a.num_available(), b.num_available(), "round {round}");
+        }
+        // 5% churn-out over 10 rounds must have churned someone out
+        assert!(a.num_available() < 2000);
+        assert!(a.num_available() > 1000, "churn collapsed the fleet");
+        for (da, db) in a.clients.iter().zip(&b.clients) {
+            assert_eq!(da.available, db.available);
+        }
+    }
+
+    #[test]
+    fn quiet_scenario_never_touches_the_fleet() {
+        let sim = ScenarioSim::new(
+            ScenarioConfig::parse("flux").unwrap().unwrap(),
+            7,
+        );
+        let mut f = Fleet::synthetic_pool(100, 1);
+        sim.apply_churn(3, &mut f);
+        assert_eq!(f.num_available(), 100);
+        // but its fluctuation schedule is live
+        assert!(sim.fluctuation().is_dynamic());
+    }
+}

@@ -1,0 +1,415 @@
+//! Fleet-scale client population: lightweight descriptors + per-round
+//! cohort sampling.
+//!
+//! The classic engine path materializes every client (device profile +
+//! data shard) up front — fine for 5 phones, impossible for the ROADMAP
+//! regime of 10k–100k simulated clients. A [`Fleet`] instead holds one
+//! small [`ClientDescriptor`] per client (device index, shard id, shard
+//! size, availability) and a shared pool of [`DeviceProfile`]s; shard
+//! *data* only exists for the sampled cohort each round (lazy hydration,
+//! see [`crate::data::ShardSource`]).
+//!
+//! [`SamplerKind`] + [`sample_cohort`] are the per-round client sampler:
+//! uniform (the A.6 protocol at population scale), weighted-by-data
+//! (clients with more examples participate proportionally more, the
+//! production-FL default), and availability-aware (never selects a
+//! churned-out client — pair with `engine::scenario` churn scripts).
+
+use crate::straggler::{mobile_fleet, synthetic_fleet, DeviceProfile};
+use crate::util::prng::Pcg32;
+
+/// Upper bound on distinct synthetic device profiles held by a fleet —
+/// beyond this, clients cycle through the pool (profiles are ~100 bytes
+/// each; the pool keeps a 100k fleet's device table at a few hundred KB
+/// while preserving the lognormal speed spread).
+pub const DEVICE_POOL_CAP: usize = 2048;
+
+/// One client, described without materializing its data.
+#[derive(Clone, Debug)]
+pub struct ClientDescriptor {
+    pub id: usize,
+    /// index into [`Fleet::devices`]
+    pub device: usize,
+    /// shard id for lazy hydration (== id for the built-in partitions)
+    pub shard: usize,
+    /// examples in the shard — known without hydrating it
+    pub data_len: usize,
+    /// availability state, driven by scenario churn scripts
+    pub available: bool,
+}
+
+/// A client population: shared device pool + per-client descriptors.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub devices: Vec<DeviceProfile>,
+    pub clients: Vec<ClientDescriptor>,
+}
+
+impl Fleet {
+    fn from_devices(devices: Vec<DeviceProfile>, n: usize) -> Fleet {
+        let d = devices.len().max(1);
+        let clients = (0..n)
+            .map(|i| ClientDescriptor {
+                id: i,
+                device: i % d,
+                shard: i,
+                data_len: 0,
+                available: true,
+            })
+            .collect();
+        Fleet { devices, clients }
+    }
+
+    /// The classic (pre-fleet) device assignment, preserved bit-for-bit:
+    /// mobile fleets cycle the five Table-1 phones; synthetic fleets give
+    /// every client its own lognormal profile.
+    pub fn classic(n: usize, mobile: bool, device_seed: u64) -> Fleet {
+        if mobile {
+            Fleet::from_devices(mobile_fleet(), n)
+        } else {
+            Fleet::from_devices(synthetic_fleet(n, device_seed), n)
+        }
+    }
+
+    /// Fleet-scale population: a capped pool of synthetic profiles cycled
+    /// across `n` descriptors.
+    pub fn synthetic_pool(n: usize, device_seed: u64) -> Fleet {
+        Fleet::from_devices(
+            synthetic_fleet(n.min(DEVICE_POOL_CAP).max(1), device_seed),
+            n,
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    pub fn device_of(&self, c: usize) -> usize {
+        self.clients[c].device
+    }
+
+    pub fn profile(&self, c: usize) -> &DeviceProfile {
+        &self.devices[self.clients[c].device]
+    }
+
+    pub fn is_available(&self, c: usize) -> bool {
+        self.clients[c].available
+    }
+
+    pub fn set_available(&mut self, c: usize, v: bool) {
+        self.clients[c].available = v;
+    }
+
+    pub fn num_available(&self) -> usize {
+        self.clients.iter().filter(|d| d.available).count()
+    }
+
+    /// Client -> device index table (what `EventScheduler::arrivals`
+    /// consumes).
+    pub fn device_map(&self) -> Vec<usize> {
+        self.clients.iter().map(|d| d.device).collect()
+    }
+
+    /// The slowest client on `model` — same tie-breaking as the historic
+    /// `max_by` scan (last maximum wins).
+    pub fn slowest(&self, model: &str) -> usize {
+        (0..self.clients.len())
+            .max_by(|&a, &b| {
+                self.profile(a)
+                    .base_time(model)
+                    .partial_cmp(&self.profile(b).base_time(model))
+                    .unwrap()
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Per-round client-sampling policy over a [`Fleet`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SamplerKind {
+    /// uniform over the whole population (churned-out clients may be
+    /// selected but will not participate)
+    #[default]
+    Uniform,
+    /// probability proportional to shard size (production-FL default)
+    WeightedByData,
+    /// uniform over currently-available clients only
+    AvailabilityAware,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "uniform" => SamplerKind::Uniform,
+            "weighted" | "weighted-by-data" => SamplerKind::WeightedByData,
+            "available" | "availability" | "availability-aware" => {
+                SamplerKind::AvailabilityAware
+            }
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Uniform => "uniform",
+            SamplerKind::WeightedByData => "weighted",
+            SamplerKind::AvailabilityAware => "available",
+        }
+    }
+}
+
+/// Sample a round's cohort of (at most) `k` distinct clients. The result
+/// is in sampler-draw order; callers sort if they need id order.
+pub fn sample_cohort(
+    fleet: &Fleet,
+    kind: SamplerKind,
+    k: usize,
+    rng: &mut Pcg32,
+) -> Vec<usize> {
+    let n = fleet.len();
+    if n == 0 || k == 0 {
+        return Vec::new();
+    }
+    match kind {
+        SamplerKind::Uniform => rng.sample_indices(n, k.min(n)),
+        SamplerKind::WeightedByData => sample_weighted(fleet, k.min(n), rng),
+        SamplerKind::AvailabilityAware => {
+            let avail: Vec<usize> = fleet
+                .clients
+                .iter()
+                .filter(|d| d.available)
+                .map(|d| d.id)
+                .collect();
+            if avail.is_empty() {
+                return Vec::new();
+            }
+            let k = k.min(avail.len());
+            rng.sample_indices(avail.len(), k)
+                .into_iter()
+                .map(|i| avail[i])
+                .collect()
+        }
+    }
+}
+
+/// Weighted-without-replacement via cumulative-weight inversion with
+/// rejection of duplicates — exact marginals at the first draw, a close
+/// approximation for k << n (the fleet regime). Zero-weight populations
+/// fall back to uniform.
+fn sample_weighted(fleet: &Fleet, k: usize, rng: &mut Pcg32) -> Vec<usize> {
+    let n = fleet.len();
+    if k >= n {
+        return (0..n).collect();
+    }
+    let mut cum = Vec::with_capacity(n);
+    let mut total = 0.0f64;
+    for d in &fleet.clients {
+        total += d.data_len as f64;
+        cum.push(total);
+    }
+    if total <= 0.0 {
+        return rng.sample_indices(n, k);
+    }
+    // inversion can only ever land on positive-weight clients (zero-weight
+    // plateaus are unreachable), so clamp k to that population or the
+    // rejection loop below would never terminate
+    let positive = fleet.clients.iter().filter(|d| d.data_len > 0).count();
+    let k = k.min(positive);
+    let mut picked = Vec::with_capacity(k);
+    let mut seen = vec![false; n];
+    while picked.len() < k {
+        let x = rng.next_f64() * total;
+        let i = cum.partition_point(|&c| c <= x).min(n - 1);
+        if !seen[i] {
+            seen[i] = true;
+            picked.push(i);
+        }
+    }
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_fleet(n: usize) -> Fleet {
+        let mut f = Fleet::synthetic_pool(n, 7);
+        for (i, d) in f.clients.iter_mut().enumerate() {
+            d.data_len = 10 + (i % 5) * 10;
+        }
+        f
+    }
+
+    #[test]
+    fn classic_mobile_matches_legacy_profiles() {
+        let f = Fleet::classic(8, true, 0);
+        assert_eq!(f.devices.len(), 5);
+        assert_eq!(f.len(), 8);
+        // client i gets the profile the legacy loop assigned (base[i % 5])
+        let base = mobile_fleet();
+        for i in 0..8 {
+            assert_eq!(f.profile(i).name, base[i % 5].name);
+        }
+        // the Pixel 3 (index 4) is the natural straggler; ties break to
+        // the last maximal client like the legacy max_by scan
+        assert_eq!(f.slowest("cifar_vgg9") % 5, 4);
+    }
+
+    #[test]
+    fn classic_synthetic_is_one_profile_per_client() {
+        let f = Fleet::classic(12, false, 99);
+        assert_eq!(f.devices.len(), 12);
+        let legacy = synthetic_fleet(12, 99);
+        for i in 0..12 {
+            assert_eq!(f.profile(i).base_cifar, legacy[i].base_cifar);
+        }
+    }
+
+    #[test]
+    fn pool_caps_device_table() {
+        let f = Fleet::synthetic_pool(10_000, 3);
+        assert_eq!(f.len(), 10_000);
+        assert!(f.devices.len() <= DEVICE_POOL_CAP);
+        assert_eq!(f.num_available(), 10_000);
+        assert_eq!(f.device_map().len(), 10_000);
+    }
+
+    #[test]
+    fn uniform_sampling_is_distinct_and_in_range() {
+        let f = small_fleet(100);
+        let mut rng = Pcg32::new(1, 1);
+        let s = sample_cohort(&f, SamplerKind::Uniform, 30, &mut rng);
+        assert_eq!(s.len(), 30);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 30);
+        assert!(t.iter().all(|&c| c < 100));
+    }
+
+    #[test]
+    fn availability_aware_never_selects_churned_clients() {
+        let mut f = small_fleet(50);
+        for c in 0..25 {
+            f.set_available(c * 2, false); // every even client churns out
+        }
+        let mut rng = Pcg32::new(2, 2);
+        for _ in 0..200 {
+            for &c in &sample_cohort(&f, SamplerKind::AvailabilityAware, 10, &mut rng) {
+                assert!(f.is_available(c), "sampled churned-out client {c}");
+            }
+        }
+        // cohort shrinks gracefully when availability is scarce
+        for c in 0..50 {
+            f.set_available(c, c == 7);
+        }
+        let s = sample_cohort(&f, SamplerKind::AvailabilityAware, 10, &mut rng);
+        assert_eq!(s, vec![7]);
+    }
+
+    #[test]
+    fn weighted_sampling_prefers_big_shards() {
+        let mut f = small_fleet(40);
+        for d in f.clients.iter_mut() {
+            d.data_len = if d.id < 4 { 1000 } else { 1 };
+        }
+        let mut rng = Pcg32::new(3, 3);
+        let mut heavy = 0usize;
+        let rounds = 500;
+        for _ in 0..rounds {
+            let s = sample_cohort(&f, SamplerKind::WeightedByData, 2, &mut rng);
+            assert_eq!(s.len(), 2);
+            heavy += s.iter().filter(|&&c| c < 4).count();
+        }
+        // heavy shards own >99% of the mass; they must dominate selection
+        assert!(heavy > rounds, "heavy clients picked only {heavy} times");
+    }
+
+    #[test]
+    fn weighted_handles_degenerate_weights_and_full_draws() {
+        let mut f = small_fleet(6);
+        for d in f.clients.iter_mut() {
+            d.data_len = 0;
+        }
+        let mut rng = Pcg32::new(4, 4);
+        let s = sample_cohort(&f, SamplerKind::WeightedByData, 3, &mut rng);
+        assert_eq!(s.len(), 3);
+        let all = sample_cohort(&f, SamplerKind::WeightedByData, 6, &mut rng);
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+        // fewer positive-weight clients than requested: the cohort clamps
+        // to the positive population instead of spinning forever
+        f.clients[1].data_len = 5;
+        f.clients[4].data_len = 9;
+        let mut two = sample_cohort(&f, SamplerKind::WeightedByData, 4, &mut rng);
+        two.sort_unstable();
+        assert_eq!(two, vec![1, 4]);
+    }
+
+    #[test]
+    fn uniform_sampler_frequency_is_unbiased() {
+        // Over 1k sampled rounds every client's selection count must sit
+        // near rounds*k/n. Seeded, so deterministic — the bounds are a
+        // per-client 5σ hard cap, an "at most a few beyond 3σ" check
+        // (the 3σ band holds in aggregate: expected excursions ≈ 0.5),
+        // and a chi-squared smoke bound; a biased sampler (off-by-one
+        // range, missing Fisher–Yates swap) blows all three.
+        let f = small_fleet(200);
+        let (rounds, k, n) = (1000usize, 20usize, 200usize);
+        let mut rng = Pcg32::new(0x57A7, 1);
+        let mut count = vec![0usize; n];
+        for _ in 0..rounds {
+            for &c in &sample_cohort(&f, SamplerKind::Uniform, k, &mut rng) {
+                count[c] += 1;
+            }
+        }
+        let p = k as f64 / n as f64;
+        let mean = rounds as f64 * p;
+        let sigma = (rounds as f64 * p * (1.0 - p)).sqrt();
+        let mut beyond_3s = 0usize;
+        let mut chi2 = 0.0f64;
+        for (c, &obs) in count.iter().enumerate() {
+            let dev = (obs as f64 - mean).abs();
+            assert!(dev <= 5.0 * sigma, "client {c}: {obs} vs mean {mean:.1}");
+            if dev > 3.0 * sigma {
+                beyond_3s += 1;
+            }
+            chi2 += (obs as f64 - mean).powi(2) / (sigma * sigma);
+        }
+        assert!(beyond_3s <= 4, "{beyond_3s} clients beyond 3σ of k/N");
+        // chi² over n cells: mean ≈ n (slightly below, without-replacement
+        // rounds are negatively correlated), σ ≈ sqrt(2n) ≈ 20
+        assert!(chi2 < 320.0, "chi-squared {chi2:.1} too large for {n} cells");
+        assert!(chi2 > 80.0, "chi-squared {chi2:.1} implausibly small");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_given_seed() {
+        let f = small_fleet(300);
+        for kind in [
+            SamplerKind::Uniform,
+            SamplerKind::WeightedByData,
+            SamplerKind::AvailabilityAware,
+        ] {
+            let a = sample_cohort(&f, kind, 32, &mut Pcg32::new(9, 5));
+            let b = sample_cohort(&f, kind, 32, &mut Pcg32::new(9, 5));
+            assert_eq!(a, b, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn sampler_kind_parse_round_trips() {
+        for kind in [
+            SamplerKind::Uniform,
+            SamplerKind::WeightedByData,
+            SamplerKind::AvailabilityAware,
+        ] {
+            assert_eq!(SamplerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SamplerKind::parse("bogus"), None);
+        assert_eq!(SamplerKind::default(), SamplerKind::Uniform);
+    }
+}

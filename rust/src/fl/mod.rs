@@ -5,9 +5,11 @@
 
 pub mod aggregate;
 pub mod client;
+pub mod fleet;
 
 pub use aggregate::{fedavg, staleness_discount, AggregateMode, ClientUpdate};
 pub use client::{Client, LocalResult};
+pub use fleet::{sample_cohort, ClientDescriptor, Fleet, SamplerKind};
 
 use crate::data::Split;
 use crate::runtime::{EvalOut, StepRunner};

@@ -10,7 +10,8 @@
 
 use fluid::coordinator::{self, report, ExperimentConfig};
 use fluid::dropout::PolicyKind;
-use fluid::engine::SyncMode;
+use fluid::engine::{ScenarioConfig, SyncMode};
+use fluid::fl::SamplerKind;
 use fluid::runtime::Session;
 use fluid::straggler::mobile_fleet;
 use fluid::util::cli::Args;
@@ -54,11 +55,16 @@ fn train_args(program: &str) -> Args {
         .opt("sync-mode", "full", "round barrier: full|deadline|buffered")
         .opt("deadline-mult", "1.25", "deadline cutoff as a multiple of T_target")
         .opt("buffer-k", "0", "buffered: aggregate after k updates (0 = 80% of clients)")
+        .opt("fleet-size", "0", "fleet mode: simulate this many clients (0 = classic)")
+        .opt("sample-k", "0", "fleet mode: cohort size per round (0 = fleet/100)")
+        .opt("sampler", "uniform", "fleet sampler: uniform|weighted|available")
+        .opt("scenario", "none", "fleet dynamics: none|churn|drift|flux|storm[:rate]")
         .opt("seed", "42", "PRNG seed")
         .opt("threads", "0", "worker threads (0 = auto)")
         .opt("eval-every", "5", "test-eval period (rounds)")
         .opt("out", "", "write result JSON to this path")
         .opt("artifacts", "", "artifacts dir (default: ./artifacts or $FLUID_ARTIFACTS)")
+        .flag("sim", "run the runtime-free simulation backend (no artifacts)")
         .flag("fluctuate", "enable the Fig-4b runtime fluctuation protocol")
         .flag("static-stragglers", "freeze the straggler set after first detection")
         .flag("synthetic-fleet", "use a synthetic fleet instead of the 5 phones")
@@ -113,9 +119,45 @@ fn build_config(a: &Args) -> ExperimentConfig {
     cfg.fluctuation = a.get_flag("fluctuate");
     cfg.static_stragglers = a.get_flag("static-stragglers");
     cfg.mobile_fleet = !a.get_flag("synthetic-fleet");
+    let fleet_size = a.get_usize("fleet-size");
+    if fleet_size > 0 {
+        cfg.fleet_size = Some(fleet_size);
+        cfg.mobile_fleet = false;
+        let k = a.get_usize("sample-k");
+        cfg.sample_k = if k == 0 {
+            (fleet_size / 100).clamp(1, 512)
+        } else {
+            k
+        };
+    }
+    cfg.sampler = SamplerKind::parse(&a.get("sampler")).unwrap_or_else(|| {
+        eprintln!("unknown sampler {:?} (uniform|weighted|available)", a.get("sampler"));
+        std::process::exit(2);
+    });
+    cfg.scenario = match ScenarioConfig::parse(&a.get("scenario")) {
+        Ok(sc) => sc,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
     let threads = a.get_usize("threads");
     if threads > 0 {
         cfg.threads = threads;
+    }
+    // the sim/fleet paths serve only the built-in synthetic datasets;
+    // fail with a clean message instead of panicking deep in the engine
+    // (the classic artifact path accepts any model with a manifest and
+    // reports a missing one contextually)
+    if (a.get_flag("sim") || cfg.fleet_size.is_some())
+        && !fluid::data::is_known_model(&cfg.model)
+    {
+        eprintln!(
+            "unknown model {:?} for the sim/fleet path \
+             (femnist_cnn|cifar_vgg9|cifar_resnet18|shakespeare_lstm)",
+            cfg.model
+        );
+        std::process::exit(2);
     }
     cfg
 }
@@ -141,17 +183,31 @@ fn cmd_train(argv: &[String]) -> i32 {
         }
     };
     let cfg = build_config(&a);
-    let sess = open_session(&a);
-    println!(
-        "fluid train: model={} policy={} clients={} rounds={} sync={} (platform={})",
-        cfg.model,
-        cfg.policy.name(),
-        cfg.clients,
-        cfg.rounds,
-        cfg.sync_mode.name(),
-        sess.platform()
-    );
-    let res = match coordinator::run(&sess, &cfg) {
+    let population = cfg.fleet_size.unwrap_or(cfg.clients);
+    let result = if a.get_flag("sim") {
+        println!(
+            "fluid train: model={} policy={} clients={} rounds={} sync={} (backend=sim)",
+            cfg.model,
+            cfg.policy.name(),
+            population,
+            cfg.rounds,
+            cfg.sync_mode.name(),
+        );
+        coordinator::run_sim(&cfg)
+    } else {
+        let sess = open_session(&a);
+        println!(
+            "fluid train: model={} policy={} clients={} rounds={} sync={} (platform={})",
+            cfg.model,
+            cfg.policy.name(),
+            population,
+            cfg.rounds,
+            cfg.sync_mode.name(),
+            sess.platform()
+        );
+        coordinator::run(&sess, &cfg)
+    };
+    let res = match result {
         Ok(r) => r,
         Err(e) => {
             eprintln!("experiment failed: {e:#}");

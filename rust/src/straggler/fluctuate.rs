@@ -4,6 +4,15 @@
 //! background process on random clients at the 25%, 50% and 75% marks of
 //! training. A [`LoadEvent`] is exactly that: a client, an active window
 //! in training-progress fractions, and a compute multiplier.
+//!
+//! At fleet scale (10k–100k clients) explicit per-client events stop
+//! being viable: a 10%-of-fleet load phase would mean tens of thousands
+//! of events, and `load_multiplier` is on the per-arrival hot path. The
+//! [`ProceduralLoad`] component covers that regime: phase membership is
+//! decided by a seeded per-(phase, client) hash, so lookups are
+//! O(phases) with zero per-client storage and the whole schedule replays
+//! bit-identically from its seed. `engine::scenario` compiles scenario
+//! configs down to procedural phases.
 
 use crate::util::prng::Pcg32;
 
@@ -18,16 +27,83 @@ pub struct LoadEvent {
     pub multiplier: f64,
 }
 
+/// One procedural fleet-dynamics phase: during `[start_frac, end_frac)`
+/// a seeded `slow_fraction` of the fleet runs under a background load in
+/// `[multiplier_lo, multiplier_hi]`, and every client's speed wobbles by
+/// a lognormal factor of shape `jitter` (0 disables). Which clients are
+/// slow is decided per phase, so consecutive phases *drift* the straggler
+/// population.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProceduralPhase {
+    pub start_frac: f64,
+    pub end_frac: f64,
+    pub slow_fraction: f64,
+    pub multiplier_lo: f64,
+    pub multiplier_hi: f64,
+    pub jitter: f64,
+}
+
+/// Hash-based fleet-scale load: membership and multipliers derive from
+/// `(seed, phase index, client)`, so lookups are O(phases) and the whole
+/// schedule is replayable from the seed alone.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProceduralLoad {
+    pub seed: u64,
+    pub phases: Vec<ProceduralPhase>,
+}
+
+impl ProceduralLoad {
+    /// Compute multiplier for `client` at training progress `t_frac`.
+    ///
+    /// Slow-set membership (and its load multiplier) is stable for the
+    /// whole phase — that is what makes the straggler *population* drift
+    /// phase by phase rather than flicker. The jitter component draws
+    /// from a stream salted with `t_frac`, so device speed genuinely
+    /// wobbles round to round while staying a pure replayable function
+    /// of `(seed, phase, client, t_frac)`.
+    pub fn multiplier(&self, client: usize, t_frac: f64) -> f64 {
+        let mut m = 1.0;
+        for (i, p) in self.phases.iter().enumerate() {
+            if t_frac >= p.start_frac && t_frac < p.end_frac {
+                let phase_salt = (i as u64 + 1) << 40;
+                let mut rng = Pcg32::new(self.seed ^ phase_salt, client as u64);
+                if rng.next_f64() < p.slow_fraction {
+                    m *= p.multiplier_lo
+                        + (p.multiplier_hi - p.multiplier_lo) * rng.next_f64();
+                }
+                if p.jitter > 0.0 {
+                    let mut jrng = Pcg32::new(
+                        self.seed ^ phase_salt ^ t_frac.to_bits(),
+                        client as u64,
+                    );
+                    m *= jrng.lognormal(p.jitter as f32) as f64;
+                }
+            }
+        }
+        m
+    }
+}
+
 /// The set of load events for one run.
 #[derive(Clone, Debug, Default)]
 pub struct FluctuationSchedule {
     pub events: Vec<LoadEvent>,
+    /// fleet-scale procedural component (None for the paper protocols)
+    pub procedural: Option<ProceduralLoad>,
 }
 
 impl FluctuationSchedule {
     /// No fluctuation — stable devices (Table 2 experiments).
     pub fn none() -> Self {
-        Self { events: vec![] }
+        Self::default()
+    }
+
+    /// Purely procedural schedule (fleet-scale scenarios).
+    pub fn procedural(load: ProceduralLoad) -> Self {
+        Self {
+            events: vec![],
+            procedural: Some(load),
+        }
     }
 
     /// The paper's protocol: at each of the 25/50/75% marks, pick a
@@ -50,7 +126,10 @@ impl FluctuationSchedule {
                 multiplier: 1.5 + rng.next_f64() * 1.0, // 1.5x – 2.5x
             });
         }
-        Self { events }
+        Self {
+            events,
+            procedural: None,
+        }
     }
 
     /// Compute multiplier for `client` at training progress `t_frac`.
@@ -61,12 +140,19 @@ impl FluctuationSchedule {
                 m *= e.multiplier;
             }
         }
+        if let Some(p) = &self.procedural {
+            m *= p.multiplier(client, t_frac);
+        }
         m
     }
 
     /// Does any event change the straggler set during the run?
     pub fn is_dynamic(&self) -> bool {
         !self.events.is_empty()
+            || self
+                .procedural
+                .as_ref()
+                .is_some_and(|p| !p.phases.is_empty())
     }
 }
 
@@ -90,6 +176,7 @@ mod tests {
                 end_frac: 0.5,
                 multiplier: 2.0,
             }],
+            procedural: None,
         };
         assert_eq!(s.load_multiplier(2, 0.2), 1.0);
         assert_eq!(s.load_multiplier(2, 0.25), 2.0);
@@ -126,8 +213,109 @@ mod tests {
                 LoadEvent { client: 0, start_frac: 0.0, end_frac: 1.0, multiplier: 1.5 },
                 LoadEvent { client: 0, start_frac: 0.4, end_frac: 0.6, multiplier: 2.0 },
             ],
+            procedural: None,
         };
         assert_eq!(s.load_multiplier(0, 0.5), 3.0);
         assert_eq!(s.load_multiplier(0, 0.1), 1.5);
+    }
+
+    fn drift_load() -> ProceduralLoad {
+        ProceduralLoad {
+            seed: 9,
+            phases: vec![
+                ProceduralPhase {
+                    start_frac: 0.0,
+                    end_frac: 0.5,
+                    slow_fraction: 0.2,
+                    multiplier_lo: 1.5,
+                    multiplier_hi: 2.5,
+                    jitter: 0.0,
+                },
+                ProceduralPhase {
+                    start_frac: 0.5,
+                    end_frac: 1.0,
+                    slow_fraction: 0.2,
+                    multiplier_lo: 1.5,
+                    multiplier_hi: 2.5,
+                    jitter: 0.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn procedural_is_deterministic_and_bounded() {
+        let p = drift_load();
+        for c in 0..200 {
+            let a = p.multiplier(c, 0.25);
+            assert_eq!(a.to_bits(), p.multiplier(c, 0.25).to_bits());
+            assert!(a == 1.0 || (1.5..=2.5).contains(&a), "client {c}: {a}");
+        }
+    }
+
+    #[test]
+    fn procedural_hits_roughly_slow_fraction() {
+        let p = drift_load();
+        let slow = (0..5000).filter(|&c| p.multiplier(c, 0.25) > 1.0).count();
+        assert!((700..=1300).contains(&slow), "slow count {slow} of 5000");
+    }
+
+    #[test]
+    fn procedural_population_drifts_between_phases() {
+        let p = drift_load();
+        // the slow sets of phase 1 and phase 2 must not coincide
+        let a: Vec<usize> =
+            (0..2000).filter(|&c| p.multiplier(c, 0.25) > 1.0).collect();
+        let b: Vec<usize> =
+            (0..2000).filter(|&c| p.multiplier(c, 0.75) > 1.0).collect();
+        assert_ne!(a, b, "straggler population did not drift");
+    }
+
+    #[test]
+    fn procedural_membership_is_stable_within_a_phase() {
+        // with jitter off, a client's multiplier is constant across the
+        // whole phase: the slow *population* only moves at phase edges
+        let p = drift_load();
+        for c in 0..100 {
+            assert_eq!(
+                p.multiplier(c, 0.1).to_bits(),
+                p.multiplier(c, 0.3).to_bits(),
+                "client {c} flickered inside the phase"
+            );
+        }
+    }
+
+    #[test]
+    fn procedural_jitter_wobbles_round_to_round() {
+        // a jitter-only phase (the `flux` scenario shape) must vary with
+        // training progress — speed fluctuation, not a static rescale
+        let p = ProceduralLoad {
+            seed: 5,
+            phases: vec![ProceduralPhase {
+                start_frac: 0.0,
+                end_frac: 1.0,
+                slow_fraction: 0.0,
+                multiplier_lo: 1.0,
+                multiplier_hi: 1.0,
+                jitter: 0.25,
+            }],
+        };
+        let varies = (0..50)
+            .filter(|&c| p.multiplier(c, 0.1).to_bits() != p.multiplier(c, 0.3).to_bits())
+            .count();
+        assert!(varies >= 45, "jitter is static within the phase ({varies}/50 vary)");
+        // and each (client, t_frac) pair replays bit-identically
+        assert_eq!(p.multiplier(3, 0.1).to_bits(), p.multiplier(3, 0.1).to_bits());
+        assert!(p.multiplier(3, 0.1) > 0.0);
+    }
+
+    #[test]
+    fn procedural_folds_into_schedule() {
+        let s = FluctuationSchedule::procedural(drift_load());
+        assert!(s.is_dynamic());
+        // out-of-phase progress is quiet
+        let p = ProceduralLoad { seed: 9, phases: vec![] };
+        assert_eq!(p.multiplier(3, 0.4), 1.0);
+        assert!(!FluctuationSchedule::procedural(p).is_dynamic());
     }
 }

@@ -15,5 +15,5 @@ pub mod perfmodel;
 pub use cluster::cluster_stragglers;
 pub use detect::{detect_stragglers, snap_rate, Detection};
 pub use device::{mobile_fleet, synthetic_fleet, DeviceProfile};
-pub use fluctuate::{FluctuationSchedule, LoadEvent};
+pub use fluctuate::{FluctuationSchedule, LoadEvent, ProceduralLoad, ProceduralPhase};
 pub use perfmodel::{ClientTiming, PerfModel};

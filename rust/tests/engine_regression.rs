@@ -251,6 +251,9 @@ fn reference_run(sess: &Session, cfg: &ExperimentConfig) -> fluid::Result<Experi
             round,
             round_time,
             vtime,
+            // the engine reports the sampled cohort (a field added with
+            // the fleet refactor); for the classic loop it is `selected`
+            cohort: selected.clone(),
             straggler_ids: straggler_ids.clone(),
             straggler_rates: straggler_ids.iter().map(|&c| rates[c]).collect(),
             t_target,
@@ -297,6 +300,7 @@ fn assert_history_identical(reference: &ExperimentResult, engine: &ExperimentRes
     for (r, e) in reference.records.iter().zip(&engine.records) {
         let ctx = format!("round {}", r.round);
         assert_eq!(r.round, e.round, "{ctx}");
+        assert_eq!(r.cohort, e.cohort, "{ctx}: cohort");
         assert!(
             eq_f64(r.round_time, e.round_time),
             "{ctx}: round_time {} vs {}",

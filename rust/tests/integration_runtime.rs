@@ -38,6 +38,21 @@ fn random_batch(spec: &fluid::model::ModelSpec, seed: u64) -> Batch {
 }
 
 #[test]
+fn stub_runtime_reports_missing_feature_cleanly() {
+    // the one case that *runs* under --no-default-features: the stub
+    // session must refuse construction with an actionable message
+    // instead of panicking or silently succeeding
+    if cfg!(feature = "xla") {
+        return;
+    }
+    let err = match Session::new(artifacts_dir()) {
+        Ok(_) => panic!("stub Session::new must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("xla"), "unhelpful stub error: {err}");
+}
+
+#[test]
 fn femnist_train_loss_decreases() {
     if !have("femnist_cnn") {
         eprintln!("skipping: run `make artifacts`");

@@ -3,7 +3,9 @@
 
 use fluid::data::partition;
 use fluid::dropout::mask::kept_count;
-use fluid::dropout::{threshold, MaskSet, OrderedDropout, RandomDropout};
+use fluid::dropout::{
+    threshold, InvariantConfig, InvariantDropout, MaskSet, OrderedDropout, RandomDropout,
+};
 use fluid::engine::{ClientArrival, EventScheduler, SyncMode};
 use fluid::fl::{fedavg, AggregateMode, ClientUpdate};
 use fluid::jsonlite::{self, Json};
@@ -72,6 +74,131 @@ fn prop_mask_sizes_exact_for_all_policies() {
                         ));
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_maskset_round_trips_extract_reinflate() {
+    // MaskSet::from_keep is faithful to its keep decisions, and a
+    // sub-model extract -> reinflate (zero-fill dropped neurons) is the
+    // identity on kept values and exactly `v * mask` elementwise.
+    check(
+        Config { cases: 80, ..Default::default() },
+        |g: &mut Gen| {
+            let ngroups = g.usize_in(1, 4);
+            let sizes: Vec<usize> = (0..ngroups).map(|_| g.usize_in(1, 48)).collect();
+            let keep: Vec<Vec<bool>> = sizes
+                .iter()
+                .map(|&n| (0..n).map(|_| g.bool()).collect())
+                .collect();
+            let values: Vec<Vec<f32>> =
+                sizes.iter().map(|&n| g.vec_f32(n, -3.0, 3.0)).collect();
+            (sizes, keep, values)
+        },
+        |_| vec![],
+        |(sizes, keep, values)| {
+            let spec = spec_with_groups(sizes);
+            let m = MaskSet::from_keep(&spec, keep);
+            for (gi, (k, v)) in keep.iter().zip(values).enumerate() {
+                // faithfulness: is_kept mirrors the keep vector, counts agree
+                let want_kept = k.iter().filter(|&&b| b).count();
+                if m.kept(gi) != want_kept {
+                    return Err(format!("group {gi}: kept {} want {want_kept}", m.kept(gi)));
+                }
+                for (i, &b) in k.iter().enumerate() {
+                    if m.is_kept(gi, i) != b {
+                        return Err(format!("group {gi} neuron {i}: is_kept mismatch"));
+                    }
+                }
+                // extract the sub-model...
+                let extracted: Vec<f32> = (0..v.len())
+                    .filter(|&i| m.is_kept(gi, i))
+                    .map(|i| v[i])
+                    .collect();
+                // ...and reinflate with zero-filled dropped neurons
+                let mut reinflated = vec![0.0f32; v.len()];
+                let mut cursor = 0usize;
+                for i in 0..v.len() {
+                    if m.is_kept(gi, i) {
+                        reinflated[i] = extracted[cursor];
+                        cursor += 1;
+                    }
+                }
+                if cursor != extracted.len() {
+                    return Err("reinflate consumed wrong element count".into());
+                }
+                let mask_t = &m.tensors()[gi];
+                for i in 0..v.len() {
+                    let want = v[i] * mask_t.data()[i];
+                    if reinflated[i] != want {
+                        return Err(format!(
+                            "group {gi} neuron {i}: reinflated {} != v*mask {want}",
+                            reinflated[i]
+                        ));
+                    }
+                }
+            }
+            // aggregate bookkeeping is consistent with the per-group counts
+            let total: usize = sizes.iter().sum();
+            let kept: usize = (0..sizes.len()).map(|g| m.kept(g)).sum();
+            let frac = kept as f64 / total as f64;
+            if (m.keep_fraction() - frac).abs() > 1e-12 {
+                return Err(format!("keep_fraction {} != {frac}", m.keep_fraction()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_invariant_fraction_monotone_in_threshold() {
+    // invariant_fraction_at counts score < th, so it must be monotone
+    // non-decreasing in th and hit {0, 1} at the extremes.
+    check(
+        Config { cases: 60, ..Default::default() },
+        |g: &mut Gen| {
+            let ngroups = g.usize_in(1, 3);
+            let sizes: Vec<usize> = (0..ngroups).map(|_| g.usize_in(1, 32)).collect();
+            let clients = g.usize_in(1, 5);
+            let deltas: Vec<Vec<Vec<f32>>> = (0..clients)
+                .map(|_| sizes.iter().map(|&n| g.vec_f32(n, 0.0, 2.0)).collect())
+                .collect();
+            let mut ths: Vec<f32> = (0..6).map(|_| g.f32_in(0.0, 2.5)).collect();
+            ths.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (sizes, deltas, ths)
+        },
+        |_| vec![],
+        |(sizes, deltas, ths)| {
+            let spec = spec_with_groups(sizes);
+            let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+            let per_client: Vec<Vec<Tensor>> = deltas
+                .iter()
+                .map(|c| {
+                    c.iter()
+                        .map(|v| Tensor::from_vec(&[v.len()], v.clone()))
+                        .collect()
+                })
+                .collect();
+            p.observe(&per_client);
+            let mut prev = -1.0f64;
+            for &th in ths {
+                let f = p.invariant_fraction_at(th);
+                if !(0.0..=1.0).contains(&f) {
+                    return Err(format!("fraction {f} outside [0,1] at th={th}"));
+                }
+                if f < prev {
+                    return Err(format!("not monotone: {prev} -> {f} at th={th}"));
+                }
+                prev = f;
+            }
+            if p.invariant_fraction_at(0.0) != 0.0 {
+                return Err("th=0 must make nothing invariant (strict <)".into());
+            }
+            if p.invariant_fraction_at(f32::INFINITY) != 1.0 {
+                return Err("th=inf must make everything invariant".into());
             }
             Ok(())
         },
