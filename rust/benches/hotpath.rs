@@ -1,43 +1,273 @@
 //! Runtime hot-path microbenchmarks (§Perf of EXPERIMENTS.md).
 //!
-//! Times the building blocks every experiment is made of:
-//! * `train_step` / `eval_step` / `delta_step` PJRT executions per model
-//! * tensor <-> literal conversion
-//! * masked FedAvg aggregation (plain vs ownership-weighted)
-//! * invariant mask extraction
-//! * one full coordinator round (5 clients)
+//! Two tiers of sections:
 //!
-//! Run: `cargo bench --bench hotpath [-- --full]`
+//! * **Pure sections** — run in every build configuration, including
+//!   `--no-default-features` on CI: masked FedAvg aggregation, invariant
+//!   mask extraction, fleet cohort sampling at 50k clients, scenario
+//!   churn, a full sim-backend fleet round, and snapshot encode/decode.
+//! * **PJRT sections** — `train_step` / `eval_step` / `delta_step` per
+//!   model, tensor→literal conversion, and one full coordinator round;
+//!   these need AOT artifacts and skip cleanly when the session cannot
+//!   open (stub builds, fresh checkouts).
+//!
+//! Machine-readable output + CI gating:
+//!
+//! ```sh
+//! cargo bench --bench hotpath [-- --full] \
+//!     [--json BENCH_hotpath.json]          # write ns/op per section
+//!     [--check BENCH_baseline.json]        # fail on >tolerance regression
+//!     [--tolerance 0.25]
+//! ```
+//!
+//! The check compares each section's best (min) ns/op against the
+//! committed baseline and exits non-zero when any section regresses by
+//! more than the tolerance. Sections absent from the baseline warn;
+//! baseline entries with `min_ns <= 0` are treated as unseeded and
+//! skipped.
 
-use fluid::bench::{experiments as exp, full_mode, Bench};
+use fluid::bench::{full_mode, Bench, Measurement};
 use fluid::coordinator::{self, ExperimentConfig};
 use fluid::data::FlData;
-use fluid::dropout::{InvariantConfig, InvariantDropout, MaskSet};
-use fluid::fl::{fedavg, AggregateMode, ClientUpdate};
-use fluid::dropout::PolicyKind;
+use fluid::dropout::{InvariantConfig, InvariantDropout, MaskSet, PolicyKind};
+use fluid::engine::ScenarioConfig;
+use fluid::fl::{fedavg, sample_cohort, AggregateMode, ClientUpdate, Fleet, SamplerKind};
+use fluid::jsonlite::{self, Json};
+use fluid::model::sim_spec;
 use fluid::runtime::Session;
+use fluid::snapshot::{PolicyState, Snapshot};
 use fluid::tensor::Tensor;
 use fluid::util::prng::Pcg32;
 
+fn arg_value(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() {
-    let sess = exp::session_or_exit();
     let b = if full_mode() {
         Bench::new(5, 30)
     } else {
         Bench::new(2, 8)
+    };
+    let mut all: Vec<Measurement> = Vec::new();
+
+    println!("== hot path microbenchmarks ==\n");
+    pure_benches(&b, &mut all);
+    pjrt_benches(&b, &mut all);
+
+    if let Some(path) = arg_value("--json") {
+        let json = to_json(&all);
+        if let Err(e) = std::fs::write(&path, json.to_string_pretty()) {
+            eprintln!("writing {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {path} ({} sections)", all.len());
+    }
+    if let Some(baseline) = arg_value("--check") {
+        let tol: f64 = arg_value("--tolerance")
+            .and_then(|t| t.parse().ok())
+            .unwrap_or(0.25);
+        std::process::exit(check_against(&all, &baseline, tol));
+    }
+}
+
+// ---- pure sections (any build configuration) -------------------------------
+
+fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
+    let spec = sim_spec("femnist_cnn");
+
+    // masked FedAvg over a cohort-sized update set
+    let global = spec.init_params(2);
+    let updates: Vec<ClientUpdate> = (0..64)
+        .map(|i| ClientUpdate {
+            params: spec.init_params(100 + i),
+            weight: 16.0,
+            mask: MaskSet::full(&spec),
+            staleness: 0,
+        })
+        .collect();
+    let m = b.run("aggregate/fedavg-plain-64", || {
+        let out = fedavg(&spec, &global, &updates, AggregateMode::Plain);
+        std::hint::black_box(out.len());
+    });
+    println!("{}", m.report());
+    all.push(m);
+    let m = b.run("aggregate/fedavg-ownership-64", || {
+        let out = fedavg(&spec, &global, &updates, AggregateMode::OwnershipWeighted);
+        std::hint::black_box(out.len());
+    });
+    println!("{}", m.report());
+    all.push(m);
+
+    // invariant mask extraction
+    let mut inv = InvariantDropout::new(&spec, InvariantConfig::default());
+    let mut rng = Pcg32::new(5, 5);
+    let deltas: Vec<Vec<Tensor>> = (0..8)
+        .map(|_| {
+            spec.masks
+                .iter()
+                .map(|m| {
+                    Tensor::from_vec(
+                        &[m.size],
+                        (0..m.size).map(|_| rng.next_f32() * 0.2).collect(),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    inv.observe(&deltas);
+    let m = b.run("invariant/make-mask", || {
+        let mask = inv.make_mask(&spec, 0.75);
+        std::hint::black_box(mask.keep_fraction());
+    });
+    println!("{}", m.report());
+    all.push(m);
+
+    // fleet cohort sampling at population scale
+    let mut fleet = Fleet::synthetic_pool(50_000, 7);
+    for d in fleet.clients.iter_mut() {
+        d.data_len = 4 + d.id % 13;
+    }
+    for (name, kind) in [
+        ("fleet/sample-uniform-50k", SamplerKind::Uniform),
+        ("fleet/sample-weighted-50k", SamplerKind::WeightedByData),
+        ("fleet/sample-available-50k", SamplerKind::AvailabilityAware),
+    ] {
+        let mut srng = Pcg32::new(11, 3);
+        let m = b.run(name, || {
+            let s = sample_cohort(&fleet, kind, 256, &mut srng);
+            std::hint::black_box(s.len());
+        });
+        println!("{}", m.report());
+        all.push(m);
+    }
+
+    // scenario churn tick over the whole population
+    let sim = fluid::engine::ScenarioSim::new(
+        ScenarioConfig::parse("storm").unwrap().unwrap(),
+        42,
+    );
+    let mut round = 0usize;
+    let m = b.run("scenario/churn-50k", || {
+        sim.apply_churn(round, &mut fleet);
+        round += 1;
+        std::hint::black_box(fleet.num_available());
+    });
+    println!("{}", m.report());
+    all.push(m);
+
+    // one full fleet round trip through the sim backend
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 2000, 32);
+    cfg.rounds = 2;
+    cfg.samples_per_client = 4;
+    cfg.local_steps = 1;
+    cfg.eval_every = cfg.rounds;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    let m = b.run("sim/fleet-2k-2rounds", || {
+        let res = coordinator::run_sim(&cfg).unwrap();
+        std::hint::black_box(res.total_vtime);
+    });
+    println!("{}", m.report());
+    all.push(m);
+
+    // snapshot codec over a representative mid-run state
+    let snap = synthetic_snapshot(&spec, 2000, 50);
+    let m = b.run("snapshot/encode-2k-fleet", || {
+        let bytes = snap.encode();
+        std::hint::black_box(bytes.len());
+    });
+    println!("{}", m.report());
+    all.push(m);
+    let bytes = snap.encode();
+    let m = b.run("snapshot/decode-2k-fleet", || {
+        let back = Snapshot::decode(&bytes).unwrap();
+        std::hint::black_box(back.next_round);
+    });
+    println!("{}", m.report());
+    all.push(m);
+    println!();
+}
+
+/// A mid-run-shaped snapshot: sim-spec params, a 2k-client availability
+/// map, and a 50-round history.
+fn synthetic_snapshot(
+    spec: &fluid::model::ModelSpec,
+    clients: usize,
+    rounds: usize,
+) -> Snapshot {
+    let (th, streak, score, observations) = {
+        let mut inv = InvariantDropout::new(spec, InvariantConfig::default());
+        let deltas: Vec<Vec<Tensor>> = (0..4)
+            .map(|c| {
+                spec.masks
+                    .iter()
+                    .map(|m| Tensor::full(&[m.size], 0.01 * (c + 1) as f32))
+                    .collect()
+            })
+            .collect();
+        inv.observe(&deltas);
+        inv.export_state()
+    };
+    Snapshot {
+        fingerprint: "bench".into(),
+        next_round: rounds,
+        vtime: 1234.5,
+        calib_total: 0.5,
+        train_wall: 9.0,
+        params: spec.init_params(3),
+        policy: PolicyState::Invariant { th, streak, score, observations },
+        availability: (0..clients).map(|i| i % 7 != 0).collect(),
+        detection: None,
+        last_latencies: (0..clients).map(|i| i as f64 * 0.001).collect(),
+        last_full_latencies: (0..clients).map(|i| i as f64 * 0.0015).collect(),
+        free_at: vec![0.0; clients],
+        stale: Vec::new(),
+        records: (0..rounds)
+            .map(|r| fluid::coordinator::RoundRecord {
+                round: r,
+                round_time: 3.0,
+                vtime: 3.0 * (r + 1) as f64,
+                cohort: (0..32).collect(),
+                straggler_ids: vec![5, 9],
+                straggler_rates: vec![0.75, 0.65],
+                t_target: 2.5,
+                straggler_time: 3.0,
+                train_loss: 1.0,
+                train_acc: 0.5,
+                test_loss: f64::NAN,
+                test_acc: f64::NAN,
+                invariant_fraction: 0.1,
+                calibration_secs: 0.001,
+                aggregated: 32,
+                dropped_updates: 0,
+                stale_folded: 0,
+            })
+            .collect(),
+    }
+}
+
+// ---- PJRT sections (need artifacts) ----------------------------------------
+
+fn pjrt_benches(b: &Bench, all: &mut Vec<Measurement>) {
+    let sess = match Session::new(Session::default_dir()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping PJRT sections (no session: {e:#})\n");
+            return;
+        }
     };
     let models: Vec<&str> = if full_mode() {
         vec!["femnist_cnn", "cifar_vgg9", "shakespeare_lstm", "cifar_resnet18"]
     } else {
         vec!["femnist_cnn", "shakespeare_lstm"]
     };
-
-    println!("== hot path microbenchmarks ==\n");
     for model in &models {
-        step_benches(&sess, model, &b);
+        step_benches(&sess, model, b, all);
     }
-    aggregation_benches(&sess, &b);
-    coordinator_round_bench(&sess, &b);
+    coordinator_round_bench(&sess, b, all);
 }
 
 fn random_batch(spec: &fluid::model::ModelSpec, seed: u64) -> fluid::runtime::Batch {
@@ -46,7 +276,7 @@ fn random_batch(spec: &fluid::model::ModelSpec, seed: u64) -> fluid::runtime::Ba
     data.clients[0].sample_batch(&mut rng, &spec.x_shape)
 }
 
-fn step_benches(sess: &Session, model: &str, b: &Bench) {
+fn step_benches(sess: &Session, model: &str, b: &Bench, all: &mut Vec<Measurement>) {
     let runner = match sess.runner(model) {
         Ok(r) => r,
         Err(e) => {
@@ -63,22 +293,25 @@ fn step_benches(sess: &Session, model: &str, b: &Bench) {
         std::hint::black_box(out.loss);
     });
     println!("{}", m.report());
+    all.push(m);
     let m = b.run(&format!("{model}/eval_step"), || {
         let out = runner.eval_step(&params, &masks, &batch).unwrap();
         std::hint::black_box(out.loss);
     });
     println!("{}", m.report());
+    all.push(m);
     // fused k-step program (§Perf L2 optimization) vs k single steps
     if runner.multi_k() > 0 {
         let k = runner.multi_k();
         let batches: Vec<fluid::runtime::Batch> =
             (0..k).map(|i| random_batch(&runner.spec, 50 + i as u64)).collect();
-        let m = b.run(&format!("{model}/train_multi (k={k}, fused)"), || {
+        let m = b.run(&format!("{model}/train_multi-fused-k{k}"), || {
             let out = runner.train_multi_step(&params, &masks, &batches, 0.01).unwrap();
             std::hint::black_box(out.loss);
         });
         println!("{}", m.report());
-        let m = b.run(&format!("{model}/train x{k} (sequential)"), || {
+        all.push(m);
+        let m = b.run(&format!("{model}/train_step-x{k}-sequential"), || {
             let mut cur = params.clone();
             for bt in &batches {
                 cur = runner.train_step(&cur, &masks, bt, 0.01).unwrap().params;
@@ -86,6 +319,7 @@ fn step_benches(sess: &Session, model: &str, b: &Bench) {
             std::hint::black_box(cur.len());
         });
         println!("{}", m.report());
+        all.push(m);
     }
 
     let new_params = runner.train_step(&params, &masks, &batch, 0.05).unwrap().params;
@@ -94,81 +328,130 @@ fn step_benches(sess: &Session, model: &str, b: &Bench) {
         std::hint::black_box(d.len());
     });
     println!("{}", m.report());
+    all.push(m);
 
     // conversion cost for the largest parameter (PJRT builds only)
     #[cfg(feature = "xla")]
     {
-        let biggest = params
-            .iter()
-            .max_by_key(|t| t.len())
-            .unwrap()
-            .clone();
-        let m = b.run(&format!("{model}/tensor->literal ({} f32)", biggest.len()), || {
+        let biggest = params.iter().max_by_key(|t| t.len()).unwrap().clone();
+        let m = b.run(&format!("{model}/tensor-to-literal"), || {
             let lit = fluid::runtime::tensor_to_literal(&biggest).unwrap();
             std::hint::black_box(&lit);
         });
         println!("{}", m.report());
+        all.push(m);
     }
     println!();
 }
 
-fn aggregation_benches(sess: &Session, b: &Bench) {
-    let Ok(runner) = sess.runner("femnist_cnn") else { return };
-    let spec = &runner.spec;
-    let global = spec.init_params(2);
-    let updates: Vec<ClientUpdate> = (0..5)
-        .map(|i| ClientUpdate {
-            params: spec.init_params(100 + i),
-            weight: 60.0,
-            mask: MaskSet::full(spec),
-            staleness: 0,
-        })
-        .collect();
-    let m = b.run("aggregate/fedavg plain (5 clients, 410k params)", || {
-        let out = fedavg(spec, &global, &updates, AggregateMode::Plain);
-        std::hint::black_box(out.len());
-    });
-    println!("{}", m.report());
-    let m = b.run("aggregate/fedavg ownership (5 clients, 410k params)", || {
-        let out = fedavg(spec, &global, &updates, AggregateMode::OwnershipWeighted);
-        std::hint::black_box(out.len());
-    });
-    println!("{}", m.report());
-
-    // invariant mask extraction
-    let mut inv = InvariantDropout::new(spec, InvariantConfig::default());
-    let mut rng = Pcg32::new(5, 5);
-    let deltas: Vec<Vec<Tensor>> = (0..4)
-        .map(|_| {
-            spec.masks
-                .iter()
-                .map(|m| {
-                    Tensor::from_vec(
-                        &[m.size],
-                        (0..m.size).map(|_| rng.next_f32() * 0.2).collect(),
-                    )
-                })
-                .collect()
-        })
-        .collect();
-    inv.observe(&deltas);
-    let m = b.run("invariant/make_mask (200 neurons)", || {
-        let mask = inv.make_mask(spec, 0.75);
-        std::hint::black_box(mask.keep_fraction());
-    });
-    println!("{}", m.report());
-    println!();
-}
-
-fn coordinator_round_bench(sess: &Session, b: &Bench) {
+fn coordinator_round_bench(sess: &Session, b: &Bench, all: &mut Vec<Measurement>) {
     let mut cfg = ExperimentConfig::mobile("femnist_cnn", PolicyKind::Invariant);
     cfg.rounds = 1;
     cfg.samples_per_client = 20;
     cfg.local_steps = 2;
     cfg.eval_every = 10; // skip eval inside the timed region
-    let m = b.run("coordinator/full round (5 clients, 2 local steps)", || {
+    let m = b.run("coordinator/full-round-5-clients", || {
         let res = coordinator::run(sess, &cfg).unwrap();
         std::hint::black_box(res.total_vtime);
     });
     println!("{}", m.report());
+    all.push(m);
+}
+
+// ---- JSON emission + baseline gate -----------------------------------------
+
+fn to_json(all: &[Measurement]) -> Json {
+    let mut sections = Json::obj();
+    for m in all {
+        sections = sections.set(
+            &m.name,
+            Json::obj()
+                .set("ns_per_op", m.mean_s * 1e9)
+                .set("min_ns", m.min_s * 1e9)
+                .set("std_ns", m.std_s * 1e9)
+                .set("iters", m.iters),
+        );
+    }
+    Json::obj()
+        .set("bench", "hotpath")
+        .set("mode", if full_mode() { "full" } else { "quick" })
+        .set("sections", sections)
+}
+
+fn check_against(all: &[Measurement], baseline_path: &str, tol: f64) -> i32 {
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read baseline {baseline_path}: {e}");
+            return 2;
+        }
+    };
+    let base = match jsonlite::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("cannot parse baseline {baseline_path}: {e:#}");
+            return 2;
+        }
+    };
+    let Some(sections) = base.get("sections").and_then(|s| s.as_obj()) else {
+        eprintln!("baseline {baseline_path} has no sections object");
+        return 2;
+    };
+    let mut regressions = 0usize;
+    println!("== baseline gate (tolerance {:.0}%) ==", tol * 100.0);
+    for m in all {
+        let cur_ns = m.min_s * 1e9;
+        let base_ns = sections
+            .get(&m.name)
+            .and_then(|s| s.get("min_ns"))
+            .and_then(|v| v.as_f64());
+        match base_ns {
+            None => println!("{:<42} {:>12.0} ns  (new section, no baseline)", m.name, cur_ns),
+            Some(b) if b <= 0.0 => {
+                println!("{:<42} {:>12.0} ns  (baseline unseeded)", m.name, cur_ns)
+            }
+            Some(b) => {
+                let delta = cur_ns / b - 1.0;
+                let flag = if delta > tol {
+                    regressions += 1;
+                    "REGRESSION"
+                } else {
+                    "ok"
+                };
+                println!(
+                    "{:<42} {:>12.0} ns vs {:>12.0} ns  {:+6.1}%  {flag}",
+                    m.name,
+                    cur_ns,
+                    b,
+                    delta * 100.0
+                );
+            }
+        }
+    }
+    // Surface baseline rot: a seeded section that did not run this time
+    // (renamed, dropped, or needs an environment this runner lacks —
+    // e.g. PJRT sections on a stub build). Warn rather than fail so a
+    // baseline seeded on an artifact-capable machine still gates stub
+    // CI, but a rename can never silently shed its baseline.
+    let ran: Vec<&str> = all.iter().map(|m| m.name.as_str()).collect();
+    let mut missing = 0usize;
+    for name in sections.keys() {
+        if !ran.contains(&name.as_str()) {
+            eprintln!("warning: baseline section {name:?} did not run (renamed or skipped?)");
+            missing += 1;
+        }
+    }
+    if missing > 0 {
+        eprintln!(
+            "warning: {missing} baseline section(s) unmatched — update BENCH_baseline.json \
+             if sections were renamed"
+        );
+    }
+    if regressions > 0 {
+        eprintln!("{regressions} hot-path section(s) regressed more than {:.0}%", tol * 100.0);
+        1
+    } else {
+        println!("no regressions beyond {:.0}%", tol * 100.0);
+        0
+    }
 }

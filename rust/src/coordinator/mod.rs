@@ -14,6 +14,7 @@ use crate::dropout::PolicyKind;
 use crate::engine::{ScenarioConfig, SyncMode};
 use crate::fl::{AggregateMode, SamplerKind};
 use crate::jsonlite::Json;
+use std::path::PathBuf;
 
 /// Everything that defines one run.
 #[derive(Clone, Debug)]
@@ -73,6 +74,21 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// worker threads for parallel client execution
     pub threads: usize,
+    /// write a resumable snapshot every N round boundaries (0 = off);
+    /// requires [`ExperimentConfig::checkpoint_dir`]
+    pub checkpoint_every: usize,
+    /// where snapshot files live (see [`crate::snapshot::SnapshotStore`])
+    pub checkpoint_dir: Option<PathBuf>,
+    /// keep only the newest N snapshots (rotation)
+    pub checkpoint_keep: usize,
+    /// resume from this snapshot file, or the newest snapshot when the
+    /// path is a directory; the snapshot's config fingerprint must match
+    pub resume_from: Option<PathBuf>,
+    /// fault injection for the kill/resume soak: `Some(r)` aborts the
+    /// run with an `engine::FaultInjected` error once `r` rounds have
+    /// completed, after any due checkpoint was written; the `fluid`
+    /// binary translates it to exit code 137 (as if SIGKILLed)
+    pub crash_after: Option<usize>,
 }
 
 impl ExperimentConfig {
@@ -106,6 +122,11 @@ impl ExperimentConfig {
             scenario: None,
             seed: 42,
             threads: crate::util::pool::default_threads(),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            checkpoint_keep: 3,
+            resume_from: None,
+            crash_after: None,
         }
     }
 

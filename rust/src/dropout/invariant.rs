@@ -121,6 +121,55 @@ impl InvariantDropout {
         }
     }
 
+    /// Raw resumable state `(th, streak, score, observations)` — the
+    /// evolving part of the policy that a checkpoint must capture (the
+    /// config is reconstructed from the experiment seed).
+    #[allow(clippy::type_complexity)]
+    pub fn export_state(&self) -> (Vec<f32>, Vec<Vec<u32>>, Vec<Vec<f32>>, usize) {
+        (
+            self.th.clone(),
+            self.streak.clone(),
+            self.score.clone(),
+            self.observations,
+        )
+    }
+
+    /// Restore state captured by [`InvariantDropout::export_state`].
+    /// Group shapes must match the spec this policy was built against.
+    pub fn import_state(
+        &mut self,
+        th: Vec<f32>,
+        streak: Vec<Vec<u32>>,
+        score: Vec<Vec<f32>>,
+        observations: usize,
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            th.len() == self.th.len()
+                && streak.len() == self.streak.len()
+                && score.len() == self.score.len(),
+            "snapshot has {}/{}/{} policy groups, model has {}",
+            th.len(),
+            streak.len(),
+            score.len(),
+            self.th.len()
+        );
+        for g in 0..streak.len() {
+            anyhow::ensure!(
+                streak[g].len() == self.streak[g].len()
+                    && score[g].len() == self.score[g].len(),
+                "policy group {g}: snapshot sizes {}/{} vs model {}",
+                streak[g].len(),
+                score[g].len(),
+                self.streak[g].len()
+            );
+        }
+        self.th = th;
+        self.streak = streak;
+        self.score = score;
+        self.observations = observations;
+        Ok(())
+    }
+
     /// Ingest one round of non-straggler deltas: `per_client[c][g]` is the
     /// per-neuron relative-update vector of group `g` from client `c`
     /// (produced by the L1 `neuron_delta` kernel via `delta_step`).
@@ -333,6 +382,29 @@ mod tests {
         }
         p.observe(&moved);
         assert_eq!(p.streak[0][0], 0);
+    }
+
+    #[test]
+    fn export_import_state_round_trips_and_validates() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        for _ in 0..3 {
+            p.observe(&fake_deltas(4));
+        }
+        let (th, streak, score, obs) = p.export_state();
+        let mut q = InvariantDropout::new(&spec, InvariantConfig::default());
+        assert!(!q.ready());
+        q.import_state(th.clone(), streak.clone(), score.clone(), obs).unwrap();
+        assert!(q.ready());
+        assert_eq!(q.thresholds(), p.thresholds());
+        // restored policy extracts the identical mask
+        assert_eq!(q.make_mask(&spec, 0.5), p.make_mask(&spec, 0.5));
+        // mismatched shapes are rejected, not silently adopted
+        let mut r = InvariantDropout::new(&spec, InvariantConfig::default());
+        assert!(r.import_state(vec![0.0], streak.clone(), score.clone(), obs).is_err());
+        let mut bad_streak = streak.clone();
+        bad_streak[0].pop();
+        assert!(r.import_state(th, bad_streak, score, obs).is_err());
     }
 
     #[test]

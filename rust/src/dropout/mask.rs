@@ -35,6 +35,12 @@ impl MaskSet {
         MaskSet { masks }
     }
 
+    /// Rebuild from raw per-group 0/1 tensors in group order — the
+    /// snapshot-decode path. The inverse of [`MaskSet::tensors`].
+    pub fn from_tensors(masks: Vec<Tensor>) -> MaskSet {
+        MaskSet { masks }
+    }
+
     /// Per-group tensors in manifest order (what the runtime takes).
     pub fn tensors(&self) -> &[Tensor] {
         &self.masks

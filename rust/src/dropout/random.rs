@@ -16,6 +16,17 @@ impl RandomDropout {
         }
     }
 
+    /// Raw PRNG stream position — what a resumed run must continue from,
+    /// since every extraction advances the stream.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state_parts()
+    }
+
+    /// Restore the stream position captured by [`RandomDropout::rng_state`].
+    pub fn set_rng_state(&mut self, state: u64, inc: u64) {
+        self.rng = Pcg32::from_state_parts(state, inc);
+    }
+
     pub fn make_mask(&mut self, spec: &ModelSpec, r: f64) -> MaskSet {
         let keep: Vec<Vec<bool>> = spec
             .masks
@@ -56,6 +67,18 @@ mod tests {
         let b = p.make_mask(&spec, 0.5);
         // overwhelmingly likely to differ (10 choose 5 ways)
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn rng_state_restore_replays_the_next_mask() {
+        let spec = tiny_spec();
+        let mut p = RandomDropout::new(7);
+        let _ = p.make_mask(&spec, 0.5); // advance the stream
+        let (state, inc) = p.rng_state();
+        let next = p.make_mask(&spec, 0.5);
+        let mut q = RandomDropout::new(12345); // different seed...
+        q.set_rng_state(state, inc); // ...but restored position
+        assert_eq!(q.make_mask(&spec, 0.5), next);
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //!   speed fluctuation. Peak resident data tracks the cohort, never the
 //!   fleet.
 //!
+//! * the **snapshot seam** — [`RoundEngine::snapshot_at`] captures every
+//!   piece of cross-round state at a round boundary and
+//!   [`RoundEngine::restore`] reinstalls it, so a run killed mid-flight
+//!   resumes bit-identically (`crate::snapshot`, DESIGN.md §6).
+//!   [`RoundEngine::run`] honors `ExperimentConfig::{checkpoint_every,
+//!   checkpoint_dir, resume_from}`.
+//!
 //! See DESIGN.md §3 and §5 for the layering diagram, the exact SyncMode
 //! semantics and the RNG-stream layout.
 
@@ -43,6 +50,7 @@ use crate::data::{partition, FlData, ShardSource, Split};
 use crate::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
 use crate::fl::{self, fedavg, sample_cohort, staleness_discount, Client, ClientUpdate, Fleet};
 use crate::model::ModelSpec;
+use crate::snapshot::{config_fingerprint, PolicyState, Snapshot, SnapshotStore, StaleEntry};
 use crate::straggler::{detect_stragglers, snap_rate, Detection, FluctuationSchedule, PerfModel};
 use crate::tensor::Tensor;
 use crate::util::prng::Pcg32;
@@ -53,6 +61,29 @@ use std::time::Instant;
 /// the information saturates quickly and each voter costs one
 /// `delta_step` execution (documented server-side optimization).
 const MAX_DELTA_VOTERS: usize = 16;
+
+/// Marker error for `ExperimentConfig::crash_after` fault injection:
+/// the run stopped *by request* after a checkpointed round boundary.
+/// The engine never kills the process itself (it may be embedded in a
+/// larger harness); the `fluid` binary downcasts to this and exits 137,
+/// as if SIGKILLed — which is what the kill/resume soak asserts on.
+#[derive(Debug)]
+pub struct FaultInjected {
+    /// rounds completed when the injected crash fired
+    pub after_rounds: usize,
+}
+
+impl std::fmt::Display for FaultInjected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fault injection: run aborted after {} completed round(s)",
+            self.after_rounds
+        )
+    }
+}
+
+impl std::error::Error for FaultInjected {}
 
 /// Round-synchronization policy: when does a round end, and what happens
 /// to updates that arrive after it does?
@@ -265,11 +296,29 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         self.cfg.fleet_size.is_some()
     }
 
-    /// Run every round to completion.
+    /// Run every round to completion, honoring the checkpoint/resume
+    /// config: `resume_from` restores a snapshot before the first round,
+    /// `checkpoint_every`/`checkpoint_dir` persist one at matching round
+    /// boundaries, and `crash_after` is the soak suite's fault injection.
     pub fn run(mut self) -> crate::Result<ExperimentResult> {
         let cfg = self.cfg;
         let mut records: Vec<RoundRecord> = Vec::with_capacity(cfg.rounds);
-        for round in 0..cfg.rounds {
+        let mut start_round = 0usize;
+        if let Some(path) = &cfg.resume_from {
+            let snap = SnapshotStore::load_resume(path)?;
+            let (next, history) = self.restore(snap)?;
+            start_round = next;
+            records = history;
+        }
+        let store = if cfg.checkpoint_every > 0 {
+            let dir = cfg.checkpoint_dir.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("checkpoint_every is set but checkpoint_dir is not")
+            })?;
+            Some(SnapshotStore::new(dir, cfg.checkpoint_keep)?)
+        } else {
+            None
+        };
+        for round in start_round..cfg.rounds {
             let plan = self.plan_round(round);
             let o = self.run_round(&plan)?;
             self.calib_total += o.calibration_secs;
@@ -292,6 +341,18 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 dropped_updates: o.dropped_updates,
                 stale_folded: o.stale_folded,
             });
+            if let Some(store) = &store {
+                if (round + 1) % cfg.checkpoint_every == 0 {
+                    store.save(&self.snapshot_at(round + 1, &records))?;
+                }
+            }
+            if let Some(limit) = cfg.crash_after {
+                if round + 1 >= limit {
+                    return Err(anyhow::Error::new(FaultInjected {
+                        after_rounds: round + 1,
+                    }));
+                }
+            }
         }
 
         let last_eval = records
@@ -312,6 +373,191 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             seed: cfg.seed,
             train_wall_total: self.train_wall,
         })
+    }
+
+    /// Capture the full resumable state at a round boundary: `next_round`
+    /// rounds have completed (and produced `records`), and the returned
+    /// snapshot replays the rest bit-identically through [`Self::restore`].
+    pub fn snapshot_at(&self, next_round: usize, records: &[RoundRecord]) -> Snapshot {
+        let policy = match &self.policy {
+            Policy::Random(p) => {
+                let (state, inc) = p.rng_state();
+                PolicyState::Random { state, inc }
+            }
+            Policy::Invariant(p) => {
+                let (th, streak, score, observations) = p.export_state();
+                PolicyState::Invariant { th, streak, score, observations }
+            }
+            Policy::None | Policy::Ordered(_) | Policy::Exclude => PolicyState::Stateless,
+        };
+        Snapshot {
+            fingerprint: config_fingerprint(self.cfg),
+            next_round,
+            vtime: self.vtime,
+            calib_total: self.calib_total,
+            train_wall: self.train_wall,
+            params: self.params.clone(),
+            policy,
+            availability: self.fleet.clients.iter().map(|d| d.available).collect(),
+            detection: self.detection.clone(),
+            last_latencies: self.last_latencies.clone(),
+            last_full_latencies: self.last_full_latencies.clone(),
+            free_at: self.free_at.clone(),
+            stale: self
+                .stale
+                .iter()
+                .map(|s| StaleEntry {
+                    params: s.result.params.clone(),
+                    weight: s.result.weight,
+                    mean_loss: s.result.mean_loss,
+                    mean_acc: s.result.mean_acc,
+                    steps: s.result.steps,
+                    mask: s.mask.tensors().to_vec(),
+                    arrives_at: s.arrives_at,
+                    born_round: s.born_round,
+                })
+                .collect(),
+            records: records.to_vec(),
+        }
+    }
+
+    /// Install a snapshot's state into a freshly-built engine. Validates
+    /// the config fingerprint and every per-client table length before
+    /// touching any state, so a mismatched snapshot cannot half-apply.
+    /// Returns `(next_round, completed-round history)`.
+    pub fn restore(
+        &mut self,
+        snap: Snapshot,
+    ) -> crate::Result<(usize, Vec<RoundRecord>)> {
+        let fp = config_fingerprint(self.cfg);
+        anyhow::ensure!(
+            snap.fingerprint == fp,
+            "snapshot was taken under a different experiment configuration\n  \
+             snapshot: {}\n  current:  {fp}",
+            snap.fingerprint
+        );
+        anyhow::ensure!(
+            snap.next_round <= self.cfg.rounds,
+            "snapshot round cursor {} exceeds configured rounds {}",
+            snap.next_round,
+            self.cfg.rounds
+        );
+        anyhow::ensure!(
+            snap.records.len() == snap.next_round,
+            "snapshot history has {} records for round cursor {}",
+            snap.records.len(),
+            snap.next_round
+        );
+        let n = self.n;
+        anyhow::ensure!(
+            snap.availability.len() == n
+                && snap.last_latencies.len() == n
+                && snap.last_full_latencies.len() == n
+                && snap.free_at.len() == n,
+            "snapshot population tables sized for {} clients, engine has {n}",
+            snap.availability.len()
+        );
+        anyhow::ensure!(
+            snap.params.len() == self.params.len(),
+            "snapshot has {} parameter tensors, model has {}",
+            snap.params.len(),
+            self.params.len()
+        );
+        for (i, (a, b)) in snap.params.iter().zip(&self.params).enumerate() {
+            anyhow::ensure!(
+                a.shape() == b.shape(),
+                "parameter {i}: snapshot shape {:?} vs model {:?}",
+                a.shape(),
+                b.shape()
+            );
+        }
+        // Semantic validation of the scheduler section: the codec only
+        // guarantees well-formed *encoding*, so a hand-crafted snapshot
+        // could still carry out-of-range ids or mismatched shapes that
+        // would panic rounds later. Reject them here instead.
+        if let Some(d) = &snap.detection {
+            anyhow::ensure!(
+                d.stragglers.iter().all(|&c| c < n),
+                "snapshot detection names client ids outside the {n}-client population"
+            );
+            anyhow::ensure!(
+                d.rates.len() == d.stragglers.len()
+                    && d.speedups.len() == d.stragglers.len(),
+                "snapshot detection tables misaligned: {} stragglers, {} rates, {} speedups",
+                d.stragglers.len(),
+                d.rates.len(),
+                d.speedups.len()
+            );
+        }
+        let groups = self.full_mask.num_groups();
+        for (i, s) in snap.stale.iter().enumerate() {
+            anyhow::ensure!(
+                s.params.len() == self.params.len()
+                    && s.params
+                        .iter()
+                        .zip(&self.params)
+                        .all(|(a, b)| a.shape() == b.shape()),
+                "stale update {i}: parameter tensors do not match the model"
+            );
+            anyhow::ensure!(
+                s.mask.len() == groups
+                    && s.mask
+                        .iter()
+                        .zip(self.full_mask.tensors())
+                        .all(|(a, b)| a.shape() == b.shape()),
+                "stale update {i}: mask tensors do not match the model's {groups} groups"
+            );
+            anyhow::ensure!(
+                s.born_round < snap.next_round,
+                "stale update {i}: born in round {} but only {} rounds completed",
+                s.born_round,
+                snap.next_round
+            );
+        }
+        match (&mut self.policy, &snap.policy) {
+            (Policy::Random(p), PolicyState::Random { state, inc }) => {
+                p.set_rng_state(*state, *inc);
+            }
+            (Policy::Invariant(p), PolicyState::Invariant { th, streak, score, observations }) => {
+                p.import_state(th.clone(), streak.clone(), score.clone(), *observations)?;
+            }
+            (
+                Policy::None | Policy::Ordered(_) | Policy::Exclude,
+                PolicyState::Stateless,
+            ) => {}
+            _ => anyhow::bail!(
+                "snapshot policy state does not match the configured policy {:?}",
+                self.cfg.policy
+            ),
+        }
+        for (d, &avail) in self.fleet.clients.iter_mut().zip(&snap.availability) {
+            d.available = avail;
+        }
+        self.stale = snap
+            .stale
+            .into_iter()
+            .map(|s| StaleUpdate {
+                result: fl::LocalResult {
+                    params: s.params,
+                    mean_loss: s.mean_loss,
+                    mean_acc: s.mean_acc,
+                    steps: s.steps,
+                    weight: s.weight,
+                },
+                mask: MaskSet::from_tensors(s.mask),
+                arrives_at: s.arrives_at,
+                born_round: s.born_round,
+            })
+            .collect();
+        self.params = snap.params;
+        self.detection = snap.detection;
+        self.last_latencies = snap.last_latencies;
+        self.last_full_latencies = snap.last_full_latencies;
+        self.free_at = snap.free_at;
+        self.vtime = snap.vtime;
+        self.calib_total = snap.calib_total;
+        self.train_wall = snap.train_wall;
+        Ok((snap.next_round, snap.records))
     }
 
     /// Server-side planning: scenario tick, sampling, straggler

@@ -27,6 +27,7 @@ pub mod fl;
 pub mod jsonlite;
 pub mod model;
 pub mod runtime;
+pub mod snapshot;
 pub mod straggler;
 pub mod tensor;
 pub mod util;

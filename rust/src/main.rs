@@ -62,6 +62,11 @@ fn train_args(program: &str) -> Args {
         .opt("seed", "42", "PRNG seed")
         .opt("threads", "0", "worker threads (0 = auto)")
         .opt("eval-every", "5", "test-eval period (rounds)")
+        .opt("checkpoint-every", "0", "write a resumable snapshot every N rounds (0 = off)")
+        .opt("checkpoint-dir", "checkpoints", "snapshot directory for --checkpoint-every")
+        .opt("checkpoint-keep", "3", "keep only the newest N snapshots")
+        .opt("resume", "", "resume from a snapshot file, or a dir (newest snapshot)")
+        .opt("crash-after", "", "fault injection: exit(137) once N rounds completed (soak)")
         .opt("out", "", "write result JSON to this path")
         .opt("artifacts", "", "artifacts dir (default: ./artifacts or $FLUID_ARTIFACTS)")
         .flag("sim", "run the runtime-free simulation backend (no artifacts)")
@@ -145,6 +150,18 @@ fn build_config(a: &Args) -> ExperimentConfig {
     if threads > 0 {
         cfg.threads = threads;
     }
+    let every = a.get_usize("checkpoint-every");
+    if every > 0 {
+        cfg.checkpoint_every = every;
+        cfg.checkpoint_dir = Some(a.get("checkpoint-dir").into());
+        cfg.checkpoint_keep = a.get_usize("checkpoint-keep").max(1);
+    }
+    if !a.get("resume").is_empty() {
+        cfg.resume_from = Some(a.get("resume").into());
+    }
+    if !a.get("crash-after").is_empty() {
+        cfg.crash_after = Some(a.get_usize("crash-after"));
+    }
     // the sim/fleet paths serve only the built-in synthetic datasets;
     // fail with a clean message instead of panicking deep in the engine
     // (the classic artifact path accepts any model with a manifest and
@@ -210,6 +227,12 @@ fn cmd_train(argv: &[String]) -> i32 {
     let res = match result {
         Ok(r) => r,
         Err(e) => {
+            // --crash-after fault injection: die as if SIGKILLed (137),
+            // which is what the kill/resume soak workflows assert on
+            if let Some(f) = e.downcast_ref::<fluid::engine::FaultInjected>() {
+                eprintln!("fluid: {f} — exiting 137");
+                return 137;
+            }
             eprintln!("experiment failed: {e:#}");
             return 1;
         }

@@ -1,0 +1,317 @@
+//! Hand-rolled binary codec for snapshot files (serde is unavailable
+//! offline, and the format must stay dependency-free anyway).
+//!
+//! Conventions, used uniformly by every section encoder in
+//! [`crate::snapshot`]:
+//!
+//! * everything is **little-endian**;
+//! * every variable-length value (bytes, strings, element vectors) is
+//!   preceded by its length as a `u64`;
+//! * floats are stored as raw IEEE-754 bit patterns, so NaN payloads and
+//!   signed zeros round-trip *exactly* — bit-identical resume depends on
+//!   this;
+//! * the [`Reader`] never panics on malformed input: every read is
+//!   bounds-checked first and lengths are validated **before** any
+//!   allocation, so a truncated or corrupted snapshot surfaces as a clean
+//!   `Err`, never an OOM or a slice panic.
+
+use anyhow::{bail, Context, Result};
+
+/// FNV-1a 64-bit hash — the snapshot checksum. Not cryptographic; it
+/// guards against truncation and bit-rot, not adversaries.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0001_B3);
+    }
+    h
+}
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_u32(x);
+        }
+    }
+
+    pub fn put_usizes(&mut self, v: &[usize]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_usize(x);
+        }
+    }
+
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian byte source.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn need(&self, n: usize) -> Result<()> {
+        if self.remaining() < n {
+            bail!(
+                "truncated snapshot data: need {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        Ok(())
+    }
+
+    pub fn skip(&mut self, n: usize) -> Result<()> {
+        self.need(n)?;
+        self.pos += n;
+        Ok(())
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let mut b = [0u8; 4];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 4]);
+        self.pos += 4;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn take_usize(&mut self) -> Result<usize> {
+        let v = self.take_u64()?;
+        usize::try_from(v).with_context(|| format!("length {v} overflows usize"))
+    }
+
+    pub fn take_bool(&mut self) -> Result<bool> {
+        match self.take_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("invalid bool byte {other:#04x}"),
+        }
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    /// A length usize that must be payable by the remaining bytes at
+    /// `elem_size` bytes per element — validated *before* any allocation
+    /// so corrupted lengths cannot trigger huge reservations.
+    fn take_len(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.take_usize()?;
+        let bytes = n
+            .checked_mul(elem_size)
+            .with_context(|| format!("length {n} x {elem_size} overflows"))?;
+        self.need(bytes)?;
+        Ok(n)
+    }
+
+    pub fn take_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.take_len(1)?;
+        let v = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(v)
+    }
+
+    pub fn take_str(&mut self) -> Result<String> {
+        let raw = self.take_bytes()?;
+        String::from_utf8(raw.to_vec()).context("snapshot string is not valid UTF-8")
+    }
+
+    pub fn take_u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.take_len(4)?;
+        (0..n).map(|_| self.take_u32()).collect()
+    }
+
+    pub fn take_usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.take_len(8)?;
+        (0..n).map(|_| self.take_usize()).collect()
+    }
+
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.take_len(4)?;
+        (0..n).map(|_| self.take_f32()).collect()
+    }
+
+    pub fn take_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.take_len(8)?;
+        (0..n).map(|_| self.take_f64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX);
+        w.put_usize(12345);
+        w.put_bool(true);
+        w.put_bool(false);
+        w.put_f32(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_str("héllo");
+        w.put_f64s(&[1.5, -2.25]);
+        w.put_u32s(&[1, 2, 3]);
+        w.put_usizes(&[9, 8]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.take_u8().unwrap(), 7);
+        assert_eq!(r.take_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_u64().unwrap(), u64::MAX);
+        assert_eq!(r.take_usize().unwrap(), 12345);
+        assert!(r.take_bool().unwrap());
+        assert!(!r.take_bool().unwrap());
+        assert_eq!(r.take_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.take_f64().unwrap().is_nan());
+        assert_eq!(r.take_str().unwrap(), "héllo");
+        assert_eq!(r.take_f64s().unwrap(), vec![1.5, -2.25]);
+        assert_eq!(r.take_u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.take_usizes().unwrap(), vec![9, 8]);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn truncation_is_a_clean_error() {
+        let mut w = Writer::new();
+        w.put_f64s(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(r.take_f64s().is_err(), "cut at {cut} did not error");
+        }
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX); // absurd element count
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.take_f64s().is_err());
+        let mut r2 = Reader::new(&bytes);
+        assert!(r2.take_bytes().is_err());
+    }
+
+    #[test]
+    fn invalid_bool_rejected() {
+        let bytes = [2u8];
+        assert!(Reader::new(&bytes).take_bool().is_err());
+    }
+
+    #[test]
+    fn fnv1a_is_stable_and_sensitive() {
+        let a = fnv1a(b"fluid snapshot");
+        assert_eq!(a, fnv1a(b"fluid snapshot"));
+        assert_ne!(a, fnv1a(b"fluid snapshos"));
+        assert_ne!(fnv1a(b""), fnv1a(b"\0"));
+    }
+}

@@ -1,0 +1,877 @@
+//! Checkpoint/resume snapshot persistence.
+//!
+//! A production FL server cannot hold a thousand-round experiment hostage
+//! to one process lifetime: stragglers drift, devices churn, and a crash
+//! at round 900 must not discard rounds 0–899. This module captures the
+//! **full resumable state** of a [`crate::engine::RoundEngine`] at a
+//! round boundary — global model weights, round cursor and virtual clock,
+//! straggler detection, per-client latency tables, the semi-async stale
+//! buffer, fleet availability, evolving policy state (invariant
+//! thresholds/streaks/scores, the random-dropout PRNG stream), and the
+//! complete `RoundRecord` history — such that a resumed run produces
+//! **bit-identical** remaining rounds versus the uninterrupted run
+//! (pinned by `tests/determinism.rs`).
+//!
+//! ## File format (version 1)
+//!
+//! ```text
+//! magic "FLSN" | version u32 | payload_len u64 | payload | fnv1a-64 checksum
+//! payload := section_count u32
+//!          | section table: (id u32, offset u64, len u64) x count
+//!          | section blob (offsets relative to blob start)
+//! ```
+//!
+//! Little-endian throughout; floats as raw IEEE-754 bit patterns (see
+//! [`codec`]). Unknown section ids are *skipped*, so newer writers can add
+//! sections without breaking older readers; a file whose `version` is
+//! newer than this build refuses to load. The checksum covers everything
+//! before it, so truncation and bit-rot both surface as clean errors.
+//!
+//! What is **not** captured: anything derivable from the experiment
+//! config + seed (device profiles, shard partitions, scenario scripts,
+//! per-round sampling streams — see DESIGN.md §5's RNG-stream layout) and
+//! host wall-clock measurements (`calibration_secs` totals are carried
+//! for reporting but excluded from determinism comparisons). A
+//! configuration fingerprint is embedded and validated on resume so a
+//! snapshot can never silently continue a *different* experiment.
+
+pub mod codec;
+
+pub use codec::{fnv1a, Reader, Writer};
+
+use crate::coordinator::{ExperimentConfig, RoundRecord};
+use crate::straggler::Detection;
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Context, Result};
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// File magic: "FLSN" (FLuid SNapshot).
+pub const MAGIC: [u8; 4] = *b"FLSN";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Snapshot file extension (also what directory resume scans for).
+pub const EXTENSION: &str = "fluidsnap";
+
+mod section {
+    pub const META: u32 = 1;
+    pub const ENGINE: u32 = 2;
+    pub const MODEL: u32 = 3;
+    pub const POLICY: u32 = 4;
+    pub const FLEET: u32 = 5;
+    pub const SCHED: u32 = 6;
+    pub const HISTORY: u32 = 7;
+}
+
+/// Evolving dropout-policy state. `Stateless` covers the policies whose
+/// masks are pure functions of (spec, rate): none / ordered / exclude.
+#[derive(Clone, Debug)]
+pub enum PolicyState {
+    Stateless,
+    /// Federated-Dropout baseline: the mask PRNG stream position.
+    Random { state: u64, inc: u64 },
+    /// Invariant dropout: per-group thresholds, per-neuron streaks and
+    /// mean update scores, plus the observation counter.
+    Invariant {
+        th: Vec<f32>,
+        streak: Vec<Vec<u32>>,
+        score: Vec<Vec<f32>>,
+        observations: usize,
+    },
+}
+
+/// One buffered semi-async update awaiting a future aggregation
+/// (`SyncMode::Buffered` late arrivals).
+#[derive(Clone, Debug)]
+pub struct StaleEntry {
+    pub params: Vec<Tensor>,
+    pub weight: f64,
+    pub mean_loss: f64,
+    pub mean_acc: f64,
+    pub steps: usize,
+    /// the sub-model mask the update trained under, as per-group tensors
+    pub mask: Vec<Tensor>,
+    pub arrives_at: f64,
+    pub born_round: usize,
+}
+
+/// The full resumable state of a run at a round boundary.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// canonical config fingerprint ([`config_fingerprint`]) — validated
+    /// on resume
+    pub fingerprint: String,
+    /// the next round the resumed run executes (== completed rounds)
+    pub next_round: usize,
+    pub vtime: f64,
+    pub calib_total: f64,
+    pub train_wall: f64,
+    /// global model weights
+    pub params: Vec<Tensor>,
+    pub policy: PolicyState,
+    /// per-client availability (scenario churn is incremental state)
+    pub availability: Vec<bool>,
+    pub detection: Option<Detection>,
+    pub last_latencies: Vec<f64>,
+    pub last_full_latencies: Vec<f64>,
+    pub free_at: Vec<f64>,
+    pub stale: Vec<StaleEntry>,
+    /// per-round history so a resumed run reports the full trajectory
+    pub records: Vec<RoundRecord>,
+}
+
+/// Canonical fingerprint of everything that shapes a run's trajectory.
+///
+/// Floats enter as exact bit patterns. Deliberately excluded: `threads`
+/// (thread-count invariance is a pinned determinism contract) and the
+/// checkpoint/resume/fault-injection knobs themselves (a resumed run
+/// necessarily differs in those).
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
+    fn bits64(xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+    format!(
+        "v1|model={}|policy={}|rounds={}|clients={}|spc={}|steps={}|lr={:08x}\
+         |sfrac={:016x}|fixed={:?}|menu={:?}|clusters={:?}|recal={}|fluct={}\
+         |static={}|sample={:016x}|eval={}|agg={:?}|fused={}|th={:?}|mobile={}\
+         |sync={:?}|fleet={:?}|k={}|sampler={}|scenario={:?}|seed={}",
+        cfg.model,
+        cfg.policy.name(),
+        cfg.rounds,
+        cfg.clients,
+        cfg.samples_per_client,
+        cfg.local_steps,
+        cfg.lr.to_bits(),
+        cfg.straggler_fraction.to_bits(),
+        cfg.fixed_rate.map(f64::to_bits),
+        bits64(&cfg.rates_menu),
+        cfg.cluster_rates.as_deref().map(bits64),
+        cfg.recalibrate_every,
+        cfg.fluctuation,
+        cfg.static_stragglers,
+        cfg.sample_fraction.to_bits(),
+        cfg.eval_every,
+        cfg.aggregate,
+        cfg.use_fused_steps,
+        cfg.invariant_th_override.map(f32::to_bits),
+        cfg.mobile_fleet,
+        cfg.sync_mode,
+        cfg.fleet_size,
+        cfg.sample_k,
+        cfg.sampler.name(),
+        cfg.scenario,
+        cfg.seed,
+    )
+}
+
+// ---- tensor / record codecs -----------------------------------------------
+
+fn put_tensor(w: &mut Writer, t: &Tensor) {
+    w.put_usizes(t.shape());
+    w.put_f32s(t.data());
+}
+
+fn take_tensor(r: &mut Reader) -> Result<Tensor> {
+    let shape = r.take_usizes().context("tensor shape")?;
+    ensure!(shape.len() <= 8, "tensor rank {} is implausible", shape.len());
+    let data = r.take_f32s().context("tensor data")?;
+    let want: usize = shape.iter().try_fold(1usize, |a, &d| {
+        a.checked_mul(d).context("tensor shape overflows")
+    })?;
+    ensure!(
+        want == data.len(),
+        "tensor shape {shape:?} wants {want} elements, payload has {}",
+        data.len()
+    );
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+fn put_tensors(w: &mut Writer, ts: &[Tensor]) {
+    w.put_usize(ts.len());
+    for t in ts {
+        put_tensor(w, t);
+    }
+}
+
+fn take_tensors(r: &mut Reader) -> Result<Vec<Tensor>> {
+    // 2 words is the smallest possible tensor encoding
+    let n = {
+        let n = r.take_usize()?;
+        ensure!(n <= r.remaining() / 16 + 1, "tensor count {n} exceeds payload");
+        n
+    };
+    (0..n).map(|i| take_tensor(r).with_context(|| format!("tensor {i}"))).collect()
+}
+
+fn put_record(w: &mut Writer, rec: &RoundRecord) {
+    w.put_usize(rec.round);
+    w.put_f64(rec.round_time);
+    w.put_f64(rec.vtime);
+    w.put_usizes(&rec.cohort);
+    w.put_usizes(&rec.straggler_ids);
+    w.put_f64s(&rec.straggler_rates);
+    w.put_f64(rec.t_target);
+    w.put_f64(rec.straggler_time);
+    w.put_f64(rec.train_loss);
+    w.put_f64(rec.train_acc);
+    w.put_f64(rec.test_loss);
+    w.put_f64(rec.test_acc);
+    w.put_f64(rec.invariant_fraction);
+    w.put_f64(rec.calibration_secs);
+    w.put_usize(rec.aggregated);
+    w.put_usize(rec.dropped_updates);
+    w.put_usize(rec.stale_folded);
+}
+
+fn take_record(r: &mut Reader) -> Result<RoundRecord> {
+    Ok(RoundRecord {
+        round: r.take_usize()?,
+        round_time: r.take_f64()?,
+        vtime: r.take_f64()?,
+        cohort: r.take_usizes()?,
+        straggler_ids: r.take_usizes()?,
+        straggler_rates: r.take_f64s()?,
+        t_target: r.take_f64()?,
+        straggler_time: r.take_f64()?,
+        train_loss: r.take_f64()?,
+        train_acc: r.take_f64()?,
+        test_loss: r.take_f64()?,
+        test_acc: r.take_f64()?,
+        invariant_fraction: r.take_f64()?,
+        calibration_secs: r.take_f64()?,
+        aggregated: r.take_usize()?,
+        dropped_updates: r.take_usize()?,
+        stale_folded: r.take_usize()?,
+    })
+}
+
+// ---- section encoders ------------------------------------------------------
+
+impl Snapshot {
+    fn enc_meta(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_str(&self.fingerprint);
+        w.into_bytes()
+    }
+
+    fn enc_engine(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_usize(self.next_round);
+        w.put_f64(self.vtime);
+        w.put_f64(self.calib_total);
+        w.put_f64(self.train_wall);
+        w.into_bytes()
+    }
+
+    fn enc_model(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        put_tensors(&mut w, &self.params);
+        w.into_bytes()
+    }
+
+    fn enc_policy(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match &self.policy {
+            PolicyState::Stateless => w.put_u8(0),
+            PolicyState::Random { state, inc } => {
+                w.put_u8(1);
+                w.put_u64(*state);
+                w.put_u64(*inc);
+            }
+            PolicyState::Invariant { th, streak, score, observations } => {
+                w.put_u8(2);
+                w.put_f32s(th);
+                w.put_usize(streak.len());
+                for s in streak {
+                    w.put_u32s(s);
+                }
+                w.put_usize(score.len());
+                for s in score {
+                    w.put_f32s(s);
+                }
+                w.put_usize(*observations);
+            }
+        }
+        w.into_bytes()
+    }
+
+    fn enc_fleet(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        // availability as a packed bitmap: 100k clients cost ~12.5 KB
+        w.put_usize(self.availability.len());
+        let mut packed = vec![0u8; self.availability.len().div_ceil(8)];
+        for (i, &a) in self.availability.iter().enumerate() {
+            if a {
+                packed[i / 8] |= 1 << (i % 8);
+            }
+        }
+        w.put_bytes(&packed);
+        w.into_bytes()
+    }
+
+    fn enc_sched(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match &self.detection {
+            None => w.put_bool(false),
+            Some(d) => {
+                w.put_bool(true);
+                w.put_usizes(&d.stragglers);
+                w.put_f64(d.t_target);
+                w.put_f64s(&d.speedups);
+                w.put_f64s(&d.rates);
+            }
+        }
+        w.put_f64s(&self.last_latencies);
+        w.put_f64s(&self.last_full_latencies);
+        w.put_f64s(&self.free_at);
+        w.put_usize(self.stale.len());
+        for s in &self.stale {
+            put_tensors(&mut w, &s.params);
+            w.put_f64(s.weight);
+            w.put_f64(s.mean_loss);
+            w.put_f64(s.mean_acc);
+            w.put_usize(s.steps);
+            put_tensors(&mut w, &s.mask);
+            w.put_f64(s.arrives_at);
+            w.put_usize(s.born_round);
+        }
+        w.into_bytes()
+    }
+
+    fn enc_history(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_usize(self.records.len());
+        for rec in &self.records {
+            put_record(&mut w, rec);
+        }
+        w.into_bytes()
+    }
+
+    /// Serialize to the versioned, checksummed container format.
+    pub fn encode(&self) -> Vec<u8> {
+        encode_container(&[
+            (section::META, self.enc_meta()),
+            (section::ENGINE, self.enc_engine()),
+            (section::MODEL, self.enc_model()),
+            (section::POLICY, self.enc_policy()),
+            (section::FLEET, self.enc_fleet()),
+            (section::SCHED, self.enc_sched()),
+            (section::HISTORY, self.enc_history()),
+        ])
+    }
+
+    /// Parse and validate a snapshot. Every failure mode — wrong magic,
+    /// newer version, truncation, checksum mismatch, malformed section —
+    /// is a clean `Err`, never a panic.
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
+        const HEADER: usize = 4 + 4 + 8;
+        ensure!(
+            bytes.len() >= HEADER + 8,
+            "snapshot file too small ({} bytes)",
+            bytes.len()
+        );
+        ensure!(
+            bytes[..4] == MAGIC,
+            "not a fluid snapshot (bad magic {:02x?})",
+            &bytes[..4]
+        );
+        let mut hdr = Reader::new(&bytes[4..HEADER]);
+        let version = hdr.take_u32()?;
+        ensure!(
+            version <= VERSION,
+            "snapshot format v{version} is newer than this build (v{VERSION})"
+        );
+        let payload_len = hdr.take_usize()?;
+        let want = HEADER
+            .checked_add(payload_len)
+            .and_then(|n| n.checked_add(8))
+            .context("snapshot payload length overflows")?;
+        ensure!(
+            bytes.len() == want,
+            "snapshot is {} bytes but the header promises {want} (truncated or padded)",
+            bytes.len()
+        );
+        let stored = u64::from_le_bytes(bytes[want - 8..].try_into().unwrap());
+        let actual = fnv1a(&bytes[..want - 8]);
+        ensure!(
+            stored == actual,
+            "snapshot checksum mismatch (stored {stored:#018x}, computed {actual:#018x}) — \
+             the file is corrupted"
+        );
+
+        let payload = &bytes[HEADER..want - 8];
+        let mut r = Reader::new(payload);
+        let count = r.take_u32()? as usize;
+        ensure!(count <= 64, "section count {count} is implausible");
+        let mut table = Vec::with_capacity(count);
+        for _ in 0..count {
+            let id = r.take_u32()?;
+            let off = r.take_usize()?;
+            let len = r.take_usize()?;
+            table.push((id, off, len));
+        }
+        let blob_start = 4 + count * 20;
+        let blob = &payload[blob_start..];
+        fn get_section<'b>(
+            table: &[(u32, usize, usize)],
+            blob: &'b [u8],
+            id: u32,
+        ) -> Result<&'b [u8]> {
+            let (_, off, len) = table
+                .iter()
+                .find(|(sid, _, _)| *sid == id)
+                .with_context(|| format!("snapshot is missing section {id}"))?;
+            let end = off.checked_add(*len).context("section bounds overflow")?;
+            ensure!(
+                end <= blob.len(),
+                "section {id} [{off}, {end}) exceeds blob of {} bytes",
+                blob.len()
+            );
+            Ok(&blob[*off..end])
+        }
+        let get = |id: u32| get_section(&table, blob, id);
+
+        // META
+        let mut r = Reader::new(get(section::META)?);
+        let fingerprint = r.take_str().context("META section")?;
+
+        // ENGINE
+        let mut r = Reader::new(get(section::ENGINE)?);
+        let next_round = r.take_usize()?;
+        let vtime = r.take_f64()?;
+        let calib_total = r.take_f64()?;
+        let train_wall = r.take_f64()?;
+
+        // MODEL
+        let mut r = Reader::new(get(section::MODEL)?);
+        let params = take_tensors(&mut r).context("MODEL section")?;
+
+        // POLICY
+        let mut r = Reader::new(get(section::POLICY)?);
+        let policy = match r.take_u8()? {
+            0 => PolicyState::Stateless,
+            1 => PolicyState::Random {
+                state: r.take_u64()?,
+                inc: r.take_u64()?,
+            },
+            2 => {
+                let th = r.take_f32s()?;
+                let ns = r.take_usize()?;
+                ensure!(ns <= 4096, "streak group count {ns} implausible");
+                let streak = (0..ns).map(|_| r.take_u32s()).collect::<Result<Vec<_>>>()?;
+                let nc = r.take_usize()?;
+                ensure!(nc <= 4096, "score group count {nc} implausible");
+                let score = (0..nc).map(|_| r.take_f32s()).collect::<Result<Vec<_>>>()?;
+                let observations = r.take_usize()?;
+                PolicyState::Invariant { th, streak, score, observations }
+            }
+            other => bail!("unknown policy state tag {other}"),
+        };
+
+        // FLEET
+        let mut r = Reader::new(get(section::FLEET)?);
+        let n_avail = r.take_usize()?;
+        let packed = r.take_bytes()?;
+        ensure!(
+            packed.len() == n_avail.div_ceil(8),
+            "availability bitmap is {} bytes for {n_avail} clients",
+            packed.len()
+        );
+        let availability: Vec<bool> = (0..n_avail)
+            .map(|i| packed[i / 8] & (1 << (i % 8)) != 0)
+            .collect();
+
+        // SCHED
+        let mut r = Reader::new(get(section::SCHED)?);
+        let detection = if r.take_bool()? {
+            Some(Detection {
+                stragglers: r.take_usizes()?,
+                t_target: r.take_f64()?,
+                speedups: r.take_f64s()?,
+                rates: r.take_f64s()?,
+            })
+        } else {
+            None
+        };
+        let last_latencies = r.take_f64s()?;
+        let last_full_latencies = r.take_f64s()?;
+        let free_at = r.take_f64s()?;
+        let n_stale = r.take_usize()?;
+        ensure!(n_stale <= 1 << 20, "stale count {n_stale} implausible");
+        let mut stale = Vec::with_capacity(n_stale);
+        for i in 0..n_stale {
+            stale.push(StaleEntry {
+                params: take_tensors(&mut r)
+                    .with_context(|| format!("stale update {i} params"))?,
+                weight: r.take_f64()?,
+                mean_loss: r.take_f64()?,
+                mean_acc: r.take_f64()?,
+                steps: r.take_usize()?,
+                mask: take_tensors(&mut r)
+                    .with_context(|| format!("stale update {i} mask"))?,
+                arrives_at: r.take_f64()?,
+                born_round: r.take_usize()?,
+            });
+        }
+
+        // HISTORY
+        let mut r = Reader::new(get(section::HISTORY)?);
+        let n_rec = r.take_usize()?;
+        ensure!(n_rec <= 1 << 24, "record count {n_rec} implausible");
+        let records = (0..n_rec)
+            .map(|i| take_record(&mut r).with_context(|| format!("round record {i}")))
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Snapshot {
+            fingerprint,
+            next_round,
+            vtime,
+            calib_total,
+            train_wall,
+            params,
+            policy,
+            availability,
+            detection,
+            last_latencies,
+            last_full_latencies,
+            free_at,
+            stale,
+            records,
+        })
+    }
+}
+
+/// Frame encoded sections into the container format:
+/// `magic | version | payload_len | (count | table | blob) | checksum`.
+/// Shared by [`Snapshot::encode`] and the format-compat tests so the
+/// framing can never drift between them.
+fn encode_container(sections: &[(u32, Vec<u8>)]) -> Vec<u8> {
+    // payload: count | table (id, offset, len) | blob
+    let mut payload = Writer::new();
+    payload.put_u32(sections.len() as u32);
+    let mut offset = 0u64;
+    for (id, bytes) in sections {
+        payload.put_u32(*id);
+        payload.put_u64(offset);
+        payload.put_u64(bytes.len() as u64);
+        offset += bytes.len() as u64;
+    }
+    let mut payload = payload.into_bytes();
+    for (_, bytes) in sections {
+        payload.extend_from_slice(bytes);
+    }
+
+    let mut out = Writer::new();
+    out.put_u8(MAGIC[0]);
+    out.put_u8(MAGIC[1]);
+    out.put_u8(MAGIC[2]);
+    out.put_u8(MAGIC[3]);
+    out.put_u32(VERSION);
+    out.put_u64(payload.len() as u64);
+    let mut out = out.into_bytes();
+    out.extend_from_slice(&payload);
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+// ---- on-disk store ---------------------------------------------------------
+
+/// Directory of rotating snapshot files with atomic writes.
+///
+/// Files are named `snap-NNNNNN.fluidsnap` by round cursor. Writes go to
+/// a dot-tmp sibling, `sync_all`, then `rename` — a crash mid-write can
+/// never leave a half-written file under a valid snapshot name. After
+/// each save, all but the newest `keep` snapshots are deleted.
+pub struct SnapshotStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl SnapshotStore {
+    pub fn new(dir: impl Into<PathBuf>, keep: usize) -> Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(Self { dir, keep: keep.max(1) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_name(round: usize) -> String {
+        format!("snap-{round:06}.{EXTENSION}")
+    }
+
+    fn parse_round(name: &str) -> Option<usize> {
+        let rest = name.strip_prefix("snap-")?;
+        let digits = rest.strip_suffix(&format!(".{EXTENSION}"))?;
+        digits.parse().ok()
+    }
+
+    /// Snapshot files in the store, sorted by ascending round cursor.
+    pub fn list(&self) -> Result<Vec<(usize, PathBuf)>> {
+        let mut out = Vec::new();
+        let entries = fs::read_dir(&self.dir)
+            .with_context(|| format!("reading checkpoint dir {}", self.dir.display()))?;
+        for e in entries {
+            let e = e?;
+            if let Some(round) = e.file_name().to_str().and_then(Self::parse_round) {
+                out.push((round, e.path()));
+            }
+        }
+        out.sort_unstable_by_key(|(r, _)| *r);
+        Ok(out)
+    }
+
+    /// Path of the newest snapshot, if any.
+    pub fn latest(&self) -> Result<Option<PathBuf>> {
+        Ok(self.list()?.pop().map(|(_, p)| p))
+    }
+
+    /// Atomically persist a snapshot and rotate old files away.
+    pub fn save(&self, snap: &Snapshot) -> Result<PathBuf> {
+        let bytes = snap.encode();
+        let name = Self::file_name(snap.next_round);
+        let path = self.dir.join(&name);
+        let tmp = self.dir.join(format!(".{name}.tmp"));
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        // Make the rename durable before rotation deletes older
+        // snapshots — otherwise a power loss could persist the unlink
+        // but not the rename, leaving fewer recovery points than
+        // `keep` promises. Best-effort: not every platform lets a
+        // directory be opened and synced.
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.rotate()?;
+        Ok(path)
+    }
+
+    fn rotate(&self) -> Result<()> {
+        let files = self.list()?;
+        if files.len() > self.keep {
+            for (_, path) in &files[..files.len() - self.keep] {
+                fs::remove_file(path)
+                    .with_context(|| format!("rotating {}", path.display()))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load one snapshot file.
+    pub fn load_file(path: &Path) -> Result<Snapshot> {
+        let bytes = fs::read(path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        Snapshot::decode(&bytes)
+            .with_context(|| format!("decoding snapshot {}", path.display()))
+    }
+
+    /// Resolve a `--resume` argument: a snapshot file loads directly, a
+    /// directory loads its newest snapshot.
+    pub fn load_resume(path: &Path) -> Result<Snapshot> {
+        if path.is_dir() {
+            let store = SnapshotStore { dir: path.to_path_buf(), keep: usize::MAX };
+            let latest = store.latest()?.with_context(|| {
+                format!("no *.{EXTENSION} snapshots in {}", path.display())
+            })?;
+            Self::load_file(&latest)
+        } else {
+            Self::load_file(path)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> Snapshot {
+        Snapshot {
+            fingerprint: "v1|model=test|seed=42".into(),
+            next_round: 7,
+            vtime: 123.5,
+            calib_total: 0.25,
+            train_wall: 1.5,
+            params: vec![
+                Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, -0.0, 9.25]),
+                Tensor::from_vec(&[2], vec![0.5, 0.125]),
+            ],
+            policy: PolicyState::Invariant {
+                th: vec![0.01, 0.02],
+                streak: vec![vec![0, 1, 2], vec![3, 0]],
+                score: vec![vec![0.1, 0.2, 0.3], vec![0.4, 0.5]],
+                observations: 4,
+            },
+            availability: vec![true, false, true, true, false, false, true, true, true],
+            detection: Some(Detection {
+                stragglers: vec![4, 2],
+                t_target: 8.5,
+                speedups: vec![1.5, 1.25],
+                rates: vec![0.65, 0.85],
+            }),
+            last_latencies: vec![1.0, 2.0, 3.0],
+            last_full_latencies: vec![1.5, 2.5, 3.5],
+            free_at: vec![0.0, 10.0, 0.0],
+            stale: vec![StaleEntry {
+                params: vec![Tensor::from_vec(&[2], vec![7.0, 8.0])],
+                weight: 16.0,
+                mean_loss: 0.5,
+                mean_acc: 0.75,
+                steps: 3,
+                mask: vec![Tensor::from_vec(&[2], vec![1.0, 0.0])],
+                arrives_at: 42.0,
+                born_round: 5,
+            }],
+            records: vec![RoundRecord {
+                round: 0,
+                round_time: 3.0,
+                vtime: 3.0,
+                cohort: vec![0, 1, 2],
+                straggler_ids: vec![2],
+                straggler_rates: vec![0.75],
+                t_target: 2.5,
+                straggler_time: 3.0,
+                train_loss: 1.25,
+                train_acc: 0.5,
+                test_loss: f64::NAN,
+                test_acc: f64::NAN,
+                invariant_fraction: 0.1,
+                calibration_secs: 0.001,
+                aggregated: 3,
+                dropped_updates: 0,
+                stale_folded: 1,
+            }],
+        }
+    }
+
+    #[test]
+    fn encode_decode_is_a_fixpoint() {
+        let snap = sample_snapshot();
+        let bytes = snap.encode();
+        let back = Snapshot::decode(&bytes).unwrap();
+        // re-encoding the decoded snapshot must be byte-identical — this
+        // covers every field, including NaN bit patterns
+        assert_eq!(back.encode(), bytes);
+        assert_eq!(back.next_round, 7);
+        assert_eq!(back.records.len(), 1);
+        assert!(back.records[0].test_loss.is_nan());
+        assert_eq!(back.params[0].shape(), &[2, 3]);
+        assert_eq!(back.availability, snap.availability);
+        assert_eq!(back.detection, snap.detection);
+    }
+
+    #[test]
+    fn bad_magic_version_and_checksum_are_clean_errors() {
+        let bytes = sample_snapshot().encode();
+        // magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Snapshot::decode(&bad).unwrap_err().to_string().contains("magic"));
+        // future version
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(Snapshot::decode(&bad).unwrap_err().to_string().contains("newer"));
+        // corruption anywhere in the payload trips the checksum
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(Snapshot::decode(&bad).is_err());
+        // truncation at every prefix is an error, never a panic
+        for cut in 0..bytes.len() {
+            assert!(Snapshot::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn unknown_sections_are_skipped() {
+        // splice an extra section id 99 into the table and blob
+        let snap = sample_snapshot();
+        let out = encode_container(&[
+            (99, b"future data".to_vec()),
+            (section::META, snap.enc_meta()),
+            (section::ENGINE, snap.enc_engine()),
+            (section::MODEL, snap.enc_model()),
+            (section::POLICY, snap.enc_policy()),
+            (section::FLEET, snap.enc_fleet()),
+            (section::SCHED, snap.enc_sched()),
+            (section::HISTORY, snap.enc_history()),
+        ]);
+        let back = Snapshot::decode(&out).unwrap();
+        assert_eq!(back.next_round, snap.next_round);
+        assert_eq!(back.encode(), snap.encode());
+    }
+
+    #[test]
+    fn store_saves_atomically_rotates_and_resolves_latest() {
+        let dir = std::env::temp_dir().join(format!(
+            "fluid-snapstore-{}-{:x}",
+            std::process::id(),
+            fnv1a(b"store-test")
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let store = SnapshotStore::new(&dir, 2).unwrap();
+        let mut snap = sample_snapshot();
+        for round in [3usize, 6, 9, 12] {
+            snap.next_round = round;
+            store.save(&snap).unwrap();
+        }
+        let files = store.list().unwrap();
+        let rounds: Vec<usize> = files.iter().map(|(r, _)| *r).collect();
+        assert_eq!(rounds, vec![9, 12], "keep-last-2 rotation");
+        // no tmp leftovers
+        for e in fs::read_dir(&dir).unwrap() {
+            let name = e.unwrap().file_name();
+            assert!(!name.to_string_lossy().ends_with(".tmp"), "{name:?}");
+        }
+        assert_eq!(
+            store.latest().unwrap().unwrap(),
+            dir.join(format!("snap-000012.{EXTENSION}"))
+        );
+        // dir resume resolves to the newest snapshot
+        let resumed = SnapshotStore::load_resume(&dir).unwrap();
+        assert_eq!(resumed.next_round, 12);
+        // file resume loads that exact file
+        let direct =
+            SnapshotStore::load_file(&dir.join(format!("snap-000009.{EXTENSION}"))).unwrap();
+        assert_eq!(direct.next_round, 9);
+        // empty dir is a clean error
+        let empty = dir.join("empty");
+        fs::create_dir_all(&empty).unwrap();
+        assert!(SnapshotStore::load_resume(&empty).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_tracks_semantic_fields_only() {
+        use crate::dropout::PolicyKind;
+        let a = ExperimentConfig::mobile("femnist_cnn", PolicyKind::Invariant);
+        let mut b = a.clone();
+        b.threads = a.threads + 3;
+        b.checkpoint_every = 5;
+        b.checkpoint_dir = Some("/tmp/x".into());
+        b.checkpoint_keep = 9;
+        b.resume_from = Some("/tmp/y".into());
+        b.crash_after = Some(4);
+        assert_eq!(
+            config_fingerprint(&a),
+            config_fingerprint(&b),
+            "non-semantic knobs must not change the fingerprint"
+        );
+        let mut c = a.clone();
+        c.seed = 43;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+        let mut d = a.clone();
+        d.lr = 0.005;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&d));
+    }
+}

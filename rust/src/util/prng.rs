@@ -46,6 +46,17 @@ impl Pcg32 {
         rng
     }
 
+    /// Raw generator state `(state, inc)` — snapshot persistence only.
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg32::state_parts`] output, resuming
+    /// the stream at exactly the captured position.
+    pub fn from_state_parts(state: u64, inc: u64) -> Self {
+        Self { state, inc }
+    }
+
     /// Derive a child generator (stable under reordering of other draws).
     pub fn derive(&self, salt: u64) -> Pcg32 {
         let mut sm = SplitMix64::new(self.state ^ salt.wrapping_mul(0x9E37_79B9));
@@ -177,6 +188,19 @@ mod tests {
     fn deterministic_across_instances() {
         let mut a = Pcg32::new(42, 7);
         let mut b = Pcg32::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn state_parts_resume_the_stream_exactly() {
+        let mut a = Pcg32::new(99, 3);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let (state, inc) = a.state_parts();
+        let mut b = Pcg32::from_state_parts(state, inc);
         for _ in 0..100 {
             assert_eq!(a.next_u32(), b.next_u32());
         }

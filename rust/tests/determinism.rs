@@ -13,7 +13,12 @@
 //! * a seeded 50k-client / sample-256 scenario with scripted churn runs
 //!   to completion quickly and replays identical round metrics;
 //! * only the sampled cohort is ever hydrated (peak resident data tracks
-//!   the cohort, not the fleet).
+//!   the cohort, not the fleet);
+//! * **resume equivalence**: a run restored from a snapshot taken at any
+//!   round boundary (first / mid / last-1, under every sync mode, and on
+//!   a 2k-client storm fleet) reproduces the uninterrupted run's full
+//!   history bit-for-bit, and corrupted/truncated snapshots fail with a
+//!   clean error, never a panic.
 //!
 //! Wall-clock fields (`calibration_secs`, `train_wall_total`) measure the
 //! host, not the algorithm, and are excluded from comparisons.
@@ -200,6 +205,229 @@ fn fleet_50k_scenario_completes_and_replays() {
 
     let b = coordinator::run_sim(&cfg).unwrap();
     assert_bit_identical(&a, &b, "50k replay");
+}
+
+/// Unique scratch directory for snapshot files; removed (best-effort) by
+/// the tests that use it.
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fluid-determinism-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn snap_path(dir: &std::path::Path, round: usize) -> std::path::PathBuf {
+    dir.join(format!("snap-{round:06}.fluidsnap"))
+}
+
+/// Resume equivalence across snapshot rounds 1 / mid / last-1 and all
+/// three sync modes: the resumed run's history — snapshot prefix plus
+/// freshly-executed suffix — must be bit-identical to the uninterrupted
+/// control run.
+#[test]
+fn resume_is_bit_identical_at_any_boundary_and_sync_mode() {
+    use fluid::engine::SyncMode;
+    for (name, mode) in [
+        ("full", SyncMode::FullBarrier),
+        ("deadline", SyncMode::Deadline { multiple_of_t_target: 1.25 }),
+        ("buffered", SyncMode::Buffered { k: 48 }),
+    ] {
+        let dir = ckpt_dir(&format!("mode-{name}"));
+        let mut cfg = fleet_cfg(33);
+        cfg.sync_mode = mode;
+        cfg.checkpoint_every = 1; // a snapshot at every round boundary
+        cfg.checkpoint_keep = cfg.rounds;
+        cfg.checkpoint_dir = Some(dir.clone());
+        let control = coordinator::run_sim(&cfg).unwrap();
+        assert_eq!(control.records.len(), cfg.rounds);
+        for k in [1usize, cfg.rounds / 2, cfg.rounds - 1] {
+            let mut rcfg = fleet_cfg(33);
+            rcfg.sync_mode = mode;
+            rcfg.resume_from = Some(snap_path(&dir, k));
+            let resumed = coordinator::run_sim(&rcfg).unwrap();
+            assert_bit_identical(&control, &resumed, &format!("{name} resume@{k}"));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The acceptance fleet: 2k clients under the full storm scenario
+/// (churn + drift + jitter) with availability-aware sampling. Resume
+/// from a mid-run snapshot and from the rotated latest via directory
+/// resolution; both must match the control bit-for-bit.
+#[test]
+fn storm_fleet_resume_matches_uninterrupted_run() {
+    let dir = ckpt_dir("storm2k");
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 2000, 64);
+    cfg.rounds = 10;
+    cfg.samples_per_client = 4;
+    cfg.local_steps = 1;
+    cfg.eval_every = 4;
+    cfg.sampler = SamplerKind::AvailabilityAware;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    cfg.seed = 77;
+    cfg.checkpoint_every = 3;
+    cfg.checkpoint_keep = 16;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let control = coordinator::run_sim(&cfg).unwrap();
+
+    let mut mid = cfg.clone();
+    mid.checkpoint_every = 0;
+    mid.checkpoint_dir = None;
+    mid.resume_from = Some(snap_path(&dir, 6));
+    let resumed_mid = coordinator::run_sim(&mid).unwrap();
+    assert_bit_identical(&control, &resumed_mid, "storm resume@6");
+
+    // a directory --resume resolves to the newest snapshot (round 9)
+    let mut latest = mid.clone();
+    latest.resume_from = Some(dir.clone());
+    let resumed_latest = coordinator::run_sim(&latest).unwrap();
+    assert_bit_identical(&control, &resumed_latest, "storm resume@latest");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A snapshot only resumes the experiment it was taken from: any change
+/// to a semantic config field is rejected up front.
+#[test]
+fn resume_rejects_a_mismatched_config() {
+    let dir = ckpt_dir("fingerprint");
+    let mut cfg = fleet_cfg(5);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+    coordinator::run_sim(&cfg).unwrap();
+
+    let mut other = fleet_cfg(6); // different seed => different fingerprint
+    other.resume_from = Some(snap_path(&dir, 2));
+    let err = format!("{:#}", coordinator::run_sim(&other).unwrap_err());
+    assert!(err.contains("different experiment configuration"), "{err}");
+
+    // threads are a non-semantic knob: resuming under a different thread
+    // count is allowed and still bit-identical
+    let control = {
+        let cfg = fleet_cfg(5);
+        coordinator::run_sim(&cfg).unwrap()
+    };
+    let mut threaded = fleet_cfg(5);
+    threaded.threads = 7;
+    threaded.resume_from = Some(snap_path(&dir, 2));
+    let resumed = coordinator::run_sim(&threaded).unwrap();
+    assert_bit_identical(&control, &resumed, "thread-count change across resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupted and truncated snapshots must surface as clean errors from
+/// `run_sim`, never a panic or a silently-wrong resume.
+#[test]
+fn corrupted_or_truncated_snapshot_errors_cleanly() {
+    let dir = ckpt_dir("corrupt");
+    let mut cfg = fleet_cfg(8);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+    coordinator::run_sim(&cfg).unwrap();
+    let good = std::fs::read(snap_path(&dir, 2)).unwrap();
+
+    // flip one bit mid-payload: the checksum must catch it
+    let mut corrupt = good.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x40;
+    let corrupt_path = dir.join("corrupt.fluidsnap");
+    std::fs::write(&corrupt_path, &corrupt).unwrap();
+    let mut rcfg = fleet_cfg(8);
+    rcfg.resume_from = Some(corrupt_path);
+    let err = format!("{:#}", coordinator::run_sim(&rcfg).unwrap_err());
+    assert!(
+        err.contains("checksum") || err.contains("corrupted"),
+        "unexpected corruption error: {err}"
+    );
+
+    // truncate the file: the header length check must catch it
+    let trunc_path = dir.join("trunc.fluidsnap");
+    std::fs::write(&trunc_path, &good[..good.len() / 3]).unwrap();
+    let mut tcfg = fleet_cfg(8);
+    tcfg.resume_from = Some(trunc_path);
+    assert!(coordinator::run_sim(&tcfg).is_err());
+
+    // and decode itself never panics on any truncation prefix
+    for cut in (0..good.len()).step_by(97) {
+        assert!(fluid::snapshot::Snapshot::decode(&good[..cut]).is_err());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A checksum-valid but semantically-inconsistent snapshot (ids outside
+/// the population, misaligned detection tables) is rejected by
+/// `restore`'s validation instead of panicking rounds later.
+#[test]
+fn semantically_invalid_snapshot_is_rejected() {
+    let dir = ckpt_dir("semantic");
+    let mut cfg = fleet_cfg(31);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+    coordinator::run_sim(&cfg).unwrap();
+
+    let mut snap = fluid::snapshot::SnapshotStore::load_file(&snap_path(&dir, 2)).unwrap();
+    snap.detection = Some(fluid::straggler::Detection {
+        stragglers: vec![5000], // fleet has 2000 clients
+        t_target: 1.0,
+        speedups: vec![1.5],
+        rates: vec![0.75],
+    });
+    let bad = dir.join("bad.fluidsnap");
+    std::fs::write(&bad, snap.encode()).unwrap();
+    let mut rcfg = fleet_cfg(31);
+    rcfg.resume_from = Some(bad);
+    let err = format!("{:#}", coordinator::run_sim(&rcfg).unwrap_err());
+    assert!(err.contains("outside the"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `crash_after` fault injection surfaces as a marker error (the engine
+/// never kills the process), fires only after the due checkpoint was
+/// written, and the resumed run matches an uninterrupted control.
+#[test]
+fn injected_crash_checkpoints_then_resumes_bit_identically() {
+    let dir = ckpt_dir("crash");
+    let mut cfg = fleet_cfg(21);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.crash_after = Some(4);
+    let err = coordinator::run_sim(&cfg).unwrap_err();
+    assert!(
+        err.downcast_ref::<fluid::engine::FaultInjected>().is_some(),
+        "expected FaultInjected, got: {err:#}"
+    );
+    assert!(snap_path(&dir, 4).exists(), "due checkpoint missing at crash");
+
+    let control = {
+        let cfg = fleet_cfg(21);
+        coordinator::run_sim(&cfg).unwrap()
+    };
+    let mut rcfg = fleet_cfg(21);
+    rcfg.resume_from = Some(dir.clone());
+    let resumed = coordinator::run_sim(&rcfg).unwrap();
+    assert_bit_identical(&control, &resumed, "resume after injected crash");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Checkpoint rotation keeps only the newest N snapshots.
+#[test]
+fn checkpoint_rotation_keeps_last_n() {
+    let dir = ckpt_dir("rotate");
+    let mut cfg = fleet_cfg(13);
+    cfg.checkpoint_every = 1;
+    cfg.checkpoint_keep = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+    coordinator::run_sim(&cfg).unwrap();
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    assert_eq!(
+        names,
+        vec!["snap-000005.fluidsnap".to_string(), "snap-000006.fluidsnap".to_string()],
+        "6-round run with keep=2"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Shard source wrapper that counts hydrations and tracks the largest

@@ -207,3 +207,52 @@ fn exclude_policy_skips_straggler_updates() {
         .all(|r| r.straggler_rates.iter().all(|&x| x < 1.0 || x == 1.0)));
     assert!(res.final_test_acc.is_finite());
 }
+
+/// Resume equivalence on the PJRT-backed LocalExecutor path: a run
+/// resumed from a mid-run snapshot must reproduce the uninterrupted
+/// run's remaining rounds bit-for-bit — the same contract the
+/// determinism suite pins for the sim backend, asserted here against
+/// real artifacts (ISSUE: both feature configurations).
+#[test]
+fn checkpoint_resume_is_bit_identical_over_artifacts() {
+    if !have("femnist_cnn") {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("fluid-xla-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sess = Session::new(artifacts_dir()).unwrap();
+
+    let mut cfg = quick_cfg(PolicyKind::Invariant);
+    cfg.rounds = 6;
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep = 8;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let control = coordinator::run(&sess, &cfg).unwrap();
+
+    let mut rcfg = quick_cfg(PolicyKind::Invariant);
+    rcfg.rounds = 6;
+    rcfg.resume_from = Some(dir.join("snap-000004.fluidsnap"));
+    let resumed = coordinator::run(&sess, &rcfg).unwrap();
+
+    let eq = |a: f64, b: f64| a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan());
+    assert_eq!(control.records.len(), resumed.records.len());
+    for (x, y) in control.records.iter().zip(&resumed.records) {
+        let ctx = format!("round {}", x.round);
+        assert_eq!(x.cohort, y.cohort, "{ctx}: cohort");
+        assert_eq!(x.straggler_ids, y.straggler_ids, "{ctx}: stragglers");
+        assert_eq!(x.straggler_rates, y.straggler_rates, "{ctx}: rates");
+        assert!(eq(x.round_time, y.round_time), "{ctx}: round_time");
+        assert!(eq(x.vtime, y.vtime), "{ctx}: vtime");
+        assert!(eq(x.train_loss, y.train_loss), "{ctx}: train_loss");
+        assert!(eq(x.test_acc, y.test_acc), "{ctx}: test_acc");
+        assert!(
+            eq(x.invariant_fraction, y.invariant_fraction),
+            "{ctx}: invariant_fraction"
+        );
+        assert_eq!(x.aggregated, y.aggregated, "{ctx}: aggregated");
+    }
+    assert!(eq(control.final_test_acc, resumed.final_test_acc));
+    assert!(eq(control.total_vtime, resumed.total_vtime));
+    let _ = std::fs::remove_dir_all(&dir);
+}

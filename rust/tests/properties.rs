@@ -634,3 +634,140 @@ fn random_json(g: &mut Gen, depth: usize) -> Json {
         }
     }
 }
+
+/// Snapshot codec property: encode → decode → encode is a byte-identical
+/// fixpoint over randomized engine states — tensors with arbitrary
+/// shapes and bit patterns (NaN test metrics included), every policy
+/// state variant, detection tables, stale buffers, and round histories.
+#[test]
+fn prop_snapshot_codec_round_trips() {
+    use fluid::coordinator::RoundRecord;
+    use fluid::snapshot::{PolicyState, Snapshot, StaleEntry};
+    use fluid::straggler::Detection;
+
+    fn random_tensor(g: &mut Gen) -> Tensor {
+        let rank = g.usize_in(1, 3);
+        let shape: Vec<usize> = (0..rank).map(|_| g.usize_in(1, 6)).collect();
+        let n: usize = shape.iter().product();
+        // raw bit patterns, not just nice floats
+        let data: Vec<f32> = (0..n).map(|_| f32::from_bits(g.rng.next_u32())).collect();
+        Tensor::from_vec(&shape, data)
+    }
+
+    fn random_record(g: &mut Gen, round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            round_time: g.rng.next_f64() * 10.0,
+            vtime: g.rng.next_f64() * 100.0,
+            cohort: (0..g.usize_in(0, 8)).map(|_| g.usize_in(0, 99)).collect(),
+            straggler_ids: (0..g.usize_in(0, 3)).map(|_| g.usize_in(0, 99)).collect(),
+            straggler_rates: (0..g.usize_in(0, 3)).map(|_| g.rng.next_f64()).collect(),
+            t_target: g.rng.next_f64(),
+            straggler_time: g.rng.next_f64(),
+            train_loss: g.rng.next_f64(),
+            train_acc: g.rng.next_f64(),
+            test_loss: if g.bool() { f64::NAN } else { g.rng.next_f64() },
+            test_acc: if g.bool() { f64::NAN } else { g.rng.next_f64() },
+            invariant_fraction: g.rng.next_f64(),
+            calibration_secs: g.rng.next_f64(),
+            aggregated: g.usize_in(0, 64),
+            dropped_updates: g.usize_in(0, 8),
+            stale_folded: g.usize_in(0, 8),
+        }
+    }
+
+    check(
+        Config { cases: 60, ..Default::default() },
+        |g: &mut Gen| {
+            let n = g.usize_in(1, 40);
+            let rounds = g.usize_in(0, 6);
+            let policy = match g.usize_in(0, 2) {
+                0 => PolicyState::Stateless,
+                1 => PolicyState::Random {
+                    state: g.rng.next_u64(),
+                    inc: g.rng.next_u64() | 1,
+                },
+                _ => {
+                    let groups = g.usize_in(1, 3);
+                    PolicyState::Invariant {
+                        th: (0..groups).map(|_| g.f32_in(0.0, 1.0)).collect(),
+                        streak: (0..groups)
+                            .map(|_| (0..g.usize_in(1, 8)).map(|_| g.rng.next_u32() % 10).collect())
+                            .collect(),
+                        score: (0..groups)
+                            .map(|_| (0..g.usize_in(1, 8)).map(|_| g.f32_in(0.0, 1.0)).collect())
+                            .collect(),
+                        observations: g.usize_in(0, 50),
+                    }
+                }
+            };
+            let detection = if g.bool() {
+                let k = g.usize_in(0, 4);
+                Some(Detection {
+                    stragglers: (0..k).map(|_| g.usize_in(0, n - 1)).collect(),
+                    t_target: g.rng.next_f64() * 10.0,
+                    speedups: (0..k).map(|_| 1.0 + g.rng.next_f64()).collect(),
+                    rates: (0..k).map(|_| g.rng.next_f64()).collect(),
+                })
+            } else {
+                None
+            };
+            let stale: Vec<StaleEntry> = (0..g.usize_in(0, 2))
+                .map(|_| StaleEntry {
+                    params: (0..g.usize_in(1, 3)).map(|_| random_tensor(g)).collect(),
+                    weight: g.rng.next_f64() * 60.0,
+                    mean_loss: g.rng.next_f64(),
+                    mean_acc: g.rng.next_f64(),
+                    steps: g.usize_in(0, 8),
+                    mask: (0..g.usize_in(1, 2)).map(|_| random_tensor(g)).collect(),
+                    arrives_at: g.rng.next_f64() * 100.0,
+                    born_round: g.usize_in(0, 100),
+                })
+                .collect();
+            Snapshot {
+                fingerprint: format!("prop|n={n}|x={}", g.rng.next_u64()),
+                next_round: rounds,
+                vtime: g.rng.next_f64() * 1000.0,
+                calib_total: g.rng.next_f64(),
+                train_wall: g.rng.next_f64() * 10.0,
+                params: (0..g.usize_in(1, 4)).map(|_| random_tensor(g)).collect(),
+                policy,
+                availability: (0..n).map(|_| g.bool()).collect(),
+                detection,
+                last_latencies: (0..n).map(|_| g.rng.next_f64() * 10.0).collect(),
+                last_full_latencies: (0..n).map(|_| g.rng.next_f64() * 10.0).collect(),
+                free_at: (0..n).map(|_| g.rng.next_f64() * 10.0).collect(),
+                stale,
+                records: (0..rounds).map(|r| random_record(g, r)).collect(),
+            }
+        },
+        |_| vec![],
+        |snap| {
+            let bytes = snap.encode();
+            let back = Snapshot::decode(&bytes).map_err(|e| format!("decode: {e:#}"))?;
+            let again = back.encode();
+            if again != bytes {
+                return Err(format!(
+                    "encode/decode/encode not a fixpoint ({} vs {} bytes)",
+                    again.len(),
+                    bytes.len()
+                ));
+            }
+            if back.next_round != snap.next_round
+                || back.records.len() != snap.records.len()
+                || back.availability != snap.availability
+                || back.fingerprint != snap.fingerprint
+            {
+                return Err("decoded fields drifted from the original".into());
+            }
+            // a destroyed byte anywhere must never decode successfully
+            let mut bad = bytes.clone();
+            let idx = (snap.next_round * 131 + bad.len() / 3) % bad.len();
+            bad[idx] ^= 0xFF;
+            if Snapshot::decode(&bad).is_ok() {
+                return Err(format!("decode accepted a corrupted byte at {idx}"));
+            }
+            Ok(())
+        },
+    );
+}
