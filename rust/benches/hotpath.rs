@@ -18,6 +18,8 @@
 //!     [--json BENCH_hotpath.json]          # write ns/op per section
 //!     [--check BENCH_baseline.json]        # fail on >tolerance regression
 //!     [--tolerance 0.25]
+//!     [--summary summary.md]               # append a markdown delta table
+//!                                          # (CI: $GITHUB_STEP_SUMMARY)
 //! ```
 //!
 //! The check compares each section's best (min) ns/op against the
@@ -31,12 +33,15 @@ use fluid::coordinator::{self, ExperimentConfig};
 use fluid::data::FlData;
 use fluid::dropout::{InvariantConfig, InvariantDropout, MaskSet, PolicyKind};
 use fluid::engine::ScenarioConfig;
-use fluid::fl::{fedavg, sample_cohort, AggregateMode, ClientUpdate, Fleet, SamplerKind};
+use fluid::fl::{
+    fedavg_into, sample_cohort, AggScratch, AggregateMode, ClientUpdate, Fleet, SamplerKind,
+};
 use fluid::jsonlite::{self, Json};
-use fluid::model::sim_spec;
+use fluid::model::{sim_spec, ModelSpec};
 use fluid::runtime::Session;
 use fluid::snapshot::{PolicyState, Snapshot};
 use fluid::tensor::Tensor;
+use fluid::util::pool::default_threads;
 use fluid::util::prng::Pcg32;
 
 fn arg_value(name: &str) -> Option<String> {
@@ -70,37 +75,143 @@ fn main() {
         let tol: f64 = arg_value("--tolerance")
             .and_then(|t| t.parse().ok())
             .unwrap_or(0.25);
-        std::process::exit(check_against(&all, &baseline, tol));
+        std::process::exit(check_against(&all, &baseline, tol, arg_value("--summary")));
     }
+}
+
+/// An LSTM-shaped manifest: the `lstm` group's weight uses the 4H gate
+/// layout (trailing dim = 4 x hidden), exactly the column->neuron
+/// mapping the ownership denominator factorization must handle.
+fn lstm_spec(hidden: usize) -> ModelSpec {
+    let gates = 4 * hidden;
+    let fc = hidden / 2;
+    let manifest = format!(
+        r#"{{
+ "model": "bench_lstm", "batch_size": 8,
+ "x_shape": [8, 16], "x_dtype": "f32", "num_classes": 10,
+ "params": [
+   {{"name": "lstm_w", "shape": [128, {gates}]}}, {{"name": "lstm_b", "shape": [{gates}]}},
+   {{"name": "fc_w", "shape": [{hidden}, {fc}]}}, {{"name": "fc_b", "shape": [{fc}]}},
+   {{"name": "out_w", "shape": [{fc}, 10]}}, {{"name": "out_b", "shape": [10]}}
+ ],
+ "masks": [{{"name": "lstm", "size": {hidden}}}, {{"name": "fc", "size": {fc}}}],
+ "delta_groups": ["lstm", "fc"],
+ "delta_inputs": ["lstm_w", "fc_w"],
+ "artifacts": {{"train": "sim", "eval": "sim", "delta": "sim"}},
+ "train_outputs": []
+}}"#
+    );
+    ModelSpec::from_json_str(&manifest, std::path::Path::new("/"))
+        .expect("bench manifest is statically valid")
+}
+
+/// A 64-update cohort over `spec`; every fourth client is a straggler
+/// whose mask keeps the first 75% of each group (so the ownership path
+/// exercises real dropped columns, not the all-kept fast case).
+fn bench_updates(spec: &ModelSpec, n: usize) -> Vec<ClientUpdate> {
+    (0..n)
+        .map(|i| {
+            let mask = if i % 4 == 3 {
+                let keep: Vec<Vec<bool>> = spec
+                    .masks
+                    .iter()
+                    .map(|m| (0..m.size).map(|j| j < m.size * 3 / 4).collect())
+                    .collect();
+                MaskSet::from_keep(spec, &keep)
+            } else {
+                MaskSet::full(spec)
+            };
+            ClientUpdate {
+                params: spec.init_params(100 + i as u64),
+                weight: 16.0,
+                mask,
+                staleness: 0,
+            }
+        })
+        .collect()
 }
 
 // ---- pure sections (any build configuration) -------------------------------
 
 fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
     let spec = sim_spec("femnist_cnn");
+    let threads = default_threads();
+    let mut scratch = AggScratch::new();
 
-    // masked FedAvg over a cohort-sized update set
+    // masked FedAvg over a cohort-sized update set, through the pooled
+    // hot path exactly as the engine runs it (arena reused across calls)
     let global = spec.init_params(2);
-    let updates: Vec<ClientUpdate> = (0..64)
-        .map(|i| ClientUpdate {
-            params: spec.init_params(100 + i),
-            weight: 16.0,
-            mask: MaskSet::full(&spec),
-            staleness: 0,
-        })
-        .collect();
+    let updates = bench_updates(&spec, 64);
     let m = b.run("aggregate/fedavg-plain-64", || {
-        let out = fedavg(&spec, &global, &updates, AggregateMode::Plain);
+        let out =
+            fedavg_into(&spec, &global, &updates, AggregateMode::Plain, threads, &mut scratch);
         std::hint::black_box(out.len());
+        scratch.recycle(out);
     });
     println!("{}", m.report());
     all.push(m);
     let m = b.run("aggregate/fedavg-ownership-64", || {
-        let out = fedavg(&spec, &global, &updates, AggregateMode::OwnershipWeighted);
+        let out = fedavg_into(
+            &spec,
+            &global,
+            &updates,
+            AggregateMode::OwnershipWeighted,
+            threads,
+            &mut scratch,
+        );
         std::hint::black_box(out.len());
+        scratch.recycle(out);
     });
     println!("{}", m.report());
     all.push(m);
+
+    // LSTM-shaped aggregation: the 4H gate layout stresses the expanded
+    // kept-column weight vectors and the row-streaming sweep
+    let lspec = lstm_spec(256);
+    let lglobal = lspec.init_params(2);
+    let lupdates = bench_updates(&lspec, 64);
+    let m = b.run("aggregate/fedavg-lstm-64", || {
+        let out = fedavg_into(
+            &lspec,
+            &lglobal,
+            &lupdates,
+            AggregateMode::OwnershipWeighted,
+            threads,
+            &mut scratch,
+        );
+        std::hint::black_box(out.len());
+        scratch.recycle(out);
+    });
+    println!("{}", m.report());
+    all.push(m);
+
+    // fused observation sweep over LSTM-sized neuron groups (16 voters)
+    {
+        let ospec = lstm_spec(4096);
+        let mut inv = InvariantDropout::new(&ospec, InvariantConfig::default());
+        let mut rng = Pcg32::new(9, 2);
+        let odeltas: Vec<Vec<Tensor>> = (0..16)
+            .map(|_| {
+                ospec
+                    .masks
+                    .iter()
+                    .map(|m| {
+                        Tensor::from_vec(
+                            &[m.size],
+                            (0..m.size).map(|_| rng.next_f32() * 0.2).collect(),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        inv.observe_with(&odeltas, threads, &mut scratch); // init thresholds
+        let m = b.run("invariant/observe-lstm-16v", || {
+            inv.observe_with(&odeltas, threads, &mut scratch);
+            std::hint::black_box(inv.invariant_fraction());
+        });
+        println!("{}", m.report());
+        all.push(m);
+    }
 
     // invariant mask extraction
     let mut inv = InvariantDropout::new(&spec, InvariantConfig::default());
@@ -378,7 +489,12 @@ fn to_json(all: &[Measurement]) -> Json {
         .set("sections", sections)
 }
 
-fn check_against(all: &[Measurement], baseline_path: &str, tol: f64) -> i32 {
+fn check_against(
+    all: &[Measurement],
+    baseline_path: &str,
+    tol: f64,
+    summary_path: Option<String>,
+) -> i32 {
     let text = match std::fs::read_to_string(baseline_path) {
         Ok(t) => t,
         Err(e) => {
@@ -398,6 +514,12 @@ fn check_against(all: &[Measurement], baseline_path: &str, tol: f64) -> i32 {
         return 2;
     };
     let mut regressions = 0usize;
+    // per-section markdown delta table (CI appends it to the job summary)
+    let mut md = String::from(
+        "### hotpath bench vs baseline\n\n\
+         | section | min ns/op | baseline ns | delta | status |\n\
+         |---|---:|---:|---:|---|\n",
+    );
     println!("== baseline gate (tolerance {:.0}%) ==", tol * 100.0);
     for m in all {
         let cur_ns = m.min_s * 1e9;
@@ -406,9 +528,13 @@ fn check_against(all: &[Measurement], baseline_path: &str, tol: f64) -> i32 {
             .and_then(|s| s.get("min_ns"))
             .and_then(|v| v.as_f64());
         match base_ns {
-            None => println!("{:<42} {:>12.0} ns  (new section, no baseline)", m.name, cur_ns),
+            None => {
+                println!("{:<42} {:>12.0} ns  (new section, no baseline)", m.name, cur_ns);
+                md.push_str(&format!("| `{}` | {:.0} | — | — | new |\n", m.name, cur_ns));
+            }
             Some(b) if b <= 0.0 => {
-                println!("{:<42} {:>12.0} ns  (baseline unseeded)", m.name, cur_ns)
+                println!("{:<42} {:>12.0} ns  (baseline unseeded)", m.name, cur_ns);
+                md.push_str(&format!("| `{}` | {:.0} | — | — | unseeded |\n", m.name, cur_ns));
             }
             Some(b) => {
                 let delta = cur_ns / b - 1.0;
@@ -425,7 +551,27 @@ fn check_against(all: &[Measurement], baseline_path: &str, tol: f64) -> i32 {
                     b,
                     delta * 100.0
                 );
+                md.push_str(&format!(
+                    "| `{}` | {:.0} | {:.0} | {:+.1}% | {} |\n",
+                    m.name,
+                    cur_ns,
+                    b,
+                    delta * 100.0,
+                    if delta > tol { "**REGRESSION**" } else { "ok" }
+                ));
             }
+        }
+    }
+    if let Some(path) = summary_path {
+        md.push_str(&format!("\ntolerance {:.0}%\n", tol * 100.0));
+        use std::io::Write as _;
+        let appended = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| f.write_all(md.as_bytes()));
+        if let Err(e) = appended {
+            eprintln!("cannot append bench summary to {path}: {e}");
         }
     }
     // Surface baseline rot: a seeded section that did not run this time

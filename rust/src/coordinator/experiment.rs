@@ -8,7 +8,12 @@
 //! refresh the invariant sets and thresholds.
 //!
 //! The mechanics live in [`crate::engine`]: these functions only pick an
-//! executor backend and hand the config to a [`RoundEngine`].
+//! executor backend and hand the config to a [`RoundEngine`]. The
+//! executor is built with `cfg.threads`, and the engine mirrors that
+//! budget through the [`crate::engine::ClientExecutor::threads`] seam
+//! for its own server-side hot path (parallel masked FedAvg + the fused
+//! invariant-observation sweep, DESIGN.md §7) — one `--threads` knob,
+//! bit-identical results at every value.
 //!
 //! * [`run`] — PJRT-backed execution over real artifacts
 //!   ([`LocalExecutor`]). Round synchronization follows

@@ -12,6 +12,7 @@
 
 use super::mask::{kept_count, MaskSet};
 use super::threshold;
+use crate::fl::parallel::{for_each_chunk2_mut, tree_reduce, AggScratch, CHUNK};
 use crate::model::ModelSpec;
 use crate::tensor::Tensor;
 
@@ -173,55 +174,132 @@ impl InvariantDropout {
     /// Ingest one round of non-straggler deltas: `per_client[c][g]` is the
     /// per-neuron relative-update vector of group `g` from client `c`
     /// (produced by the L1 `neuron_delta` kernel via `delta_step`).
+    ///
+    /// Convenience wrapper over [`InvariantDropout::observe_with`] with a
+    /// throwaway scratch arena and one thread — bit-identical, just
+    /// slower; the engine calls the pooled variant.
     pub fn observe(&mut self, per_client: &[Vec<Tensor>]) {
+        let mut scratch = AggScratch::new();
+        self.observe_with(per_client, 1, &mut scratch);
+    }
+
+    /// The observation hot path (DESIGN.md §7): the historical three
+    /// sweeps over the delta buffers — mean score, threshold
+    /// initialization, majority vote + streak — are fused into a single
+    /// cache-friendly pass with the per-client slices hoisted out of the
+    /// element loop, accumulating per-neuron sums and below-threshold
+    /// votes together in one arena-backed sweep. Only the very first
+    /// uncalibrated observation takes a second pass (its votes need the
+    /// threshold that pass initializes). Chunked over neurons at fixed
+    /// boundaries, so results are bit-identical for every thread count;
+    /// per-neuron sums add clients in the same order as the historical
+    /// scan.
+    pub fn observe_with(
+        &mut self,
+        per_client: &[Vec<Tensor>],
+        threads: usize,
+        scratch: &mut AggScratch,
+    ) {
         if per_client.is_empty() {
             return;
         }
         let clients = per_client.len();
         let groups = self.score.len();
-        // mean score per neuron
-        for g in 0..groups {
-            let n = self.score[g].len();
-            for i in 0..n {
-                let mut acc = 0.0f64;
-                for c in per_client {
-                    acc += c[g].data()[i] as f64;
-                }
-                self.score[g][i] = (acc / clients as f64) as f32;
-            }
-        }
-        // first observation initializes th per group: mean over clients of
-        // each client's minimum per-neuron update (paper §5)
+        let quorum = ((clients as f64) * self.cfg.majority).ceil().max(1.0) as usize;
+        let first_uncalibrated = self.observations == 0 && self.cfg.th_override.is_none();
         if let Some(th) = self.cfg.th_override {
             for t in &mut self.th {
                 *t = th;
             }
-        } else if self.observations == 0 {
-            for g in 0..groups {
-                let per_client_vecs: Vec<Vec<f32>> = per_client
-                    .iter()
-                    .map(|c| c[g].data().to_vec())
-                    .collect();
-                let init = threshold::initial_threshold(&per_client_vecs);
+        }
+        for g in 0..groups {
+            let n = self.score[g].len();
+            if n == 0 {
+                if first_uncalibrated {
+                    self.th[g] = 1e-6;
+                }
+                continue;
+            }
+            // first observation initializes th per group: mean over
+            // clients of each client's minimum per-neuron update (paper
+            // §5), reduced over fixed chunks in tree order
+            if first_uncalibrated {
+                let minima = tree_reduce(
+                    n,
+                    CHUNK,
+                    threads,
+                    |s, e| {
+                        let mut m = vec![f32::INFINITY; clients];
+                        for (mc, c) in m.iter_mut().zip(per_client) {
+                            for &x in &c[g].data()[s..e] {
+                                if x < *mc {
+                                    *mc = x;
+                                }
+                            }
+                        }
+                        m
+                    },
+                    |mut a, b| {
+                        for (x, &y) in a.iter_mut().zip(&b) {
+                            if y < *x {
+                                *x = y;
+                            }
+                        }
+                        a
+                    },
+                )
+                .unwrap_or_default();
+                let init = threshold::initial_from_minima(&minima);
                 // strictly positive so the very first vote can pass
                 self.th[g] = if init > 0.0 { init * 1.5 } else { 1e-6 };
             }
-        }
-        // majority vote + streak update
-        let quorum = ((clients as f64) * self.cfg.majority).ceil().max(1.0) as usize;
-        for g in 0..groups {
-            let n = self.score[g].len();
-            for i in 0..n {
-                let votes = per_client
-                    .iter()
-                    .filter(|c| c[g].data()[i] < self.th[g])
-                    .count();
-                if votes >= quorum {
-                    self.streak[g][i] = self.streak[g][i].saturating_add(1);
-                } else {
-                    self.streak[g][i] = 0;
-                }
-            }
+            let th_g = self.th[g];
+            // fused sweep: per-neuron score sums and below-threshold vote
+            // counts from one pass over each client's delta buffer
+            let AggScratch { acc, votes, .. } = &mut *scratch;
+            acc.clear();
+            acc.resize(n, 0.0);
+            votes.clear();
+            votes.resize(n, 0);
+            for_each_chunk2_mut(
+                acc.as_mut_slice(),
+                votes.as_mut_slice(),
+                CHUNK,
+                threads,
+                |start, a, v| {
+                    for c in per_client {
+                        let d = &c[g].data()[start..start + a.len()];
+                        for ((aj, vj), &x) in a.iter_mut().zip(v.iter_mut()).zip(d) {
+                            *aj += x as f64;
+                            if x < th_g {
+                                *vj += 1;
+                            }
+                        }
+                    }
+                },
+            );
+            // finalize score + streak in one aligned sweep
+            let acc_s: &[f64] = &acc[..];
+            let votes_s: &[u32] = &votes[..];
+            let denom = clients as f64;
+            let (score_g, streak_g) = (&mut self.score[g], &mut self.streak[g]);
+            for_each_chunk2_mut(
+                score_g.as_mut_slice(),
+                streak_g.as_mut_slice(),
+                CHUNK,
+                threads,
+                |start, sc, st| {
+                    for (k, (s, t)) in sc.iter_mut().zip(st.iter_mut()).enumerate() {
+                        let i = start + k;
+                        *s = (acc_s[i] / denom) as f32;
+                        *t = if (votes_s[i] as usize) >= quorum {
+                            (*t).saturating_add(1)
+                        } else {
+                            0
+                        };
+                    }
+                },
+            );
         }
         self.observations += 1;
     }
@@ -281,10 +359,14 @@ impl InvariantDropout {
                 // paper's accuracy peaks when #invariant ≈ #dropped.
                 order.sort_by_key(|&i| (class(i).min(1), i));
             } else {
+                // total_cmp, not partial_cmp().unwrap(): a NaN score (a
+                // poisoned delta kernel output) must never panic
+                // mid-round — it sorts after every finite score, i.e. it
+                // is dropped last, like any other "still moving" neuron.
                 order.sort_by(|&a, &b| {
                     class(a)
                         .cmp(&class(b))
-                        .then(self.score[g][a].partial_cmp(&self.score[g][b]).unwrap())
+                        .then(self.score[g][a].total_cmp(&self.score[g][b]))
                 });
             }
             let mut k = vec![true; n];
@@ -416,6 +498,190 @@ mod tests {
         let hi = p.invariant_fraction_at(1.0);
         assert!(lo < hi);
         assert!((hi - 1.0).abs() < 1e-9);
+    }
+
+    /// The historical three-pass observe (mean score, threshold init,
+    /// majority vote + streak), kept verbatim as the reference the fused
+    /// single-pass sweep is pinned against.
+    struct RefObserver {
+        th: Vec<f32>,
+        streak: Vec<Vec<u32>>,
+        score: Vec<Vec<f32>>,
+        observations: usize,
+        cfg: InvariantConfig,
+    }
+
+    impl RefObserver {
+        fn new(spec: &ModelSpec, cfg: InvariantConfig) -> Self {
+            Self {
+                th: vec![0.0; spec.masks.len()],
+                streak: spec.masks.iter().map(|m| vec![0; m.size]).collect(),
+                score: spec.masks.iter().map(|m| vec![0.0; m.size]).collect(),
+                observations: 0,
+                cfg,
+            }
+        }
+
+        fn observe(&mut self, per_client: &[Vec<Tensor>]) {
+            if per_client.is_empty() {
+                return;
+            }
+            let clients = per_client.len();
+            let groups = self.score.len();
+            for g in 0..groups {
+                for i in 0..self.score[g].len() {
+                    let mut acc = 0.0f64;
+                    for c in per_client {
+                        acc += c[g].data()[i] as f64;
+                    }
+                    self.score[g][i] = (acc / clients as f64) as f32;
+                }
+            }
+            if let Some(th) = self.cfg.th_override {
+                for t in &mut self.th {
+                    *t = th;
+                }
+            } else if self.observations == 0 {
+                for g in 0..groups {
+                    let per_client_vecs: Vec<Vec<f32>> =
+                        per_client.iter().map(|c| c[g].data().to_vec()).collect();
+                    let init = threshold::initial_threshold(&per_client_vecs);
+                    self.th[g] = if init > 0.0 { init * 1.5 } else { 1e-6 };
+                }
+            }
+            let quorum = ((clients as f64) * self.cfg.majority).ceil().max(1.0) as usize;
+            for g in 0..groups {
+                for i in 0..self.score[g].len() {
+                    let votes = per_client
+                        .iter()
+                        .filter(|c| c[g].data()[i] < self.th[g])
+                        .count();
+                    if votes >= quorum {
+                        self.streak[g][i] = self.streak[g][i].saturating_add(1);
+                    } else {
+                        self.streak[g][i] = 0;
+                    }
+                }
+            }
+            self.observations += 1;
+        }
+    }
+
+    fn bits32(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn fused_observe_is_bit_identical_to_reference_at_every_thread_count() {
+        use crate::fl::parallel::AggScratch;
+        use crate::util::prng::Pcg32;
+        let spec = tiny_spec();
+        for th_override in [None, Some(0.05f32)] {
+            let cfg = InvariantConfig { th_override, ..Default::default() };
+            let mut reference = RefObserver::new(&spec, cfg);
+            let mut fused: Vec<InvariantDropout> = [1usize, 2, 4, 8]
+                .iter()
+                .map(|_| InvariantDropout::new(&spec, cfg))
+                .collect();
+            let mut scratch = AggScratch::new();
+            let mut rng = Pcg32::new(99, 1);
+            for _round in 0..4 {
+                let deltas: Vec<Vec<Tensor>> = (0..5)
+                    .map(|_| {
+                        spec.masks
+                            .iter()
+                            .map(|m| {
+                                Tensor::from_vec(
+                                    &[m.size],
+                                    (0..m.size).map(|_| rng.next_f32() * 0.3).collect(),
+                                )
+                            })
+                            .collect()
+                    })
+                    .collect();
+                reference.observe(&deltas);
+                for (k, threads) in [1usize, 2, 4, 8].iter().enumerate() {
+                    fused[k].observe_with(&deltas, *threads, &mut scratch);
+                    let (th, streak, score, obs) = fused[k].export_state();
+                    assert_eq!(bits32(&th), bits32(&reference.th), "th, threads={threads}");
+                    assert_eq!(streak, reference.streak, "streak, threads={threads}");
+                    for g in 0..score.len() {
+                        assert_eq!(
+                            bits32(&score[g]),
+                            bits32(&reference.score[g]),
+                            "score group {g}, threads={threads}"
+                        );
+                    }
+                    assert_eq!(obs, reference.observations);
+                }
+            }
+        }
+    }
+
+    /// Same pin, but with a group large enough to split across several
+    /// parallel chunks (6000 neurons > CHUNK), so the multi-chunk sweep
+    /// and the chunked minima tree-reduction are exercised for real.
+    #[test]
+    fn fused_observe_parallel_chunks_match_reference() {
+        use crate::fl::parallel::AggScratch;
+        use crate::util::prng::Pcg32;
+        let manifest = r#"{
+ "model": "wide", "batch_size": 4,
+ "x_shape": [4, 8], "x_dtype": "f32", "num_classes": 3,
+ "params": [
+   {"name": "fc1_w", "shape": [2, 6000]}, {"name": "fc1_b", "shape": [6000]},
+   {"name": "out_w", "shape": [4, 3]}, {"name": "out_b", "shape": [3]}
+ ],
+ "masks": [{"name": "fc1", "size": 6000}],
+ "delta_groups": ["fc1"],
+ "delta_inputs": ["fc1_w"],
+ "artifacts": {"train": "t", "eval": "e", "delta": "d"},
+ "train_outputs": []
+}"#;
+        let spec = ModelSpec::from_json_str(manifest, std::path::Path::new("/tmp")).unwrap();
+        let cfg = InvariantConfig::default();
+        let mut reference = RefObserver::new(&spec, cfg);
+        let mut fused = InvariantDropout::new(&spec, cfg);
+        let mut scratch = AggScratch::new();
+        let mut rng = Pcg32::new(31, 7);
+        for _round in 0..2 {
+            let deltas: Vec<Vec<Tensor>> = (0..4)
+                .map(|_| {
+                    vec![Tensor::from_vec(
+                        &[6000],
+                        (0..6000).map(|_| rng.next_f32() * 0.25).collect(),
+                    )]
+                })
+                .collect();
+            reference.observe(&deltas);
+            fused.observe_with(&deltas, 8, &mut scratch);
+            let (th, streak, score, _) = fused.export_state();
+            assert_eq!(bits32(&th), bits32(&reference.th));
+            assert_eq!(streak, reference.streak);
+            assert_eq!(bits32(&score[0]), bits32(&reference.score[0]));
+        }
+    }
+
+    #[test]
+    fn nan_scores_never_panic_make_mask() {
+        let spec = tiny_spec();
+        let mut p = InvariantDropout::new(&spec, InvariantConfig::default());
+        let mut deltas = fake_deltas(4);
+        // one neuron's delta comes back NaN from every client
+        for c in &mut deltas {
+            c[0].data_mut()[3] = f32::NAN;
+        }
+        p.observe(&deltas);
+        p.observe(&deltas);
+        for &r in &[0.75, 0.5, 0.3] {
+            let m = p.make_mask(&spec, r); // must not panic on the NaN sort key
+            assert_eq!(m.kept(0), kept_count(10, r), "r={r}");
+            assert_eq!(m.kept(1), kept_count(6, r), "r={r}");
+        }
+        // NaN sorts after every finite score, so it is dropped last: at
+        // r=0.5 the five finite low-update neurons go first
+        let m = p.make_mask(&spec, 0.5);
+        assert!(m.is_kept(0, 3), "NaN-scored neuron dropped before finite ones");
     }
 
     #[test]

@@ -123,6 +123,21 @@ impl Policy {
             p.observe(per_client);
         }
     }
+
+    /// [`Policy::observe_deltas`] through the pooled hot path: the round
+    /// engine passes its scratch arena and thread budget so the fused
+    /// observation sweep allocates nothing and parallelizes over neuron
+    /// chunks. Bit-identical to the plain variant at any thread count.
+    pub fn observe_deltas_with(
+        &mut self,
+        per_client: &[Vec<crate::tensor::Tensor>],
+        threads: usize,
+        scratch: &mut crate::fl::AggScratch,
+    ) {
+        if let Policy::Invariant(p) = self {
+            p.observe_with(per_client, threads, scratch);
+        }
+    }
 }
 
 #[cfg(test)]

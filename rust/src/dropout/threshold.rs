@@ -13,16 +13,21 @@
 /// delta vector per (non-straggler) client, that is the mean over clients
 /// of each client's minimum per-neuron update.
 pub fn initial_threshold(per_client_deltas: &[Vec<f32>]) -> f32 {
-    if per_client_deltas.is_empty() {
-        return 0.0;
-    }
+    let minima: Vec<f32> = per_client_deltas
+        .iter()
+        .map(|c| c.iter().copied().fold(f32::INFINITY, f32::min))
+        .collect();
+    initial_from_minima(&minima)
+}
+
+/// [`initial_threshold`] when the per-client minima are already known —
+/// the fused observation sweep computes them in its chunked reduction
+/// and hands them here, so the two paths can never drift. Non-finite
+/// minima (a client with no neurons, or all-NaN deltas) are skipped.
+pub fn initial_from_minima(minima: &[f32]) -> f32 {
     let mut acc = 0.0f64;
     let mut n = 0usize;
-    for c in per_client_deltas {
-        if c.is_empty() {
-            continue;
-        }
-        let min = c.iter().copied().fold(f32::INFINITY, f32::min);
+    for &min in minima {
         if min.is_finite() {
             acc += min as f64;
             n += 1;
@@ -79,7 +84,8 @@ pub fn exact_threshold(scores: &[f32], needed: usize) -> f32 {
         return 0.0;
     }
     let mut v: Vec<f32> = scores.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // NaN-safe: a poisoned score sorts last instead of panicking
+    v.sort_by(f32::total_cmp);
     let k = needed.min(v.len()) - 1;
     // strictly above the k-th smallest
     v[k] * (1.0 + 1e-6) + 1e-12

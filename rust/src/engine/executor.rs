@@ -54,6 +54,16 @@ pub trait ClientExecutor: Sync {
     /// The model's ordering contract (params / masks / delta groups).
     fn spec(&self) -> &ModelSpec;
 
+    /// Worker-thread budget this executor runs with. The engine reuses
+    /// the same budget for its server-side hot path (parallel masked
+    /// FedAvg and the fused invariant-observation sweep), so one knob
+    /// governs all in-process parallelism. Purely a performance hint:
+    /// every engine result is bit-identical at any value (pinned by the
+    /// determinism suite).
+    fn threads(&self) -> usize {
+        1
+    }
+
     /// Run local training for every job. `cohort[i]` and `masks[i]` are
     /// the client and sub-model of `jobs[i]`; `params` the current global
     /// model.
@@ -101,6 +111,10 @@ impl<'r> LocalExecutor<'r> {
 impl ClientExecutor for LocalExecutor<'_> {
     fn spec(&self) -> &ModelSpec {
         &self.runner.spec
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
     }
 
     fn run_clients(
@@ -211,6 +225,10 @@ fn host_delta(spec: &ModelSpec, old: &[Tensor], new: &[Tensor]) -> Vec<Tensor> {
 impl ClientExecutor for SimExecutor {
     fn spec(&self) -> &ModelSpec {
         &self.spec
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
     }
 
     fn run_clients(

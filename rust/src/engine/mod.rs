@@ -32,6 +32,13 @@
 //!   [`RoundEngine::run`] honors `ExperimentConfig::{checkpoint_every,
 //!   checkpoint_dir, resume_from}`.
 //!
+//! * the **hot-path seam** — the engine owns an [`AggScratch`] arena and
+//!   mirrors the executor's thread budget ([`ClientExecutor::threads`])
+//!   into the allocation-free parallel aggregation
+//!   ([`crate::fl::fedavg_into`]) and the fused invariant-observation
+//!   sweep; results are bit-identical at every thread count
+//!   (DESIGN.md §7).
+//!
 //! See DESIGN.md §3 and §5 for the layering diagram, the exact SyncMode
 //! semantics and the RNG-stream layout.
 
@@ -48,7 +55,10 @@ pub use sched::{ClientArrival, EventScheduler, Resolution};
 use crate::coordinator::{ExperimentConfig, ExperimentResult, RoundRecord};
 use crate::data::{partition, FlData, ShardSource, Split};
 use crate::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
-use crate::fl::{self, fedavg, sample_cohort, staleness_discount, Client, ClientUpdate, Fleet};
+use crate::fl::{
+    self, fedavg_into, sample_cohort, staleness_discount, AggScratch, Client, ClientUpdate,
+    Fleet,
+};
 use crate::model::ModelSpec;
 use crate::snapshot::{config_fingerprint, PolicyState, Snapshot, SnapshotStore, StaleEntry};
 use crate::straggler::{detect_stragglers, snap_rate, Detection, FluctuationSchedule, PerfModel};
@@ -170,6 +180,13 @@ pub struct RoundEngine<'a, E: ClientExecutor> {
     /// absolute virtual time each client becomes free; a client busy past
     /// a round's start skips that round's participation
     free_at: Vec<f64>,
+    /// server-side worker budget, mirrored from the executor seam —
+    /// drives parallel aggregation and the fused observation sweep
+    threads: usize,
+    /// reusable arena for the aggregation / observation / snapshot hot
+    /// paths (DESIGN.md §7): grown on the first round, allocation-free
+    /// afterwards
+    scratch: AggScratch,
 }
 
 impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
@@ -266,6 +283,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let policy = Policy::new_with(cfg.policy, &spec, cfg.seed ^ 0xD20, inv_cfg);
         let params = spec.init_params(cfg.seed);
         let full_mask = MaskSet::full(&spec);
+        let threads = executor.threads();
 
         Ok(Self {
             cfg,
@@ -289,6 +307,8 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             train_wall: 0.0,
             stale: Vec::new(),
             free_at: vec![0.0; n],
+            threads,
+            scratch: AggScratch::new(),
         })
     }
 
@@ -343,7 +363,14 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             });
             if let Some(store) = &store {
                 if (round + 1) % cfg.checkpoint_every == 0 {
-                    store.save(&self.snapshot_at(round + 1, &records))?;
+                    // encode through the scratch arena: steady-state
+                    // checkpoint writes reuse the same buffers
+                    let snap = self.snapshot_at(round + 1, &records);
+                    store.save_with(
+                        &snap,
+                        &mut self.scratch.snap_blob,
+                        &mut self.scratch.snap_bytes,
+                    )?;
                 }
             }
             if let Some(limit) = cfg.crash_after {
@@ -819,23 +846,47 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             .fold(0.0f64, f64::max);
         let t_target = plan.t_target.unwrap_or(round_time);
 
+        // --- invariant observation (non-straggler deltas, L1 kernel) --------
+        // Runs before the aggregation set is assembled so that set can
+        // take ownership of the update parameters instead of cloning
+        // them; the observation only needs shared borrows and the
+        // pre-aggregation globals either way.
+        let mut calib_extra = 0.0f64;
+        if plan.is_calib_round && matches!(self.policy, Policy::Invariant(_)) {
+            let t0 = Instant::now();
+            let voters: Vec<&[Tensor]> = updates
+                .iter()
+                .filter(|(c, _)| is_on_time[*c] && !plan.straggler_ids.contains(c))
+                .take(MAX_DELTA_VOTERS)
+                .map(|(_, u)| u.params.as_slice())
+                .collect();
+            let per_client = self.executor.run_deltas(&self.params, &voters);
+            let per_client = per_client
+                .into_iter()
+                .collect::<crate::Result<Vec<_>>>()?;
+            self.policy
+                .observe_deltas_with(&per_client, self.threads, &mut self.scratch);
+            calib_extra = t0.elapsed().as_secs_f64();
+        }
+        calib_secs += calib_extra;
+
         // --- aggregation set: fresh on-time updates, then matured stale ------
         let mut agg: Vec<ClientUpdate> = Vec::with_capacity(updates.len());
         let mut losses: Vec<f64> = Vec::new();
         let mut accs: Vec<f64> = Vec::new();
         let mut weights: Vec<f64> = Vec::new();
         let mut dropped_updates = 0usize;
-        for (c, u) in &updates {
-            if is_on_time[*c] {
-                agg.push(ClientUpdate {
-                    params: u.params.clone(),
-                    weight: u.weight,
-                    mask: plan.masks.get(*c).clone(),
-                    staleness: 0,
-                });
+        for (c, u) in updates {
+            if is_on_time[c] {
                 losses.push(u.mean_loss);
                 accs.push(u.mean_acc);
                 weights.push(u.weight);
+                agg.push(ClientUpdate {
+                    params: u.params,
+                    weight: u.weight,
+                    mask: plan.masks.get(c).clone(),
+                    staleness: 0,
+                });
             } else {
                 match cfg.sync_mode {
                     // late under a deadline: the update is discarded and
@@ -844,14 +895,14 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     // late under buffering: the update keeps computing
                     // and the client stays busy until it lands
                     SyncMode::Buffered { .. } => {
-                        let at = late_at[*c].expect("late participant has an arrival");
+                        let at = late_at[c].expect("late participant has an arrival");
+                        self.free_at[c] = round_start + at;
                         self.stale.push(StaleUpdate {
-                            result: u.clone(),
-                            mask: plan.masks.get(*c).clone(),
+                            result: u,
+                            mask: plan.masks.get(c).clone(),
                             arrives_at: round_start + at,
                             born_round: plan.round,
                         });
-                        self.free_at[*c] = round_start + at;
                     }
                     // a full barrier never produces late arrivals
                     SyncMode::FullBarrier => unreachable!(),
@@ -896,29 +947,26 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 stats::weighted_mean(&accs, &weights),
             )
         };
+        let aggregated = agg.len();
         let new_params = if agg.is_empty() {
             self.params.clone()
         } else {
-            fedavg(&self.spec, &self.params, &agg, cfg.aggregate)
+            // the allocation-free parallel hot path: accumulators and
+            // output tensors come from the engine-owned arena
+            fedavg_into(
+                &self.spec,
+                &self.params,
+                &agg,
+                cfg.aggregate,
+                self.threads,
+                &mut self.scratch,
+            )
         };
-
-        // --- invariant observation (non-straggler deltas, L1 kernel) --------
-        if plan.is_calib_round && matches!(self.policy, Policy::Invariant(_)) {
-            let t0 = Instant::now();
-            let voters: Vec<&[Tensor]> = updates
-                .iter()
-                .filter(|(c, _)| is_on_time[*c] && !plan.straggler_ids.contains(c))
-                .take(MAX_DELTA_VOTERS)
-                .map(|(_, u)| u.params.as_slice())
-                .collect();
-            let per_client = self.executor.run_deltas(&self.params, &voters);
-            let per_client = per_client
-                .into_iter()
-                .collect::<crate::Result<Vec<_>>>()?;
-            self.policy.observe_deltas(&per_client);
-            calib_secs += t0.elapsed().as_secs_f64();
-        }
-        self.params = new_params;
+        drop(agg);
+        // retire the previous globals into the arena so next round's
+        // aggregation writes into their buffers instead of allocating
+        let prev = std::mem::replace(&mut self.params, new_params);
+        self.scratch.recycle(prev);
 
         // --- evaluation -----------------------------------------------------
         let (test_loss, test_acc) =
@@ -946,7 +994,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             test_loss,
             test_acc,
             invariant_fraction,
-            aggregated: agg.len(),
+            aggregated,
             dropped_updates,
             stale_folded,
             calibration_secs: calib_secs,

@@ -15,7 +15,12 @@
 //!   (LSTM's 4H gate layout maps column c -> neuron c % H). Elements of
 //!   non-group parameters (output layers, shortcuts) are trained by
 //!   every client and use the full denominator.
+//!
+//! Both modes execute through [`fedavg_into`] — the allocation-free,
+//! deterministically thread-parallel hot path over the
+//! [`super::parallel`] substrate (DESIGN.md §7).
 
+use super::parallel::{for_each_chunk2_mut, AggScratch, CHUNK};
 use crate::dropout::MaskSet;
 use crate::model::ModelSpec;
 use crate::tensor::Tensor;
@@ -101,63 +106,178 @@ fn neuron_of(elem: usize, cols: usize, n: usize, span: usize) -> usize {
 }
 
 /// Aggregate client updates into new global parameters.
+///
+/// Convenience wrapper over [`fedavg_into`] with a throwaway scratch
+/// arena and a single thread — bit-identical to the engine's pooled
+/// path (pinned by the thread-count property test), just slower. Round
+/// loops should hold an [`AggScratch`] and call [`fedavg_into`].
 pub fn fedavg(
     spec: &ModelSpec,
     global: &[Tensor],
     updates: &[ClientUpdate],
     mode: AggregateMode,
 ) -> Vec<Tensor> {
-    assert!(!updates.is_empty(), "fedavg with no updates");
-    let total_w: f64 = updates.iter().map(effective_weight).sum();
-    assert!(total_w > 0.0);
+    let mut scratch = AggScratch::new();
+    fedavg_into(spec, global, updates, mode, 1, &mut scratch)
+}
 
-    let mut out: Vec<Tensor> = Vec::with_capacity(global.len());
-    for (pi, g_t) in global.iter().enumerate() {
+/// Masked FedAvg through the allocation-free, thread-parallel hot path
+/// (DESIGN.md §7).
+///
+/// Three structural changes over the historical per-element loop, all of
+/// them bit-preserving:
+///
+/// * **Per-neuron denominator factorization** — an update's ownership of
+///   an element depends only on the element's column, so the per-update
+///   kept-column weight vector (`w` where kept, exactly `0.0` where
+///   dropped, expanded across LSTM's 4H gate layout) is built once in
+///   O(cols), and per-column denominators accumulate in O(cols) per
+///   update instead of O(len). The element sweep then streams rows
+///   against those vectors — no per-element neuron mapping, no mask
+///   indirection; a dropped column is skipped exactly as the historical
+///   loop skipped it (the skip tests the cached weight, so a degenerate
+///   zero-weight update is skipped where the old loop added its exact
+///   zero — indistinguishable for finite data).
+/// * **Arena reuse** — accumulators, weight vectors and the output
+///   tensors themselves come from `scratch`; after the first round the
+///   inner path performs zero heap allocations (pinned by
+///   `tests/alloc_gate.rs`).
+/// * **Deterministic chunked parallelism** — the element sweep is split
+///   at fixed row-aligned chunk boundaries ([`CHUNK`]-sized, independent
+///   of `threads`); each chunk folds updates in order and finalizes its
+///   own cache-hot f32 output in the same sweep, so the result is
+///   bit-identical for every thread count.
+///
+/// Every element's additions happen in update order — the same f64
+/// addition order as the historical implementation — so the classic
+/// path's results are preserved exactly.
+pub fn fedavg_into(
+    spec: &ModelSpec,
+    global: &[Tensor],
+    updates: &[ClientUpdate],
+    mode: AggregateMode,
+    threads: usize,
+    scratch: &mut AggScratch,
+) -> Vec<Tensor> {
+    assert!(!updates.is_empty(), "fedavg with no updates");
+    let mut outs: Vec<Tensor> = global.iter().map(|t| scratch.take_out(t.shape())).collect();
+    let AggScratch { acc, kw, den, w, .. } = scratch;
+    w.clear();
+    w.extend(updates.iter().map(effective_weight));
+    let total_w: f64 = w.iter().sum();
+    assert!(total_w > 0.0);
+    let w_s: &[f64] = &w[..];
+
+    for (pi, (g_t, out_t)) in global.iter().zip(outs.iter_mut()).enumerate() {
+        let len = g_t.len();
+        if len == 0 {
+            continue;
+        }
+        debug_assert!(updates.iter().all(|u| u.params[pi].len() == len));
+        let cols = *spec.params[pi].shape.last().unwrap_or(&1);
         let group = match mode {
             AggregateMode::Plain => None,
             AggregateMode::OwnershipWeighted => group_of_param(spec, pi),
         };
-        let cols = *spec.params[pi].shape.last().unwrap_or(&1);
-        let len = g_t.len();
-        let mut acc = vec![0.0f64; len];
-        let mut denom = vec![0.0f64; len];
 
-        for u in updates {
-            let w = effective_weight(u);
-            let data = u.params[pi].data();
-            match group {
-                None => {
-                    for j in 0..len {
-                        acc[j] += w * data[j] as f64;
-                        denom[j] += w;
-                    }
-                }
-                Some((gidx, span)) => {
-                    let n = spec.masks[gidx].size;
-                    for j in 0..len {
-                        let neuron = neuron_of(j, cols, n, span);
-                        if u.mask.is_kept(gidx, neuron) {
-                            acc[j] += w * data[j] as f64;
-                            denom[j] += w;
+        match group {
+            None => {
+                // every client trains every element: the denominator is
+                // `total_w` (summed in update order, exactly as the
+                // historical per-element accumulation added it). One
+                // fused sweep per chunk: fold the updates into the f64
+                // accumulator, then finalize that chunk's f32 output
+                // while it is still cache-hot.
+                acc.clear();
+                acc.resize(len, 0.0);
+                let o = out_t.data_mut();
+                for_each_chunk2_mut(acc.as_mut_slice(), o, CHUNK, threads, |start, a, oc| {
+                    for (u, upd) in updates.iter().enumerate() {
+                        let d = &upd.params[pi].data()[start..start + a.len()];
+                        let wu = w_s[u];
+                        for (aj, &x) in a.iter_mut().zip(d) {
+                            *aj += wu * x as f64;
                         }
                     }
+                    for (oj, &aj) in oc.iter_mut().zip(a.iter()) {
+                        *oj = (aj / total_w) as f32;
+                    }
+                });
+            }
+            Some((gidx, span)) => {
+                let n = spec.masks[gidx].size;
+                // per-update kept-column weights, expanded across the
+                // gate layout: O(cols) per update, not O(len)
+                kw.clear();
+                kw.resize(updates.len() * cols, 0.0);
+                for (u, upd) in updates.iter().enumerate() {
+                    let m = upd.mask.tensors()[gidx].data();
+                    debug_assert_eq!(m.len(), n);
+                    let row = &mut kw[u * cols..(u + 1) * cols];
+                    for (c, slot) in row.iter_mut().enumerate() {
+                        *slot = if m[neuron_of(c, cols, n, span)] == 1.0 {
+                            w_s[u]
+                        } else {
+                            0.0
+                        };
+                    }
                 }
+                // per-column denominators in update order
+                den.clear();
+                den.resize(cols, 0.0);
+                for row in kw.chunks_exact(cols) {
+                    for (dc, &k) in den.iter_mut().zip(row) {
+                        *dc += k;
+                    }
+                }
+                let kw_s: &[f64] = &kw[..];
+                let den_s: &[f64] = &den[..];
+                // Stream rows against the kept-weight vectors; chunks
+                // are row-aligned so the column phase is always zero,
+                // and each chunk finalizes its own f32 output right
+                // after folding the updates (one sweep, cache-hot).
+                // The `!= 0.0` guard reproduces the historical "skip
+                // the masked-out element" exactly — including for
+                // non-finite update values, which a `+= 0.0 * x` would
+                // instead poison with NaN.
+                let chunk = (CHUNK / cols).max(1) * cols;
+                acc.clear();
+                acc.resize(len, 0.0);
+                let g_data = g_t.data();
+                let o = out_t.data_mut();
+                for_each_chunk2_mut(acc.as_mut_slice(), o, chunk, threads, |start, a, oc| {
+                    for (u, upd) in updates.iter().enumerate() {
+                        let d = &upd.params[pi].data()[start..start + a.len()];
+                        let kwu = &kw_s[u * cols..(u + 1) * cols];
+                        let mut c = 0usize;
+                        for (aj, &x) in a.iter_mut().zip(d) {
+                            let k = kwu[c];
+                            if k != 0.0 {
+                                *aj += k * x as f64;
+                            }
+                            c += 1;
+                            if c == cols {
+                                c = 0;
+                            }
+                        }
+                    }
+                    let mut c = 0usize;
+                    for (k, (oj, &aj)) in oc.iter_mut().zip(a.iter()).enumerate() {
+                        *oj = if den_s[c] > 0.0 {
+                            (aj / den_s[c]) as f32
+                        } else {
+                            g_data[start + k] // nobody trained it: keep global
+                        };
+                        c += 1;
+                        if c == cols {
+                            c = 0;
+                        }
+                    }
+                });
             }
         }
-
-        let g_data = g_t.data();
-        let new: Vec<f32> = (0..len)
-            .map(|j| {
-                if denom[j] > 0.0 {
-                    (acc[j] / denom[j]) as f32
-                } else {
-                    g_data[j] // nobody trained it: keep the global value
-                }
-            })
-            .collect();
-        out.push(Tensor::from_vec(g_t.shape(), new));
     }
-    out
+    outs
 }
 
 #[cfg(test)]

@@ -6,10 +6,12 @@
 pub mod aggregate;
 pub mod client;
 pub mod fleet;
+pub mod parallel;
 
-pub use aggregate::{fedavg, staleness_discount, AggregateMode, ClientUpdate};
+pub use aggregate::{fedavg, fedavg_into, staleness_discount, AggregateMode, ClientUpdate};
 pub use client::{Client, LocalResult};
 pub use fleet::{sample_cohort, ClientDescriptor, Fleet, SamplerKind};
+pub use parallel::AggScratch;
 
 use crate::data::Split;
 use crate::runtime::{EvalOut, StepRunner};

@@ -1,0 +1,356 @@
+//! Deterministic chunked thread-parallelism for the server hot path,
+//! plus the [`AggScratch`] arena that makes that path allocation-free
+//! (DESIGN.md §7).
+//!
+//! Everything here obeys one contract: **a result is a pure function of
+//! the input, never of the thread count.** Work is split into chunks
+//! whose boundaries depend only on the problem size (the fixed `chunk`
+//! argument — never on `threads`), chunk outputs are disjoint, and
+//! reductions combine per-chunk partials in a fixed pairwise tree over
+//! the chunk index. `--threads` may change wall-clock time and cache
+//! behavior and nothing else; the determinism suite and the fedavg
+//! bit-identity property pin this for every entry point.
+//!
+//! Threads come from `std::thread::scope` (tokio/rayon are unavailable
+//! offline), claiming chunks from a shared queue so a straggling chunk
+//! cannot serialize the sweep. With `threads <= 1` every helper runs the
+//! exact same per-chunk code inline, with zero allocation and zero
+//! synchronization — that degenerate path is what the allocation-gate
+//! test measures.
+
+use crate::tensor::Tensor;
+use std::sync::Mutex;
+
+/// Fixed element-chunk target for the parallel sweeps. Big enough that a
+/// chunk amortizes the queue lock (a chunk is ~hundreds of thousands of
+/// fused multiply-adds once the update dimension is folded in), small
+/// enough that a femnist-sized layer still splits across workers.
+pub const CHUNK: usize = 4096;
+
+/// Run `f` over every item of a work list, on up to `threads` scoped
+/// worker threads. Items are claimed from a shared queue in list order;
+/// the caller guarantees items are independent (all our callers hand out
+/// disjoint `&mut` chunks).
+fn drain_parallel<I, F>(items: Vec<I>, threads: usize, f: F)
+where
+    I: Send,
+    F: Fn(I) + Sync,
+{
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        for item in items {
+            f(item);
+        }
+        return;
+    }
+    let queue = Mutex::new(items.into_iter());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let queue = &queue;
+            let f = &f;
+            s.spawn(move || loop {
+                let next = queue.lock().expect("chunk queue poisoned").next();
+                match next {
+                    Some(item) => f(item),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Sweep `data` in fixed `chunk`-sized pieces, calling `f(start, piece)`
+/// for each. Chunk boundaries are multiples of `chunk` regardless of
+/// `threads`, and every element belongs to exactly one piece, so any
+/// per-element computation is bit-identical at every thread count. With
+/// `threads <= 1` this is a plain loop: no allocation, no spawn.
+pub fn for_each_chunk_mut<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    if data.is_empty() {
+        return;
+    }
+    if threads <= 1 || data.len() <= chunk {
+        let mut start = 0usize;
+        for piece in data.chunks_mut(chunk) {
+            let len = piece.len();
+            f(start, piece);
+            start += len;
+        }
+        return;
+    }
+    let mut items: Vec<(usize, &mut [T])> = Vec::with_capacity(data.len().div_ceil(chunk));
+    let mut start = 0usize;
+    for piece in data.chunks_mut(chunk) {
+        let len = piece.len();
+        items.push((start, piece));
+        start += len;
+    }
+    drain_parallel(items, threads, |(s, piece)| f(s, piece));
+}
+
+/// Like [`for_each_chunk_mut`] over two equal-length slices split at the
+/// same boundaries: `f(start, a_piece, b_piece)`. Used where one sweep
+/// must fill two aligned outputs (observe's score + streak tables).
+pub fn for_each_chunk2_mut<A, B, F>(a: &mut [A], b: &mut [B], chunk: usize, threads: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    assert_eq!(a.len(), b.len(), "zipped chunk sweep needs equal lengths");
+    if a.is_empty() {
+        return;
+    }
+    if threads <= 1 || a.len() <= chunk {
+        let mut start = 0usize;
+        for (pa, pb) in a.chunks_mut(chunk).zip(b.chunks_mut(chunk)) {
+            let len = pa.len();
+            f(start, pa, pb);
+            start += len;
+        }
+        return;
+    }
+    let mut items: Vec<(usize, &mut [A], &mut [B])> =
+        Vec::with_capacity(a.len().div_ceil(chunk));
+    let mut start = 0usize;
+    for (pa, pb) in a.chunks_mut(chunk).zip(b.chunks_mut(chunk)) {
+        let len = pa.len();
+        items.push((start, pa, pb));
+        start += len;
+    }
+    drain_parallel(items, threads, |(s, pa, pb)| f(s, pa, pb));
+}
+
+/// Deterministic chunked tree-reduction: `map(start, end)` produces one
+/// partial per fixed chunk of `0..len`, and partials are combined in a
+/// fixed pairwise tree over the chunk index — (0,1), (2,3), … then the
+/// results pairwise again — independent of which worker computed which
+/// chunk. Floating-point combines are therefore reproducible for every
+/// `threads` value (pinned by the unit tests below with a deliberately
+/// non-associative sum). Returns `None` for an empty range.
+pub fn tree_reduce<R, M, C>(
+    len: usize,
+    chunk: usize,
+    threads: usize,
+    map: M,
+    combine: C,
+) -> Option<R>
+where
+    R: Send,
+    M: Fn(usize, usize) -> R + Sync,
+    C: Fn(R, R) -> R,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    if len == 0 {
+        return None;
+    }
+    let n_chunks = len.div_ceil(chunk);
+    let mut partials: Vec<Option<R>> = (0..n_chunks).map(|_| None).collect();
+    for_each_chunk_mut(&mut partials, 1, threads, |i, slot| {
+        let start = i * chunk;
+        let end = (start + chunk).min(len);
+        slot[0] = Some(map(start, end));
+    });
+    let mut layer: Vec<R> = partials
+        .into_iter()
+        .map(|p| p.expect("every chunk produced a partial"))
+        .collect();
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        let mut it = layer.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(combine(a, b)),
+                None => next.push(a),
+            }
+        }
+        layer = next;
+    }
+    layer.pop()
+}
+
+/// Cap on recycled output tensors held by the arena — enough for a few
+/// rounds of full parameter sets, small enough that an aborted
+/// experiment cannot pin unbounded memory.
+const POOL_CAP: usize = 64;
+
+/// Reusable server-side scratch arena (owned by the round engine).
+///
+/// One arena backs masked FedAvg (`fl::aggregate::fedavg_into`), the
+/// invariant policy's fused observation sweep
+/// (`dropout::InvariantDropout::observe_with`) and snapshot encoding
+/// (`snapshot::SnapshotStore::save_with`): every per-round `vec![0.0;
+/// len]` the historical hot path allocated now lands in one of these
+/// buffers, which keep their capacity across rounds. Contents never
+/// carry information between uses — each consumer resets what it needs —
+/// so a shared arena can never couple two rounds, which is what keeps
+/// the determinism suite honest.
+#[derive(Default)]
+pub struct AggScratch {
+    /// f64 element accumulator (fedavg sums; observe per-neuron sums)
+    pub(crate) acc: Vec<f64>,
+    /// per-update kept-column weight vectors, `updates x cols`
+    pub(crate) kw: Vec<f64>,
+    /// per-column ownership denominators
+    pub(crate) den: Vec<f64>,
+    /// effective (staleness-discounted) per-update weights
+    pub(crate) w: Vec<f64>,
+    /// observe: per-neuron below-threshold vote counts
+    pub(crate) votes: Vec<u32>,
+    /// recycled output tensors, matched by shape
+    pub(crate) pool: Vec<Tensor>,
+    /// snapshot encoding: section blob + finished container
+    pub(crate) snap_blob: Vec<u8>,
+    pub(crate) snap_bytes: Vec<u8>,
+}
+
+impl AggScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch an output tensor of the given shape — recycled from the
+    /// pool when a previous round returned one, freshly allocated only
+    /// on cold start. Contents are unspecified; the caller overwrites
+    /// every element.
+    pub(crate) fn take_out(&mut self, shape: &[usize]) -> Tensor {
+        if let Some(i) = self.pool.iter().position(|t| t.shape() == shape) {
+            return self.pool.swap_remove(i);
+        }
+        Tensor::zeros(shape)
+    }
+
+    /// Return retired tensors (typically the previous round's global
+    /// parameters) to the pool so the next aggregation reuses their
+    /// buffers instead of allocating.
+    pub fn recycle(&mut self, tensors: Vec<Tensor>) {
+        for t in tensors {
+            if self.pool.len() < POOL_CAP {
+                self.pool.push(t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_sweep_covers_every_element_once() {
+        for threads in [1usize, 2, 4, 8] {
+            let mut data = vec![0u32; 1003];
+            for_each_chunk_mut(&mut data, 64, threads, |start, piece| {
+                for (k, x) in piece.iter_mut().enumerate() {
+                    *x += (start + k) as u32 + 1;
+                }
+            });
+            for (i, &x) in data.iter().enumerate() {
+                assert_eq!(x, i as u32 + 1, "threads={threads} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_are_thread_invariant() {
+        // record the (start, len) set per thread count; must be identical
+        let bounds = |threads: usize| {
+            let seen = Mutex::new(Vec::new());
+            let mut data = vec![0u8; 777];
+            for_each_chunk_mut(&mut data, 100, threads, |start, piece| {
+                seen.lock().unwrap().push((start, piece.len()));
+            });
+            let mut v = seen.into_inner().unwrap();
+            v.sort_unstable();
+            v
+        };
+        let reference = bounds(1);
+        assert_eq!(reference.len(), 8);
+        for threads in [2usize, 3, 8, 16] {
+            assert_eq!(bounds(threads), reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zipped_sweep_stays_aligned() {
+        for threads in [1usize, 4] {
+            let mut a = vec![0usize; 530];
+            let mut b = vec![0usize; 530];
+            for_each_chunk2_mut(&mut a, &mut b, 128, threads, |start, pa, pb| {
+                assert_eq!(pa.len(), pb.len());
+                for (k, (x, y)) in pa.iter_mut().zip(pb.iter_mut()).enumerate() {
+                    *x = start + k;
+                    *y = 2 * (start + k);
+                }
+            });
+            for i in 0..530 {
+                assert_eq!(a[i], i);
+                assert_eq!(b[i], 2 * i);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_is_bit_identical_across_thread_counts() {
+        // a deliberately non-associative float sum: any change in combine
+        // order shows up in the low bits
+        let xs: Vec<f64> = (0..10_000)
+            .map(|i| ((i * 2_654_435_761usize) % 1_000) as f64 * 1e-3 + 1e-9)
+            .collect();
+        let sum = |threads: usize| {
+            tree_reduce(
+                xs.len(),
+                256,
+                threads,
+                |s, e| xs[s..e].iter().sum::<f64>(),
+                |a, b| a + b,
+            )
+            .unwrap()
+        };
+        let reference = sum(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(reference.to_bits(), sum(threads).to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_empty_and_single() {
+        assert_eq!(tree_reduce(0, 8, 4, |_, _| 1u32, |a, b| a + b), None);
+        assert_eq!(tree_reduce(5, 8, 4, |s, e| e - s, |a, b| a + b), Some(5));
+        // count chunks for a multi-chunk range
+        assert_eq!(tree_reduce(100, 8, 4, |_, _| 1u32, |a, b| a + b), Some(13));
+    }
+
+    #[test]
+    fn serial_path_runs_inline() {
+        // threads=1 must not spawn: the closure observes the same thread id
+        let main_id = std::thread::current().id();
+        let mut data = vec![0u8; 10_000];
+        let hits = AtomicUsize::new(0);
+        for_each_chunk_mut(&mut data, 64, 1, |_, _| {
+            assert_eq!(std::thread::current().id(), main_id);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10_000usize.div_ceil(64));
+    }
+
+    #[test]
+    fn scratch_pool_recycles_by_shape() {
+        let mut s = AggScratch::new();
+        let t = Tensor::from_vec(&[2, 3], vec![1.0; 6]);
+        s.recycle(vec![t, Tensor::zeros(&[4])]);
+        let got = s.take_out(&[2, 3]);
+        assert_eq!(got.shape(), &[2, 3]);
+        // second request for the same shape falls back to a fresh tensor
+        let fresh = s.take_out(&[2, 3]);
+        assert_eq!(fresh.shape(), &[2, 3]);
+        let other = s.take_out(&[4]);
+        assert_eq!(other.shape(), &[4]);
+    }
+}

@@ -39,6 +39,14 @@ impl Writer {
         Self::default()
     }
 
+    /// Wrap (and clear) an existing buffer so its capacity is reused —
+    /// the snapshot encoder's arena path. Pair with
+    /// [`Writer::into_bytes`] to hand the buffer back.
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf }
+    }
+
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
     }

@@ -249,29 +249,22 @@ fn take_record(r: &mut Reader) -> Result<RoundRecord> {
 // ---- section encoders ------------------------------------------------------
 
 impl Snapshot {
-    fn enc_meta(&self) -> Vec<u8> {
-        let mut w = Writer::new();
+    fn enc_meta(&self, w: &mut Writer) {
         w.put_str(&self.fingerprint);
-        w.into_bytes()
     }
 
-    fn enc_engine(&self) -> Vec<u8> {
-        let mut w = Writer::new();
+    fn enc_engine(&self, w: &mut Writer) {
         w.put_usize(self.next_round);
         w.put_f64(self.vtime);
         w.put_f64(self.calib_total);
         w.put_f64(self.train_wall);
-        w.into_bytes()
     }
 
-    fn enc_model(&self) -> Vec<u8> {
-        let mut w = Writer::new();
-        put_tensors(&mut w, &self.params);
-        w.into_bytes()
+    fn enc_model(&self, w: &mut Writer) {
+        put_tensors(w, &self.params);
     }
 
-    fn enc_policy(&self) -> Vec<u8> {
-        let mut w = Writer::new();
+    fn enc_policy(&self, w: &mut Writer) {
         match &self.policy {
             PolicyState::Stateless => w.put_u8(0),
             PolicyState::Random { state, inc } => {
@@ -293,11 +286,9 @@ impl Snapshot {
                 w.put_usize(*observations);
             }
         }
-        w.into_bytes()
     }
 
-    fn enc_fleet(&self) -> Vec<u8> {
-        let mut w = Writer::new();
+    fn enc_fleet(&self, w: &mut Writer) {
         // availability as a packed bitmap: 100k clients cost ~12.5 KB
         w.put_usize(self.availability.len());
         let mut packed = vec![0u8; self.availability.len().div_ceil(8)];
@@ -307,11 +298,9 @@ impl Snapshot {
             }
         }
         w.put_bytes(&packed);
-        w.into_bytes()
     }
 
-    fn enc_sched(&self) -> Vec<u8> {
-        let mut w = Writer::new();
+    fn enc_sched(&self, w: &mut Writer) {
         match &self.detection {
             None => w.put_bool(false),
             Some(d) => {
@@ -327,38 +316,82 @@ impl Snapshot {
         w.put_f64s(&self.free_at);
         w.put_usize(self.stale.len());
         for s in &self.stale {
-            put_tensors(&mut w, &s.params);
+            put_tensors(w, &s.params);
             w.put_f64(s.weight);
             w.put_f64(s.mean_loss);
             w.put_f64(s.mean_acc);
             w.put_usize(s.steps);
-            put_tensors(&mut w, &s.mask);
+            put_tensors(w, &s.mask);
             w.put_f64(s.arrives_at);
             w.put_usize(s.born_round);
         }
-        w.into_bytes()
     }
 
-    fn enc_history(&self) -> Vec<u8> {
-        let mut w = Writer::new();
+    fn enc_history(&self, w: &mut Writer) {
         w.put_usize(self.records.len());
         for rec in &self.records {
-            put_record(&mut w, rec);
+            put_record(w, rec);
         }
-        w.into_bytes()
+    }
+
+    /// Encode every section into `w` in container order, returning the
+    /// `(id, offset, len)` table (offsets relative to where `w` started).
+    /// Shared by both encode paths so section order can never drift.
+    fn write_sections(&self, w: &mut Writer) -> Vec<(u32, usize, usize)> {
+        type Enc = fn(&Snapshot, &mut Writer);
+        let sections: [(u32, Enc); 7] = [
+            (section::META, Snapshot::enc_meta),
+            (section::ENGINE, Snapshot::enc_engine),
+            (section::MODEL, Snapshot::enc_model),
+            (section::POLICY, Snapshot::enc_policy),
+            (section::FLEET, Snapshot::enc_fleet),
+            (section::SCHED, Snapshot::enc_sched),
+            (section::HISTORY, Snapshot::enc_history),
+        ];
+        let base = w.len();
+        let mut table = Vec::with_capacity(sections.len());
+        for (id, enc) in sections {
+            let start = w.len() - base;
+            enc(self, w);
+            table.push((id, start, w.len() - base - start));
+        }
+        table
     }
 
     /// Serialize to the versioned, checksummed container format.
     pub fn encode(&self) -> Vec<u8> {
-        encode_container(&[
-            (section::META, self.enc_meta()),
-            (section::ENGINE, self.enc_engine()),
-            (section::MODEL, self.enc_model()),
-            (section::POLICY, self.enc_policy()),
-            (section::FLEET, self.enc_fleet()),
-            (section::SCHED, self.enc_sched()),
-            (section::HISTORY, self.enc_history()),
-        ])
+        let mut blob = Vec::new();
+        let mut out = Vec::new();
+        self.encode_into(&mut blob, &mut out);
+        out
+    }
+
+    /// [`Snapshot::encode`] into caller-owned buffers whose capacity is
+    /// reused across calls — the engine's checkpoint path hands its
+    /// scratch arena here so steady-state snapshot writes stop
+    /// allocating fresh megabyte buffers every boundary. `blob` holds
+    /// the section payloads, `out` the finished container; both are
+    /// cleared first and the output is byte-identical to
+    /// [`Snapshot::encode`] (pinned by a unit test below).
+    pub fn encode_into(&self, blob: &mut Vec<u8>, out: &mut Vec<u8>) {
+        let mut w = Writer::from_vec(std::mem::take(blob));
+        let table = self.write_sections(&mut w);
+        *blob = w.into_bytes();
+
+        out.clear();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        let payload_len = 4 + table.len() * 20 + blob.len();
+        out.extend_from_slice(&(payload_len as u64).to_le_bytes());
+        out.extend_from_slice(&(table.len() as u32).to_le_bytes());
+        for (id, start, len) in &table {
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&(*start as u64).to_le_bytes());
+            out.extend_from_slice(&(*len as u64).to_le_bytes());
+        }
+        out.extend_from_slice(blob);
+        let sum = fnv1a(out);
+        out.extend_from_slice(&sum.to_le_bytes());
     }
 
     /// Parse and validate a snapshot. Every failure mode — wrong magic,
@@ -544,8 +577,10 @@ impl Snapshot {
 
 /// Frame encoded sections into the container format:
 /// `magic | version | payload_len | (count | table | blob) | checksum`.
-/// Shared by [`Snapshot::encode`] and the format-compat tests so the
-/// framing can never drift between them.
+/// Kept for the format-compat tests (splicing unknown sections); the
+/// production encoder is [`Snapshot::encode_into`], whose framing is
+/// pinned byte-identical to this one by `encode_matches_container_framing`.
+#[cfg_attr(not(test), allow(dead_code))]
 fn encode_container(sections: &[(u32, Vec<u8>)]) -> Vec<u8> {
     // payload: count | table (id, offset, len) | blob
     let mut payload = Writer::new();
@@ -633,14 +668,27 @@ impl SnapshotStore {
 
     /// Atomically persist a snapshot and rotate old files away.
     pub fn save(&self, snap: &Snapshot) -> Result<PathBuf> {
-        let bytes = snap.encode();
+        let (mut blob, mut bytes) = (Vec::new(), Vec::new());
+        self.save_with(snap, &mut blob, &mut bytes)
+    }
+
+    /// [`SnapshotStore::save`] through caller-owned encode buffers (the
+    /// engine passes its scratch arena, so periodic checkpoints reuse
+    /// the same allocations round after round).
+    pub fn save_with(
+        &self,
+        snap: &Snapshot,
+        blob: &mut Vec<u8>,
+        bytes: &mut Vec<u8>,
+    ) -> Result<PathBuf> {
+        snap.encode_into(blob, bytes);
         let name = Self::file_name(snap.next_round);
         let path = self.dir.join(&name);
         let tmp = self.dir.join(format!(".{name}.tmp"));
         {
             let mut f = fs::File::create(&tmp)
                 .with_context(|| format!("creating {}", tmp.display()))?;
-            f.write_all(&bytes)?;
+            f.write_all(bytes)?;
             f.sync_all()?;
         }
         fs::rename(&tmp, &path)
@@ -752,6 +800,40 @@ mod tests {
                 stale_folded: 1,
             }],
         }
+    }
+
+    #[test]
+    fn encode_matches_container_framing() {
+        // the arena encoder must produce byte-identical output to the
+        // reference per-section framing, and reusing dirty buffers must
+        // not change a single byte
+        let snap = sample_snapshot();
+        let reference = {
+            let mk = |f: fn(&Snapshot, &mut Writer)| {
+                let mut w = Writer::new();
+                f(&snap, &mut w);
+                w.into_bytes()
+            };
+            encode_container(&[
+                (section::META, mk(Snapshot::enc_meta)),
+                (section::ENGINE, mk(Snapshot::enc_engine)),
+                (section::MODEL, mk(Snapshot::enc_model)),
+                (section::POLICY, mk(Snapshot::enc_policy)),
+                (section::FLEET, mk(Snapshot::enc_fleet)),
+                (section::SCHED, mk(Snapshot::enc_sched)),
+                (section::HISTORY, mk(Snapshot::enc_history)),
+            ])
+        };
+        assert_eq!(snap.encode(), reference);
+        let mut blob = vec![0xAAu8; 9]; // deliberately dirty scratch
+        let mut out = vec![0x55u8; 3];
+        snap.encode_into(&mut blob, &mut out);
+        assert_eq!(out, reference);
+        // second use reuses capacity and still matches
+        let cap = out.capacity();
+        snap.encode_into(&mut blob, &mut out);
+        assert_eq!(out, reference);
+        assert_eq!(out.capacity(), cap);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! cases and on failure greedily *shrinks* using a caller-provided
 //! shrinker before reporting the minimal counterexample.
 //!
-//! Used by the coordinator invariants test-suite (DESIGN.md §7):
+//! Used by the coordinator invariants test-suite (DESIGN.md §8):
 //! aggregation conservation, mask algebra, threshold monotonicity,
 //! partitioner coverage, JSON round-trips.
 

@@ -1,0 +1,140 @@
+//! Allocation gate for the aggregation hot path (ISSUE 4 acceptance):
+//! once the scratch arena is warm, `fedavg_into` must perform **zero
+//! heap allocations in its inner path** — accumulators, kept-weight
+//! vectors, denominators and the output tensors themselves all come
+//! from the reused [`AggScratch`]. A counting global allocator measures
+//! the steady-state call; the only permitted allocation is the O(params)
+//! `Vec<Tensor>` shell of the return value (a few hundred bytes),
+//! nothing proportional to the parameter count.
+//!
+//! The fused observation sweep is gated the same way. Measured with
+//! `threads = 1` (the inline, spawn-free path) so thread-stack setup
+//! does not pollute the counter; the thread-count property tests pin
+//! that the parallel path computes identical bytes.
+
+use fluid::dropout::{InvariantConfig, InvariantDropout, MaskSet};
+use fluid::fl::{fedavg_into, AggScratch, AggregateMode, ClientUpdate};
+use fluid::model::sim_spec;
+use fluid::tensor::Tensor;
+use fluid::util::prng::Pcg32;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size as u64, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Bytes allocated while running `f`.
+fn allocated_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = BYTES.load(Ordering::SeqCst);
+    let r = f();
+    (BYTES.load(Ordering::SeqCst) - before, r)
+}
+
+/// Minimum bytes allocated over `reps` runs of `f` — the counter is
+/// process-global, so a concurrent harness thread can inflate a single
+/// window; it cannot inflate every one.
+fn min_allocated(reps: usize, mut f: impl FnMut() -> u64) -> u64 {
+    (0..reps).map(|_| f()).min().unwrap_or(0)
+}
+
+#[test]
+fn hot_path_is_allocation_free_at_steady_state() {
+    let spec = sim_spec("femnist_cnn");
+    let global = spec.init_params(2);
+    let mut rng = Pcg32::new(7, 3);
+    let updates: Vec<ClientUpdate> = (0..32)
+        .map(|i| {
+            let keep: Vec<Vec<bool>> = spec
+                .masks
+                .iter()
+                .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.8).collect())
+                .collect();
+            ClientUpdate {
+                params: spec.init_params(100 + i),
+                weight: 8.0,
+                mask: if i % 3 == 0 {
+                    MaskSet::from_keep(&spec, &keep)
+                } else {
+                    MaskSet::full(&spec)
+                },
+                staleness: 0,
+            }
+        })
+        .collect();
+
+    let mut scratch = AggScratch::new();
+    // the permitted residue: the return value's Vec<Tensor> shell
+    let shell = (global.len() * std::mem::size_of::<Tensor>()) as u64;
+
+    for mode in [AggregateMode::Plain, AggregateMode::OwnershipWeighted] {
+        // warm: grows the arena and seeds the output pool
+        let out = fedavg_into(&spec, &global, &updates, mode, 1, &mut scratch);
+        // it computes the same aggregation as the cold unpooled path
+        let fresh = fluid::fl::fedavg(&spec, &global, &updates, mode);
+        for (a, b) in out.iter().zip(&fresh) {
+            assert_eq!(a, b, "{mode:?}: pooled result differs from cold path");
+        }
+        scratch.recycle(out);
+        // steady state: nothing but the shell may allocate
+        let bytes = min_allocated(5, || {
+            let (bytes, out) = allocated_during(|| {
+                fedavg_into(&spec, &global, &updates, mode, 1, &mut scratch)
+            });
+            scratch.recycle(out);
+            bytes
+        });
+        assert!(
+            bytes <= shell + 64,
+            "{mode:?}: steady-state fedavg allocated {bytes} bytes (shell is {shell})"
+        );
+    }
+}
+
+#[test]
+fn fused_observe_is_allocation_free_at_steady_state() {
+    let spec = sim_spec("shakespeare_lstm");
+    let mut rng = Pcg32::new(11, 5);
+    let deltas: Vec<Vec<Tensor>> = (0..8)
+        .map(|_| {
+            spec.masks
+                .iter()
+                .map(|m| {
+                    Tensor::from_vec(
+                        &[m.size],
+                        (0..m.size).map(|_| rng.next_f32() * 0.2).collect(),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let mut inv = InvariantDropout::new(&spec, InvariantConfig::default());
+    let mut scratch = AggScratch::new();
+    // first observation initializes thresholds (and may allocate minima)
+    inv.observe_with(&deltas, 1, &mut scratch);
+    inv.observe_with(&deltas, 1, &mut scratch);
+    let bytes =
+        min_allocated(5, || allocated_during(|| inv.observe_with(&deltas, 1, &mut scratch)).0);
+    assert_eq!(bytes, 0, "steady-state observe allocated {bytes} bytes");
+}

@@ -314,6 +314,34 @@ fn resume_rejects_a_mismatched_config() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Snapshot/resume equivalence is unaffected by `--threads`: a control
+/// run at one thread checkpoints, and runs resumed from that snapshot
+/// under 2/4/8 server threads — parallel aggregation, fused observe and
+/// all — reproduce the control bit for bit, as do uninterrupted runs at
+/// those thread counts.
+#[test]
+fn resume_equivalence_is_thread_count_invariant() {
+    let dir = ckpt_dir("threads");
+    let mut cfg = fleet_cfg(55);
+    cfg.threads = 1;
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep = cfg.rounds;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let control = coordinator::run_sim(&cfg).unwrap();
+    for threads in [2usize, 4, 8] {
+        let mut rcfg = fleet_cfg(55);
+        rcfg.threads = threads;
+        rcfg.resume_from = Some(snap_path(&dir, 2));
+        let resumed = coordinator::run_sim(&rcfg).unwrap();
+        assert_bit_identical(&control, &resumed, &format!("resume threads={threads}"));
+        let mut fcfg = fleet_cfg(55);
+        fcfg.threads = threads;
+        let fresh = coordinator::run_sim(&fcfg).unwrap();
+        assert_bit_identical(&control, &fresh, &format!("fresh threads={threads}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Corrupted and truncated snapshots must surface as clean errors from
 /// `run_sim`, never a panic or a silently-wrong resume.
 #[test]

@@ -1,5 +1,5 @@
 //! Property-based tests on the coordinator's pure invariants, using the
-//! in-repo `util::proptest` harness (DESIGN.md §7).
+//! in-repo `util::proptest` harness (DESIGN.md §8).
 
 use fluid::data::partition;
 use fluid::dropout::mask::kept_count;
@@ -7,7 +7,9 @@ use fluid::dropout::{
     threshold, InvariantConfig, InvariantDropout, MaskSet, OrderedDropout, RandomDropout,
 };
 use fluid::engine::{ClientArrival, EventScheduler, SyncMode};
-use fluid::fl::{fedavg, AggregateMode, ClientUpdate};
+use fluid::fl::{
+    fedavg, fedavg_into, staleness_discount, AggScratch, AggregateMode, ClientUpdate,
+};
 use fluid::jsonlite::{self, Json};
 use fluid::model::ModelSpec;
 use fluid::straggler::{detect_stragglers, snap_rate};
@@ -312,6 +314,230 @@ fn prop_ownership_aggregation_keeps_untrained_at_global() {
             Ok(())
         },
     );
+}
+
+/// A spec whose first group uses the LSTM 4H gate layout (`lstm_w`
+/// trailing dim = 4 x hidden) next to a plain dense group — both
+/// column->neuron mappings the parallel aggregator must reproduce.
+fn spec_with_gate(n0: usize, n1: usize) -> ModelSpec {
+    let gates = 4 * n0;
+    let text = format!(
+        r#"{{
+ "model": "syn_gate", "batch_size": 2, "x_shape": [2, 4], "x_dtype": "f32",
+ "num_classes": 3,
+ "params": [
+   {{"name": "lstm_w", "shape": [3, {gates}]}}, {{"name": "lstm_b", "shape": [{gates}]}},
+   {{"name": "fc0_w", "shape": [5, {n1}]}}, {{"name": "fc0_b", "shape": [{n1}]}},
+   {{"name": "out_w", "shape": [4, 3]}}, {{"name": "out_b", "shape": [3]}}
+ ],
+ "masks": [{{"name": "lstm", "size": {n0}}}, {{"name": "fc0", "size": {n1}}}],
+ "delta_groups": ["lstm", "fc0"],
+ "delta_inputs": ["lstm_w", "fc0_w"],
+ "artifacts": {{"train": "t", "eval": "e", "delta": "d"}},
+ "train_outputs": []
+}}"#
+    );
+    ModelSpec::from_json_str(&text, std::path::Path::new("/tmp")).unwrap()
+}
+
+/// The historical scalar fedavg, reimplemented verbatim from public
+/// APIs: per-element neuron mapping, mask lookups, `vec![0.0; len]`
+/// accumulators. The production `fedavg_into` must match it bit for bit.
+fn reference_fedavg(
+    spec: &ModelSpec,
+    global: &[Tensor],
+    updates: &[ClientUpdate],
+    mode: AggregateMode,
+) -> Vec<Tensor> {
+    let eff = |u: &ClientUpdate| -> f64 {
+        if u.staleness == 0 {
+            u.weight
+        } else {
+            u.weight * staleness_discount(u.staleness)
+        }
+    };
+    let group_of = |p_idx: usize| -> Option<(usize, usize)> {
+        let p = &spec.params[p_idx];
+        let prefix: &str = p.name.rsplit_once('_').map(|(a, _)| a).unwrap_or(&p.name);
+        let g = spec.mask_index(prefix)?;
+        let n = spec.masks[g].size;
+        let cols = *p.shape.last()?;
+        if cols == n {
+            Some((g, 1))
+        } else if cols == 4 * n {
+            Some((g, 4))
+        } else {
+            None
+        }
+    };
+    let mut out = Vec::with_capacity(global.len());
+    for (pi, g_t) in global.iter().enumerate() {
+        let group = match mode {
+            AggregateMode::Plain => None,
+            AggregateMode::OwnershipWeighted => group_of(pi),
+        };
+        let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+        let len = g_t.len();
+        let mut acc = vec![0.0f64; len];
+        let mut denom = vec![0.0f64; len];
+        for u in updates {
+            let w = eff(u);
+            let data = u.params[pi].data();
+            match group {
+                None => {
+                    for j in 0..len {
+                        acc[j] += w * data[j] as f64;
+                        denom[j] += w;
+                    }
+                }
+                Some((gidx, span)) => {
+                    let n = spec.masks[gidx].size;
+                    for j in 0..len {
+                        let col = j % cols;
+                        let neuron = if span == 1 { col } else { col % n };
+                        if u.mask.is_kept(gidx, neuron) {
+                            acc[j] += w * data[j] as f64;
+                            denom[j] += w;
+                        }
+                    }
+                }
+            }
+        }
+        let g_data = g_t.data();
+        let new: Vec<f32> = (0..len)
+            .map(|j| {
+                if denom[j] > 0.0 {
+                    (acc[j] / denom[j]) as f32
+                } else {
+                    g_data[j]
+                }
+            })
+            .collect();
+        out.push(Tensor::from_vec(g_t.shape(), new));
+    }
+    out
+}
+
+#[test]
+fn prop_parallel_fedavg_bit_identical_to_scalar_reference() {
+    // random cohorts (random masks, weights, staleness) through both
+    // aggregate modes: the pooled parallel path must equal the scalar
+    // reference bit for bit at every thread count, with one shared
+    // scratch arena reused dirty across every case and shape
+    let scratch = std::cell::RefCell::new(AggScratch::new());
+    check(
+        Config { cases: 48, ..Default::default() },
+        |g: &mut Gen| {
+            let n0 = g.usize_in(1, 6);
+            let n1 = g.usize_in(1, 12);
+            let nclients = g.usize_in(1, 5);
+            let seed = g.rng.next_u64();
+            (n0, n1, nclients, seed)
+        },
+        |_| vec![],
+        |&(n0, n1, nclients, seed)| {
+            let spec = spec_with_gate(n0, n1);
+            let mut rng = fluid::util::prng::Pcg32::new(seed, 11);
+            let rand_params = |rng: &mut fluid::util::prng::Pcg32| -> Vec<Tensor> {
+                spec.params
+                    .iter()
+                    .map(|p| {
+                        let len: usize = p.shape.iter().product();
+                        Tensor::from_vec(
+                            &p.shape,
+                            (0..len).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+                        )
+                    })
+                    .collect()
+            };
+            let global = rand_params(&mut rng);
+            let updates: Vec<ClientUpdate> = (0..nclients)
+                .map(|_| {
+                    let keep: Vec<Vec<bool>> = spec
+                        .masks
+                        .iter()
+                        .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.7).collect())
+                        .collect();
+                    ClientUpdate {
+                        params: rand_params(&mut rng),
+                        weight: rng.uniform(0.1, 5.0) as f64,
+                        mask: MaskSet::from_keep(&spec, &keep),
+                        staleness: (rng.next_u32() % 3) as usize,
+                    }
+                })
+                .collect();
+            for mode in [AggregateMode::Plain, AggregateMode::OwnershipWeighted] {
+                let want = reference_fedavg(&spec, &global, &updates, mode);
+                for threads in [1usize, 2, 4, 8] {
+                    let mut s = scratch.borrow_mut();
+                    let got = fedavg_into(&spec, &global, &updates, mode, threads, &mut s);
+                    for (pi, (a, b)) in got.iter().zip(&want).enumerate() {
+                        for (j, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+                            if x.to_bits() != y.to_bits() {
+                                return Err(format!(
+                                    "mode {mode:?} threads {threads} param {pi} elem {j}: \
+                                     {x} ({:#010x}) vs {y} ({:#010x})",
+                                    x.to_bits(),
+                                    y.to_bits()
+                                ));
+                            }
+                        }
+                    }
+                    s.recycle(got);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The generated specs above sit inside one parallel chunk; this case
+/// crosses the fixed chunk boundary (gate layer of 3 x 4800 elements >
+/// CHUNK) so the multi-chunk work-queue path itself is pinned
+/// bit-identical across thread counts and against the reference.
+#[test]
+fn parallel_fedavg_matches_reference_across_chunk_boundary() {
+    let spec = spec_with_gate(1200, 50);
+    let mut rng = fluid::util::prng::Pcg32::new(0xC0FFEE, 1);
+    let rand_params = |rng: &mut fluid::util::prng::Pcg32| -> Vec<Tensor> {
+        spec.params
+            .iter()
+            .map(|p| {
+                let len: usize = p.shape.iter().product();
+                Tensor::from_vec(&p.shape, (0..len).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            })
+            .collect()
+    };
+    let global = rand_params(&mut rng);
+    let updates: Vec<ClientUpdate> = (0..3)
+        .map(|_| {
+            let keep: Vec<Vec<bool>> = spec
+                .masks
+                .iter()
+                .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.6).collect())
+                .collect();
+            ClientUpdate {
+                params: rand_params(&mut rng),
+                weight: rng.uniform(0.5, 3.0) as f64,
+                mask: MaskSet::from_keep(&spec, &keep),
+                staleness: 0,
+            }
+        })
+        .collect();
+    let mut scratch = AggScratch::new();
+    for mode in [AggregateMode::Plain, AggregateMode::OwnershipWeighted] {
+        let want = reference_fedavg(&spec, &global, &updates, mode);
+        for threads in [1usize, 2, 8] {
+            let got = fedavg_into(&spec, &global, &updates, mode, threads, &mut scratch);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.shape(), b.shape());
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "mode {mode:?} threads {threads}");
+                }
+            }
+            scratch.recycle(got);
+        }
+    }
 }
 
 #[test]
