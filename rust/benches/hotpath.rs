@@ -256,6 +256,38 @@ fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
         all.push(m);
     }
 
+    // adaptive rate-controller recalibration over a 2k-client pool
+    // (EWMA profiles + promotion/demotion + feedback steps + the
+    // Detection assembly the engine consumes every calibration round)
+    {
+        use fluid::straggler::{AdaptConfig, AdaptMode, RateController};
+        let n = 2000usize;
+        let mut ctl = RateController::new(
+            n,
+            AdaptConfig { mode: AdaptMode::Ewma, ..AdaptConfig::default() },
+        );
+        let mut crng = Pcg32::new(17, 4);
+        let pool: Vec<usize> = (0..n).collect();
+        let full: Vec<f64> = (0..n)
+            .map(|_| 10.0 * crng.lognormal(0.35) as f64)
+            .collect();
+        let mut tick = 0u64;
+        let m = b.run("adapt/controller-step-2k", || {
+            // fresh arrivals every tick so the EWMA/step paths stay hot
+            let wobble = 1.0 + 0.01 * (tick % 7) as f64;
+            for c in 0..n {
+                let f = full[c] * wobble;
+                let r = ctl.rate_of(c);
+                ctl.observe(c, f * r, f, r);
+            }
+            tick += 1;
+            let det = ctl.recalibrate(&pool, &full, 0.2, 0.02, &[]).unwrap();
+            std::hint::black_box(det.stragglers.len());
+        });
+        println!("{}", m.report());
+        all.push(m);
+    }
+
     // scenario churn tick over the whole population
     let sim = fluid::engine::ScenarioSim::new(
         ScenarioConfig::parse("storm").unwrap().unwrap(),
@@ -332,6 +364,7 @@ fn synthetic_snapshot(
         policy: PolicyState::Invariant { th, streak, score, observations },
         availability: (0..clients).map(|i| i % 7 != 0).collect(),
         detection: None,
+        ctrl: None,
         last_latencies: (0..clients).map(|i| i as f64 * 0.001).collect(),
         last_full_latencies: (0..clients).map(|i| i as f64 * 0.0015).collect(),
         free_at: vec![0.0; clients],

@@ -14,6 +14,7 @@ use crate::dropout::PolicyKind;
 use crate::engine::{ScenarioConfig, SyncMode};
 use crate::fl::{AggregateMode, SamplerKind};
 use crate::jsonlite::Json;
+use crate::straggler::{AdaptConfig, AdaptMode};
 use std::path::PathBuf;
 
 /// Everything that defines one run.
@@ -44,6 +45,19 @@ pub struct ExperimentConfig {
     /// keep the straggler set fixed after the first detection
     /// (the "static straggler" baseline of Fig 4b)
     pub static_stragglers: bool,
+    /// sub-model sizing law: `paper` = the §7 one-shot menu snap
+    /// (bit-identical to the historic loop), `ewma` = the closed-loop
+    /// `straggler::RateController` (continuous rates, feedback on the
+    /// measured miss, hysteresis, straggler promotion/demotion)
+    pub adapt: AdaptMode,
+    /// ewma controller: proportional gain of the rate step
+    pub adapt_gain: f64,
+    /// ewma controller: hysteresis half-width around the latency
+    /// setpoint `(1 - deadband) · T_target`
+    pub adapt_deadband: f64,
+    /// ewma controller: floor on adaptive keep-rates (paper mode is
+    /// floored by its menu instead)
+    pub rate_min: f64,
     /// client sampling fraction per round (A.6; 1.0 = all clients)
     pub sample_fraction: f64,
     /// evaluate on the test split every this many rounds
@@ -109,6 +123,10 @@ impl ExperimentConfig {
             recalibrate_every: 1,
             fluctuation: false,
             static_stragglers: false,
+            adapt: AdaptMode::Paper,
+            adapt_gain: 0.5,
+            adapt_deadband: 0.05,
+            rate_min: 0.1,
             sample_fraction: 1.0,
             eval_every: 5,
             aggregate: AggregateMode::OwnershipWeighted,
@@ -138,6 +156,87 @@ impl ExperimentConfig {
             samples_per_client: 30,
             ..Self::mobile(model, policy)
         }
+    }
+
+    /// The controller parameters as `straggler::adapt` consumes them.
+    pub fn adapt_config(&self) -> AdaptConfig {
+        AdaptConfig {
+            mode: self.adapt,
+            gain: self.adapt_gain,
+            deadband: self.adapt_deadband,
+            rate_min: self.rate_min,
+            ..AdaptConfig::default()
+        }
+    }
+
+    /// Validate the knobs no run can recover from at runtime. An empty
+    /// or out-of-range `rates_menu`/`cluster_rates` used to slip through
+    /// `snap_rate`, which silently yields 1.0 for any menu it cannot
+    /// snap into — stragglers then never received a sub-model at all.
+    /// Surfaced as a clean config error here (the engine calls this
+    /// before building any state; the CLI calls it at parse time).
+    pub fn validate(&self) -> crate::Result<()> {
+        let check_menu = |name: &str, menu: &[f64]| -> crate::Result<()> {
+            anyhow::ensure!(
+                !menu.is_empty(),
+                "{name} is empty: stragglers could never receive a sub-model"
+            );
+            for &r in menu {
+                anyhow::ensure!(
+                    r.is_finite() && r > 0.0 && r <= 1.0,
+                    "{name} entry {r} is outside (0, 1]"
+                );
+            }
+            Ok(())
+        };
+        check_menu("rates_menu", &self.rates_menu)?;
+        if let Some(menu) = &self.cluster_rates {
+            check_menu("cluster_rates", menu)?;
+        }
+        if let Some(r) = self.fixed_rate {
+            anyhow::ensure!(
+                r.is_finite() && r > 0.0 && r <= 1.0,
+                "fixed_rate {r} is outside (0, 1]"
+            );
+        }
+        anyhow::ensure!(
+            self.adapt_gain.is_finite() && self.adapt_gain > 0.0 && self.adapt_gain <= 2.0,
+            "adapt_gain {} is outside (0, 2]",
+            self.adapt_gain
+        );
+        anyhow::ensure!(
+            self.adapt_deadband.is_finite() && (0.0..0.5).contains(&self.adapt_deadband),
+            "adapt_deadband {} is outside [0, 0.5)",
+            self.adapt_deadband
+        );
+        anyhow::ensure!(
+            self.rate_min.is_finite() && self.rate_min > 0.0 && self.rate_min <= 1.0,
+            "rate_min {} is outside (0, 1]",
+            self.rate_min
+        );
+        if self.adapt == AdaptMode::Ewma {
+            // both knobs rewrite the rate *after* the controller assigns
+            // it, so its feedback would step on evidence measured under
+            // a rate it never chose — reject the combination up front
+            anyhow::ensure!(
+                self.fixed_rate.is_none(),
+                "--adapt ewma is incompatible with a fixed straggler rate \
+                 (the controller owns sub-model sizes; fixed_rate is the \
+                 Table-2 static protocol)"
+            );
+            anyhow::ensure!(
+                self.cluster_rates.is_none(),
+                "--adapt ewma is incompatible with cluster_rates \
+                 (adaptive rates are continuous, not menu-snapped)"
+            );
+            anyhow::ensure!(
+                !self.static_stragglers,
+                "--adapt ewma is incompatible with --static-stragglers \
+                 (freezing the straggler set after the first detection \
+                 disables the feedback loop entirely)"
+            );
+        }
+        Ok(())
     }
 
     /// Fleet-scale preset: a population of `fleet_size` descriptor-only
@@ -303,6 +402,76 @@ mod tests {
         assert_eq!(f.sampler, SamplerKind::Uniform);
         assert!(f.scenario.is_none());
         assert!(!f.mobile_fleet);
+    }
+
+    #[test]
+    fn validate_rejects_bad_menus_and_controller_knobs() {
+        let good = ExperimentConfig::mobile("femnist_cnn", PolicyKind::Invariant);
+        assert!(good.validate().is_ok());
+
+        let mut bad = good.clone();
+        bad.rates_menu = vec![];
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("rates_menu"), "{err}");
+
+        let mut bad = good.clone();
+        bad.rates_menu = vec![0.5, 1.5];
+        assert!(bad.validate().is_err(), "rate > 1 accepted");
+        let mut bad = good.clone();
+        bad.rates_menu = vec![0.0];
+        assert!(bad.validate().is_err(), "rate 0 accepted");
+        let mut bad = good.clone();
+        bad.rates_menu = vec![f64::NAN];
+        assert!(bad.validate().is_err(), "NaN rate accepted");
+
+        let mut bad = good.clone();
+        bad.cluster_rates = Some(vec![]);
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("cluster_rates"), "{err}");
+        let mut bad = good.clone();
+        bad.cluster_rates = Some(vec![0.75, -0.1]);
+        assert!(bad.validate().is_err());
+
+        let mut bad = good.clone();
+        bad.fixed_rate = Some(2.0);
+        assert!(bad.validate().is_err());
+
+        let mut bad = good.clone();
+        bad.adapt_gain = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.adapt_deadband = 0.5;
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.rate_min = 0.0;
+        assert!(bad.validate().is_err());
+
+        // ewma owns rates: post-assignment rewrites are rejected
+        let mut bad = good.clone();
+        bad.adapt = AdaptMode::Ewma;
+        bad.fixed_rate = Some(0.5);
+        assert!(bad.validate().is_err(), "ewma + fixed_rate accepted");
+        let mut bad = good.clone();
+        bad.adapt = AdaptMode::Ewma;
+        bad.cluster_rates = Some(vec![0.65, 0.75]);
+        assert!(bad.validate().is_err(), "ewma + cluster_rates accepted");
+        let mut bad = good.clone();
+        bad.adapt = AdaptMode::Ewma;
+        bad.static_stragglers = true;
+        assert!(bad.validate().is_err(), "ewma + static_stragglers accepted");
+        let mut ok = good.clone();
+        ok.adapt = AdaptMode::Ewma;
+        assert!(ok.validate().is_ok());
+
+        // the adapt knobs flow into the controller config
+        let mut cfg = good.clone();
+        cfg.adapt = AdaptMode::Ewma;
+        cfg.adapt_gain = 0.7;
+        let ac = cfg.adapt_config();
+        assert_eq!(ac.mode, AdaptMode::Ewma);
+        assert_eq!(ac.gain, 0.7);
+        assert_eq!(ac.deadband, cfg.adapt_deadband);
+        assert_eq!(ac.rate_min, cfg.rate_min);
     }
 
     #[test]

@@ -61,7 +61,9 @@ use crate::fl::{
 };
 use crate::model::ModelSpec;
 use crate::snapshot::{config_fingerprint, PolicyState, Snapshot, SnapshotStore, StaleEntry};
-use crate::straggler::{detect_stragglers, snap_rate, Detection, FluctuationSchedule, PerfModel};
+use crate::straggler::{
+    snap_rate, AdaptMode, Detection, FluctuationSchedule, PerfModel, RateController,
+};
 use crate::tensor::Tensor;
 use crate::util::prng::Pcg32;
 use crate::util::stats;
@@ -162,6 +164,10 @@ pub struct RoundEngine<'a, E: ClientExecutor> {
     scenario: Option<ScenarioSim>,
     policy: Policy,
     detection: Option<Detection>,
+    /// the calibration seam (straggler/adapt.rs): `paper` mode replays
+    /// the historic one-shot menu snap through it bit-for-bit, `ewma`
+    /// mode closes the feedback loop over smoothed latency profiles
+    controller: RateController,
     params: Vec<Tensor>,
     full_mask: MaskSet,
     /// actual end-to-end latency each client last reported (under its
@@ -224,6 +230,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         executor: E,
         source: Option<Box<dyn ShardSource>>,
     ) -> crate::Result<Self> {
+        cfg.validate()?;
         let spec = executor.spec().clone();
         let n = cfg.fleet_size.unwrap_or(cfg.clients);
         anyhow::ensure!(n > 0, "experiment needs at least one client");
@@ -298,6 +305,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             scenario,
             policy,
             detection: None,
+            controller: RateController::new(n, cfg.adapt_config()),
             params,
             full_mask,
             last_latencies: vec![0.0; n],
@@ -427,6 +435,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             policy,
             availability: self.fleet.clients.iter().map(|d| d.available).collect(),
             detection: self.detection.clone(),
+            ctrl: self.controller.export_state(),
             last_latencies: self.last_latencies.clone(),
             last_full_latencies: self.last_full_latencies.clone(),
             free_at: self.free_at.clone(),
@@ -516,6 +525,20 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 d.speedups.len()
             );
         }
+        // CTRL is optional: snapshots from pre-controller writers carry
+        // none, and the controller then starts fresh (paper mode keeps
+        // its whole calibration in the SCHED detection anyway).
+        if let Some(ctrl) = &snap.ctrl {
+            anyhow::ensure!(
+                ctrl.profile.len() == n && ctrl.measured.len() == n && ctrl.rates.len() == n,
+                "snapshot controller tables sized for {} clients, engine has {n}",
+                ctrl.profile.len()
+            );
+            anyhow::ensure!(
+                ctrl.rates.iter().all(|r| r.is_finite() && *r > 0.0 && *r <= 1.0),
+                "snapshot controller carries keep-rates outside (0, 1]"
+            );
+        }
         let groups = self.full_mask.num_groups();
         for (i, s) in snap.stale.iter().enumerate() {
             anyhow::ensure!(
@@ -559,6 +582,9 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         }
         for (d, &avail) in self.fleet.clients.iter_mut().zip(&snap.availability) {
             d.available = avail;
+        }
+        if let Some(ctrl) = snap.ctrl {
+            self.controller.import_state(ctrl);
         }
         self.stale = snap
             .stale
@@ -637,24 +663,35 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             } else {
                 selected.clone()
             };
-            if !pool.is_empty() {
-                let lat: Vec<f64> =
-                    pool.iter().map(|&c| self.last_full_latencies[c]).collect();
-                let det =
-                    detect_stragglers(&lat, cfg.straggler_fraction, 0.02, &cfg.rates_menu);
-                // map sample-local ids back to client ids
-                self.detection = Some(Detection {
-                    stragglers: det.stragglers.iter().map(|&i| pool[i]).collect(),
-                    ..det
-                });
+            // The controller is the calibration seam: `paper` mode
+            // reproduces the historic one-shot detect + menu snap
+            // bit-for-bit (sample-local ids mapped back); `ewma` mode
+            // closes the loop over its smoothed per-client profiles and
+            // promotes/demotes stragglers as scenarios shift load. A
+            // `None` keeps the previous detection, as the pre-controller
+            // loop did for an empty pool.
+            if let Some(det) = self.controller.recalibrate(
+                &pool,
+                &self.last_full_latencies,
+                cfg.straggler_fraction,
+                0.02,
+                &cfg.rates_menu,
+            ) {
+                self.detection = Some(det);
             }
         }
 
         // --- sub-model assignment -------------------------------------------
         let calib_start = Instant::now();
+        let ewma = cfg.adapt == AdaptMode::Ewma;
         let mut masks = MaskTable::new(self.full_mask.clone());
         let mut rates: Vec<f64> = vec![1.0; n];
         let mut straggler_ids: Vec<usize> = Vec::new();
+        // straggler membership bitmap: the participant and delta-voter
+        // filters below used to `contains`-scan `straggler_ids` per
+        // client — O(participants x stragglers), the same quadratic scan
+        // the `is_participant` bitmap killed on the arrival path
+        let mut is_straggler = vec![false; n];
         if let Some(det) = &self.detection {
             for (k, &c) in det.stragglers.iter().enumerate() {
                 let desired = cfg.fixed_rate.unwrap_or(det.rates[k]);
@@ -662,7 +699,17 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     Some(menu) => snap_rate(desired, menu),
                     None => desired,
                 };
-                if cfg.policy != PolicyKind::None && cfg.policy != PolicyKind::Exclude {
+                // The controller's straggler set persists across cohorts,
+                // so in ewma mode only clients actually sampled this
+                // round get a mask cut (mask extraction advances policy
+                // state — random dropout's PRNG — so the classic paper
+                // path keeps cutting one per straggler, bit-identically
+                // to the pre-controller loop). `selected` is sorted.
+                let sampled_now = !ewma || selected.binary_search(&c).is_ok();
+                if sampled_now
+                    && cfg.policy != PolicyKind::None
+                    && cfg.policy != PolicyKind::Exclude
+                {
                     let m = self.policy.make_mask(&self.spec, r);
                     // the straggler only speeds up if it actually received
                     // a sub-model (invariant dropout returns the full mask
@@ -673,6 +720,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     }
                 }
                 straggler_ids.push(c);
+                is_straggler[c] = true;
             }
         }
         let calib_secs = calib_start.elapsed().as_secs_f64();
@@ -692,7 +740,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let participants: Vec<usize> = active
             .iter()
             .copied()
-            .filter(|c| cfg.policy != PolicyKind::Exclude || !straggler_ids.contains(c))
+            .filter(|&c| cfg.policy != PolicyKind::Exclude || !is_straggler[c])
             .collect();
 
         RoundPlan {
@@ -703,6 +751,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             active,
             participants,
             straggler_ids,
+            is_straggler,
             rates,
             masks,
             t_target: self.detection.as_ref().map(|d| d.t_target),
@@ -793,6 +842,12 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         for a in &arrivals {
             self.last_latencies[a.client] = a.at;
             self.last_full_latencies[a.client] = a.full_latency;
+            // close the loop: the controller smooths these into its
+            // per-client profiles (no-op in paper mode). The applied
+            // rate rides along so evidence from a full-model fallback
+            // round can never drive a feedback step.
+            self.controller
+                .observe(a.client, a.at, a.full_latency, plan.rates[a.client]);
         }
 
         // membership bitmaps: the scale path runs thousands of clients,
@@ -829,7 +884,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 .stale
                 .iter()
                 .map(|s| s.arrives_at)
-                .min_by(|a, b| a.partial_cmp(b).unwrap())
+                .min_by(f64::total_cmp)
             {
                 round_time = (earliest - round_start).max(0.0);
             }
@@ -856,7 +911,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             let t0 = Instant::now();
             let voters: Vec<&[Tensor]> = updates
                 .iter()
-                .filter(|(c, _)| is_on_time[*c] && !plan.straggler_ids.contains(c))
+                .filter(|(c, _)| is_on_time[*c] && !plan.is_straggler[*c])
                 .take(MAX_DELTA_VOTERS)
                 .map(|(_, u)| u.params.as_slice())
                 .collect();
@@ -896,13 +951,21 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     // and the client stays busy until it lands
                     SyncMode::Buffered { .. } => {
                         let at = late_at[c].expect("late participant has an arrival");
-                        self.free_at[c] = round_start + at;
-                        self.stale.push(StaleUpdate {
-                            result: u,
-                            mask: plan.masks.get(c).clone(),
-                            arrives_at: round_start + at,
-                            born_round: plan.round,
-                        });
+                        if !at.is_finite() {
+                            // broken timing measurement: a NaN/inf busy
+                            // clock would strand the client (and its
+                            // update) forever — drop the update and
+                            // leave the client free instead
+                            dropped_updates += 1;
+                        } else {
+                            self.free_at[c] = round_start + at;
+                            self.stale.push(StaleUpdate {
+                                result: u,
+                                mask: plan.masks.get(c).clone(),
+                                arrives_at: round_start + at,
+                                born_round: plan.round,
+                            });
+                        }
                     }
                     // a full barrier never produces late arrivals
                     SyncMode::FullBarrier => unreachable!(),

@@ -72,6 +72,11 @@ pub struct RoundPlan {
     pub participants: Vec<usize>,
     /// current straggler set, slowest first
     pub straggler_ids: Vec<usize>,
+    /// straggler membership bitmap over the population — the round hot
+    /// path (participant + delta-voter filters) reads this instead of
+    /// `contains`-scanning `straggler_ids` per client, which was
+    /// O(participants x stragglers) at fleet scale
+    pub is_straggler: Vec<bool>,
     /// per-client keep-rate table (1.0 = full model)
     pub rates: Vec<f64>,
     /// per-client sub-model masks (sparse over the full mask)

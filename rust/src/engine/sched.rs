@@ -124,16 +124,20 @@ impl EventScheduler {
                 if on.is_empty() {
                     // nobody met the cutoff: wait for the single earliest
                     // arrival so the round aggregates at least one update
+                    // total_cmp: a NaN arrival (broken measurement)
+                    // sorts last and can never panic the resolve
                     let first = arrivals
                         .iter()
                         .min_by(|a, b| {
-                            a.at.partial_cmp(&b.at)
-                                .unwrap()
-                                .then(a.client.cmp(&b.client))
+                            a.at.total_cmp(&b.at).then(a.client.cmp(&b.client))
                         })
                         .unwrap();
+                    // a non-finite "earliest" means every arrival is
+                    // broken: end the round immediately rather than
+                    // poisoning the virtual clock with NaN forever
+                    let round_time = if first.at.is_finite() { first.at } else { 0.0 };
                     return Resolution {
-                        round_time: first.at,
+                        round_time,
                         on_time: vec![first.client],
                         late: arrivals
                             .iter()
@@ -155,16 +159,22 @@ impl EventScheduler {
             }
             SyncMode::Buffered { k } => {
                 let mut sorted: Vec<ClientArrival> = arrivals.to_vec();
-                sorted.sort_by(|a, b| {
-                    a.at.partial_cmp(&b.at)
-                        .unwrap()
-                        .then(a.client.cmp(&b.client))
-                });
+                // total_cmp: NaN arrivals sort last, so they land in the
+                // late set instead of panicking the k-th-arrival scan
+                sorted.sort_by(|a, b| a.at.total_cmp(&b.at).then(a.client.cmp(&b.client)));
                 let k_eff = k.clamp(1, sorted.len());
+                // only finite arrivals can end a round: the cut clamps
+                // to the finite prefix so a NaN/inf latency (broken
+                // measurement) always lands in the late set and never
+                // becomes round_time — a NaN there would poison vtime
+                // for every subsequent round
+                let finite = sorted.iter().take_while(|a| a.at.is_finite()).count();
+                let cut = k_eff.min(finite);
+                let round_time = if cut == 0 { 0.0 } else { sorted[cut - 1].at };
                 Resolution {
-                    round_time: sorted[k_eff - 1].at,
-                    on_time: sorted[..k_eff].iter().map(|a| a.client).collect(),
-                    late: sorted[k_eff..].to_vec(),
+                    round_time,
+                    on_time: sorted[..cut].iter().map(|a| a.client).collect(),
+                    late: sorted[cut..].to_vec(),
                 }
             }
         }
@@ -266,6 +276,50 @@ mod tests {
         assert_eq!(r.round_time, 9.0);
         assert_eq!(r.on_time.len(), 2);
         assert!(r.late.is_empty());
+    }
+
+    #[test]
+    fn nan_and_inf_arrivals_never_panic_resolution() {
+        // regression: a NaN latency used to panic the Deadline/Buffered
+        // partial_cmp sorts mid-round
+        let a = arr(&[(0, 3.0), (1, f64::NAN), (2, 5.0), (3, f64::INFINITY)]);
+        for mode in [
+            SyncMode::FullBarrier,
+            SyncMode::Deadline { multiple_of_t_target: 1.2 },
+            SyncMode::Buffered { k: 2 },
+        ] {
+            let r = EventScheduler::resolve(mode, &a, Some(5.0));
+            assert_eq!(
+                r.on_time.len() + r.late.len(),
+                a.len(),
+                "{mode:?} lost an arrival"
+            );
+        }
+        // buffered: the finite arrivals are on time, NaN/inf are late
+        let r = EventScheduler::resolve(SyncMode::Buffered { k: 2 }, &a, None);
+        assert_eq!(r.on_time, vec![0, 2]);
+        assert_eq!(r.round_time, 5.0);
+        // even with k beyond the finite prefix, a broken arrival never
+        // ends the round: round_time must stay finite (a NaN here would
+        // poison vtime for every later round)
+        let r = EventScheduler::resolve(SyncMode::Buffered { k: 3 }, &a, None);
+        assert_eq!(r.on_time, vec![0, 2]);
+        assert_eq!(r.round_time, 5.0);
+        assert_eq!(r.late.len(), 2);
+        // deadline with every arrival broken still makes progress, with
+        // a sane (zero) round time
+        let broken = arr(&[(0, f64::NAN), (1, f64::NAN)]);
+        let r = EventScheduler::resolve(
+            SyncMode::Deadline { multiple_of_t_target: 1.0 },
+            &broken,
+            Some(2.0),
+        );
+        assert_eq!(r.on_time.len(), 1);
+        assert_eq!(r.round_time, 0.0);
+        let r = EventScheduler::resolve(SyncMode::Buffered { k: 1 }, &broken, None);
+        assert!(r.on_time.is_empty());
+        assert_eq!(r.round_time, 0.0);
+        assert_eq!(r.late.len(), 2);
     }
 
     #[test]

@@ -115,14 +115,14 @@ impl Fleet {
     }
 
     /// The slowest client on `model` — same tie-breaking as the historic
-    /// `max_by` scan (last maximum wins).
+    /// `max_by` scan (last maximum wins; total_cmp agrees with the old
+    /// partial order on the finite base times and cannot panic).
     pub fn slowest(&self, model: &str) -> usize {
         (0..self.clients.len())
             .max_by(|&a, &b| {
                 self.profile(a)
                     .base_time(model)
-                    .partial_cmp(&self.profile(b).base_time(model))
-                    .unwrap()
+                    .total_cmp(&self.profile(b).base_time(model))
             })
             .unwrap_or(0)
     }

@@ -13,7 +13,7 @@ use fluid::dropout::PolicyKind;
 use fluid::engine::{ScenarioConfig, SyncMode};
 use fluid::fl::SamplerKind;
 use fluid::runtime::Session;
-use fluid::straggler::mobile_fleet;
+use fluid::straggler::{mobile_fleet, AdaptMode};
 use fluid::util::cli::Args;
 
 fn main() {
@@ -50,6 +50,10 @@ fn train_args(program: &str) -> Args {
         .opt("lr", "", "learning rate (default: paper value per model)")
         .opt("rate", "", "fixed straggler keep-rate r (default: FLuID auto)")
         .opt("straggler-frac", "0.2", "fraction of fleet treated as stragglers")
+        .opt("adapt", "paper", "sub-model sizing: paper (menu snap) | ewma (closed loop)")
+        .opt("adapt-gain", "0.5", "ewma: proportional gain of the rate step")
+        .opt("adapt-deadband", "0.05", "ewma: hysteresis half-width around the setpoint")
+        .opt("rate-min", "0.1", "ewma: floor on adaptive keep-rates")
         .opt("sample-frac", "1.0", "client sampling fraction per round")
         .opt("recalibrate", "1", "recalibration period (rounds)")
         .opt("sync-mode", "full", "round barrier: full|deadline|buffered")
@@ -93,6 +97,13 @@ fn build_config(a: &Args) -> ExperimentConfig {
         cfg.fixed_rate = Some(a.get_f64("rate"));
     }
     cfg.straggler_fraction = a.get_f64("straggler-frac");
+    cfg.adapt = AdaptMode::parse(&a.get("adapt")).unwrap_or_else(|| {
+        eprintln!("unknown adapt mode {:?} (paper|ewma)", a.get("adapt"));
+        std::process::exit(2);
+    });
+    cfg.adapt_gain = a.get_f64("adapt-gain");
+    cfg.adapt_deadband = a.get_f64("adapt-deadband");
+    cfg.rate_min = a.get_f64("rate-min");
     cfg.sample_fraction = a.get_f64("sample-frac");
     cfg.recalibrate_every = a.get_usize("recalibrate").max(1);
     cfg.sync_mode = match a.get("sync-mode").as_str() {
@@ -174,6 +185,12 @@ fn build_config(a: &Args) -> ExperimentConfig {
              (femnist_cnn|cifar_vgg9|cifar_resnet18|shakespeare_lstm)",
             cfg.model
         );
+        std::process::exit(2);
+    }
+    // surface menu/controller misconfiguration at parse time instead of
+    // deep inside the engine
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid configuration: {e:#}");
         std::process::exit(2);
     }
     cfg

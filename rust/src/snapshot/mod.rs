@@ -40,7 +40,7 @@ pub mod codec;
 pub use codec::{fnv1a, Reader, Writer};
 
 use crate::coordinator::{ExperimentConfig, RoundRecord};
-use crate::straggler::Detection;
+use crate::straggler::{CtrlState, Detection};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Context, Result};
 use std::fs;
@@ -62,6 +62,10 @@ mod section {
     pub const FLEET: u32 = 5;
     pub const SCHED: u32 = 6;
     pub const HISTORY: u32 = 7;
+    /// adaptive rate-controller state (added with `straggler/adapt.rs`);
+    /// optional — readers treat an absent CTRL section as "no controller
+    /// state", so pre-controller snapshots still resume
+    pub const CTRL: u32 = 8;
 }
 
 /// Evolving dropout-policy state. `Stateless` covers the policies whose
@@ -113,6 +117,9 @@ pub struct Snapshot {
     /// per-client availability (scenario churn is incremental state)
     pub availability: Vec<bool>,
     pub detection: Option<Detection>,
+    /// adaptive rate-controller state (`--adapt ewma` runs; `None` for
+    /// paper mode and for snapshots written before the controller)
+    pub ctrl: Option<CtrlState>,
     pub last_latencies: Vec<f64>,
     pub last_full_latencies: Vec<f64>,
     pub free_at: Vec<f64>,
@@ -135,7 +142,8 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
         "v1|model={}|policy={}|rounds={}|clients={}|spc={}|steps={}|lr={:08x}\
          |sfrac={:016x}|fixed={:?}|menu={:?}|clusters={:?}|recal={}|fluct={}\
          |static={}|sample={:016x}|eval={}|agg={:?}|fused={}|th={:?}|mobile={}\
-         |sync={:?}|fleet={:?}|k={}|sampler={}|scenario={:?}|seed={}",
+         |sync={:?}|fleet={:?}|k={}|sampler={}|scenario={:?}|seed={}\
+         |adapt={}|again={:016x}|adb={:016x}|rmin={:016x}",
         cfg.model,
         cfg.policy.name(),
         cfg.rounds,
@@ -162,6 +170,10 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
         cfg.sampler.name(),
         cfg.scenario,
         cfg.seed,
+        cfg.adapt.name(),
+        cfg.adapt_gain.to_bits(),
+        cfg.adapt_deadband.to_bits(),
+        cfg.rate_min.to_bits(),
     )
 }
 
@@ -334,12 +346,25 @@ impl Snapshot {
         }
     }
 
+    fn enc_ctrl(&self, w: &mut Writer) {
+        match &self.ctrl {
+            None => w.put_bool(false),
+            Some(c) => {
+                w.put_bool(true);
+                w.put_f64s(&c.profile);
+                w.put_f64s(&c.measured);
+                w.put_f64s(&c.rates);
+                w.put_f64(c.t_target);
+            }
+        }
+    }
+
     /// Encode every section into `w` in container order, returning the
     /// `(id, offset, len)` table (offsets relative to where `w` started).
     /// Shared by both encode paths so section order can never drift.
     fn write_sections(&self, w: &mut Writer) -> Vec<(u32, usize, usize)> {
         type Enc = fn(&Snapshot, &mut Writer);
-        let sections: [(u32, Enc); 7] = [
+        let sections: [(u32, Enc); 8] = [
             (section::META, Snapshot::enc_meta),
             (section::ENGINE, Snapshot::enc_engine),
             (section::MODEL, Snapshot::enc_model),
@@ -347,6 +372,7 @@ impl Snapshot {
             (section::FLEET, Snapshot::enc_fleet),
             (section::SCHED, Snapshot::enc_sched),
             (section::HISTORY, Snapshot::enc_history),
+            (section::CTRL, Snapshot::enc_ctrl),
         ];
         let base = w.len();
         let mut table = Vec::with_capacity(sections.len());
@@ -556,6 +582,24 @@ impl Snapshot {
             .map(|i| take_record(&mut r).with_context(|| format!("round record {i}")))
             .collect::<Result<Vec<_>>>()?;
 
+        // CTRL — optional: absent in snapshots from pre-controller
+        // writers (the resumed run then starts its controller fresh)
+        let ctrl = if table.iter().any(|(id, _, _)| *id == section::CTRL) {
+            let mut r = Reader::new(get(section::CTRL)?);
+            if r.take_bool().context("CTRL section")? {
+                Some(CtrlState {
+                    profile: r.take_f64s().context("CTRL profile")?,
+                    measured: r.take_f64s().context("CTRL measured")?,
+                    rates: r.take_f64s().context("CTRL rates")?,
+                    t_target: r.take_f64().context("CTRL t_target")?,
+                })
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+
         Ok(Snapshot {
             fingerprint,
             next_round,
@@ -566,6 +610,7 @@ impl Snapshot {
             policy,
             availability,
             detection,
+            ctrl,
             last_latencies,
             last_full_latencies,
             free_at,
@@ -767,6 +812,12 @@ mod tests {
                 speedups: vec![1.5, 1.25],
                 rates: vec![0.65, 0.85],
             }),
+            ctrl: Some(CtrlState {
+                profile: vec![1.25, 0.0, 4.5],
+                measured: vec![1.0, 0.0, 3.75],
+                rates: vec![1.0, 1.0, 0.625],
+                t_target: 1.5,
+            }),
             last_latencies: vec![1.0, 2.0, 3.0],
             last_full_latencies: vec![1.5, 2.5, 3.5],
             free_at: vec![0.0, 10.0, 0.0],
@@ -822,6 +873,7 @@ mod tests {
                 (section::FLEET, mk(Snapshot::enc_fleet)),
                 (section::SCHED, mk(Snapshot::enc_sched)),
                 (section::HISTORY, mk(Snapshot::enc_history)),
+                (section::CTRL, mk(Snapshot::enc_ctrl)),
             ])
         };
         assert_eq!(snap.encode(), reference);
@@ -874,23 +926,57 @@ mod tests {
         }
     }
 
+    /// Encode one section through its `&mut Writer` encoder.
+    fn enc(snap: &Snapshot, f: fn(&Snapshot, &mut Writer)) -> Vec<u8> {
+        let mut w = Writer::new();
+        f(snap, &mut w);
+        w.into_bytes()
+    }
+
     #[test]
     fn unknown_sections_are_skipped() {
         // splice an extra section id 99 into the table and blob
         let snap = sample_snapshot();
         let out = encode_container(&[
             (99, b"future data".to_vec()),
-            (section::META, snap.enc_meta()),
-            (section::ENGINE, snap.enc_engine()),
-            (section::MODEL, snap.enc_model()),
-            (section::POLICY, snap.enc_policy()),
-            (section::FLEET, snap.enc_fleet()),
-            (section::SCHED, snap.enc_sched()),
-            (section::HISTORY, snap.enc_history()),
+            (section::META, enc(&snap, Snapshot::enc_meta)),
+            (section::ENGINE, enc(&snap, Snapshot::enc_engine)),
+            (section::MODEL, enc(&snap, Snapshot::enc_model)),
+            (section::POLICY, enc(&snap, Snapshot::enc_policy)),
+            (section::FLEET, enc(&snap, Snapshot::enc_fleet)),
+            (section::SCHED, enc(&snap, Snapshot::enc_sched)),
+            (section::HISTORY, enc(&snap, Snapshot::enc_history)),
+            (section::CTRL, enc(&snap, Snapshot::enc_ctrl)),
         ]);
         let back = Snapshot::decode(&out).unwrap();
         assert_eq!(back.next_round, snap.next_round);
         assert_eq!(back.encode(), snap.encode());
+    }
+
+    #[test]
+    fn snapshot_without_ctrl_section_decodes_as_none() {
+        // a container from a pre-controller writer has no CTRL section
+        // at all: the reader must not demand one (older snapshots stay
+        // resumable), and the decoded state carries no controller state
+        let snap = sample_snapshot();
+        let out = encode_container(&[
+            (section::META, enc(&snap, Snapshot::enc_meta)),
+            (section::ENGINE, enc(&snap, Snapshot::enc_engine)),
+            (section::MODEL, enc(&snap, Snapshot::enc_model)),
+            (section::POLICY, enc(&snap, Snapshot::enc_policy)),
+            (section::FLEET, enc(&snap, Snapshot::enc_fleet)),
+            (section::SCHED, enc(&snap, Snapshot::enc_sched)),
+            (section::HISTORY, enc(&snap, Snapshot::enc_history)),
+        ]);
+        let back = Snapshot::decode(&out).unwrap();
+        assert!(back.ctrl.is_none());
+        assert_eq!(back.next_round, snap.next_round);
+        assert_eq!(back.detection, snap.detection);
+        // and a present-but-empty CTRL section is the same as none
+        let mut empty = snap.clone();
+        empty.ctrl = None;
+        let back = Snapshot::decode(&empty.encode()).unwrap();
+        assert!(back.ctrl.is_none());
     }
 
     #[test]
@@ -955,5 +1041,13 @@ mod tests {
         let mut d = a.clone();
         d.lr = 0.005;
         assert_ne!(config_fingerprint(&a), config_fingerprint(&d));
+        // the controller knobs shape the trajectory: an ewma run can
+        // never silently resume as a paper run (or vice versa)
+        let mut e = a.clone();
+        e.adapt = crate::straggler::AdaptMode::Ewma;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&e));
+        let mut f = a.clone();
+        f.adapt_gain = 0.75;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&f));
     }
 }

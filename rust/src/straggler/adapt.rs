@@ -1,0 +1,501 @@
+//! Closed-loop adaptive sub-model sizing.
+//!
+//! The paper concedes (§7) that FLuID "currently only uses pre-defined
+//! sub-model sizes": every `recalibrate_every` rounds the server snaps a
+//! one-shot `1/speedup` to a static menu with no feedback, no smoothing,
+//! and no memory of whether the last assignment actually hit `T_target`.
+//! [`RateController`] closes that loop (Helios-style soft training
+//! toward a per-device compute budget, FedDHAD-style adaptive rates):
+//!
+//! * **EWMA latency profiles** — per-client smoothed full-model
+//!   latencies drive promotion/demotion, so one jittery round cannot
+//!   flap a client in or out of the straggler set.
+//! * **Proportional feedback** — each straggler's keep-rate steps on the
+//!   measured miss `latency / T_target` of the *assigned* sub-model
+//!   ([`RateController::step_rate`]), targeting a setpoint just under
+//!   `T_target` so jitter rarely pushes an arrival past the barrier.
+//! * **Hysteresis deadband** — misses inside the band leave the
+//!   assignment untouched; the measured-latency EWMA is reset whenever a
+//!   rate changes so stale-rate measurements never drive a step.
+//! * **Continuous rates** in `[rate_min, 1.0]` — no menu quantization;
+//!   [`AdaptMode::Paper`] keeps the historical menu-snap behavior
+//!   bit-for-bit for paper-fidelity runs (it routes through the same
+//!   seam but delegates to [`detect_stragglers`]).
+//!
+//! The engine feeds arrivals back through [`RateController::observe`]
+//! and consumes assignments as a [`Detection`] from
+//! [`RateController::recalibrate`]; controller state persists in the
+//! snapshot's `CTRL` section (DESIGN.md §9) so resumed runs stay
+//! bit-identical.
+
+use super::detect::{detect_stragglers, Detection};
+
+/// Ceiling on feedback-stepped keep-rates. Growth caps just *below* the
+/// full model: leaving the straggler set (rate = 1.0) is the
+/// profile-based demotion rule's call — with its hysteresis — never a
+/// noisy feedback step's. A step that reached 1.0 would silently drop
+/// the client from the set while its full-model profile still exceeds
+/// the target, and the next recalibration would flap it straight back.
+const MAX_ADAPTIVE_RATE: f64 = 0.99;
+
+/// Which sub-model sizing law the server runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdaptMode {
+    /// The paper's one-shot `1/speedup` snapped to the static menu
+    /// (§7 "pre-defined sub-model sizes") — the historical behavior,
+    /// bit-identical to the regression pin.
+    #[default]
+    Paper,
+    /// The closed feedback loop over EWMA-smoothed latency profiles.
+    Ewma,
+}
+
+impl AdaptMode {
+    pub fn parse(s: &str) -> Option<AdaptMode> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "paper" | "static" | "menu" => AdaptMode::Paper,
+            "ewma" | "adaptive" | "controller" => AdaptMode::Ewma,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdaptMode::Paper => "paper",
+            AdaptMode::Ewma => "ewma",
+        }
+    }
+}
+
+/// Controller parameters (see `ExperimentConfig::{adapt, adapt_gain,
+/// adapt_deadband, rate_min}` and the `--adapt*` CLI flags).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptConfig {
+    pub mode: AdaptMode,
+    /// proportional gain on the measured miss (rate step per unit error)
+    pub gain: f64,
+    /// hysteresis half-width around the latency setpoint `1 - deadband`
+    pub deadband: f64,
+    /// floor on adaptive keep-rates (the menu floors `paper` mode)
+    pub rate_min: f64,
+    /// smoothing factor of the latency EWMAs (weight of the newest draw)
+    pub ewma_alpha: f64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        Self {
+            mode: AdaptMode::Paper,
+            gain: 0.5,
+            deadband: 0.05,
+            rate_min: 0.1,
+            ewma_alpha: 0.7,
+        }
+    }
+}
+
+/// The controller's resumable state — everything the snapshot `CTRL`
+/// section persists (floats round-trip as raw bit patterns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CtrlState {
+    /// per-client EWMA of full-model-normalized latency (0 = unmeasured)
+    pub profile: Vec<f64>,
+    /// per-client EWMA of the latency measured under the *assigned*
+    /// rate, reset whenever the assignment changes (0 = unmeasured)
+    pub measured: Vec<f64>,
+    /// per-client assigned keep-rate (1.0 = full model, not a straggler)
+    pub rates: Vec<f64>,
+    /// the controller's current target time (0 = no calibration yet)
+    pub t_target: f64,
+}
+
+/// Per-client closed-loop sub-model sizing (see module docs).
+#[derive(Clone, Debug)]
+pub struct RateController {
+    cfg: AdaptConfig,
+    profile: Vec<f64>,
+    measured: Vec<f64>,
+    rates: Vec<f64>,
+    t_target: f64,
+}
+
+impl RateController {
+    pub fn new(n: usize, cfg: AdaptConfig) -> Self {
+        Self {
+            cfg,
+            profile: vec![0.0; n],
+            measured: vec![0.0; n],
+            rates: vec![1.0; n],
+            t_target: 0.0,
+        }
+    }
+
+    pub fn mode(&self) -> AdaptMode {
+        self.cfg.mode
+    }
+
+    /// The keep-rate currently assigned to `client` (1.0 = full model).
+    pub fn rate_of(&self, client: usize) -> f64 {
+        self.rates[client]
+    }
+
+    /// The controller's current target time (0 before any calibration).
+    pub fn t_target(&self) -> f64 {
+        self.t_target
+    }
+
+    /// Feed one arrival back into the loop: `latency` is the end-to-end
+    /// time under the keep-rate the engine *actually applied* this round
+    /// (`applied_rate` — the policy may have fallen back to the full
+    /// model, and the None/Exclude policies never cut masks at all),
+    /// `full_latency` the same draw normalized to the full model.
+    ///
+    /// The full-model profile always updates (it is rate-independent and
+    /// drives promotion/demotion). The assigned-rate EWMA only updates
+    /// when `applied_rate` matches the controller's assignment —
+    /// evidence measured under a rate the controller did not assign
+    /// must never drive a feedback step. Non-finite or non-positive
+    /// measurements (a NaN propagated from a broken client clock) are
+    /// ignored rather than poisoning the EWMAs. No-op in `paper` mode,
+    /// which profiles through the engine's latency tables.
+    pub fn observe(&mut self, client: usize, latency: f64, full_latency: f64, applied_rate: f64) {
+        if self.cfg.mode != AdaptMode::Ewma || client >= self.profile.len() {
+            return;
+        }
+        let a = self.cfg.ewma_alpha;
+        if full_latency.is_finite() && full_latency > 0.0 {
+            self.profile[client] = if self.profile[client] > 0.0 {
+                a * full_latency + (1.0 - a) * self.profile[client]
+            } else {
+                full_latency
+            };
+        }
+        if latency.is_finite() && latency > 0.0 && applied_rate == self.rates[client] {
+            self.measured[client] = if self.measured[client] > 0.0 {
+                a * latency + (1.0 - a) * self.measured[client]
+            } else {
+                latency
+            };
+        }
+    }
+
+    /// One proportional step of the feedback law: given the current
+    /// `rate` and the measured miss `latency / T_target`, return the
+    /// next rate. The setpoint is `1 - deadband` (aim slightly *under*
+    /// the target so jitter rarely pushes an arrival past the barrier);
+    /// misses within `deadband` of it leave the rate unchanged, and the
+    /// result clamps to `[rate_min, MAX_ADAPTIVE_RATE]` — a step never
+    /// exits the straggler set (see [`MAX_ADAPTIVE_RATE`]). Monotone: a
+    /// slower measured latency never yields a larger rate
+    /// (property-tested).
+    pub fn step_rate(&self, rate: f64, miss: f64) -> f64 {
+        if !miss.is_finite() || miss <= 0.0 {
+            return rate;
+        }
+        let err = miss - (1.0 - self.cfg.deadband);
+        if err.abs() <= self.cfg.deadband {
+            return rate;
+        }
+        let next = rate * (1.0 - self.cfg.gain * err);
+        // growth clips at the ceiling but never *below* the current
+        // rate, so the law stays monotone even for a caller-supplied
+        // rate above the ceiling
+        next.max(self.cfg.rate_min).min(MAX_ADAPTIVE_RATE.max(rate))
+    }
+
+    fn set_rate(&mut self, client: usize, rate: f64) {
+        if self.rates[client] != rate {
+            self.rates[client] = rate;
+            // the assigned sub-model changed: measurements taken under
+            // the old rate must not drive the next step
+            self.measured[client] = 0.0;
+        }
+    }
+
+    /// Recalibrate over `pool` (the measured cohort) and return the
+    /// current assignments as a [`Detection`], or `None` when there is
+    /// nothing to calibrate from (the engine then keeps its previous
+    /// detection, as the pre-controller loop did).
+    ///
+    /// `paper` mode reproduces the historical one-shot snap bit-for-bit:
+    /// `detect_stragglers` over `full_latencies[pool]`, sample-local ids
+    /// mapped back. `ewma` mode runs the closed loop over the smoothed
+    /// profiles; `menu` is unused there (rates are continuous).
+    pub fn recalibrate(
+        &mut self,
+        pool: &[usize],
+        full_latencies: &[f64],
+        straggler_fraction: f64,
+        margin: f64,
+        menu: &[f64],
+    ) -> Option<Detection> {
+        match self.cfg.mode {
+            AdaptMode::Paper => {
+                if pool.is_empty() {
+                    return None;
+                }
+                let lat: Vec<f64> = pool.iter().map(|&c| full_latencies[c]).collect();
+                let det = detect_stragglers(&lat, straggler_fraction, margin, menu);
+                Some(Detection {
+                    stragglers: det.stragglers.iter().map(|&i| pool[i]).collect(),
+                    ..det
+                })
+            }
+            AdaptMode::Ewma => self.recalibrate_ewma(pool, straggler_fraction, margin),
+        }
+    }
+
+    fn recalibrate_ewma(
+        &mut self,
+        pool: &[usize],
+        straggler_fraction: f64,
+        margin: f64,
+    ) -> Option<Detection> {
+        // only clients with a real smoothed profile participate — a
+        // fresh cohort is mostly unmeasured at fleet scale
+        let measured: Vec<usize> = pool
+            .iter()
+            .copied()
+            .filter(|&c| {
+                c < self.profile.len()
+                    && self.profile[c].is_finite()
+                    && self.profile[c] > 0.0
+            })
+            .collect();
+        if measured.is_empty() {
+            return None;
+        }
+
+        // T_target over the smoothed profiles, like detect_stragglers:
+        // the slowest client outside the straggler candidate set
+        let max_s = ((measured.len() as f64 * straggler_fraction).floor() as usize)
+            .min(measured.len() - 1);
+        let mut order = measured.clone();
+        order.sort_by(|&a, &b| self.profile[b].total_cmp(&self.profile[a]).then(a.cmp(&b)));
+        let tt = self.profile[order[max_s.min(order.len() - 1)]];
+        if !tt.is_finite() || tt <= 0.0 {
+            return None;
+        }
+        self.t_target = tt;
+
+        // promotion: only the `straggler_fraction` slowest measured
+        // clients are eligible; a client clearly past the target (margin
+        // + deadband of hysteresis) enters at the paper's 1/speedup
+        for &c in order.iter().take(max_s) {
+            let ratio = self.profile[c] / tt;
+            if self.rates[c] >= 1.0 && ratio > 1.0 + margin + self.cfg.deadband {
+                self.set_rate(c, (1.0 / ratio).clamp(self.cfg.rate_min, 1.0));
+            }
+        }
+
+        // demotion + feedback for current stragglers with fresh
+        // measurements (drift/flux scenarios shift load mid-run: a
+        // straggler whose smoothed full-model profile is back at the
+        // target no longer needs a sub-model at all)
+        for &c in &measured {
+            if self.rates[c] >= 1.0 {
+                continue;
+            }
+            let ratio = self.profile[c] / tt;
+            if ratio <= 1.0 + margin {
+                self.set_rate(c, 1.0);
+                continue;
+            }
+            if self.measured[c] > 0.0 {
+                let next = self.step_rate(self.rates[c], self.measured[c] / tt);
+                self.set_rate(c, next);
+            }
+        }
+
+        // assignments over the whole population (stragglers keep their
+        // rate across cohorts — the controller's memory), slowest first
+        let mut ids: Vec<usize> =
+            (0..self.rates.len()).filter(|&c| self.rates[c] < 1.0).collect();
+        ids.sort_by(|&a, &b| self.profile[b].total_cmp(&self.profile[a]).then(a.cmp(&b)));
+        let speedups: Vec<f64> = ids.iter().map(|&c| self.profile[c] / tt).collect();
+        let rates: Vec<f64> = ids.iter().map(|&c| self.rates[c]).collect();
+        Some(Detection {
+            stragglers: ids,
+            t_target: tt,
+            speedups,
+            rates,
+        })
+    }
+
+    /// Resumable state for the snapshot `CTRL` section. `paper` mode
+    /// carries no controller state (its detection lives in `SCHED`).
+    pub fn export_state(&self) -> Option<CtrlState> {
+        if self.cfg.mode != AdaptMode::Ewma {
+            return None;
+        }
+        Some(CtrlState {
+            profile: self.profile.clone(),
+            measured: self.measured.clone(),
+            rates: self.rates.clone(),
+            t_target: self.t_target,
+        })
+    }
+
+    /// Install snapshotted state. The caller (engine restore) validates
+    /// table lengths and rate ranges before this is reached.
+    pub fn import_state(&mut self, st: CtrlState) {
+        self.profile = st.profile;
+        self.measured = st.measured;
+        self.rates = st.rates;
+        self.t_target = st.t_target;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::straggler::detect::DEFAULT_RATES;
+
+    fn ewma_cfg() -> AdaptConfig {
+        AdaptConfig {
+            mode: AdaptMode::Ewma,
+            ..AdaptConfig::default()
+        }
+    }
+
+    #[test]
+    fn mode_parse_round_trips() {
+        for m in [AdaptMode::Paper, AdaptMode::Ewma] {
+            assert_eq!(AdaptMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(AdaptMode::parse("EWMA"), Some(AdaptMode::Ewma));
+        assert_eq!(AdaptMode::parse("bogus"), None);
+        assert_eq!(AdaptMode::default(), AdaptMode::Paper);
+    }
+
+    #[test]
+    fn paper_mode_matches_one_shot_detection() {
+        let mut ctl = RateController::new(6, AdaptConfig::default());
+        let full = [0.0, 62.0, 66.0, 72.0, 80.0, 100.0];
+        let pool = [1usize, 2, 3, 4, 5];
+        let det = ctl
+            .recalibrate(&pool, &full, 0.2, 0.02, DEFAULT_RATES)
+            .unwrap();
+        let lat: Vec<f64> = pool.iter().map(|&c| full[c]).collect();
+        let reference = detect_stragglers(&lat, 0.2, 0.02, DEFAULT_RATES);
+        assert_eq!(det.stragglers, vec![5], "sample-local ids mapped back");
+        assert_eq!(det.t_target, reference.t_target);
+        assert_eq!(det.rates, reference.rates);
+        assert!(ctl.recalibrate(&[], &full, 0.2, 0.02, DEFAULT_RATES).is_none());
+        // paper mode carries no CTRL state and ignores observe()
+        ctl.observe(1, 9.0, 9.0, 1.0);
+        assert!(ctl.export_state().is_none());
+        assert_eq!(ctl.rate_of(5), 1.0);
+    }
+
+    #[test]
+    fn step_rate_band_and_clamps() {
+        let ctl = RateController::new(1, ewma_cfg());
+        let (db, gain) = (0.05, 0.5);
+        // inside the band [1-2db, 1]: no change
+        assert_eq!(ctl.step_rate(0.6, 1.0 - db), 0.6);
+        assert_eq!(ctl.step_rate(0.6, 1.0), 0.6);
+        assert_eq!(ctl.step_rate(0.6, 1.0 - 2.0 * db), 0.6);
+        // above: shrink proportionally to the excess over the setpoint
+        let next = ctl.step_rate(0.6, 1.25);
+        assert!((next - 0.6 * (1.0 - gain * (1.25 - (1.0 - db)))).abs() < 1e-12);
+        // below: grow
+        assert!(ctl.step_rate(0.6, 0.7) > 0.6);
+        // clamps: growth caps below 1.0 — only the profile demotion
+        // rule may take a client out of the straggler set
+        assert_eq!(ctl.step_rate(0.95, 0.2), MAX_ADAPTIVE_RATE);
+        assert!(ctl.step_rate(0.95, 0.2) < 1.0);
+        // ... but a growth step never moves a rate *down* to the ceiling
+        assert_eq!(ctl.step_rate(1.0, 0.2), 1.0);
+        assert_eq!(ctl.step_rate(0.12, 5.0), 0.1);
+        // garbage misses are ignored
+        assert_eq!(ctl.step_rate(0.6, f64::NAN), 0.6);
+        assert_eq!(ctl.step_rate(0.6, -1.0), 0.6);
+    }
+
+    #[test]
+    fn promotes_steps_and_demotes() {
+        let mut ctl = RateController::new(4, ewma_cfg());
+        let pool = [0usize, 1, 2, 3];
+        // client 3 is 2x slower than the rest
+        for _ in 0..3 {
+            for c in 0..3 {
+                ctl.observe(c, 10.0, 10.0, 1.0);
+            }
+            ctl.observe(3, 20.0, 20.0, 1.0);
+        }
+        let det = ctl.recalibrate(&pool, &[], 0.25, 0.02, &[]).unwrap();
+        assert_eq!(det.stragglers, vec![3]);
+        assert_eq!(det.t_target, 10.0);
+        assert!((ctl.rate_of(3) - 0.5).abs() < 1e-9, "promoted at 1/speedup");
+
+        // sub-model still misses by 30%: the rate steps down
+        let r = ctl.rate_of(3);
+        ctl.observe(3, 13.0, 20.0, r);
+        ctl.recalibrate(&pool, &[], 0.25, 0.02, &[]).unwrap();
+        assert!(ctl.rate_of(3) < 0.5, "rate must shrink on a miss");
+
+        // evidence from a rate the controller did not assign (the
+        // policy fell back to the full model) must never drive a step
+        let r = ctl.rate_of(3);
+        ctl.observe(3, 20.0, 20.0, 1.0);
+        ctl.recalibrate(&pool, &[], 0.25, 0.02, &[]).unwrap();
+        assert_eq!(ctl.rate_of(3), r, "full-model fallback drove a step");
+
+        // load lifts: the smoothed profile returns to target, demote
+        for _ in 0..12 {
+            let r = ctl.rate_of(3);
+            ctl.observe(3, 9.0, 10.0, r);
+        }
+        let det = ctl.recalibrate(&pool, &[], 0.25, 0.02, &[]).unwrap();
+        assert!(det.stragglers.is_empty(), "recovered client stays flagged");
+        assert_eq!(ctl.rate_of(3), 1.0);
+    }
+
+    #[test]
+    fn deadband_holds_assignments_against_jitter() {
+        let mut ctl = RateController::new(3, ewma_cfg());
+        let pool = [0usize, 1, 2];
+        for _ in 0..4 {
+            ctl.observe(0, 10.0, 10.0, 1.0);
+            ctl.observe(1, 10.0, 10.0, 1.0);
+            ctl.observe(2, 20.0, 20.0, 1.0);
+        }
+        ctl.recalibrate(&pool, &[], 0.34, 0.02, &[]).unwrap();
+        let r = ctl.rate_of(2);
+        assert!(r < 1.0);
+        // arrivals jittering inside the band never move the assignment
+        for miss in [0.92, 0.95, 0.985, 1.0] {
+            ctl.observe(2, miss * 10.0, 20.0, r);
+            ctl.recalibrate(&pool, &[], 0.34, 0.02, &[]).unwrap();
+            assert_eq!(ctl.rate_of(2), r, "assignment flapped at miss {miss}");
+        }
+    }
+
+    #[test]
+    fn nan_measurements_never_poison_the_loop() {
+        let mut ctl = RateController::new(2, ewma_cfg());
+        ctl.observe(0, 10.0, 10.0, 1.0);
+        ctl.observe(1, 30.0, 30.0, 1.0);
+        ctl.observe(1, f64::NAN, f64::NAN, 1.0);
+        ctl.observe(0, f64::INFINITY, -5.0, 1.0);
+        let det = ctl.recalibrate(&[0, 1], &[], 0.5, 0.02, &[]).unwrap();
+        assert_eq!(det.stragglers, vec![1]);
+        assert!(det.t_target == 10.0);
+        assert!(det.rates.iter().all(|r| r.is_finite()));
+    }
+
+    #[test]
+    fn state_round_trips() {
+        let mut ctl = RateController::new(3, ewma_cfg());
+        ctl.observe(0, 5.0, 5.0, 1.0);
+        ctl.observe(2, 12.0, 12.0, 1.0);
+        ctl.recalibrate(&[0, 2], &[], 0.5, 0.02, &[]).unwrap();
+        let st = ctl.export_state().unwrap();
+        let mut other = RateController::new(3, ewma_cfg());
+        other.import_state(st.clone());
+        assert_eq!(other.export_state().unwrap(), st);
+        assert_eq!(other.rate_of(2), ctl.rate_of(2));
+        assert_eq!(other.t_target(), ctl.t_target());
+    }
+}

@@ -25,10 +25,12 @@ pub fn equal_size_clusters(speedups: &[f64], cluster_rates: &[f64]) -> Vec<f64> 
     }
     let k = cluster_rates.len().max(1);
     let mut order: Vec<usize> = (0..n).collect();
-    // slowest (largest speedup needed) first
-    order.sort_by(|&a, &b| speedups[b].partial_cmp(&speedups[a]).unwrap());
+    // slowest (largest speedup needed) first; total_cmp so a NaN
+    // speedup cannot panic the sort (NaN ranks slowest and lands in the
+    // smallest-rate cluster like any other still-unmeasured client)
+    order.sort_by(|&a, &b| speedups[b].total_cmp(&speedups[a]));
     let mut rates_sorted = cluster_rates.to_vec();
-    rates_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap()); // smallest first
+    rates_sorted.sort_by(|a, b| a.total_cmp(b)); // smallest first
     let mut out = vec![1.0; n];
     for (rank, &idx) in order.iter().enumerate() {
         let cluster = (rank * k) / n;

@@ -60,11 +60,26 @@ pub fn detect_stragglers(
             rates: vec![],
         };
     }
-    let max_stragglers = ((n as f64 * straggler_fraction).floor() as usize).min(n - 1);
+    // Non-finite latencies (a NaN or ±inf propagated from a broken
+    // measurement) are excluded up front: a NaN used to panic the
+    // `partial_cmp().unwrap()` sort mid-round, and an all-inf profile
+    // would make every speedup meaningless. For all-finite inputs this
+    // path is unchanged bit-for-bit.
+    let mut order: Vec<usize> = (0..n).filter(|&c| latencies[c].is_finite()).collect();
+    if order.is_empty() {
+        return Detection {
+            stragglers: vec![],
+            t_target: 0.0,
+            speedups: vec![],
+            rates: vec![],
+        };
+    }
+    let max_stragglers =
+        ((order.len() as f64 * straggler_fraction).floor() as usize).min(order.len() - 1);
 
-    // order clients slowest-first
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| latencies[b].partial_cmp(&latencies[a]).unwrap());
+    // order clients slowest-first (total_cmp: total order even if a
+    // non-finite value ever slipped through)
+    order.sort_by(|&a, &b| latencies[b].total_cmp(&latencies[a]));
 
     // T_target = slowest latency outside the straggler candidate set
     let t_target = latencies[order[max_stragglers.min(order.len() - 1)]];
@@ -74,7 +89,7 @@ pub fn detect_stragglers(
     let mut rates = Vec::new();
     for &c in order.iter().take(max_stragglers) {
         let speedup = latencies[c] / t_target;
-        if speedup <= 1.0 + margin {
+        if !speedup.is_finite() || speedup <= 1.0 + margin {
             continue; // not meaningfully slower than the target
         }
         stragglers.push(c);
@@ -151,5 +166,26 @@ mod tests {
     fn empty_input() {
         let d = detect_stragglers(&[], 0.2, 0.02, DEFAULT_RATES);
         assert!(d.stragglers.is_empty());
+    }
+
+    #[test]
+    fn nan_and_inf_latencies_never_panic_detection() {
+        // a broken measurement must not panic the server mid-round, and
+        // must not steal the straggler slot from a real straggler
+        let lat = [62.0, 66.0, 72.0, 80.0, 100.0, f64::NAN];
+        let d = detect_stragglers(&lat, 0.2, 0.02, DEFAULT_RATES);
+        assert_eq!(d.stragglers, vec![4]);
+        assert_eq!(d.t_target, 80.0);
+        assert!(d.rates.iter().all(|r| r.is_finite()));
+
+        let lat = [62.0, f64::INFINITY, 72.0, 80.0, 100.0, f64::NEG_INFINITY];
+        let d = detect_stragglers(&lat, 0.25, 0.02, DEFAULT_RATES);
+        assert_eq!(d.stragglers, vec![4]);
+        assert!(d.speedups.iter().all(|s| s.is_finite()));
+
+        // the all-garbage fleet degrades to "no stragglers", not a panic
+        let d = detect_stragglers(&[f64::NAN, f64::INFINITY, f64::NAN], 0.5, 0.02, DEFAULT_RATES);
+        assert!(d.stragglers.is_empty());
+        assert_eq!(d.t_target, 0.0);
     }
 }

@@ -6,12 +6,14 @@
 //! timing off a virtual clock — wall-clock results in the paper are a
 //! function of device heterogeneity, which the model preserves.
 
+pub mod adapt;
 pub mod cluster;
 pub mod detect;
 pub mod device;
 pub mod fluctuate;
 pub mod perfmodel;
 
+pub use adapt::{AdaptConfig, AdaptMode, CtrlState, RateController};
 pub use cluster::cluster_stragglers;
 pub use detect::{detect_stragglers, snap_rate, Detection};
 pub use device::{mobile_fleet, synthetic_fleet, DeviceProfile};

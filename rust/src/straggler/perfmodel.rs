@@ -184,7 +184,7 @@ mod tests {
         let max_idx = lat
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         assert_eq!(max_idx, 4, "Pixel 3 must be the straggler: {lat:?}");

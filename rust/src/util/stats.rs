@@ -32,7 +32,9 @@ pub fn weighted_mean(xs: &[f64], weights: &[f64]) -> f64 {
     xs.iter().zip(weights).map(|(x, w)| x * w).sum::<f64>() / wsum
 }
 
-/// Sample standard deviation (n-1 denominator; 0 for n < 2).
+/// Sample standard deviation (n-1 denominator; 0 for n < 2 — the guard
+/// also keeps the `xs.len() - 1` below from underflowing on an empty
+/// slice).
 pub fn std_dev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
@@ -55,7 +57,7 @@ pub fn median(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b)); // NaN sorts last instead of panicking
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -70,7 +72,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b)); // NaN sorts last instead of panicking
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -198,6 +200,25 @@ mod tests {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((mean(&xs) - 5.0).abs() < 1e-12);
         assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn std_dev_degenerate_lengths_are_zero() {
+        // len 0 and 1 must return 0.0, never underflow `len - 1`
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(std_dev(&[42.0]), 0.0);
+        let mut s = Summary::new();
+        assert_eq!(s.std_dev(), 0.0);
+        s.add(42.0);
+        assert_eq!(s.std_dev(), 0.0);
+    }
+
+    #[test]
+    fn order_statistics_survive_nan() {
+        // a NaN input sorts last (total_cmp) instead of panicking
+        assert_eq!(median(&[3.0, f64::NAN, 1.0]), 3.0);
+        assert_eq!(percentile(&[10.0, f64::NAN, 20.0], 0.0), 10.0);
+        assert_eq!(percentile(&[10.0, f64::NAN, 20.0], 50.0), 20.0);
     }
 
     #[test]

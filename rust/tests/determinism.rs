@@ -29,6 +29,7 @@ use fluid::dropout::PolicyKind;
 use fluid::engine::{RoundEngine, ScenarioConfig, SimExecutor};
 use fluid::fl::SamplerKind;
 use fluid::model::sim_spec;
+use fluid::straggler::AdaptMode;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -207,6 +208,96 @@ fn fleet_50k_scenario_completes_and_replays() {
     assert_bit_identical(&a, &b, "50k replay");
 }
 
+/// Full-observation drift fleet for the closed-loop acceptance test:
+/// every client participates every round, so the controller (and the
+/// paper baseline) see fresh measurements each recalibration.
+fn drift_cfg(adapt: AdaptMode) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 200, 200);
+    cfg.rounds = 60;
+    cfg.samples_per_client = 4;
+    cfg.local_steps = 1;
+    cfg.eval_every = cfg.rounds;
+    cfg.straggler_fraction = 0.25;
+    cfg.scenario = ScenarioConfig::parse("drift").unwrap();
+    cfg.adapt = adapt;
+    cfg.seed = 4242;
+    cfg
+}
+
+/// Mean `straggler_time / t_target` over the last quarter of rounds —
+/// how far the slowest assigned straggler lands from the target once
+/// the final drift phase's adaptation has had its say.
+fn last_quarter_miss(res: &ExperimentResult) -> f64 {
+    let from = res.records.len() - res.records.len() / 4;
+    let tail: Vec<f64> = res.records[from..]
+        .iter()
+        .filter(|r| r.t_target > 0.0 && r.straggler_time > 0.0)
+        .map(|r| r.straggler_time / r.t_target)
+        .collect();
+    assert!(!tail.is_empty(), "no straggler measurements in the last quarter");
+    tail.iter().sum::<f64>() / tail.len() as f64
+}
+
+/// The closed-loop acceptance criterion: under the drift scenario the
+/// EWMA controller keeps the slowest straggler's arrival within 10% of
+/// `T_target` over the last quarter of rounds, while the paper's static
+/// menu (floored at r = 0.5, no feedback) misses by more than 25% — and
+/// the adaptive run replays bit-identically.
+#[test]
+fn ewma_controller_tracks_t_target_under_drift() {
+    let ewma = coordinator::run_sim(&drift_cfg(AdaptMode::Ewma)).unwrap();
+    let paper = coordinator::run_sim(&drift_cfg(AdaptMode::Paper)).unwrap();
+
+    let e = last_quarter_miss(&ewma);
+    let p = last_quarter_miss(&paper);
+    assert!(
+        (e - 1.0).abs() <= 0.10,
+        "ewma last-quarter straggler arrival is {e:.3}x T_target (want within 10%; paper {p:.3})"
+    );
+    assert!(
+        p > 1.25,
+        "static menu unexpectedly tracked T_target: {p:.3}x (ewma {e:.3}x)"
+    );
+
+    let replay = coordinator::run_sim(&drift_cfg(AdaptMode::Ewma)).unwrap();
+    assert_bit_identical(&ewma, &replay, "ewma drift replay");
+}
+
+/// The controller's math is part of the thread-invariance contract.
+#[test]
+fn ewma_mode_is_thread_count_invariant() {
+    let mk = |threads: usize| {
+        let mut cfg = fleet_cfg(61);
+        cfg.adapt = AdaptMode::Ewma;
+        cfg.scenario = ScenarioConfig::parse("drift").unwrap();
+        cfg.threads = threads;
+        coordinator::run_sim(&cfg).unwrap()
+    };
+    let a = mk(1);
+    let b = mk(8);
+    assert_bit_identical(&a, &b, "ewma threads");
+}
+
+/// The straggler-membership bitmap drives the Exclude participant
+/// filter at fleet scale; the path must replay bit-identically and
+/// never aggregate an excluded straggler.
+#[test]
+fn exclude_policy_fleet_replays_bit_identically() {
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Exclude, 2000, 64);
+    cfg.rounds = 6;
+    cfg.samples_per_client = 6;
+    cfg.local_steps = 1;
+    cfg.eval_every = 3;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    cfg.seed = 23;
+    let a = coordinator::run_sim(&cfg).unwrap();
+    let b = coordinator::run_sim(&cfg).unwrap();
+    assert_bit_identical(&a, &b, "exclude fleet replay");
+    for r in &a.records {
+        assert!(r.aggregated <= r.cohort.len(), "round {}", r.round);
+    }
+}
+
 /// Unique scratch directory for snapshot files; removed (best-effort) by
 /// the tests that use it.
 fn ckpt_dir(tag: &str) -> std::path::PathBuf {
@@ -339,6 +430,56 @@ fn resume_equivalence_is_thread_count_invariant() {
         let fresh = coordinator::run_sim(&fcfg).unwrap();
         assert_bit_identical(&control, &fresh, &format!("fresh threads={threads}"));
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Controller state lives in the snapshot `CTRL` section: an ewma run
+/// resumed from any boundary is bit-identical to the uninterrupted run,
+/// and a snapshot stripped of its controller state (what a
+/// pre-controller writer would have produced) still resumes cleanly.
+#[test]
+fn ewma_resume_is_bit_identical_and_old_snapshots_still_resume() {
+    let dir = ckpt_dir("adapt");
+    let mut cfg = fleet_cfg(99);
+    cfg.adapt = AdaptMode::Ewma;
+    cfg.scenario = ScenarioConfig::parse("drift").unwrap();
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep = cfg.rounds;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let control = coordinator::run_sim(&cfg).unwrap();
+
+    let mut rcfg = cfg.clone();
+    rcfg.checkpoint_every = 0;
+    rcfg.checkpoint_dir = None;
+    for k in [2usize, 4] {
+        let mut r = rcfg.clone();
+        r.resume_from = Some(snap_path(&dir, k));
+        let resumed = coordinator::run_sim(&r).unwrap();
+        assert_bit_identical(&control, &resumed, &format!("ewma resume@{k}"));
+    }
+
+    // a paper-mode snapshot must not resume an ewma config (the adapt
+    // knobs are part of the semantic fingerprint)
+    let mut paper = cfg.clone();
+    paper.adapt = AdaptMode::Paper;
+    paper.checkpoint_every = 0;
+    paper.checkpoint_dir = None;
+    paper.resume_from = Some(snap_path(&dir, 2));
+    let err = format!("{:#}", coordinator::run_sim(&paper).unwrap_err());
+    assert!(err.contains("different experiment configuration"), "{err}");
+
+    // simulate an old-writer snapshot: strip the CTRL payload and
+    // re-encode — the resumed run starts its controller fresh but must
+    // still complete every remaining round
+    let mut snap = fluid::snapshot::SnapshotStore::load_file(&snap_path(&dir, 4)).unwrap();
+    assert!(snap.ctrl.is_some(), "ewma snapshot must carry controller state");
+    snap.ctrl = None;
+    let old = dir.join("old-writer.fluidsnap");
+    std::fs::write(&old, snap.encode()).unwrap();
+    let mut ocfg = rcfg.clone();
+    ocfg.resume_from = Some(old);
+    let resumed_old = coordinator::run_sim(&ocfg).unwrap();
+    assert_eq!(resumed_old.records.len(), cfg.rounds);
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -12,7 +12,7 @@ use fluid::fl::{
 };
 use fluid::jsonlite::{self, Json};
 use fluid::model::ModelSpec;
-use fluid::straggler::{detect_stragglers, snap_rate};
+use fluid::straggler::{detect_stragglers, snap_rate, AdaptConfig, AdaptMode, RateController};
 use fluid::tensor::Tensor;
 use fluid::util::proptest::{check, shrink_vec, Config, Gen};
 
@@ -674,6 +674,144 @@ fn prop_detection_never_flags_fastest_client() {
     );
 }
 
+fn ewma_ctl(n: usize, gain: f64, deadband: f64, rate_min: f64) -> RateController {
+    RateController::new(
+        n,
+        AdaptConfig {
+            mode: AdaptMode::Ewma,
+            gain,
+            deadband,
+            rate_min,
+            ..AdaptConfig::default()
+        },
+    )
+}
+
+/// Controller law: a slower measured arrival never yields a *larger*
+/// keep-rate (monotone response, across the deadband edges and both
+/// clamps).
+#[test]
+fn prop_controller_monotone_response() {
+    check(
+        Config { cases: 300, ..Default::default() },
+        |g: &mut Gen| {
+            let rate = g.f32_in(0.1, 1.0) as f64;
+            let a = g.f32_in(0.05, 3.0) as f64;
+            let b = g.f32_in(0.05, 3.0) as f64;
+            let gain = g.f32_in(0.1, 1.5) as f64;
+            let db = g.f32_in(0.0, 0.2) as f64;
+            (rate, a.min(b), a.max(b), gain, db)
+        },
+        |_| vec![],
+        |&(rate, fast, slow, gain, db)| {
+            let ctl = ewma_ctl(1, gain, db, 0.1);
+            let (ra, rb) = (ctl.step_rate(rate, fast), ctl.step_rate(rate, slow));
+            if rb > ra + 1e-12 {
+                return Err(format!(
+                    "slower miss raised the rate: step({rate}, {fast}) = {ra} < \
+                     step({rate}, {slow}) = {rb}"
+                ));
+            }
+            for r in [ra, rb] {
+                if !(0.1..=1.0).contains(&r) {
+                    return Err(format!("stepped rate {r} escaped [rate_min, 1]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Deadband stability: a converged straggler fed any sequence of
+/// within-band arrivals never changes its assignment (the smoothed miss
+/// is a convex combination of within-band values, so jitter inside the
+/// band can never trip a step).
+#[test]
+fn prop_controller_deadband_stability() {
+    check(
+        Config { cases: 120, ..Default::default() },
+        |g: &mut Gen| {
+            let s = g.f32_in(1.3, 2.8) as f64;
+            let jitters: Vec<f64> = (0..g.usize_in(1, 12))
+                .map(|_| g.f32_in(0.0, 1.0) as f64)
+                .collect();
+            (s, jitters)
+        },
+        |_| vec![],
+        |(s, jitters)| {
+            let t = 10.0;
+            let mut ctl = ewma_ctl(2, 0.5, 0.05, 0.1);
+            ctl.observe(0, t, t, 1.0);
+            ctl.observe(1, s * t, s * t, 1.0);
+            ctl.recalibrate(&[0, 1], &[], 0.5, 0.02, &[])
+                .ok_or("no detection after promotion")?;
+            let r = ctl.rate_of(1);
+            if r >= 1.0 {
+                return Err(format!("speedup {s} was not promoted"));
+            }
+            // arrivals anywhere inside the band [1-2db, 1]·T_target
+            for j in jitters {
+                let miss = (0.90 + j * 0.10) * ctl.t_target();
+                ctl.observe(1, miss, s * t, r);
+                ctl.observe(0, t, t, 1.0);
+                ctl.recalibrate(&[0, 1], &[], 0.5, 0.02, &[])
+                    .ok_or("detection vanished")?;
+                if ctl.rate_of(1) != r {
+                    return Err(format!(
+                        "within-band arrival {miss:.3} moved the rate {r} -> {}",
+                        ctl.rate_of(1)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Convergence: a constant-load straggler under the A.3-linear latency
+/// model settles within one menu step of the paper's 1/speedup, with
+/// its arrival inside the controller's band around T_target.
+#[test]
+fn prop_controller_converges_to_inverse_speedup() {
+    check(
+        Config { cases: 100, ..Default::default() },
+        |g: &mut Gen| {
+            let s = g.f32_in(1.3, 3.0) as f64;
+            let gain = g.f32_in(0.3, 0.8) as f64;
+            (s, gain)
+        },
+        |_| vec![],
+        |&(s, gain)| {
+            let t = 10.0;
+            let alpha = 0.05;
+            let mut ctl = ewma_ctl(2, gain, 0.05, 0.1);
+            for _ in 0..60 {
+                ctl.observe(0, t, t, 1.0);
+                let r = ctl.rate_of(1);
+                let lat = s * t * (alpha + (1.0 - alpha) * r);
+                ctl.observe(1, lat, s * t, r);
+                ctl.recalibrate(&[0, 1], &[], 0.5, 0.02, &[])
+                    .ok_or("no detection")?;
+            }
+            let r = ctl.rate_of(1);
+            // within one DEFAULT_RATES menu step (max gap 0.15) of 1/s
+            if (r - 1.0 / s).abs() > 0.15 {
+                return Err(format!(
+                    "speedup {s}: converged rate {r:.3} vs 1/s = {:.3}",
+                    1.0 / s
+                ));
+            }
+            let miss = s * (alpha + (1.0 - alpha) * r);
+            if !(0.85..=1.05).contains(&miss) {
+                return Err(format!(
+                    "speedup {s}: steady-state arrival {miss:.3}x T_target"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 fn gen_arrivals(g: &mut Gen) -> Vec<ClientArrival> {
     let n = g.usize_in(1, 30);
     (0..n)
@@ -938,6 +1076,18 @@ fn prop_snapshot_codec_round_trips() {
             } else {
                 None
             };
+            // the CTRL section: arbitrary f64 bit patterns (NaN/inf
+            // included) must round-trip exactly
+            let ctrl = if g.bool() {
+                Some(fluid::straggler::CtrlState {
+                    profile: (0..n).map(|_| f64::from_bits(g.rng.next_u64())).collect(),
+                    measured: (0..n).map(|_| f64::from_bits(g.rng.next_u64())).collect(),
+                    rates: (0..n).map(|_| g.rng.next_f64()).collect(),
+                    t_target: g.rng.next_f64() * 10.0,
+                })
+            } else {
+                None
+            };
             let stale: Vec<StaleEntry> = (0..g.usize_in(0, 2))
                 .map(|_| StaleEntry {
                     params: (0..g.usize_in(1, 3)).map(|_| random_tensor(g)).collect(),
@@ -960,6 +1110,7 @@ fn prop_snapshot_codec_round_trips() {
                 policy,
                 availability: (0..n).map(|_| g.bool()).collect(),
                 detection,
+                ctrl,
                 last_latencies: (0..n).map(|_| g.rng.next_f64() * 10.0).collect(),
                 last_full_latencies: (0..n).map(|_| g.rng.next_f64() * 10.0).collect(),
                 free_at: (0..n).map(|_| g.rng.next_f64() * 10.0).collect(),
