@@ -4,8 +4,10 @@
 //!
 //! * **Pure sections** — run in every build configuration, including
 //!   `--no-default-features` on CI: masked FedAvg aggregation, invariant
-//!   mask extraction, fleet cohort sampling at 50k clients, scenario
-//!   churn, a full sim-backend fleet round, and snapshot encode/decode.
+//!   mask extraction, fleet cohort sampling at 50k AND 1M clients (with
+//!   an in-bench sub-linear scaling gate pinning the 1M/50k cost ratio),
+//!   scenario churn at both scales, a full sim-backend fleet round, and
+//!   snapshot encode/decode.
 //! * **PJRT sections** — `train_step` / `eval_step` / `delta_step` per
 //!   model, tensor→literal conversion, and one full coordinator round;
 //!   these need AOT artifacts and skip cleanly when the session cannot
@@ -237,23 +239,55 @@ fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
     println!("{}", m.report());
     all.push(m);
 
-    // fleet cohort sampling at population scale
+    // fleet cohort sampling at population scale: the same draw at 50k
+    // and at 1M clients. The incremental sampler is O(k log n) per draw,
+    // so the honest 1M/50k ratio is ~1.3x plus cache effects; an
+    // accidental O(fleet) regression is >=20x. The scaling gate below
+    // asserts the ratio stays under SCALE_GATE.
+    const SCALE_GATE: f64 = 10.0;
     let mut fleet = Fleet::synthetic_pool(50_000, 7);
-    for d in fleet.clients.iter_mut() {
-        d.data_len = 4 + d.id % 13;
-    }
-    for (name, kind) in [
-        ("fleet/sample-uniform-50k", SamplerKind::Uniform),
-        ("fleet/sample-weighted-50k", SamplerKind::WeightedByData),
-        ("fleet/sample-available-50k", SamplerKind::AvailabilityAware),
+    fleet.set_data_lens((0..50_000).map(|c| 4 + c % 13));
+    let mut fleet_1m = Fleet::synthetic_pool(1_000_000, 7);
+    fleet_1m.set_data_lens((0..1_000_000).map(|c| 4 + c % 13));
+    let mut scale_pairs: Vec<(String, f64, f64)> = Vec::new();
+    for (name_50k, name_1m, kind) in [
+        ("fleet/sample-uniform-50k", "fleet/sample-uniform-1m", SamplerKind::Uniform),
+        (
+            "fleet/sample-weighted-50k",
+            "fleet/sample-weighted-1m",
+            SamplerKind::WeightedByData,
+        ),
+        (
+            "fleet/sample-available-50k",
+            "fleet/sample-available-1m",
+            SamplerKind::AvailabilityAware,
+        ),
     ] {
         let mut srng = Pcg32::new(11, 3);
-        let m = b.run(name, || {
-            let s = sample_cohort(&fleet, kind, 256, &mut srng);
+        let m50 = b.run(name_50k, || {
+            let s = sample_cohort(&mut fleet, kind, 256, &mut srng);
             std::hint::black_box(s.len());
         });
-        println!("{}", m.report());
-        all.push(m);
+        println!("{}", m50.report());
+        let m1m = b.run(name_1m, || {
+            let s = sample_cohort(&mut fleet_1m, kind, 256, &mut srng);
+            std::hint::black_box(s.len());
+        });
+        println!("{}", m1m.report());
+        scale_pairs.push((name_1m.to_string(), m50.min_s, m1m.min_s));
+        all.push(m50);
+        all.push(m1m);
+    }
+    // sub-linear scaling gate (ISSUE 6 acceptance): per-round sampling
+    // cost must not grow with the fleet
+    for (name, s50, s1m) in &scale_pairs {
+        let ratio = s1m / s50.max(1e-12);
+        println!("scale {name}: 1m/50k min ratio {ratio:.2} (gate {SCALE_GATE:.0}x)");
+        assert!(
+            ratio < SCALE_GATE,
+            "{name}: 20x more clients cost {ratio:.1}x (gate {SCALE_GATE:.0}x) — \
+             per-round sampling is no longer O(cohort log fleet)"
+        );
     }
 
     // adaptive rate-controller recalibration over a 2k-client pool
@@ -298,6 +332,30 @@ fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
         sim.apply_churn(round, &mut fleet);
         round += 1;
         std::hint::black_box(fleet.num_available());
+    });
+    println!("{}", m.report());
+    all.push(m);
+
+    // churn as sparse deltas at 1M clients: cost is O(expected flips ·
+    // log n) — storm rates flip ~10% of the population, but there is no
+    // O(fleet) sweep, no per-client PRNG draw, and no reallocation
+    let mut round_1m = 0usize;
+    let m = b.run("fleet/churn-delta-1m", || {
+        sim.apply_churn(round_1m, &mut fleet_1m);
+        round_1m += 1;
+        std::hint::black_box(fleet_1m.num_available());
+    });
+    println!("{}", m.report());
+    all.push(m);
+
+    // the full per-round fleet overhead a 1M experiment pays outside of
+    // training: availability-aware cohort draw + churn delta
+    let mut orng = Pcg32::new(13, 5);
+    let m = b.run("fleet/round-overhead-1m", || {
+        let s = sample_cohort(&mut fleet_1m, SamplerKind::AvailabilityAware, 256, &mut orng);
+        std::hint::black_box(s.len());
+        sim.apply_churn(round_1m, &mut fleet_1m);
+        round_1m += 1;
     });
     println!("{}", m.report());
     all.push(m);

@@ -143,6 +143,68 @@ impl FlData {
     }
 }
 
+/// Per-shard example counts — materialized or streaming.
+///
+/// `Table` is the historical `Vec<usize>` (exact sizes, O(shards)
+/// memory). `Lognormal` is the million-client variant: shard `i`'s size
+/// is [`partition::lognormal_shard_size_at`]`(i, ...)`, computed on
+/// demand in O(1), so a source's descriptor memory is a few words no
+/// matter the fleet. Both are deterministic in their seeds.
+#[derive(Clone, Debug)]
+pub enum ShardSizes {
+    Table(Vec<usize>),
+    Lognormal {
+        count: usize,
+        base: usize,
+        sigma: f32,
+        seed: u64,
+    },
+}
+
+impl From<Vec<usize>> for ShardSizes {
+    fn from(sizes: Vec<usize>) -> Self {
+        ShardSizes::Table(sizes)
+    }
+}
+
+impl ShardSizes {
+    /// Streaming lognormal sizes for `count` shards around `base`.
+    pub fn lognormal(count: usize, base: usize, sigma: f32, seed: u64) -> Self {
+        ShardSizes::Lognormal { count, base, sigma, seed }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ShardSizes::Table(t) => t.len(),
+            ShardSizes::Lognormal { count, .. } => *count,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Examples in `shard` — O(1) in both representations.
+    pub fn get(&self, shard: usize) -> usize {
+        match self {
+            ShardSizes::Table(t) => t[shard],
+            ShardSizes::Lognormal { count, base, sigma, seed } => {
+                assert!(shard < *count, "shard {shard} out of range for {count}");
+                partition::lognormal_shard_size_at(shard, *base, *sigma, *seed)
+            }
+        }
+    }
+
+    /// Sum of all shard sizes — O(shards) time, O(1) extra memory (the
+    /// construction-time pass sources run once; never per round).
+    pub fn total(&self) -> usize {
+        match self {
+            ShardSizes::Table(t) => t.iter().sum(),
+            ShardSizes::Lognormal { .. } => (0..self.len()).map(|i| self.get(i)).sum(),
+        }
+    }
+}
+
 /// Lazy shard hydration — the fleet-scale data seam.
 ///
 /// A source knows how many shards exist and how big each is *without*
@@ -176,12 +238,14 @@ pub fn is_known_model(model: &str) -> bool {
 }
 
 /// Lazy source matching a model name, with heterogeneous per-shard sizes
-/// (the fleet counterpart of [`FlData::for_model`]).
+/// (the fleet counterpart of [`FlData::for_model`]). Accepts a
+/// materialized `Vec<usize>` or a streaming [`ShardSizes`].
 pub fn shard_source_for_model(
     model: &str,
-    sizes: Vec<usize>,
+    sizes: impl Into<ShardSizes>,
     seed: u64,
 ) -> Box<dyn ShardSource> {
+    let sizes = sizes.into();
     match model {
         "femnist_cnn" => Box::new(synthetic::FemnistShards::new(sizes, seed)),
         "cifar_vgg9" | "cifar_resnet18" => {

@@ -89,6 +89,25 @@ pub fn lognormal_shard_sizes(k: usize, base: usize, sigma: f32, seed: u64) -> Ve
         .collect()
 }
 
+/// The *streaming* counterpart of [`lognormal_shard_sizes`]: shard
+/// `index`'s size in O(1) with no table — one PRNG stream per index, so
+/// any shard is randomly addressable. Same distribution and clamps as
+/// the materialized table, but a different draw sequence (the sequential
+/// stream above is not per-index addressable); the engine only engages
+/// this above its streaming fleet threshold, where no pinned trajectory
+/// exists.
+pub fn lognormal_shard_size_at(
+    index: usize,
+    base: usize,
+    sigma: f32,
+    seed: u64,
+) -> usize {
+    let mut rng = Pcg32::new(seed ^ 0x51AD5, 0x512E5 ^ ((index as u64) << 1 | 1));
+    let cap = base.saturating_mul(6).max(4);
+    let s = (base as f64 * rng.lognormal(sigma) as f64).round() as usize;
+    s.clamp(2, cap)
+}
+
 /// Every sample assigned exactly once — shared invariant of all
 /// partitioners (property-tested in rust/tests/properties.rs).
 pub fn is_exact_cover(parts: &[Vec<usize>], n: usize) -> bool {
@@ -184,6 +203,21 @@ mod tests {
         assert!(max > min, "no size heterogeneity");
         let mean = a.iter().sum::<usize>() as f64 / a.len() as f64;
         assert!((10.0..=40.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn streaming_shard_sizes_are_deterministic_and_spread() {
+        let a: Vec<usize> =
+            (0..1000).map(|i| lognormal_shard_size_at(i, 20, 0.45, 7)).collect();
+        let b: Vec<usize> =
+            (0..1000).map(|i| lognormal_shard_size_at(i, 20, 0.45, 7)).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&s| (2..=120).contains(&s)));
+        assert!(a.iter().max() > a.iter().min(), "no size heterogeneity");
+        let mean = a.iter().sum::<usize>() as f64 / a.len() as f64;
+        assert!((10.0..=40.0).contains(&mean), "mean {mean}");
+        // random access: any index is addressable without its prefix
+        assert_eq!(a[777], lognormal_shard_size_at(777, 20, 0.45, 7));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! paper's: predict the character following an 80-char (here `seq_len`)
 //! window.
 
-use super::{partition, FlData, ShardSource, Split, XStore};
+use super::{partition, FlData, ShardSizes, ShardSource, Split, XStore};
 use crate::util::prng::Pcg32;
 
 /// Fixed 80-symbol vocabulary (matches model.py VOCAB). Unknown chars map
@@ -191,7 +191,7 @@ pub fn load(num_clients: usize, samples_per_client: usize, seq_len: usize, seed:
 /// scene, as LEAF's by-role split also allows.
 pub struct ShakespeareShards {
     tokens: Vec<i32>,
-    sizes: Vec<usize>,
+    sizes: ShardSizes,
     seq_len: usize,
     /// number of distinct chunks the corpus supports
     ring: usize,
@@ -200,14 +200,15 @@ pub struct ShakespeareShards {
 }
 
 impl ShakespeareShards {
-    pub fn new(sizes: Vec<usize>, seq_len: usize, seed: u64) -> Self {
+    pub fn new(sizes: impl Into<ShardSizes>, seq_len: usize, seed: u64) -> Self {
+        let sizes = sizes.into();
         let tokens: Vec<i32> = CORPUS.chars().map(encode).collect();
         let n = tokens.len();
         assert!(n > seq_len + 2, "corpus too small");
         // each chunk should hold at least a couple of window starts
         let ring = (n / (seq_len / 2).max(8)).max(1).min(sizes.len().max(1));
 
-        let total: usize = sizes.iter().sum();
+        let total: usize = sizes.total();
         let test_n = (total / 5).clamp(32, 500);
         let mut xs = Vec::with_capacity(test_n * seq_len);
         let mut ys = Vec::with_capacity(test_n);
@@ -239,7 +240,7 @@ impl ShardSource for ShakespeareShards {
     }
 
     fn shard_len(&self, shard: usize) -> usize {
-        self.sizes[shard]
+        self.sizes.get(shard)
     }
 
     fn hydrate(&self, shard: usize) -> Split {
@@ -248,7 +249,7 @@ impl ShardSource for ShakespeareShards {
         let (lo, hi_excl) = partition::chunk_bounds(n, self.ring, shard % self.ring);
         let lo = lo.min(n - seq_len - 2);
         let hi = hi_excl.saturating_sub(1).max(lo);
-        let samples = self.sizes[shard];
+        let samples = self.sizes.get(shard);
         let mut rng = Pcg32::new(self.seed ^ 0x5AE5_F1, shard as u64 + 1);
         let mut xs = Vec::with_capacity(samples * seq_len);
         let mut ys = Vec::with_capacity(samples);

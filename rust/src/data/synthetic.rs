@@ -7,7 +7,7 @@
 //! exhibiting LEAF-style non-IID structure (writers own class subsets and
 //! styles).
 
-use super::{FlData, ShardSource, Split, XStore};
+use super::{FlData, ShardSizes, ShardSource, Split, XStore};
 use crate::util::prng::Pcg32;
 
 pub const FEMNIST_CLASSES: usize = 62;
@@ -130,15 +130,16 @@ pub fn femnist(num_clients: usize, samples_per_client: usize, seed: u64) -> FlDa
 /// the sampled cohort's pixels are ever resident.
 pub struct FemnistShards {
     templates: Vec<Vec<(f32, f32, f32, f32)>>,
-    sizes: Vec<usize>,
+    sizes: ShardSizes,
     seed: u64,
     test: Split,
 }
 
 impl FemnistShards {
-    pub fn new(sizes: Vec<usize>, seed: u64) -> Self {
+    pub fn new(sizes: impl Into<ShardSizes>, seed: u64) -> Self {
+        let sizes = sizes.into();
         let templates: Vec<_> = (0..FEMNIST_CLASSES).map(femnist_template).collect();
-        let total: usize = sizes.iter().sum();
+        let total: usize = sizes.total();
         // smaller cap than the eager path: the fleet test pool is a smoke
         // gauge, not an accuracy benchmark
         let test_n = (total / 5).clamp(FEMNIST_CLASSES, 800);
@@ -158,11 +159,11 @@ impl ShardSource for FemnistShards {
     }
 
     fn shard_len(&self, shard: usize) -> usize {
-        self.sizes[shard]
+        self.sizes.get(shard)
     }
 
     fn hydrate(&self, shard: usize) -> Split {
-        femnist_client_split(&self.templates, shard, self.sizes[shard], self.seed)
+        femnist_client_split(&self.templates, shard, self.sizes.get(shard), self.seed)
     }
 
     fn test(&self) -> &Split {
@@ -266,15 +267,16 @@ pub fn cifar10(num_clients: usize, samples_per_client: usize, seed: u64, iid: bo
 /// renders from its own PRNG stream with a 6-of-10 class subset
 /// (Dirichlet-like label skew without a shared pool).
 pub struct CifarShards {
-    sizes: Vec<usize>,
+    sizes: ShardSizes,
     seed: u64,
     test: Split,
 }
 
 impl CifarShards {
-    pub fn new(sizes: Vec<usize>, seed: u64) -> Self {
+    pub fn new(sizes: impl Into<ShardSizes>, seed: u64) -> Self {
+        let sizes = sizes.into();
         let feature_len = CIFAR_SIDE * CIFAR_SIDE * 3;
-        let total: usize = sizes.iter().sum();
+        let total: usize = sizes.total();
         let test_n = (total / 5).clamp(CIFAR_CLASSES, 500);
         let mut rng = Pcg32::new(seed ^ 0xC1FA_7E57, 1);
         let mut xs = Vec::with_capacity(test_n * feature_len);
@@ -302,12 +304,12 @@ impl ShardSource for CifarShards {
     }
 
     fn shard_len(&self, shard: usize) -> usize {
-        self.sizes[shard]
+        self.sizes.get(shard)
     }
 
     fn hydrate(&self, shard: usize) -> Split {
         let feature_len = CIFAR_SIDE * CIFAR_SIDE * 3;
-        let samples = self.sizes[shard];
+        let samples = self.sizes.get(shard);
         let mut rng = Pcg32::new(self.seed ^ 0xC1FA_0D, shard as u64 + 1);
         let classes = rng.sample_indices(CIFAR_CLASSES, 6);
         let mut xs = Vec::with_capacity(samples * feature_len);

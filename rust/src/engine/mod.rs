@@ -48,12 +48,12 @@ pub mod scenario;
 pub mod sched;
 
 pub use executor::{ClientExecutor, LocalExecutor, SimExecutor, TrainJob};
-pub use plan::{MaskTable, RoundOutcome, RoundPlan};
+pub use plan::{MaskTable, RateTable, RoundOutcome, RoundPlan};
 pub use scenario::{ScenarioConfig, ScenarioSim};
 pub use sched::{ClientArrival, EventScheduler, Resolution};
 
 use crate::coordinator::{ExperimentConfig, ExperimentResult, RoundRecord};
-use crate::data::{partition, FlData, ShardSource, Split};
+use crate::data::{partition, FlData, ShardSizes, ShardSource, Split};
 use crate::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
 use crate::fl::{
     self, fedavg_into, sample_cohort, staleness_discount, AggScratch, Client, ClientUpdate,
@@ -73,6 +73,14 @@ use std::time::Instant;
 /// the information saturates quickly and each voter costs one
 /// `delta_step` execution (documented server-side optimization).
 const MAX_DELTA_VOTERS: usize = 16;
+
+/// Fleets at or above this size get a *streaming* shard-size table
+/// (`ShardSizes::Lognormal`): sizes are computed per index on demand, so
+/// descriptor memory stays sub-linear in the fleet. Smaller fleets keep
+/// the historical materialized table — its sequential PRNG stream is not
+/// per-index addressable, and every existing ≤100k trajectory is pinned
+/// to it bit-for-bit.
+const STREAMING_FLEET_MIN: usize = 200_000;
 
 /// Marker error for `ExperimentConfig::crash_after` fault injection:
 /// the run stopped *by request* after a checkpointed round boundary.
@@ -156,8 +164,6 @@ pub struct RoundEngine<'a, E: ClientExecutor> {
     /// population size: `fleet_size` in fleet mode, `cfg.clients` classic
     n: usize,
     fleet: Fleet,
-    /// client -> device index (what the scheduler consumes)
-    device_of: Vec<usize>,
     store: ClientStore,
     test_split: Split,
     scheduler: EventScheduler,
@@ -198,12 +204,18 @@ pub struct RoundEngine<'a, E: ClientExecutor> {
 impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
     pub fn new(cfg: &'a ExperimentConfig, executor: E) -> crate::Result<Self> {
         let source = if let Some(n) = cfg.fleet_size {
-            let sizes = partition::lognormal_shard_sizes(
-                n,
-                cfg.samples_per_client.max(2),
-                0.45,
-                cfg.seed,
-            );
+            let base = cfg.samples_per_client.max(2);
+            let sizes = if n >= STREAMING_FLEET_MIN {
+                // million-client regime: O(1) memory, sizes computed per
+                // index on demand (different draw stream than the
+                // materialized table, but only engaged above the
+                // threshold where no pinned trajectory exists)
+                ShardSizes::lognormal(n, base, 0.45, cfg.seed)
+            } else {
+                ShardSizes::from(partition::lognormal_shard_sizes(
+                    n, base, 0.45, cfg.seed,
+                ))
+            };
             Some(crate::data::shard_source_for_model(&cfg.model, sizes, cfg.seed))
         } else {
             None
@@ -244,9 +256,11 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     src.num_shards()
                 );
                 let mut fleet = Fleet::synthetic_pool(n, cfg.seed ^ 0xF1EE7);
-                for d in fleet.clients.iter_mut() {
-                    d.data_len = src.shard_len(d.shard);
-                }
+                // client c's shard is shard_of(c); one O(n) bulk install
+                // into the weighted sampler's Fenwick tree
+                let lens: Vec<usize> =
+                    (0..n).map(|c| src.shard_len(fleet.shard_of(c))).collect();
+                fleet.set_data_lens(lens.into_iter());
                 let test = src.test().clone();
                 (fleet, ClientStore::Lazy(src), test)
             }
@@ -264,7 +278,6 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 (fleet, ClientStore::Eager(clients), test)
             }
         };
-        let device_of = fleet.device_map();
 
         let perf = PerfModel::new(&cfg.model, spec.size_bytes());
         // the natural straggler is the slowest base device — excluded from
@@ -298,7 +311,6 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             spec,
             n,
             fleet,
-            device_of,
             store,
             test_split,
             scheduler: EventScheduler::new(perf, fluct),
@@ -356,7 +368,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 vtime: self.vtime,
                 cohort: plan.selected.clone(),
                 straggler_ids: plan.straggler_ids.clone(),
-                straggler_rates: plan.straggler_ids.iter().map(|&c| plan.rates[c]).collect(),
+                straggler_rates: plan.straggler_ids.iter().map(|&c| plan.rate(c)).collect(),
                 t_target: o.t_target,
                 straggler_time: o.straggler_time,
                 train_loss: o.train_loss,
@@ -433,7 +445,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             train_wall: self.train_wall,
             params: self.params.clone(),
             policy,
-            availability: self.fleet.clients.iter().map(|d| d.available).collect(),
+            availability: self.fleet.availability(),
             detection: self.detection.clone(),
             ctrl: self.controller.export_state(),
             last_latencies: self.last_latencies.clone(),
@@ -580,9 +592,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 self.cfg.policy
             ),
         }
-        for (d, &avail) in self.fleet.clients.iter_mut().zip(&snap.availability) {
-            d.available = avail;
-        }
+        self.fleet.set_availability(&snap.availability);
         if let Some(ctrl) = snap.ctrl {
             self.controller.import_state(ctrl);
         }
@@ -622,6 +632,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let round_seed = cfg.seed ^ ((round as u64) << 32);
 
         // --- scenario tick (fleet dynamics) ---------------------------------
+        // churn applies as sparse deltas: O(expected flips), not O(fleet)
         if let Some(sim) = &self.scenario {
             sim.apply_churn(round, &mut self.fleet);
         }
@@ -630,7 +641,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let selected: Vec<usize> = if self.fleet_mode() {
             let k = cfg.sample_k.clamp(1, n);
             let mut rng = Pcg32::new(cfg.seed ^ 0x5A_3917, round as u64);
-            let mut s = sample_cohort(&self.fleet, cfg.sampler, k, &mut rng);
+            let mut s = sample_cohort(&mut self.fleet, cfg.sampler, k, &mut rng);
             s.sort_unstable();
             s
         } else if cfg.sample_fraction >= 1.0 {
@@ -685,13 +696,10 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let calib_start = Instant::now();
         let ewma = cfg.adapt == AdaptMode::Ewma;
         let mut masks = MaskTable::new(self.full_mask.clone());
-        let mut rates: Vec<f64> = vec![1.0; n];
+        // rates and straggler membership are sparse: O(stragglers) per
+        // round where the former dense tables were O(fleet)
+        let mut rates = RateTable::new();
         let mut straggler_ids: Vec<usize> = Vec::new();
-        // straggler membership bitmap: the participant and delta-voter
-        // filters below used to `contains`-scan `straggler_ids` per
-        // client — O(participants x stragglers), the same quadratic scan
-        // the `is_participant` bitmap killed on the arrival path
-        let mut is_straggler = vec![false; n];
         if let Some(det) = &self.detection {
             for (k, &c) in det.stragglers.iter().enumerate() {
                 let desired = cfg.fixed_rate.unwrap_or(det.rates[k]);
@@ -715,14 +723,15 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     // a sub-model (invariant dropout returns the full mask
                     // until its first calibration observation)
                     if !m.is_full() {
-                        rates[c] = r;
+                        rates.set(c, r);
                         masks.set(c, m);
                     }
                 }
                 straggler_ids.push(c);
-                is_straggler[c] = true;
             }
         }
+        let mut straggler_sorted = straggler_ids.clone();
+        straggler_sorted.sort_unstable();
         let calib_secs = calib_start.elapsed().as_secs_f64();
 
         // --- participation --------------------------------------------------
@@ -740,7 +749,10 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let participants: Vec<usize> = active
             .iter()
             .copied()
-            .filter(|&c| cfg.policy != PolicyKind::Exclude || !is_straggler[c])
+            .filter(|&c| {
+                cfg.policy != PolicyKind::Exclude
+                    || straggler_sorted.binary_search(&c).is_err()
+            })
             .collect();
 
         RoundPlan {
@@ -751,7 +763,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             active,
             participants,
             straggler_ids,
-            is_straggler,
+            straggler_sorted,
             rates,
             masks,
             t_target: self.detection.as_ref().map(|d| d.t_target),
@@ -765,7 +777,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
     /// updates), observe deltas, evaluate.
     fn run_round(&mut self, plan: &RoundPlan) -> crate::Result<RoundOutcome> {
         let cfg = self.cfg;
-        let n = self.n;
+
         let mut calib_secs = plan.calib_secs;
 
         // --- local training (through the executor seam) ---------------------
@@ -793,8 +805,8 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 .map(|&c| {
                     Client::new(
                         c,
-                        self.device_of[c],
-                        src.hydrate(self.fleet.clients[c].shard),
+                        self.fleet.device_of(c),
+                        src.hydrate(self.fleet.shard_of(c)),
                     )
                 })
                 .collect(),
@@ -824,55 +836,55 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         }
 
         // --- virtual-time arrival events ------------------------------------
-        // dense comm-fraction table reconstructed from the sparse mask
-        // overrides (non-stragglers transmit the full model: fraction 1.0)
-        let mut comm_fractions = vec![1.0f64; n];
-        for (c, m) in plan.masks.overrides() {
-            comm_fractions[*c] = m.comm_fraction();
-        }
+        // cohort-aligned rate / comm-fraction slices: `active[i]` trains
+        // under rates[i] and transmits comm_fractions[i] of the model —
+        // O(cohort), no per-fleet table anywhere (non-stragglers transmit
+        // the full model: fraction 1.0)
+        let active_rates: Vec<f64> =
+            plan.active.iter().map(|&c| plan.rate(c)).collect();
+        let comm_fractions: Vec<f64> = plan
+            .active
+            .iter()
+            .map(|&c| plan.masks.override_for(c).map_or(1.0, |m| m.comm_fraction()))
+            .collect();
         let arrivals = self.scheduler.arrivals(
-            &self.fleet.devices,
-            &self.device_of,
+            &self.fleet,
             &plan.active,
-            &plan.rates,
+            &active_rates,
             &comm_fractions,
             plan.t_frac,
             plan.round_seed,
         );
-        for a in &arrivals {
+        for (a, &rate) in arrivals.iter().zip(&active_rates) {
             self.last_latencies[a.client] = a.at;
             self.last_full_latencies[a.client] = a.full_latency;
             // close the loop: the controller smooths these into its
             // per-client profiles (no-op in paper mode). The applied
             // rate rides along so evidence from a full-model fallback
             // round can never drive a feedback step.
-            self.controller
-                .observe(a.client, a.at, a.full_latency, plan.rates[a.client]);
+            self.controller.observe(a.client, a.at, a.full_latency, rate);
         }
 
-        // membership bitmaps: the scale path runs thousands of clients,
-        // so per-arrival Vec::contains scans would be quadratic
-        let mut is_participant = vec![false; n];
-        for &c in &plan.participants {
-            is_participant[c] = true;
-        }
+        // membership structures are cohort-sized and sorted — binary
+        // searches instead of the former O(fleet) bitmaps per round
+        // (`plan.participants` is already sorted: it filters the sorted
+        // `selected` list)
+        debug_assert!(plan.participants.windows(2).all(|w| w[0] < w[1]));
 
         // the barrier only waits on clients that actually train; with the
         // Exclude policy the round advances as soon as participants finish
         let participant_arrivals: Vec<ClientArrival> = arrivals
             .iter()
-            .filter(|a| is_participant[a.client])
+            .filter(|a| plan.participants.binary_search(&a.client).is_ok())
             .copied()
             .collect();
         let res = EventScheduler::resolve(cfg.sync_mode, &participant_arrivals, plan.t_target);
-        let mut is_on_time = vec![false; n];
-        for &c in &res.on_time {
-            is_on_time[c] = true;
-        }
-        let mut late_at: Vec<Option<f64>> = vec![None; n];
-        for a in &res.late {
-            late_at[a.client] = Some(a.at);
-        }
+        // `res.on_time` is in arrival order (Buffered mode), not id order
+        let mut on_time_sorted = res.on_time.clone();
+        on_time_sorted.sort_unstable();
+        let mut late_sorted: Vec<(usize, f64)> =
+            res.late.iter().map(|a| (a.client, a.at)).collect();
+        late_sorted.sort_unstable_by_key(|&(c, _)| c);
 
         let round_start = self.vtime;
         let mut round_time = res.round_time;
@@ -911,7 +923,9 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             let t0 = Instant::now();
             let voters: Vec<&[Tensor]> = updates
                 .iter()
-                .filter(|(c, _)| is_on_time[*c] && !plan.is_straggler[*c])
+                .filter(|(c, _)| {
+                    on_time_sorted.binary_search(c).is_ok() && !plan.is_straggler(*c)
+                })
                 .take(MAX_DELTA_VOTERS)
                 .map(|(_, u)| u.params.as_slice())
                 .collect();
@@ -932,7 +946,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let mut weights: Vec<f64> = Vec::new();
         let mut dropped_updates = 0usize;
         for (c, u) in updates {
-            if is_on_time[c] {
+            if on_time_sorted.binary_search(&c).is_ok() {
                 losses.push(u.mean_loss);
                 accs.push(u.mean_acc);
                 weights.push(u.weight);
@@ -950,7 +964,10 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     // late under buffering: the update keeps computing
                     // and the client stays busy until it lands
                     SyncMode::Buffered { .. } => {
-                        let at = late_at[c].expect("late participant has an arrival");
+                        let at = late_sorted
+                            .binary_search_by_key(&c, |&(lc, _)| lc)
+                            .map(|i| late_sorted[i].1)
+                            .expect("late participant has an arrival");
                         if !at.is_finite() {
                             // broken timing measurement: a NaN/inf busy
                             // clock would strand the client (and its

@@ -48,8 +48,53 @@ impl MaskTable {
         &self.overrides
     }
 
+    /// The override for `client`, if one is installed — `None` means the
+    /// client trains (and transmits) the full model.
+    pub fn override_for(&self, client: usize) -> Option<&MaskSet> {
+        match self.overrides.binary_search_by_key(&client, |(c, _)| *c) {
+            Ok(i) => Some(&self.overrides[i].1),
+            Err(_) => None,
+        }
+    }
+
     pub fn full_mask(&self) -> &MaskSet {
         &self.full
+    }
+}
+
+/// Per-client keep-rates, stored sparsely: only stragglers with an
+/// actual sub-model carry a rate below 1.0, so the table costs
+/// O(stragglers) instead of the former `vec![1.0; fleet]` per round.
+#[derive(Clone, Debug, Default)]
+pub struct RateTable {
+    /// (client, keep-rate) overrides, sorted by client id
+    entries: Vec<(usize, f64)>,
+}
+
+impl RateTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a keep-rate for `client` (replaces a prior entry).
+    pub fn set(&mut self, client: usize, rate: f64) {
+        match self.entries.binary_search_by_key(&client, |(c, _)| *c) {
+            Ok(i) => self.entries[i].1 = rate,
+            Err(i) => self.entries.insert(i, (client, rate)),
+        }
+    }
+
+    /// The keep-rate `client` trains under (1.0 = full model).
+    pub fn get(&self, client: usize) -> f64 {
+        match self.entries.binary_search_by_key(&client, |(c, _)| *c) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => 1.0,
+        }
+    }
+
+    /// All sub-model assignments (clients with keep-rate below 1.0).
+    pub fn entries(&self) -> &[(usize, f64)] {
+        &self.entries
     }
 }
 
@@ -72,13 +117,13 @@ pub struct RoundPlan {
     pub participants: Vec<usize>,
     /// current straggler set, slowest first
     pub straggler_ids: Vec<usize>,
-    /// straggler membership bitmap over the population — the round hot
-    /// path (participant + delta-voter filters) reads this instead of
-    /// `contains`-scanning `straggler_ids` per client, which was
-    /// O(participants x stragglers) at fleet scale
-    pub is_straggler: Vec<bool>,
-    /// per-client keep-rate table (1.0 = full model)
-    pub rates: Vec<f64>,
+    /// the same set sorted by client id — the round hot path (participant
+    /// + delta-voter filters) membership-tests against this instead of
+    /// `contains`-scanning `straggler_ids` per client; O(stragglers)
+    /// memory where the former bitmap was O(fleet) per round
+    pub straggler_sorted: Vec<usize>,
+    /// per-client keep-rate table, sparse over 1.0 (full model)
+    pub rates: RateTable,
     /// per-client sub-model masks (sparse over the full mask)
     pub masks: MaskTable,
     /// detection's target time, when a detection exists
@@ -87,6 +132,18 @@ pub struct RoundPlan {
     pub is_calib_round: bool,
     /// wall-clock seconds spent on server-side planning
     pub calib_secs: f64,
+}
+
+impl RoundPlan {
+    /// Is `client` in this round's straggler set? O(log stragglers).
+    pub fn is_straggler(&self, client: usize) -> bool {
+        self.straggler_sorted.binary_search(&client).is_ok()
+    }
+
+    /// The keep-rate `client` trains under (1.0 = full model).
+    pub fn rate(&self, client: usize) -> f64 {
+        self.rates.get(client)
+    }
 }
 
 /// Everything one executed round produced, before it is folded into the
@@ -143,5 +200,21 @@ mod tests {
         t.set(3, MaskSet::full(&spec));
         assert_eq!(t.overrides().len(), 2);
         assert!(t.get(3).is_full());
+        assert!(t.override_for(1).is_some());
+        assert!(t.override_for(2).is_none());
+    }
+
+    #[test]
+    fn rate_table_is_sparse_over_full_rate() {
+        let mut r = RateTable::new();
+        assert_eq!(r.get(9), 1.0);
+        assert!(r.entries().is_empty());
+        r.set(5, 0.75);
+        r.set(2, 0.5);
+        r.set(5, 0.6); // replace keeps the table deduplicated
+        assert_eq!(r.entries(), &[(2, 0.5), (5, 0.6)]);
+        assert_eq!(r.get(5), 0.6);
+        assert_eq!(r.get(2), 0.5);
+        assert_eq!(r.get(0), 1.0);
     }
 }

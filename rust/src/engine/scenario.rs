@@ -15,8 +15,9 @@
 //!   per-client event storage, viable at 100k clients.
 
 use crate::fl::Fleet;
-use crate::straggler::{FluctuationSchedule, ProceduralLoad, ProceduralPhase};
-use crate::util::prng::Pcg32;
+use crate::straggler::{
+    FluctuationSchedule, ProceduralChurn, ProceduralLoad, ProceduralPhase,
+};
 
 /// Declarative description of one scenario.
 #[derive(Clone, Debug, PartialEq)]
@@ -154,24 +155,26 @@ impl ScenarioSim {
         })
     }
 
-    /// Apply one round of join/leave churn. Deterministic in
-    /// `(scenario seed, round)`: replaying a seed replays the exact
-    /// population trajectory.
-    pub fn apply_churn(&self, round: usize, fleet: &mut Fleet) {
-        if self.cfg.churn_out <= 0.0 && self.cfg.rejoin <= 0.0 {
-            return;
+    /// The churn side of the scenario, as the fleet consumes it.
+    pub fn churn(&self) -> ProceduralChurn {
+        ProceduralChurn {
+            seed: self.seed ^ 0xC4_0212,
+            churn_out: self.cfg.churn_out,
+            rejoin: self.cfg.rejoin,
         }
-        let mut rng = Pcg32::new(self.seed ^ 0xC4_0212, round as u64);
-        for d in fleet.clients.iter_mut() {
-            let x = rng.next_f64();
-            if d.available {
-                if x < self.cfg.churn_out {
-                    d.available = false;
-                }
-            } else if x < self.cfg.rejoin {
-                d.available = true;
-            }
+    }
+
+    /// Apply one round of join/leave churn as sparse deltas — O(expected
+    /// flips), not O(fleet). Deterministic in `(scenario seed, round)`:
+    /// replaying a seed replays the exact population trajectory. Returns
+    /// `(churned out, rejoined)`.
+    pub fn apply_churn(&self, round: usize, fleet: &mut Fleet) -> (usize, usize) {
+        let churn = self.churn();
+        if !churn.is_active() {
+            return (0, 0);
         }
+        let mut rng = churn.round_rng(round);
+        fleet.apply_churn(churn.churn_out, churn.rejoin, &mut rng)
     }
 }
 
@@ -222,16 +225,15 @@ mod tests {
         let mut a = Fleet::synthetic_pool(2000, 1);
         let mut b = Fleet::synthetic_pool(2000, 1);
         for round in 0..10 {
-            sim.apply_churn(round, &mut a);
-            sim.apply_churn(round, &mut b);
+            let (out_a, in_a) = sim.apply_churn(round, &mut a);
+            let (out_b, in_b) = sim.apply_churn(round, &mut b);
+            assert_eq!((out_a, in_a), (out_b, in_b), "round {round}");
             assert_eq!(a.num_available(), b.num_available(), "round {round}");
         }
         // 5% churn-out over 10 rounds must have churned someone out
         assert!(a.num_available() < 2000);
         assert!(a.num_available() > 1000, "churn collapsed the fleet");
-        for (da, db) in a.clients.iter().zip(&b.clients) {
-            assert_eq!(da.available, db.available);
-        }
+        assert_eq!(a.availability(), b.availability());
     }
 
     #[test]

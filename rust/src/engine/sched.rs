@@ -10,7 +10,8 @@
 //! barrier policy is unit- and property-testable without a runtime.
 
 use super::SyncMode;
-use crate::straggler::{DeviceProfile, FluctuationSchedule, PerfModel};
+use crate::fl::Fleet;
+use crate::straggler::{FluctuationSchedule, PerfModel};
 
 /// One client's arrival event for a round.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -47,27 +48,30 @@ impl EventScheduler {
     }
 
     /// Arrival events for every active client this round, in `active`
-    /// order. `device_of[c]` maps a client to its fleet device; `rates`
-    /// and `comm_fractions` are full per-client tables.
-    #[allow(clippy::too_many_arguments)]
+    /// order. `rates[i]` and `comm_fractions[i]` belong to `active[i]` —
+    /// cohort-aligned slices, so the call costs O(cohort) with no
+    /// per-fleet table anywhere (the client's device resolves through
+    /// [`Fleet::profile`]).
     pub fn arrivals(
         &self,
-        fleet: &[DeviceProfile],
-        device_of: &[usize],
+        fleet: &Fleet,
         active: &[usize],
         rates: &[f64],
         comm_fractions: &[f64],
         t_frac: f64,
         round_seed: u64,
     ) -> Vec<ClientArrival> {
+        debug_assert_eq!(active.len(), rates.len());
+        debug_assert_eq!(active.len(), comm_fractions.len());
         active
             .iter()
-            .map(|&c| {
+            .zip(rates.iter().zip(comm_fractions))
+            .map(|(&c, (&rate, &comm))| {
                 let t = self.perf.client_timing(
-                    &fleet[device_of[c]],
+                    fleet.profile(c),
                     c,
-                    rates[c],
-                    comm_fractions[c],
+                    rate,
+                    comm,
                     t_frac,
                     &self.fluct,
                     round_seed,

@@ -1,30 +1,38 @@
-//! Fleet-scale client population: lightweight descriptors + per-round
-//! cohort sampling.
+//! Fleet-scale client population: incremental per-round cohort sampling.
 //!
 //! The classic engine path materializes every client (device profile +
 //! data shard) up front — fine for 5 phones, impossible for the ROADMAP
-//! regime of 10k–100k simulated clients. A [`Fleet`] instead holds one
-//! small [`ClientDescriptor`] per client (device index, shard id, shard
-//! size, availability) and a shared pool of [`DeviceProfile`]s; shard
-//! *data* only exists for the sampled cohort each round (lazy hydration,
-//! see [`crate::data::ShardSource`]).
+//! regime of 1M+ simulated clients. A [`Fleet`] holds a shared pool of
+//! [`DeviceProfile`]s plus the population's sampling state in the
+//! incremental structures of [`crate::fl::sampling`]: shard sizes in a
+//! Fenwick tree, availability in a rank/select bitset. Per-client facts
+//! that used to live in an O(fleet) descriptor vector are *derived*
+//! (device = id mod pool, shard = id), so descriptor memory is the
+//! Fenwick + bitmap alone; shard *data* only exists for the sampled
+//! cohort each round (lazy hydration, see [`crate::data::ShardSource`]).
 //!
-//! [`SamplerKind`] + [`sample_cohort`] are the per-round client sampler:
+//! [`SamplerKind`] + [`Fleet::sample`] are the per-round client sampler:
 //! uniform (the A.6 protocol at population scale), weighted-by-data
 //! (clients with more examples participate proportionally more, the
 //! production-FL default), and availability-aware (never selects a
 //! churned-out client — pair with `engine::scenario` churn scripts).
+//! Every draw is bit-identical to the historical O(fleet) sampler for
+//! the same seed (see the cross-implementation equivalence tests below
+//! and DESIGN.md §10).
 
+use crate::fl::sampling::CohortSampler;
 use crate::straggler::{mobile_fleet, synthetic_fleet, DeviceProfile};
 use crate::util::prng::Pcg32;
 
 /// Upper bound on distinct synthetic device profiles held by a fleet —
 /// beyond this, clients cycle through the pool (profiles are ~100 bytes
-/// each; the pool keeps a 100k fleet's device table at a few hundred KB
+/// each; the pool keeps a 1M fleet's device table at a few hundred KB
 /// while preserving the lognormal speed spread).
 pub const DEVICE_POOL_CAP: usize = 2048;
 
-/// One client, described without materializing its data.
+/// One client, materialized on demand for diagnostics — the population
+/// itself never stores these (device and shard are derived from the id,
+/// size and availability live in the sampler structures).
 #[derive(Clone, Debug)]
 pub struct ClientDescriptor {
     pub id: usize,
@@ -38,26 +46,21 @@ pub struct ClientDescriptor {
     pub available: bool,
 }
 
-/// A client population: shared device pool + per-client descriptors.
+/// A client population: shared device pool + incremental sampling state.
 #[derive(Clone, Debug)]
 pub struct Fleet {
     pub devices: Vec<DeviceProfile>,
-    pub clients: Vec<ClientDescriptor>,
+    n: usize,
+    sampler: CohortSampler,
 }
 
 impl Fleet {
     fn from_devices(devices: Vec<DeviceProfile>, n: usize) -> Fleet {
-        let d = devices.len().max(1);
-        let clients = (0..n)
-            .map(|i| ClientDescriptor {
-                id: i,
-                device: i % d,
-                shard: i,
-                data_len: 0,
-                available: true,
-            })
-            .collect();
-        Fleet { devices, clients }
+        Fleet {
+            devices,
+            n,
+            sampler: CohortSampler::new(n),
+        }
     }
 
     /// The classic (pre-fleet) device assignment, preserved bit-for-bit:
@@ -72,7 +75,7 @@ impl Fleet {
     }
 
     /// Fleet-scale population: a capped pool of synthetic profiles cycled
-    /// across `n` descriptors.
+    /// across `n` clients.
     pub fn synthetic_pool(n: usize, device_seed: u64) -> Fleet {
         Fleet::from_devices(
             synthetic_fleet(n.min(DEVICE_POOL_CAP).max(1), device_seed),
@@ -81,50 +84,141 @@ impl Fleet {
     }
 
     pub fn len(&self) -> usize {
-        self.clients.len()
+        self.n
     }
 
     pub fn is_empty(&self) -> bool {
-        self.clients.is_empty()
+        self.n == 0
     }
 
+    /// Device index of client `c` — the historical descriptor assignment
+    /// (`id mod pool size`), now computed instead of stored.
     pub fn device_of(&self, c: usize) -> usize {
-        self.clients[c].device
+        debug_assert!(c < self.n);
+        c % self.devices.len().max(1)
+    }
+
+    /// Shard id of client `c` (== id for the built-in partitions; the
+    /// indirection is part of the descriptor contract).
+    pub fn shard_of(&self, c: usize) -> usize {
+        debug_assert!(c < self.n);
+        c
     }
 
     pub fn profile(&self, c: usize) -> &DeviceProfile {
-        &self.devices[self.clients[c].device]
+        &self.devices[self.device_of(c)]
+    }
+
+    /// Examples in client `c`'s shard (Fenwick point query).
+    pub fn data_len(&self, c: usize) -> usize {
+        self.sampler.weight(c) as usize
+    }
+
+    /// Update one client's shard size — O(log n) delta into the weighted
+    /// sampler, no rebuild.
+    pub fn set_data_len(&mut self, c: usize, len: usize) {
+        self.sampler.set_weight(c, len as u64);
+    }
+
+    /// Bulk-install every client's shard size (engine build) — O(n) once.
+    pub fn set_data_lens(&mut self, lens: impl Iterator<Item = usize>) {
+        self.sampler.assign_weights(lens.map(|l| l as u64));
+    }
+
+    /// Materialize one client's descriptor (diagnostics / tests).
+    pub fn descriptor(&self, c: usize) -> ClientDescriptor {
+        ClientDescriptor {
+            id: c,
+            device: self.device_of(c),
+            shard: self.shard_of(c),
+            data_len: self.data_len(c),
+            available: self.is_available(c),
+        }
     }
 
     pub fn is_available(&self, c: usize) -> bool {
-        self.clients[c].available
+        self.sampler.is_available(c)
     }
 
     pub fn set_available(&mut self, c: usize, v: bool) {
-        self.clients[c].available = v;
+        self.sampler.set_available(c, v);
     }
 
+    /// O(1) — maintained incrementally by the availability bitset.
     pub fn num_available(&self) -> usize {
-        self.clients.iter().filter(|d| d.available).count()
+        self.sampler.num_available()
     }
 
-    /// Client -> device index table (what `EventScheduler::arrivals`
-    /// consumes).
+    /// Materialize the availability map (snapshot capture) — O(n).
+    pub fn availability(&self) -> Vec<bool> {
+        self.sampler.availability()
+    }
+
+    /// Bulk reinstall availability (snapshot restore) — O(n).
+    pub fn set_availability(&mut self, bits: &[bool]) {
+        self.sampler.assign_availability(bits);
+    }
+
+    /// Client -> device index table (diagnostics; the scheduler resolves
+    /// devices through [`Fleet::device_of`] instead).
     pub fn device_map(&self) -> Vec<usize> {
-        self.clients.iter().map(|d| d.device).collect()
+        (0..self.n).map(|c| self.device_of(c)).collect()
     }
 
-    /// The slowest client on `model` — same tie-breaking as the historic
-    /// `max_by` scan (last maximum wins; total_cmp agrees with the old
-    /// partial order on the finite base times and cannot panic).
+    /// The slowest client on `model` — same answer as the historic O(n)
+    /// `max_by` scan over every client (last maximum wins; `total_cmp`
+    /// agrees with the old partial order on the finite base times and
+    /// cannot panic), computed in O(pool) over the device table: clients
+    /// sharing a device tie exactly, so the last maximal client is the
+    /// last client of the last-winning maximal device.
     pub fn slowest(&self, model: &str) -> usize {
-        (0..self.clients.len())
-            .max_by(|&a, &b| {
-                self.profile(a)
-                    .base_time(model)
-                    .total_cmp(&self.profile(b).base_time(model))
-            })
-            .unwrap_or(0)
+        if self.n == 0 {
+            return 0;
+        }
+        let d = self.devices.len().max(1);
+        let reachable = d.min(self.n);
+        let mut best_time = f64::NEG_INFINITY;
+        let mut best_client = 0usize;
+        for dev in 0..reachable {
+            let bt = self.devices[dev].base_time(model);
+            // largest client id < n congruent to dev (mod d)
+            let last = dev + d * ((self.n - 1 - dev) / d);
+            match bt.total_cmp(&best_time) {
+                std::cmp::Ordering::Greater => {
+                    best_time = bt;
+                    best_client = last;
+                }
+                std::cmp::Ordering::Equal => best_client = best_client.max(last),
+                std::cmp::Ordering::Less => {}
+            }
+        }
+        best_client
+    }
+
+    /// Sample a round's cohort of (at most) `k` distinct clients through
+    /// the incremental sampler — O(k log n) per draw, bit-identical to
+    /// the historical O(fleet) algorithms. The result is in sampler-draw
+    /// order; callers sort if they need id order.
+    pub fn sample(&mut self, kind: SamplerKind, k: usize, rng: &mut Pcg32) -> Vec<usize> {
+        if self.n == 0 || k == 0 {
+            return Vec::new();
+        }
+        match kind {
+            SamplerKind::Uniform => self.sampler.sample_uniform(k, rng),
+            SamplerKind::WeightedByData => self.sampler.sample_weighted(k, rng),
+            SamplerKind::AvailabilityAware => self.sampler.sample_available(k, rng),
+        }
+    }
+
+    /// Apply one round of Bernoulli join/leave churn as sparse deltas
+    /// (see [`CohortSampler::apply_churn`]). Returns `(left, rejoined)`.
+    pub fn apply_churn(
+        &mut self,
+        churn_out: f64,
+        rejoin: f64,
+        rng: &mut Pcg32,
+    ) -> (usize, usize) {
+        self.sampler.apply_churn(churn_out, rejoin, rng)
     }
 }
 
@@ -162,74 +256,16 @@ impl SamplerKind {
     }
 }
 
-/// Sample a round's cohort of (at most) `k` distinct clients. The result
-/// is in sampler-draw order; callers sort if they need id order.
+/// Sample a round's cohort — thin wrapper over [`Fleet::sample`], kept
+/// as the historical free-function entry point (now `&mut` because the
+/// sampler's scratch is reused across draws).
 pub fn sample_cohort(
-    fleet: &Fleet,
+    fleet: &mut Fleet,
     kind: SamplerKind,
     k: usize,
     rng: &mut Pcg32,
 ) -> Vec<usize> {
-    let n = fleet.len();
-    if n == 0 || k == 0 {
-        return Vec::new();
-    }
-    match kind {
-        SamplerKind::Uniform => rng.sample_indices(n, k.min(n)),
-        SamplerKind::WeightedByData => sample_weighted(fleet, k.min(n), rng),
-        SamplerKind::AvailabilityAware => {
-            let avail: Vec<usize> = fleet
-                .clients
-                .iter()
-                .filter(|d| d.available)
-                .map(|d| d.id)
-                .collect();
-            if avail.is_empty() {
-                return Vec::new();
-            }
-            let k = k.min(avail.len());
-            rng.sample_indices(avail.len(), k)
-                .into_iter()
-                .map(|i| avail[i])
-                .collect()
-        }
-    }
-}
-
-/// Weighted-without-replacement via cumulative-weight inversion with
-/// rejection of duplicates — exact marginals at the first draw, a close
-/// approximation for k << n (the fleet regime). Zero-weight populations
-/// fall back to uniform.
-fn sample_weighted(fleet: &Fleet, k: usize, rng: &mut Pcg32) -> Vec<usize> {
-    let n = fleet.len();
-    if k >= n {
-        return (0..n).collect();
-    }
-    let mut cum = Vec::with_capacity(n);
-    let mut total = 0.0f64;
-    for d in &fleet.clients {
-        total += d.data_len as f64;
-        cum.push(total);
-    }
-    if total <= 0.0 {
-        return rng.sample_indices(n, k);
-    }
-    // inversion can only ever land on positive-weight clients (zero-weight
-    // plateaus are unreachable), so clamp k to that population or the
-    // rejection loop below would never terminate
-    let positive = fleet.clients.iter().filter(|d| d.data_len > 0).count();
-    let k = k.min(positive);
-    let mut picked = Vec::with_capacity(k);
-    let mut seen = vec![false; n];
-    while picked.len() < k {
-        let x = rng.next_f64() * total;
-        let i = cum.partition_point(|&c| c <= x).min(n - 1);
-        if !seen[i] {
-            seen[i] = true;
-            picked.push(i);
-        }
-    }
-    picked
+    fleet.sample(kind, k, rng)
 }
 
 #[cfg(test)]
@@ -238,10 +274,139 @@ mod tests {
 
     fn small_fleet(n: usize) -> Fleet {
         let mut f = Fleet::synthetic_pool(n, 7);
-        for (i, d) in f.clients.iter_mut().enumerate() {
-            d.data_len = 10 + (i % 5) * 10;
-        }
+        f.set_data_lens((0..n).map(|i| 10 + (i % 5) * 10));
         f
+    }
+
+    /// The historical O(fleet) sampler, verbatim — the reference the
+    /// incremental implementation must reproduce bit for bit.
+    mod reference {
+        use super::*;
+
+        pub fn sample_cohort_ref(
+            fleet: &Fleet,
+            kind: SamplerKind,
+            k: usize,
+            rng: &mut Pcg32,
+        ) -> Vec<usize> {
+            let n = fleet.len();
+            if n == 0 || k == 0 {
+                return Vec::new();
+            }
+            match kind {
+                SamplerKind::Uniform => rng.sample_indices(n, k.min(n)),
+                SamplerKind::WeightedByData => sample_weighted_ref(fleet, k.min(n), rng),
+                SamplerKind::AvailabilityAware => {
+                    let avail: Vec<usize> =
+                        (0..n).filter(|&c| fleet.is_available(c)).collect();
+                    if avail.is_empty() {
+                        return Vec::new();
+                    }
+                    let k = k.min(avail.len());
+                    rng.sample_indices(avail.len(), k)
+                        .into_iter()
+                        .map(|i| avail[i])
+                        .collect()
+                }
+            }
+        }
+
+        fn sample_weighted_ref(fleet: &Fleet, k: usize, rng: &mut Pcg32) -> Vec<usize> {
+            let n = fleet.len();
+            if k >= n {
+                return (0..n).collect();
+            }
+            let mut cum = Vec::with_capacity(n);
+            let mut total = 0.0f64;
+            for c in 0..n {
+                total += fleet.data_len(c) as f64;
+                cum.push(total);
+            }
+            if total <= 0.0 {
+                return rng.sample_indices(n, k);
+            }
+            let positive = (0..n).filter(|&c| fleet.data_len(c) > 0).count();
+            let k = k.min(positive);
+            let mut picked = Vec::with_capacity(k);
+            let mut seen = vec![false; n];
+            while picked.len() < k {
+                let x = rng.next_f64() * total;
+                let i = cum.partition_point(|&c| c <= x).min(n - 1);
+                if !seen[i] {
+                    seen[i] = true;
+                    picked.push(i);
+                }
+            }
+            picked
+        }
+    }
+
+    #[test]
+    fn incremental_sampler_is_bit_identical_to_reference_at_every_size() {
+        // the ISSUE 6 equivalence pin: for identical seeds the Fenwick /
+        // bitset / sparse-FY sampler must emit exactly the cohorts of the
+        // historical O(fleet) scan, at every fleet size and sampler kind
+        for n in [1usize, 2, 7, 64, 65, 1_000, 50_000, 200_000] {
+            let mut f = Fleet::synthetic_pool(n, 7);
+            f.set_data_lens((0..n).map(|i| (i % 13) + usize::from(i % 31 == 0) * 50));
+            // churn some availability structure in
+            for c in (0..n).step_by(3) {
+                f.set_available(c, false);
+            }
+            for kind in [
+                SamplerKind::Uniform,
+                SamplerKind::WeightedByData,
+                SamplerKind::AvailabilityAware,
+            ] {
+                for (seed, k) in [(1u64, 1usize), (9, 17), (42, 256), (7, n / 2 + 1)] {
+                    let fast = f.sample(kind, k, &mut Pcg32::new(seed, 5));
+                    let slow = reference::sample_cohort_ref(
+                        &f,
+                        kind,
+                        k,
+                        &mut Pcg32::new(seed, 5),
+                    );
+                    assert_eq!(
+                        fast,
+                        slow,
+                        "n={n} kind={} k={k} seed={seed}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_sampler_tracks_weight_and_availability_deltas() {
+        // equivalence must survive incremental updates, not just builds
+        let n = 5_000;
+        let mut f = small_fleet(n);
+        let mut rng = Pcg32::new(3, 3);
+        for round in 0..20 {
+            // drift some weights and availability, as churn would
+            for _ in 0..50 {
+                let c = rng.below_usize(n);
+                f.set_data_len(c, rng.below_usize(40));
+                let c = rng.below_usize(n);
+                f.set_available(c, rng.next_f64() < 0.8);
+            }
+            for kind in [
+                SamplerKind::Uniform,
+                SamplerKind::WeightedByData,
+                SamplerKind::AvailabilityAware,
+            ] {
+                let seed = 1000 + round;
+                let fast = f.sample(kind, 64, &mut Pcg32::new(seed, 2));
+                let slow = reference::sample_cohort_ref(
+                    &f,
+                    kind,
+                    64,
+                    &mut Pcg32::new(seed, 2),
+                );
+                assert_eq!(fast, slow, "round={round} kind={}", kind.name());
+            }
+        }
     }
 
     #[test]
@@ -257,6 +422,42 @@ mod tests {
         // the Pixel 3 (index 4) is the natural straggler; ties break to
         // the last maximal client like the legacy max_by scan
         assert_eq!(f.slowest("cifar_vgg9") % 5, 4);
+    }
+
+    #[test]
+    fn slowest_matches_the_legacy_per_client_scan() {
+        for (n, mobile, seed) in
+            [(8usize, true, 0u64), (12, false, 3), (100, true, 1), (striped(), true, 9)]
+        {
+            let f = Fleet::classic(n, mobile, seed);
+            for model in ["cifar_vgg9", "femnist_cnn"] {
+                let legacy = (0..f.len())
+                    .max_by(|&a, &b| {
+                        f.profile(a)
+                            .base_time(model)
+                            .total_cmp(&f.profile(b).base_time(model))
+                    })
+                    .unwrap_or(0);
+                assert_eq!(
+                    f.slowest(model),
+                    legacy,
+                    "n={n} mobile={mobile} model={model}"
+                );
+            }
+        }
+        // pooled fleet: ties across pool cycles resolve to the last client
+        let f = Fleet::synthetic_pool(10_000, 3);
+        let model = "cifar_vgg9";
+        let legacy = (0..f.len())
+            .max_by(|&a, &b| {
+                f.profile(a).base_time(model).total_cmp(&f.profile(b).base_time(model))
+            })
+            .unwrap_or(0);
+        assert_eq!(f.slowest(model), legacy);
+    }
+
+    fn striped() -> usize {
+        7 // n < device pool size exercises the unreachable-device edge
     }
 
     #[test]
@@ -276,13 +477,18 @@ mod tests {
         assert!(f.devices.len() <= DEVICE_POOL_CAP);
         assert_eq!(f.num_available(), 10_000);
         assert_eq!(f.device_map().len(), 10_000);
+        let d = f.descriptor(4097);
+        assert_eq!(d.id, 4097);
+        assert_eq!(d.device, 4097 % f.devices.len());
+        assert_eq!(d.shard, 4097);
+        assert!(d.available);
     }
 
     #[test]
     fn uniform_sampling_is_distinct_and_in_range() {
-        let f = small_fleet(100);
+        let mut f = small_fleet(100);
         let mut rng = Pcg32::new(1, 1);
-        let s = sample_cohort(&f, SamplerKind::Uniform, 30, &mut rng);
+        let s = sample_cohort(&mut f, SamplerKind::Uniform, 30, &mut rng);
         assert_eq!(s.len(), 30);
         let mut t = s.clone();
         t.sort_unstable();
@@ -299,7 +505,8 @@ mod tests {
         }
         let mut rng = Pcg32::new(2, 2);
         for _ in 0..200 {
-            for &c in &sample_cohort(&f, SamplerKind::AvailabilityAware, 10, &mut rng) {
+            let s = sample_cohort(&mut f, SamplerKind::AvailabilityAware, 10, &mut rng);
+            for &c in &s {
                 assert!(f.is_available(c), "sampled churned-out client {c}");
             }
         }
@@ -307,21 +514,21 @@ mod tests {
         for c in 0..50 {
             f.set_available(c, c == 7);
         }
-        let s = sample_cohort(&f, SamplerKind::AvailabilityAware, 10, &mut rng);
+        let s = sample_cohort(&mut f, SamplerKind::AvailabilityAware, 10, &mut rng);
         assert_eq!(s, vec![7]);
     }
 
     #[test]
     fn weighted_sampling_prefers_big_shards() {
         let mut f = small_fleet(40);
-        for d in f.clients.iter_mut() {
-            d.data_len = if d.id < 4 { 1000 } else { 1 };
+        for c in 0..40 {
+            f.set_data_len(c, if c < 4 { 1000 } else { 1 });
         }
         let mut rng = Pcg32::new(3, 3);
         let mut heavy = 0usize;
         let rounds = 500;
         for _ in 0..rounds {
-            let s = sample_cohort(&f, SamplerKind::WeightedByData, 2, &mut rng);
+            let s = sample_cohort(&mut f, SamplerKind::WeightedByData, 2, &mut rng);
             assert_eq!(s.len(), 2);
             heavy += s.iter().filter(|&&c| c < 4).count();
         }
@@ -332,19 +539,19 @@ mod tests {
     #[test]
     fn weighted_handles_degenerate_weights_and_full_draws() {
         let mut f = small_fleet(6);
-        for d in f.clients.iter_mut() {
-            d.data_len = 0;
+        for c in 0..6 {
+            f.set_data_len(c, 0);
         }
         let mut rng = Pcg32::new(4, 4);
-        let s = sample_cohort(&f, SamplerKind::WeightedByData, 3, &mut rng);
+        let s = sample_cohort(&mut f, SamplerKind::WeightedByData, 3, &mut rng);
         assert_eq!(s.len(), 3);
-        let all = sample_cohort(&f, SamplerKind::WeightedByData, 6, &mut rng);
+        let all = sample_cohort(&mut f, SamplerKind::WeightedByData, 6, &mut rng);
         assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
         // fewer positive-weight clients than requested: the cohort clamps
         // to the positive population instead of spinning forever
-        f.clients[1].data_len = 5;
-        f.clients[4].data_len = 9;
-        let mut two = sample_cohort(&f, SamplerKind::WeightedByData, 4, &mut rng);
+        f.set_data_len(1, 5);
+        f.set_data_len(4, 9);
+        let mut two = sample_cohort(&mut f, SamplerKind::WeightedByData, 4, &mut rng);
         two.sort_unstable();
         assert_eq!(two, vec![1, 4]);
     }
@@ -357,12 +564,12 @@ mod tests {
         // (the 3σ band holds in aggregate: expected excursions ≈ 0.5),
         // and a chi-squared smoke bound; a biased sampler (off-by-one
         // range, missing Fisher–Yates swap) blows all three.
-        let f = small_fleet(200);
+        let mut f = small_fleet(200);
         let (rounds, k, n) = (1000usize, 20usize, 200usize);
         let mut rng = Pcg32::new(0x57A7, 1);
         let mut count = vec![0usize; n];
         for _ in 0..rounds {
-            for &c in &sample_cohort(&f, SamplerKind::Uniform, k, &mut rng) {
+            for &c in &sample_cohort(&mut f, SamplerKind::Uniform, k, &mut rng) {
                 count[c] += 1;
             }
         }
@@ -388,14 +595,14 @@ mod tests {
 
     #[test]
     fn sampling_is_deterministic_given_seed() {
-        let f = small_fleet(300);
+        let mut f = small_fleet(300);
         for kind in [
             SamplerKind::Uniform,
             SamplerKind::WeightedByData,
             SamplerKind::AvailabilityAware,
         ] {
-            let a = sample_cohort(&f, kind, 32, &mut Pcg32::new(9, 5));
-            let b = sample_cohort(&f, kind, 32, &mut Pcg32::new(9, 5));
+            let a = sample_cohort(&mut f, kind, 32, &mut Pcg32::new(9, 5));
+            let b = sample_cohort(&mut f, kind, 32, &mut Pcg32::new(9, 5));
             assert_eq!(a, b, "{}", kind.name());
         }
     }

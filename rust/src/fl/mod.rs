@@ -7,10 +7,12 @@ pub mod aggregate;
 pub mod client;
 pub mod fleet;
 pub mod parallel;
+pub mod sampling;
 
 pub use aggregate::{fedavg, fedavg_into, staleness_discount, AggregateMode, ClientUpdate};
 pub use client::{Client, LocalResult};
 pub use fleet::{sample_cohort, ClientDescriptor, Fleet, SamplerKind};
+pub use sampling::CohortSampler;
 pub use parallel::AggScratch;
 
 use crate::data::Split;

@@ -1,0 +1,501 @@
+//! Incremental cohort sampling: O(cohort + churn-delta) per round.
+//!
+//! The historical `sample_cohort` paid O(fleet) every round — a full
+//! `(0..n)` index vector for uniform draws, a fresh cumulative-weight
+//! vector plus a `vec![false; n]` duplicate bitmap for weighted draws,
+//! and an O(fleet) collect of the available set for availability-aware
+//! draws. [`CohortSampler`] keeps the population in incrementally
+//! maintained structures instead:
+//!
+//! * weights live in a [`Fenwick`] tree, updated in O(log n) when a
+//!   shard size changes and searched in O(log n) per draw;
+//! * availability lives in a [`RankSelectBitset`], flipped in
+//!   O(log words) per churn delta and selected in O(log words) per draw;
+//! * uniform draws run a **sparse** Fisher–Yates over a reusable hash
+//!   map, touching only the k drawn positions.
+//!
+//! Every draw reproduces the historical sampler's PRNG consumption and
+//! output **bit for bit** (pinned by the cross-implementation
+//! equivalence test in `fl::fleet`): the sparse Fisher–Yates performs
+//! the same `below_usize(n - i)` sequence as `Pcg32::sample_indices`,
+//! the Fenwick descent reproduces `partition_point` over the old
+//! cumulative vector exactly (integer weights, sums below 2^53), and
+//! `select1(i)` equals `avail[i]` of the old ascending collect.
+//!
+//! All scratch (hash map, duplicate set, output buffers) is hoisted into
+//! the sampler and reused across rounds — at steady state a draw
+//! allocates nothing but the returned cohort `Vec` (gated by
+//! `tests/alloc_gate.rs`).
+
+use crate::util::fenwick::{Fenwick, RankSelectBitset};
+use crate::util::prng::Pcg32;
+use std::collections::{HashMap, HashSet};
+
+/// Draw budget multiplier for the weighted rejection loop: after
+/// `WEIGHTED_RETRY_FACTOR * k + WEIGHTED_RETRY_SLACK` inversion draws the
+/// sampler abandons rejection and falls back to a deterministic exact
+/// sweep. In the fleet regime (k << positive population) the expected
+/// draw count is barely above k, so the budget never binds and draws stay
+/// bit-identical to the historical unbounded loop; in pathological
+/// regimes (k ≈ positive population, where the coupon-collector tail
+/// makes the old loop arbitrarily slow) the fallback bounds the round.
+pub const WEIGHTED_RETRY_FACTOR: usize = 16;
+pub const WEIGHTED_RETRY_SLACK: usize = 256;
+
+/// Incrementally-maintained sampling state for one client population.
+#[derive(Clone, Debug)]
+pub struct CohortSampler {
+    n: usize,
+    /// per-client integer weights (shard sizes)
+    weights: Fenwick,
+    /// clients with weight > 0 (the weighted draw clamps k to this)
+    positive: usize,
+    /// availability bitmap with rank/select
+    avail: RankSelectBitset,
+    /// sparse Fisher–Yates displacement map (position -> displaced value)
+    fy: HashMap<usize, usize>,
+    /// duplicate-rejection set for weighted draws
+    seen: HashSet<usize>,
+    /// churn scratch: ids leaving / rejoining this round
+    churn_out_ids: Vec<usize>,
+    churn_in_ids: Vec<usize>,
+}
+
+impl CohortSampler {
+    /// `n` clients, all available, all weight zero.
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            weights: Fenwick::new(n),
+            positive: 0,
+            avail: RankSelectBitset::new_filled(n, true),
+            fy: HashMap::new(),
+            seen: HashSet::new(),
+            churn_out_ids: Vec::new(),
+            churn_in_ids: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    // ---- weights ----------------------------------------------------------
+
+    pub fn weight(&self, c: usize) -> u64 {
+        self.weights.get(c)
+    }
+
+    pub fn set_weight(&mut self, c: usize, w: u64) {
+        let old = self.weights.get(c);
+        if old == 0 && w > 0 {
+            self.positive += 1;
+        } else if old > 0 && w == 0 {
+            self.positive -= 1;
+        }
+        self.weights.set(c, w);
+    }
+
+    /// Bulk (re)install all weights — O(n), construction-time only.
+    pub fn assign_weights(&mut self, ws: impl Iterator<Item = u64>) {
+        let mut positive = 0usize;
+        self.weights.assign(ws.inspect(|&w| {
+            if w > 0 {
+                positive += 1;
+            }
+        }));
+        self.positive = positive;
+    }
+
+    pub fn total_weight(&self) -> u64 {
+        self.weights.total()
+    }
+
+    pub fn positive_weight_count(&self) -> usize {
+        self.positive
+    }
+
+    // ---- availability -----------------------------------------------------
+
+    pub fn is_available(&self, c: usize) -> bool {
+        self.avail.get(c)
+    }
+
+    pub fn set_available(&mut self, c: usize, v: bool) -> bool {
+        self.avail.set(c, v)
+    }
+
+    pub fn num_available(&self) -> usize {
+        self.avail.count_ones()
+    }
+
+    /// Bulk reinstall availability (snapshot restore) — O(n).
+    pub fn assign_availability(&mut self, bits: &[bool]) {
+        self.avail.assign_from(bits);
+    }
+
+    /// Materialize the availability map (snapshot capture) — O(n).
+    pub fn availability(&self) -> Vec<bool> {
+        (0..self.n).map(|i| self.avail.get(i)).collect()
+    }
+
+    // ---- draws ------------------------------------------------------------
+
+    /// Uniform cohort over the whole population: bit-identical to
+    /// `rng.sample_indices(n, k)` in O(k) via sparse Fisher–Yates.
+    pub fn sample_uniform(&mut self, k: usize, rng: &mut Pcg32) -> Vec<usize> {
+        let k = k.min(self.n);
+        let mut out = Vec::with_capacity(k);
+        self.sparse_fisher_yates(self.n, k, rng, |v| v, &mut out);
+        out
+    }
+
+    /// Uniform cohort over currently-available clients: bit-identical to
+    /// collecting the available ids ascending and uniform-sampling that
+    /// vector, in O(k log n) — the collect never happens, `select1`
+    /// resolves ranks to ids on demand.
+    pub fn sample_available(&mut self, k: usize, rng: &mut Pcg32) -> Vec<usize> {
+        let m = self.avail.count_ones();
+        if m == 0 {
+            return Vec::new();
+        }
+        let k = k.min(m);
+        let mut out = Vec::with_capacity(k);
+        // borrow dance: select1 needs &self.avail while the FY map is
+        // &mut self.fy, so route through a local closure on the bitset
+        let avail = &self.avail;
+        let n = m;
+        let fy = &mut self.fy;
+        fy.clear();
+        for i in 0..k {
+            let j = i + rng.below_usize(n - i);
+            let vj = fy.get(&j).copied().unwrap_or(j);
+            let vi = fy.get(&i).copied().unwrap_or(i);
+            fy.insert(j, vi);
+            out.push(avail.select1(vj));
+        }
+        out
+    }
+
+    /// Weighted-without-replacement via cumulative-inversion with
+    /// duplicate rejection — the historical algorithm, reproduced draw
+    /// for draw through the Fenwick descent, with the O(n) per-round
+    /// scratch (`cum`, `seen`) replaced by incremental state. Zero-weight
+    /// populations fall back to uniform; `k >= n` returns everyone (both
+    /// historical behaviors).
+    ///
+    /// The rejection loop is bounded: past the retry budget it falls
+    /// back to [`Self::weighted_exact_sweep`].
+    pub fn sample_weighted(&mut self, k: usize, rng: &mut Pcg32) -> Vec<usize> {
+        let n = self.n;
+        let k = k.min(n);
+        if k >= n {
+            return (0..n).collect();
+        }
+        let total = self.weights.total();
+        if total == 0 {
+            return self.sample_uniform(k, rng);
+        }
+        let total_f = total as f64;
+        let k = k.min(self.positive);
+        let budget = WEIGHTED_RETRY_FACTOR * k + WEIGHTED_RETRY_SLACK;
+        let mut picked = Vec::with_capacity(k);
+        self.seen.clear();
+        let mut draws = 0usize;
+        while picked.len() < k {
+            if draws >= budget {
+                self.weighted_exact_sweep(k, &mut picked);
+                break;
+            }
+            draws += 1;
+            let x = rng.next_f64() * total_f;
+            let i = self.weights.count_prefix_le(x).min(n - 1);
+            if self.seen.insert(i) {
+                picked.push(i);
+            }
+        }
+        picked
+    }
+
+    /// Deterministic completion of a weighted draw whose rejection loop
+    /// exhausted its budget: scan ascending client ids and take every
+    /// positive-weight client not already picked until the cohort is
+    /// full. O(n), but only ever reached in the pathological
+    /// k ≈ positive-population regime where the historical loop's
+    /// coupon-collector tail was unbounded.
+    fn weighted_exact_sweep(&mut self, k: usize, picked: &mut Vec<usize>) {
+        for c in 0..self.n {
+            if picked.len() >= k {
+                break;
+            }
+            if self.weights.get(c) > 0 && !self.seen.contains(&c) {
+                self.seen.insert(c);
+                picked.push(c);
+            }
+        }
+    }
+
+    /// Sparse partial Fisher–Yates: performs exactly the PRNG draws of
+    /// `Pcg32::sample_indices(n, k)` and emits the same outputs, but
+    /// touches only the k drawn positions (reusable hash map holds the
+    /// displacements; `clear()` retains capacity, so steady-state draws
+    /// allocate nothing).
+    fn sparse_fisher_yates(
+        &mut self,
+        n: usize,
+        k: usize,
+        rng: &mut Pcg32,
+        map: impl Fn(usize) -> usize,
+        out: &mut Vec<usize>,
+    ) {
+        self.fy.clear();
+        for i in 0..k {
+            let j = i + rng.below_usize(n - i);
+            let vj = self.fy.get(&j).copied().unwrap_or(j);
+            let vi = self.fy.get(&i).copied().unwrap_or(i);
+            self.fy.insert(j, vi);
+            out.push(map(vj));
+        }
+    }
+
+    // ---- churn deltas -----------------------------------------------------
+
+    /// Apply one round of Bernoulli join/leave churn as sparse deltas:
+    /// O(expected flips · log n) instead of one PRNG draw per client.
+    /// Geometric gap sampling walks the available set (leave events with
+    /// probability `churn_out` per member) and then the unavailable set
+    /// (rejoin events with probability `rejoin` per member); both rank
+    /// lists resolve to client ids against the *start-of-round* state
+    /// before any flip lands, so the two passes cannot observe each
+    /// other. Returns `(left, rejoined)` counts.
+    pub fn apply_churn(
+        &mut self,
+        churn_out: f64,
+        rejoin: f64,
+        rng: &mut Pcg32,
+    ) -> (usize, usize) {
+        let avail_n = self.avail.count_ones();
+        let gone_n = self.avail.count_zeros();
+
+        // resolve leave ranks -> ids (ascending ranks over the set bits)
+        let mut out_ids = std::mem::take(&mut self.churn_out_ids);
+        out_ids.clear();
+        bernoulli_ranks_into(avail_n, churn_out, rng, |rank| {
+            out_ids.push(self.avail.select1(rank));
+        });
+        // resolve rejoin ranks -> ids before applying the leaves
+        let mut in_ids = std::mem::take(&mut self.churn_in_ids);
+        in_ids.clear();
+        bernoulli_ranks_into(gone_n, rejoin, rng, |rank| {
+            in_ids.push(self.avail.select0(rank));
+        });
+
+        for &c in &out_ids {
+            self.avail.set(c, false);
+        }
+        for &c in &in_ids {
+            self.avail.set(c, true);
+        }
+        let counts = (out_ids.len(), in_ids.len());
+        self.churn_out_ids = out_ids;
+        self.churn_in_ids = in_ids;
+        counts
+    }
+}
+
+/// Visit the ranks of a Bernoulli(p) process over `m` ordered slots in
+/// O(successes) PRNG draws: the gap to the next success is geometric,
+/// `floor(ln(U) / ln(1 - p))` failures long. Equivalent in distribution
+/// to flipping a coin per slot, with one uniform draw per success (plus
+/// one terminating draw) instead of one per slot.
+pub fn bernoulli_ranks_into(
+    m: usize,
+    p: f64,
+    rng: &mut Pcg32,
+    mut visit: impl FnMut(usize),
+) {
+    if m == 0 || !(p > 0.0) {
+        return;
+    }
+    if p >= 1.0 {
+        for r in 0..m {
+            visit(r);
+        }
+        return;
+    }
+    let ln_q = (1.0 - p).ln(); // strictly negative
+    let mut pos = -1.0f64;
+    loop {
+        let u = rng.next_f64();
+        // u == 0 -> ln(0) = -inf -> skip = +inf -> loop terminates
+        let skip = (u.ln() / ln_q).floor();
+        pos += 1.0 + skip;
+        if !(pos < m as f64) {
+            return;
+        }
+        visit(pos as usize);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_fisher_yates_matches_sample_indices() {
+        for (n, k) in [(1usize, 1usize), (500, 1), (500, 32), (500, 499), (500, 500)] {
+            let mut s = CohortSampler::new(n);
+            let mut a = Pcg32::new(3, 9);
+            let mut b = Pcg32::new(3, 9);
+            let sparse = s.sample_uniform(k, &mut a);
+            assert_eq!(sparse, b.sample_indices(n, k), "n={n} k={k}");
+            // and again on the same (now warm) sampler state
+            let again = s.sample_uniform(k, &mut a);
+            assert_eq!(again, b.sample_indices(n, k), "warm n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn sample_available_matches_collect_then_sample() {
+        let n = 300;
+        let mut s = CohortSampler::new(n);
+        for c in 0..n {
+            s.set_available(c, c % 3 != 0);
+        }
+        let avail: Vec<usize> = (0..n).filter(|&c| c % 3 != 0).collect();
+        let mut a = Pcg32::new(11, 4);
+        let mut b = Pcg32::new(11, 4);
+        let fast = s.sample_available(40, &mut a);
+        let slow: Vec<usize> = b
+            .sample_indices(avail.len(), 40)
+            .into_iter()
+            .map(|i| avail[i])
+            .collect();
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn weighted_rejection_stays_within_budget_in_fleet_regime() {
+        let n = 10_000;
+        let mut s = CohortSampler::new(n);
+        for c in 0..n {
+            s.set_weight(c, 4 + (c % 13) as u64);
+        }
+        let mut rng = Pcg32::new(8, 8);
+        for _ in 0..50 {
+            let picked = s.sample_weighted(256, &mut rng);
+            assert_eq!(picked.len(), 256);
+            let mut t = picked.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 256, "weighted draw produced duplicates");
+        }
+    }
+
+    #[test]
+    fn weighted_fallback_sweep_completes_pathological_draws() {
+        // pathological regime: k equals the positive population and one
+        // client owns essentially all the mass, so rejection repeatedly
+        // re-draws the heavy client. The bounded loop must fall back to
+        // the exact sweep and return every positive-weight client.
+        let n = 600;
+        let mut s = CohortSampler::new(n);
+        for c in 0..500 {
+            s.set_weight(c, if c == 0 { 1_000_000_000 } else { 1 });
+        }
+        let mut rng = Pcg32::new(1, 1);
+        let mut picked = s.sample_weighted(550, &mut rng); // clamps to 500
+        assert_eq!(picked.len(), 500, "fallback did not complete the cohort");
+        picked.sort_unstable();
+        picked.dedup();
+        assert_eq!(picked.len(), 500);
+        assert!(picked.iter().all(|&c| c < 500), "picked a zero-weight client");
+        // the sweep is deterministic: same seed, same cohort
+        let again = s.sample_weighted(550, &mut Pcg32::new(1, 1));
+        let mut again_sorted = again.clone();
+        again_sorted.sort_unstable();
+        assert_eq!(again_sorted, picked);
+        // and the heavy head of the draw is still rejection-sampled
+        assert!(again.contains(&0));
+    }
+
+    #[test]
+    fn bernoulli_ranks_match_dense_process_statistically() {
+        let m = 20_000;
+        let p = 0.05;
+        let mut rng = Pcg32::new(77, 2);
+        let mut hits = 0usize;
+        let mut last = None;
+        bernoulli_ranks_into(m, p, &mut rng, |r| {
+            assert!(r < m);
+            if let Some(prev) = last {
+                assert!(r > prev, "ranks must be strictly ascending");
+            }
+            last = Some(r);
+            hits += 1;
+        });
+        let mean = m as f64 * p;
+        let sigma = (m as f64 * p * (1.0 - p)).sqrt();
+        assert!(
+            (hits as f64 - mean).abs() < 5.0 * sigma,
+            "{hits} hits vs expected {mean:.0}"
+        );
+    }
+
+    #[test]
+    fn bernoulli_ranks_edge_rates() {
+        let mut rng = Pcg32::new(1, 1);
+        let mut v = Vec::new();
+        bernoulli_ranks_into(10, 0.0, &mut rng, |r| v.push(r));
+        assert!(v.is_empty());
+        bernoulli_ranks_into(0, 0.5, &mut rng, |r| v.push(r));
+        assert!(v.is_empty());
+        bernoulli_ranks_into(10, 1.0, &mut rng, |r| v.push(r));
+        assert_eq!(v, (0..10).collect::<Vec<_>>());
+        v.clear();
+        bernoulli_ranks_into(10, f64::NAN, &mut rng, |r| v.push(r));
+        assert!(v.is_empty(), "NaN rate must behave like zero");
+    }
+
+    #[test]
+    fn churn_deltas_resolve_against_start_of_round_state() {
+        // rejoin ranks must be computed over the set of clients that
+        // were unavailable *before* this round's leaves applied
+        let mut s = CohortSampler::new(100);
+        for c in 0..50 {
+            s.set_available(c, false);
+        }
+        let mut rng = Pcg32::new(4, 2);
+        let before_gone: Vec<usize> = (0..50).collect();
+        let (out, back) = s.apply_churn(0.5, 0.5, &mut rng);
+        assert!(out > 0 && back > 0, "both directions should fire at 50%");
+        // every rejoiner must come from the start-of-round gone set
+        for c in 0..100 {
+            if s.is_available(c) && c < 50 {
+                assert!(before_gone.contains(&c));
+            }
+        }
+        let avail = s.num_available();
+        assert_eq!(avail, 50 - out + back);
+    }
+
+    #[test]
+    fn steady_state_weight_updates_track_positive_count() {
+        let mut s = CohortSampler::new(10);
+        assert_eq!(s.positive_weight_count(), 0);
+        s.set_weight(3, 5);
+        s.set_weight(7, 2);
+        assert_eq!(s.positive_weight_count(), 2);
+        assert_eq!(s.total_weight(), 7);
+        s.set_weight(3, 0);
+        assert_eq!(s.positive_weight_count(), 1);
+        s.assign_weights((0..10).map(|i| (i % 2) as u64));
+        assert_eq!(s.positive_weight_count(), 5);
+        assert_eq!(s.total_weight(), 5);
+        assert_eq!(s.weight(9), 1);
+    }
+}

@@ -84,6 +84,36 @@ impl ProceduralLoad {
     }
 }
 
+/// Lazy procedural join/leave churn: per-round Bernoulli rates plus the
+/// seed of the per-round RNG stream. This is a *description* — nothing is
+/// swept here. The fleet applies it as sparse deltas (geometric
+/// skip-sampling over the available/unavailable populations, see
+/// `fl::sampling::bernoulli_ranks_into`), so a round's churn costs
+/// O(expected flips), not O(fleet).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProceduralChurn {
+    pub seed: u64,
+    /// per-round probability that an available client churns out
+    pub churn_out: f64,
+    /// per-round probability that a churned-out client rejoins
+    pub rejoin: f64,
+}
+
+impl ProceduralChurn {
+    /// Does this schedule ever move the population? (NaN rates count as
+    /// inactive — the delta sampler treats them as rate 0.)
+    pub fn is_active(&self) -> bool {
+        self.churn_out > 0.0 || self.rejoin > 0.0
+    }
+
+    /// The round's churn RNG — one stream per `(seed, round)`, so a
+    /// replay of the same experiment seed replays the exact population
+    /// trajectory without any cross-round state.
+    pub fn round_rng(&self, round: usize) -> Pcg32 {
+        Pcg32::new(self.seed, round as u64)
+    }
+}
+
 /// The set of load events for one run.
 #[derive(Clone, Debug, Default)]
 pub struct FluctuationSchedule {
@@ -159,6 +189,19 @@ impl FluctuationSchedule {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn procedural_churn_activity_and_round_streams() {
+        let quiet = ProceduralChurn { seed: 1, churn_out: 0.0, rejoin: 0.0 };
+        assert!(!quiet.is_active());
+        let nan = ProceduralChurn { seed: 1, churn_out: f64::NAN, rejoin: 0.0 };
+        assert!(!nan.is_active());
+        let live = ProceduralChurn { seed: 1, churn_out: 0.05, rejoin: 0.3 };
+        assert!(live.is_active());
+        // per-round streams are replayable and distinct round to round
+        assert_eq!(live.round_rng(4).next_u32(), live.round_rng(4).next_u32());
+        assert_ne!(live.round_rng(4).next_u32(), live.round_rng(5).next_u32());
+    }
 
     #[test]
     fn none_is_identity() {

@@ -17,5 +17,5 @@ pub use adapt::{AdaptConfig, AdaptMode, CtrlState, RateController};
 pub use cluster::cluster_stragglers;
 pub use detect::{detect_stragglers, snap_rate, Detection};
 pub use device::{mobile_fleet, synthetic_fleet, DeviceProfile};
-pub use fluctuate::{FluctuationSchedule, LoadEvent, ProceduralLoad, ProceduralPhase};
+pub use fluctuate::{FluctuationSchedule, LoadEvent, ProceduralChurn, ProceduralLoad, ProceduralPhase};
 pub use perfmodel::{ClientTiming, PerfModel};

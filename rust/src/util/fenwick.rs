@@ -1,0 +1,428 @@
+//! Incremental prefix-sum structures for O(cohort)-per-round fleet
+//! sampling (DESIGN.md §10).
+//!
+//! * [`Fenwick`] — a binary indexed tree over **integer** weights. The
+//!   historical weighted sampler materialized an O(fleet) `f64`
+//!   cumulative vector every round and binary-searched it; the Fenwick
+//!   tree answers the same search in O(log n) and absorbs churn-delta
+//!   weight updates in O(log n), with no per-round rebuild. Because the
+//!   weights are integers and every partial sum stays far below 2^53,
+//!   each internal `u64 -> f64` comparison is *exact* — the descent
+//!   reproduces the old `partition_point(|&c| c <= x)` answer bit for
+//!   bit (see [`Fenwick::count_prefix_le`]).
+//! * [`RankSelectBitset`] — a packed availability bitmap with
+//!   rank/select in O(log words). `select1(i)` equals `avail[i]` of the
+//!   old per-round ascending `Vec<usize>` collect, so availability-aware
+//!   draws map through it bit-identically without ever materializing the
+//!   available set.
+
+/// Binary indexed tree over `u64` weights (1-based internal layout).
+#[derive(Clone, Debug)]
+pub struct Fenwick {
+    /// tree[i] holds the sum of weights (i - lowbit(i), i], 1-based
+    tree: Vec<u64>,
+    n: usize,
+    total: u64,
+}
+
+impl Fenwick {
+    /// All-zero weights.
+    pub fn new(n: usize) -> Self {
+        Self { tree: vec![0; n + 1], n, total: 0 }
+    }
+
+    /// O(n) build from explicit weights.
+    pub fn from_weights(ws: &[u64]) -> Self {
+        let n = ws.len();
+        let mut tree = vec![0u64; n + 1];
+        tree[1..].copy_from_slice(ws);
+        for i in 1..=n {
+            let j = i + (i & i.wrapping_neg());
+            if j <= n {
+                tree[j] += tree[i];
+            }
+        }
+        let total = ws.iter().sum();
+        Self { tree, n, total }
+    }
+
+    /// Rebuild in place from an iterator (reuses the allocation).
+    pub fn assign(&mut self, ws: impl Iterator<Item = u64>) {
+        let n = self.n;
+        self.tree[0] = 0;
+        let mut total = 0u64;
+        for (slot, w) in self.tree[1..].iter_mut().zip(ws) {
+            *slot = w;
+            total += w;
+        }
+        for i in 1..=n {
+            let j = i + (i & i.wrapping_neg());
+            if j <= n {
+                self.tree[j] += self.tree[i];
+            }
+        }
+        self.total = total;
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Sum of weights in `[0, i)` (0-based exclusive prefix).
+    pub fn prefix(&self, mut i: usize) -> u64 {
+        let mut s = 0u64;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Point query: the weight at 0-based index `i`.
+    pub fn get(&self, i: usize) -> u64 {
+        self.prefix(i + 1) - self.prefix(i)
+    }
+
+    /// Point update: set the weight at 0-based index `i`.
+    pub fn set(&mut self, i: usize, w: u64) {
+        let old = self.get(i);
+        if w == old {
+            return;
+        }
+        let mut j = i + 1;
+        if w >= old {
+            let d = w - old;
+            self.total += d;
+            while j <= self.n {
+                self.tree[j] += d;
+                j += j & j.wrapping_neg();
+            }
+        } else {
+            let d = old - w;
+            self.total -= d;
+            while j <= self.n {
+                self.tree[j] -= d;
+                j += j & j.wrapping_neg();
+            }
+        }
+    }
+
+    /// How many 1-based prefix sums `S_1..=S_n` are `<= x` — exactly
+    /// `cum.partition_point(|&c| c <= x)` over the cumulative-weight
+    /// vector `cum[i] = S_{i+1}` the historical sampler built per round.
+    ///
+    /// The descent accumulates node sums in `u64` and compares each
+    /// candidate as `f64`; with every partial sum below 2^53 the cast is
+    /// exact, so the comparisons see the same values the sequential f64
+    /// accumulation produced and the answer matches bit for bit. Weights
+    /// are non-negative, so the prefix sums are nondecreasing and the
+    /// count equals the largest position whose prefix sum is `<= x`.
+    pub fn count_prefix_le(&self, x: f64) -> usize {
+        let mut pos = 0usize;
+        let mut acc = 0u64;
+        let mut step = self.n.next_power_of_two();
+        while step > 0 {
+            let next = pos + step;
+            if next <= self.n {
+                let cand = acc + self.tree[next];
+                if (cand as f64) <= x {
+                    pos = next;
+                    acc = cand;
+                }
+            }
+            step >>= 1;
+        }
+        pos
+    }
+
+    /// Largest position whose (integer) prefix sum is `<= r`, plus that
+    /// prefix sum — the select primitive for count-based structures.
+    pub fn count_prefix_le_u64(&self, r: u64) -> (usize, u64) {
+        let mut pos = 0usize;
+        let mut acc = 0u64;
+        let mut step = self.n.next_power_of_two();
+        while step > 0 {
+            let next = pos + step;
+            if next <= self.n {
+                let cand = acc + self.tree[next];
+                if cand <= r {
+                    pos = next;
+                    acc = cand;
+                }
+            }
+            step >>= 1;
+        }
+        (pos, acc)
+    }
+}
+
+/// Packed bitmap over `n` slots with O(log words) rank/select — the
+/// incremental replacement for the per-round `Vec<bool>` availability
+/// sweep. Two word-level Fenwick trees (set bits / cleared bits) absorb
+/// per-slot flips in O(log words).
+#[derive(Clone, Debug)]
+pub struct RankSelectBitset {
+    words: Vec<u64>,
+    n: usize,
+    /// per-word popcounts
+    ones: Fenwick,
+    /// per-word zero counts (within each word's capacity)
+    zeros: Fenwick,
+}
+
+impl RankSelectBitset {
+    pub fn new_filled(n: usize, v: bool) -> Self {
+        let nw = n.div_ceil(64);
+        let mut words = vec![if v { u64::MAX } else { 0 }; nw];
+        if v && n % 64 != 0 {
+            // mask padding bits in the last word to zero
+            words[nw - 1] = (1u64 << (n % 64)) - 1;
+        }
+        let mut s = Self {
+            words,
+            n,
+            ones: Fenwick::new(nw),
+            zeros: Fenwick::new(nw),
+        };
+        s.rebuild_counts();
+        s
+    }
+
+    /// Capacity (valid bit count) of word `w`.
+    fn cap(&self, w: usize) -> u64 {
+        if (w + 1) * 64 <= self.n {
+            64
+        } else {
+            (self.n - w * 64) as u64
+        }
+    }
+
+    fn rebuild_counts(&mut self) {
+        let words = &self.words;
+        let n = self.n;
+        let cap = |w: usize| -> u64 {
+            if (w + 1) * 64 <= n { 64 } else { (n - w * 64) as u64 }
+        };
+        self.ones.assign(words.iter().map(|w| w.count_ones() as u64));
+        self.zeros
+            .assign((0..words.len()).map(|i| cap(i) - words[i].count_ones() as u64));
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.n);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set slot `i`; returns whether the bit actually changed.
+    pub fn set(&mut self, i: usize, v: bool) -> bool {
+        debug_assert!(i < self.n);
+        let (w, b) = (i / 64, i % 64);
+        let cur = (self.words[w] >> b) & 1 == 1;
+        if cur == v {
+            return false;
+        }
+        self.words[w] ^= 1u64 << b;
+        let pc = self.words[w].count_ones() as u64;
+        self.ones.set(w, pc);
+        self.zeros.set(w, self.cap(w) - pc);
+        true
+    }
+
+    /// Bulk reinstall from a bool slice (snapshot restore path) — O(n).
+    pub fn assign_from(&mut self, bits: &[bool]) {
+        assert_eq!(bits.len(), self.n, "bitset length mismatch");
+        for w in self.words.iter_mut() {
+            *w = 0;
+        }
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                self.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        self.rebuild_counts();
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.ones.total() as usize
+    }
+
+    pub fn count_zeros(&self) -> usize {
+        self.n - self.count_ones()
+    }
+
+    /// Index of the `r`-th (0-based) set bit — equals `avail[r]` of an
+    /// ascending collect of the set slots. Panics if `r >= count_ones()`.
+    pub fn select1(&self, r: usize) -> usize {
+        debug_assert!(r < self.count_ones());
+        let (w, acc) = self.ones.count_prefix_le_u64(r as u64);
+        // after skipping `w` whole words (acc set bits), the target is
+        // the (r - acc)-th set bit of word w
+        w * 64 + select_in_word(self.words[w], (r as u64 - acc) as u32)
+    }
+
+    /// Index of the `r`-th (0-based) cleared bit. Padding bits past `n`
+    /// are excluded via the per-word capacity counts.
+    pub fn select0(&self, r: usize) -> usize {
+        debug_assert!(r < self.count_zeros());
+        let (w, acc) = self.zeros.count_prefix_le_u64(r as u64);
+        let inv = !self.words[w] & mask_low(self.cap(w));
+        w * 64 + select_in_word(inv, (r as u64 - acc) as u32)
+    }
+}
+
+fn mask_low(bits: u64) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+/// Position of the `r`-th (0-based) set bit inside one word.
+fn select_in_word(mut w: u64, mut r: u32) -> usize {
+    debug_assert!((w.count_ones()) > r);
+    loop {
+        let t = w.trailing_zeros();
+        if r == 0 {
+            return t as usize;
+        }
+        w &= w - 1;
+        r -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn fenwick_prefix_and_point_ops() {
+        let ws = [3u64, 0, 7, 1, 0, 0, 12, 5];
+        let mut f = Fenwick::from_weights(&ws);
+        assert_eq!(f.len(), 8);
+        assert_eq!(f.total(), 28);
+        let mut acc = 0;
+        for (i, &w) in ws.iter().enumerate() {
+            assert_eq!(f.prefix(i), acc);
+            assert_eq!(f.get(i), w);
+            acc += w;
+        }
+        assert_eq!(f.prefix(8), 28);
+        f.set(2, 0);
+        f.set(4, 9);
+        assert_eq!(f.total(), 28 - 7 + 9);
+        assert_eq!(f.get(2), 0);
+        assert_eq!(f.get(4), 9);
+        // no-op set keeps everything intact
+        f.set(4, 9);
+        assert_eq!(f.prefix(5), 3 + 0 + 0 + 1 + 9);
+    }
+
+    #[test]
+    fn fenwick_count_matches_partition_point() {
+        let mut rng = Pcg32::new(7, 1);
+        for n in [1usize, 2, 5, 63, 64, 65, 300] {
+            let ws: Vec<u64> = (0..n).map(|_| (rng.below(20)) as u64).collect();
+            let f = Fenwick::from_weights(&ws);
+            // the historical cumulative vector, built exactly as the old
+            // sampler did (sequential f64 accumulation)
+            let mut cum = Vec::with_capacity(n);
+            let mut total = 0.0f64;
+            for &w in &ws {
+                total += w as f64;
+                cum.push(total);
+            }
+            for _ in 0..200 {
+                let x = rng.next_f64() * total;
+                assert_eq!(
+                    f.count_prefix_le(x),
+                    cum.partition_point(|&c| c <= x),
+                    "n={n} x={x}"
+                );
+            }
+            // boundary values, including exact prefix sums
+            for probe in [-1.0, 0.0, total, total + 1.0] {
+                assert_eq!(
+                    f.count_prefix_le(probe),
+                    cum.partition_point(|&c| c <= probe),
+                    "n={n} probe={probe}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fenwick_assign_reuses_allocation() {
+        let mut f = Fenwick::new(6);
+        f.assign([1u64, 2, 3, 4, 5, 6].into_iter());
+        assert_eq!(f.total(), 21);
+        assert_eq!(f.prefix(3), 6);
+        f.assign([0u64, 0, 0, 0, 0, 10].into_iter());
+        assert_eq!(f.total(), 10);
+        assert_eq!(f.prefix(5), 0);
+        assert_eq!(f.get(5), 10);
+    }
+
+    #[test]
+    fn bitset_rank_select_matches_dense_reference() {
+        let mut rng = Pcg32::new(5, 9);
+        for n in [1usize, 63, 64, 65, 130, 1000] {
+            let mut bits = RankSelectBitset::new_filled(n, false);
+            let mut dense = vec![false; n];
+            for _ in 0..3 * n {
+                let i = rng.below_usize(n);
+                let v = rng.next_f64() < 0.5;
+                assert_eq!(bits.set(i, v), dense[i] != v);
+                dense[i] = v;
+            }
+            let set: Vec<usize> =
+                (0..n).filter(|&i| dense[i]).collect();
+            let clear: Vec<usize> =
+                (0..n).filter(|&i| !dense[i]).collect();
+            assert_eq!(bits.count_ones(), set.len(), "n={n}");
+            assert_eq!(bits.count_zeros(), clear.len(), "n={n}");
+            for (r, &i) in set.iter().enumerate() {
+                assert_eq!(bits.select1(r), i, "n={n} select1({r})");
+            }
+            for (r, &i) in clear.iter().enumerate() {
+                assert_eq!(bits.select0(r), i, "n={n} select0({r})");
+            }
+            for i in 0..n {
+                assert_eq!(bits.get(i), dense[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn bitset_filled_construction_and_bulk_assign() {
+        let b = RankSelectBitset::new_filled(70, true);
+        assert_eq!(b.count_ones(), 70);
+        assert_eq!(b.count_zeros(), 0);
+        assert_eq!(b.select1(69), 69);
+        let mut b = RankSelectBitset::new_filled(70, false);
+        assert_eq!(b.count_ones(), 0);
+        assert_eq!(b.select0(64), 64);
+        let pattern: Vec<bool> = (0..70).map(|i| i % 3 == 0).collect();
+        b.assign_from(&pattern);
+        assert_eq!(b.count_ones(), pattern.iter().filter(|&&x| x).count());
+        assert_eq!(b.select1(1), 3);
+        assert_eq!(b.select0(0), 1);
+    }
+}

@@ -2,6 +2,7 @@
 //! clap / proptest — see DESIGN.md §2).
 
 pub mod cli;
+pub mod fenwick;
 pub mod pool;
 pub mod prng;
 pub mod proptest;

@@ -12,8 +12,10 @@
 //! does not pollute the counter; the thread-count property tests pin
 //! that the parallel path computes identical bytes.
 
+use fluid::fl::{
+    fedavg_into, sample_cohort, AggScratch, AggregateMode, ClientUpdate, Fleet, SamplerKind,
+};
 use fluid::dropout::{InvariantConfig, InvariantDropout, MaskSet};
-use fluid::fl::{fedavg_into, AggScratch, AggregateMode, ClientUpdate};
 use fluid::model::sim_spec;
 use fluid::tensor::Tensor;
 use fluid::util::prng::Pcg32;
@@ -137,4 +139,55 @@ fn fused_observe_is_allocation_free_at_steady_state() {
     let bytes =
         min_allocated(5, || allocated_during(|| inv.observe_with(&deltas, 1, &mut scratch)).0);
     assert_eq!(bytes, 0, "steady-state observe allocated {bytes} bytes");
+}
+
+#[test]
+fn fleet_sampling_is_allocation_free_at_steady_state() {
+    // ISSUE 6 satellite: the per-round `seen = vec![false; n]` bitmap and
+    // cumulative-vector rebuild are gone — at steady state a cohort draw
+    // may allocate nothing beyond the returned cohort Vec itself (the
+    // sparse Fisher–Yates map and the duplicate-rejection set are hoisted
+    // into the sampler and reused with retained capacity).
+    let n = 20_000usize;
+    let mut fleet = Fleet::synthetic_pool(n, 7);
+    fleet.set_data_lens((0..n).map(|c| 4 + c % 13));
+    for c in (0..n).step_by(5) {
+        fleet.set_available(c, false);
+    }
+    let k = 256usize;
+    let shell = (k * std::mem::size_of::<usize>()) as u64;
+    let mut rng = Pcg32::new(3, 1);
+    for kind in [
+        SamplerKind::Uniform,
+        SamplerKind::WeightedByData,
+        SamplerKind::AvailabilityAware,
+    ] {
+        // warm: the reusable map/set reach their high-water capacity
+        for _ in 0..10 {
+            let s = sample_cohort(&mut fleet, kind, k, &mut rng);
+            assert_eq!(s.len(), k, "{}", kind.name());
+        }
+        let bytes = min_allocated(5, || {
+            allocated_during(|| sample_cohort(&mut fleet, kind, k, &mut rng)).0
+        });
+        assert!(
+            bytes <= shell + 256,
+            "{}: steady-state draw allocated {bytes} bytes (cohort shell is {shell})",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn churn_deltas_are_allocation_free_at_steady_state() {
+    let n = 20_000usize;
+    let mut fleet = Fleet::synthetic_pool(n, 7);
+    let mut rng = Pcg32::new(5, 2);
+    // warm with full flips so the delta scratch hits its high-water mark
+    fleet.apply_churn(1.0, 1.0, &mut rng); // everyone leaves
+    fleet.apply_churn(1.0, 1.0, &mut rng); // everyone rejoins
+    let bytes = min_allocated(5, || {
+        allocated_during(|| fleet.apply_churn(0.05, 0.30, &mut rng)).0
+    });
+    assert_eq!(bytes, 0, "steady-state churn delta allocated {bytes} bytes");
 }

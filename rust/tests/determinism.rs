@@ -12,6 +12,9 @@
 //! * different seeds ⇒ diverging sampled cohorts;
 //! * a seeded 50k-client / sample-256 scenario with scripted churn runs
 //!   to completion quickly and replays identical round metrics;
+//! * the same holds at **1M clients** (ISSUE 6): thread-count-invariant
+//!   replay, a storm checkpoint/resume round-trip, and O(cohort)
+//!   hydration through the streaming shard-size path;
 //! * only the sampled cohort is ever hydrated (peak resident data tracks
 //!   the cohort, not the fleet);
 //! * **resume equivalence**: a run restored from a snapshot taken at any
@@ -206,6 +209,74 @@ fn fleet_50k_scenario_completes_and_replays() {
 
     let b = coordinator::run_sim(&cfg).unwrap();
     assert_bit_identical(&a, &b, "50k replay");
+}
+
+/// The million-client leg (ISSUE 6): with incremental sampling and
+/// delta churn a 1M-fleet round costs O(cohort + churn-delta), so a
+/// short run completes inside a debug-profile test budget, and its full
+/// history is bit-identical across server thread counts.
+fn fleet_1m_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg =
+        ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 1_000_000, 128);
+    cfg.rounds = 2;
+    cfg.samples_per_client = 2;
+    cfg.local_steps = 1;
+    cfg.eval_every = cfg.rounds;
+    cfg.sampler = SamplerKind::AvailabilityAware;
+    cfg.scenario = ScenarioConfig::parse("churn").unwrap();
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn fleet_1m_replays_bit_identically_across_thread_counts() {
+    let mut results = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let mut cfg = fleet_1m_cfg(1_000_003);
+        cfg.threads = threads;
+        let t0 = Instant::now();
+        let r = coordinator::run_sim(&cfg).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(
+            secs < 120.0,
+            "1M-client run (threads={threads}) took {secs:.1}s (budget 120s)"
+        );
+        results.push((threads, r));
+    }
+    let (_, base) = &results[0];
+    assert_eq!(base.records.len(), 2);
+    for r in &base.records {
+        assert!(r.cohort.len() <= 128);
+        assert!(r.cohort.iter().all(|&c| c < 1_000_000));
+        assert!(!r.cohort.is_empty());
+    }
+    for (threads, r) in &results[1..] {
+        assert_bit_identical(base, r, &format!("1m threads={threads}"));
+    }
+}
+
+/// Checkpoint/resume round-trip at 1M under the full storm scenario:
+/// the snapshot codec carries the 1M availability map and the resumed
+/// run reproduces the uninterrupted control bit for bit.
+#[test]
+fn fleet_1m_storm_checkpoint_resume_round_trips() {
+    let dir = ckpt_dir("storm1m");
+    let mut cfg = fleet_1m_cfg(9_001);
+    cfg.rounds = 3;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep = 4;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let control = coordinator::run_sim(&cfg).unwrap();
+    assert_eq!(control.records.len(), 3);
+
+    let mut rcfg = cfg.clone();
+    rcfg.checkpoint_every = 0;
+    rcfg.checkpoint_dir = None;
+    rcfg.resume_from = Some(snap_path(&dir, 2));
+    let resumed = coordinator::run_sim(&rcfg).unwrap();
+    assert_bit_identical(&control, &resumed, "1m storm resume@2");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Full-observation drift fleet for the closed-loop acceptance test:
@@ -655,5 +726,44 @@ fn lazy_hydration_touches_only_the_sampled_cohort() {
     assert!(
         count <= cfg.rounds * 32,
         "hydration O(cohort) violated: {count}"
+    );
+}
+
+/// The 1M counterpart, through the *streaming* shard-size path: the
+/// source's descriptor memory is a few words (no 1M size table), and a
+/// run still hydrates only the sampled cohort's shards.
+#[test]
+fn fleet_1m_hydration_stays_o_cohort_with_streaming_sizes() {
+    use fluid::data::ShardSizes;
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::None, 1_000_000, 64);
+    cfg.rounds = 2;
+    cfg.samples_per_client = 2;
+    cfg.local_steps = 1;
+    cfg.eval_every = cfg.rounds;
+
+    let hydrated = Arc::new(AtomicUsize::new(0));
+    let source = CountingSource {
+        inner: shard_source_for_model(
+            "femnist_cnn",
+            ShardSizes::lognormal(1_000_000, cfg.samples_per_client, 0.45, cfg.seed),
+            cfg.seed,
+        ),
+        hydrated: hydrated.clone(),
+    };
+    let engine = RoundEngine::with_shard_source(
+        &cfg,
+        SimExecutor::new(sim_spec("femnist_cnn"), 2),
+        Box::new(source),
+    )
+    .unwrap();
+    let res = engine.run().unwrap();
+
+    let total: usize = res.records.iter().map(|r| r.cohort.len()).sum();
+    let count = hydrated.load(Ordering::SeqCst);
+    assert!(count <= total, "hydrated {count} shards for {total} cohort slots");
+    assert!(count > 0, "1M fleet round trained nobody");
+    assert!(
+        count <= cfg.rounds * 64,
+        "hydration O(cohort) violated at 1M: {count}"
     );
 }
