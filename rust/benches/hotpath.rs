@@ -6,8 +6,10 @@
 //!   `--no-default-features` on CI: masked FedAvg aggregation, invariant
 //!   mask extraction, fleet cohort sampling at 50k AND 1M clients (with
 //!   an in-bench sub-linear scaling gate pinning the 1M/50k cost ratio),
-//!   scenario churn at both scales, a full sim-backend fleet round, and
-//!   snapshot encode/decode.
+//!   scenario churn at both scales, a full sim-backend fleet round, the
+//!   sharded aggregator tree at 50k (with an in-bench gate pinning the
+//!   4-shard round to <= 1.25x the single-engine round, DESIGN.md §11),
+//!   the shard wire codec round trip, and snapshot encode/decode.
 //! * **PJRT sections** — `train_step` / `eval_step` / `delta_step` per
 //!   model, tensor→literal conversion, and one full coordinator round;
 //!   these need AOT artifacts and skip cleanly when the session cannot
@@ -373,6 +375,83 @@ fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
     });
     println!("{}", m.report());
     all.push(m);
+
+    // sharded multi-aggregator tree (DESIGN.md §11): the same 50k storm
+    // fleet run once on the plain executor and once split across 4 shard
+    // workers. The output is bit-identical by construction (pinned in
+    // tests/sharded_determinism.rs); here the *cost* is pinned — the
+    // shard wire encode/decode plus the root's ordered re-fold must stay
+    // within SHARD_GATE of the single-engine round, or the tree is
+    // paying for copies the pooled codec was designed to avoid. Both
+    // legs pay the identical 50k fleet setup, so the ratio isolates the
+    // per-round sharding overhead conservatively.
+    const SHARD_GATE: f64 = 1.25;
+    let mut scfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 50_000, 256);
+    scfg.rounds = 3;
+    scfg.samples_per_client = 4;
+    scfg.local_steps = 1;
+    scfg.eval_every = scfg.rounds;
+    scfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    scfg.seed = 20_260_729;
+    let m1 = b.run("sharded/round-50k", || {
+        let res = coordinator::run_sim(&scfg).unwrap();
+        std::hint::black_box(res.total_vtime);
+    });
+    println!("{}", m1.report());
+    scfg.shards = 4;
+    let m4 = b.run("sharded/round-4shard-50k", || {
+        let res = coordinator::run_sim(&scfg).unwrap();
+        std::hint::black_box(res.total_vtime);
+    });
+    println!("{}", m4.report());
+    let ratio = m4.min_s / m1.min_s.max(1e-12);
+    println!("sharded: 4-shard/single min ratio {ratio:.2} (gate {SHARD_GATE:.2}x)");
+    assert!(
+        ratio < SHARD_GATE,
+        "4-shard 50k round costs {ratio:.2}x the single-engine round (gate {SHARD_GATE:.2}x) \
+         — the shard wire/fold overhead is no longer O(message)"
+    );
+    all.push(m1);
+    all.push(m4);
+
+    // shard wire codec round trip with warm buffers: a realistic
+    // 16-client slice (a 64x32 weight + 32-bias pair each) through
+    // encode_message/decode_message, columns recycled through the
+    // scratch pool exactly as the root does per round (the alloc gate in
+    // tests/alloc_gate.rs pins this path to O(message) shells)
+    {
+        use fluid::engine::wire::{decode_message, encode_message, ShardMessage};
+        use fluid::fl::LocalResult;
+        let items: Vec<Result<LocalResult, String>> = (0..16)
+            .map(|i| {
+                Ok(LocalResult {
+                    params: vec![
+                        Tensor::from_vec(&[64, 32], vec![0.5 + i as f32; 64 * 32]),
+                        Tensor::from_vec(&[32], vec![1.0; 32]),
+                    ],
+                    mean_loss: 0.25,
+                    mean_acc: 0.5,
+                    steps: 4,
+                    weight: 6.0,
+                })
+            })
+            .collect();
+        let msg = ShardMessage::Results { shard: 1, round: 9, base: 32, items };
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(&msg, &mut blob, &mut frame);
+        let m = b.run("sharded/wire-encode-decode", || {
+            encode_message(&msg, &mut blob, &mut frame);
+            let decoded = decode_message(&frame, &mut scratch).unwrap();
+            if let ShardMessage::Results { items, .. } = decoded {
+                for r in items.into_iter().flatten() {
+                    scratch.recycle(r.params);
+                }
+            }
+            std::hint::black_box(frame.len());
+        });
+        println!("{}", m.report());
+        all.push(m);
+    }
 
     // snapshot codec over a representative mid-run state
     let snap = synthetic_snapshot(&spec, 2000, 50);

@@ -27,22 +27,45 @@
 //!   fleet-scale scenario studies and the determinism suite.
 
 use super::{ExperimentConfig, ExperimentResult};
-use crate::engine::{LocalExecutor, RoundEngine, SimExecutor};
+use crate::engine::{ClientExecutor, LocalExecutor, RoundEngine, ShardedExecutor, SimExecutor};
 use crate::model::sim_spec;
 use crate::runtime::Session;
 use anyhow::Context;
+
+/// Does this config route through the sharded multi-aggregator tree?
+/// `--shards 1` without shard-fault knobs stays on the plain executor —
+/// not for correctness (a 1-shard tree is bit-identical, pinned by the
+/// determinism suite) but to keep the default path wire-free.
+fn sharded(cfg: &ExperimentConfig) -> bool {
+    cfg.shards > 1 || cfg.shard_crash_after.is_some()
+}
+
+fn run_engine<E: ClientExecutor>(
+    cfg: &ExperimentConfig,
+    executor: E,
+) -> crate::Result<ExperimentResult> {
+    if sharded(cfg) {
+        let tree = ShardedExecutor::with_fault(
+            executor,
+            cfg.shards,
+            cfg.shard_crash_after,
+            cfg.shard_retry,
+        );
+        RoundEngine::new(cfg, tree)?.run()
+    } else {
+        RoundEngine::new(cfg, executor)?.run()
+    }
+}
 
 /// Run one experiment to completion against real artifacts.
 pub fn run(sess: &Session, cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
     let runner = sess
         .runner(&cfg.model)
         .with_context(|| format!("loading artifacts for {}", cfg.model))?;
-    let engine = RoundEngine::new(cfg, LocalExecutor::new(&runner, cfg.threads))?;
-    engine.run()
+    run_engine(cfg, LocalExecutor::new(&runner, cfg.threads))
 }
 
 /// Run one experiment through the runtime-free simulation backend.
 pub fn run_sim(cfg: &ExperimentConfig) -> crate::Result<ExperimentResult> {
-    let engine = RoundEngine::new(cfg, SimExecutor::new(sim_spec(&cfg.model), cfg.threads))?;
-    engine.run()
+    run_engine(cfg, SimExecutor::new(sim_spec(&cfg.model), cfg.threads))
 }

@@ -103,6 +103,20 @@ pub struct ExperimentConfig {
     /// completed, after any due checkpoint was written; the `fluid`
     /// binary translates it to exit code 137 (as if SIGKILLed)
     pub crash_after: Option<usize>,
+    /// aggregator shards: split each round's cohort across this many
+    /// shard workers behind `engine::ShardedExecutor` (1 = the plain
+    /// single-engine path). Purely topological — results are
+    /// bit-identical at every value, and snapshots carry no shard state
+    /// (a run checkpointed under N shards resumes under M).
+    pub shards: usize,
+    /// shard-level fault injection: kill shard `.0` the first time it
+    /// starts round ≥ `.1`. Without [`ExperimentConfig::shard_retry`]
+    /// the run aborts with an `engine::ShardFault` error (exit 137 in
+    /// the binary); with it, the root re-dispatches the dead slice.
+    pub shard_crash_after: Option<(usize, usize)>,
+    /// re-dispatch a killed shard's slice at the root instead of
+    /// failing the round
+    pub shard_retry: bool,
 }
 
 impl ExperimentConfig {
@@ -145,6 +159,9 @@ impl ExperimentConfig {
             checkpoint_keep: 3,
             resume_from: None,
             crash_after: None,
+            shards: 1,
+            shard_crash_after: None,
+            shard_retry: false,
         }
     }
 
@@ -234,6 +251,14 @@ impl ExperimentConfig {
                 "--adapt ewma is incompatible with --static-stragglers \
                  (freezing the straggler set after the first detection \
                  disables the feedback loop entirely)"
+            );
+        }
+        anyhow::ensure!(self.shards >= 1, "shards must be at least 1");
+        if let Some((shard, _)) = self.shard_crash_after {
+            anyhow::ensure!(
+                shard < self.shards,
+                "shard_crash_after names shard {shard}, but only {} shard(s) exist",
+                self.shards
             );
         }
         Ok(())

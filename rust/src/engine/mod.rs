@@ -7,7 +7,11 @@
 //! * [`ClientExecutor`] — where per-client work executes, and the only
 //!   layer that touches a runtime: [`LocalExecutor`] is the PJRT-backed
 //!   in-process thread-pool backend, [`SimExecutor`] the runtime-free
-//!   deterministic simulation backend (fleet-scale determinism suite).
+//!   deterministic simulation backend (fleet-scale determinism suite),
+//!   and [`ShardedExecutor`] the multi-aggregator tree that fans a
+//!   round's cohort out to N shards over the [`wire`] framing and folds
+//!   the slices back in `tree_reduce`'s fixed order — bit-identical to
+//!   the single-engine path at every shard count (DESIGN.md §11).
 //! * [`EventScheduler`] — the virtual-time model: per-client latencies
 //!   become arrival *events*, and each [`SyncMode`] resolves those events
 //!   into a barrier decision instead of an implicit `fold(max)`.
@@ -46,11 +50,14 @@ pub mod executor;
 pub mod plan;
 pub mod scenario;
 pub mod sched;
+pub mod sharded;
+pub mod wire;
 
 pub use executor::{ClientExecutor, LocalExecutor, SimExecutor, TrainJob};
 pub use plan::{MaskTable, RateTable, RoundOutcome, RoundPlan};
 pub use scenario::{ScenarioConfig, ScenarioSim};
 pub use sched::{ClientArrival, EventScheduler, Resolution};
+pub use sharded::{ShardFault, ShardedExecutor};
 
 use crate::coordinator::{ExperimentConfig, ExperimentResult, RoundRecord};
 use crate::data::{partition, FlData, ShardSizes, ShardSource, Split};

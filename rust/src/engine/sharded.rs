@@ -1,0 +1,535 @@
+//! Sharded multi-aggregator execution behind the [`ClientExecutor`]
+//! seam (DESIGN.md §11).
+//!
+//! [`ShardedExecutor`] splits each round's cohort into `N` contiguous
+//! slices — shard `s` owns jobs `[s·n/N, (s+1)·n/N)` — and runs every
+//! slice on its own scoped worker thread against the wrapped inner
+//! executor. Each shard packages its slice's per-client outcomes into a
+//! framed [`wire::ShardMessage`] and ships it to the root over a
+//! [`wire::FrameTx`] channel; the root folds the shard messages through
+//! [`tree_reduce`]'s fixed pairwise chunk order and hands the engine one
+//! job-aligned result vector.
+//!
+//! **Bit-identity contract.** Per-client work is a pure function of
+//! `(global params, job)` for every in-tree backend, so the finest
+//! *exact-mergeable* partial a shard can contribute is its ordered slice
+//! of per-client results — floats travel as raw bit patterns and
+//! concatenation of contiguous slices is associative, which is what
+//! makes the `tree_reduce` fold order-preserving at every shard count.
+//! The floating-point reductions themselves (masked FedAvg, invariant
+//! observation) then run at the root through the *same* fixed-CHUNK
+//! engine code a single-engine run uses; a per-shard float pre-sum would
+//! break bit-identity the moment the shard count changed, and is exactly
+//! what this design refuses to do. Net effect: every report is
+//! bit-identical across `--shards` ∈ {1, 2, 4, 8, …}, every `--threads`
+//! value and every `SyncMode` (pinned by `tests/sharded_determinism.rs`).
+//!
+//! Because the engine above this seam is unchanged, snapshots carry no
+//! shard state at all — a checkpoint taken under N shards resumes
+//! bit-identically under M shards (the N→M rule, DESIGN.md §11).
+//!
+//! **Fault injection.** `crash = Some((shard, round))` kills that shard
+//! the first time it starts round ≥ `round`: the worker sends a
+//! [`wire::ShardMessage::Fault`] frame instead of results. Without
+//! `retry` the root fails the slice cleanly — every slot surfaces a
+//! [`ShardFault`] error, which the engine propagates *before* touching
+//! any global state, so nothing partial leaks into the model. With
+//! `retry` the root re-dispatches the dead shard's slice on its own
+//! inner executor; purity makes the retried slice bit-identical to what
+//! the shard would have produced.
+
+use crate::data::Split;
+use crate::dropout::MaskSet;
+use crate::fl::parallel::tree_reduce;
+use crate::fl::{AggScratch, Client, LocalResult};
+use crate::model::ModelSpec;
+use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use super::executor::{ClientExecutor, TrainJob};
+use super::wire::{self, FrameRx, FrameTx, ShardMessage};
+
+/// Marker error for shard-level fault injection: a shard was killed
+/// mid-round and retry is disabled, so its slice of the round is lost.
+/// The engine aborts the round before any aggregation or observation
+/// runs; the `fluid` binary downcasts to this and exits 137, exactly
+/// like [`super::FaultInjected`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardFault {
+    /// which shard died
+    pub shard: usize,
+    /// the round it was executing
+    pub round: usize,
+}
+
+impl std::fmt::Display for ShardFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shard {} killed mid-round {}: its cohort slice was lost",
+            self.shard, self.round
+        )
+    }
+}
+
+impl std::error::Error for ShardFault {}
+
+/// Per-shard reusable buffers: encode staging + finished frame on the
+/// shard side, receive buffer + tensor-pool scratch on the root side.
+/// One lane per shard keeps the root's parallel decode contention-free.
+#[derive(Default)]
+struct ShardLane {
+    blob: Vec<u8>,
+    frame: Vec<u8>,
+    rx_buf: Vec<u8>,
+    scratch: AggScratch,
+}
+
+/// Multi-aggregator tree over an inner [`ClientExecutor`]: N shard
+/// workers, wire-framed shard→root messages, deterministic root fold.
+pub struct ShardedExecutor<E> {
+    inner: E,
+    shards: usize,
+    /// kill `(shard, round)`: that shard dies the first time it starts
+    /// a round with index ≥ `round`
+    crash: Option<(usize, usize)>,
+    /// on a shard fault, re-dispatch the slice at the root instead of
+    /// failing the round
+    retry: bool,
+    fired: AtomicBool,
+    lanes: Vec<Mutex<ShardLane>>,
+}
+
+/// Shard `s`'s contiguous slice of an `n`-job round under `shards`
+/// shards. Depends only on `(n, shards, s)` — never on thread timing —
+/// so the partition itself is deterministic.
+fn slice_bounds(n: usize, shards: usize, s: usize) -> (usize, usize) {
+    (s * n / shards, (s + 1) * n / shards)
+}
+
+/// A slice's worth of per-slot copies of one error.
+fn err_slice<T, F: Fn() -> anyhow::Error>(len: usize, make: F) -> Vec<crate::Result<T>> {
+    (0..len).map(|_| Err(make())).collect()
+}
+
+impl<E: ClientExecutor> ShardedExecutor<E> {
+    pub fn new(inner: E, shards: usize) -> Self {
+        Self::with_fault(inner, shards, None, false)
+    }
+
+    /// Build with shard-level fault injection (see the module docs).
+    pub fn with_fault(
+        inner: E,
+        shards: usize,
+        crash_after: Option<(usize, usize)>,
+        retry: bool,
+    ) -> Self {
+        let shards = shards.max(1);
+        Self {
+            inner,
+            shards,
+            crash: crash_after,
+            retry,
+            fired: AtomicBool::new(false),
+            lanes: (0..shards).map(|_| Mutex::new(ShardLane::default())).collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards
+    }
+
+    /// Does the injected fault fire for `shard` at `round`? Fires at
+    /// most once per process — the "restarted" shard works normally
+    /// afterwards, which is what the retry path relies on.
+    fn fault_fires(&self, shard: usize, round: Option<usize>) -> bool {
+        match (self.crash, round) {
+            (Some((cs, after)), Some(r)) if cs == shard && r >= after => {
+                !self.fired.swap(true, Ordering::SeqCst)
+            }
+            _ => false,
+        }
+    }
+}
+
+impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
+    fn spec(&self) -> &ModelSpec {
+        self.inner.spec()
+    }
+
+    fn threads(&self) -> usize {
+        self.inner.threads()
+    }
+
+    fn run_clients(
+        &self,
+        cohort: &[&Client],
+        masks: &[&MaskSet],
+        params: &[Tensor],
+        jobs: &[TrainJob],
+    ) -> Vec<crate::Result<LocalResult>> {
+        let n = jobs.len();
+        let shards = self.shards;
+        let round = jobs.first().map(|j| j.round);
+
+        // dispatch: one scoped worker + one frame channel per shard
+        let mut txs = Vec::with_capacity(shards);
+        let mut rxs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = wire::mem_channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        std::thread::scope(|scope| {
+            for (s, mut tx) in txs.into_iter().enumerate() {
+                scope.spawn(move || {
+                    let (lo, hi) = slice_bounds(n, shards, s);
+                    let msg = if self.fault_fires(s, round) {
+                        ShardMessage::Fault { shard: s, round: round.unwrap_or(0) }
+                    } else {
+                        let items = self
+                            .inner
+                            .run_clients(&cohort[lo..hi], &masks[lo..hi], params, &jobs[lo..hi])
+                            .into_iter()
+                            .map(|r| r.map_err(|e| format!("{e:#}")))
+                            .collect();
+                        ShardMessage::Results {
+                            shard: s,
+                            round: round.unwrap_or(0),
+                            base: lo,
+                            items,
+                        }
+                    };
+                    let mut lane = self.lanes[s].lock().expect("shard lane poisoned");
+                    let lane = &mut *lane;
+                    wire::encode_message(&msg, &mut lane.blob, &mut lane.frame);
+                    let _ = tx.send(&lane.frame);
+                });
+            }
+        });
+
+        // collect exactly one frame per shard into that shard's lane
+        let mut recvs: Vec<crate::Result<()>> = Vec::with_capacity(shards);
+        for (s, mut rx) in rxs.into_iter().enumerate() {
+            let mut lane = self.lanes[s].lock().expect("shard lane poisoned");
+            recvs.push(rx.recv_into(&mut lane.rx_buf));
+        }
+
+        // root fold: decode each shard's slice and combine through the
+        // fixed pairwise tree — ordered concatenation of contiguous
+        // slices, so the output is job-aligned at every shard count
+        let decode_shard = |s: usize| -> Vec<crate::Result<LocalResult>> {
+            let (lo, hi) = slice_bounds(n, shards, s);
+            let want = hi - lo;
+            if let Err(e) = &recvs[s] {
+                return err_slice(want, || anyhow::anyhow!("shard {s} transport failed: {e:#}"));
+            }
+            let mut lane = self.lanes[s].lock().expect("shard lane poisoned");
+            let lane = &mut *lane;
+            match wire::decode_message(&lane.rx_buf, &mut lane.scratch) {
+                Ok(ShardMessage::Results { base, items, .. })
+                    if base == lo && items.len() == want =>
+                {
+                    items
+                        .into_iter()
+                        .map(|r| r.map_err(|e| anyhow::anyhow!(e)))
+                        .collect()
+                }
+                Ok(ShardMessage::Fault { shard, round }) => {
+                    if self.retry {
+                        // purity makes the retried slice bit-identical
+                        // to what the dead shard would have sent
+                        self.inner.run_clients(
+                            &cohort[lo..hi],
+                            &masks[lo..hi],
+                            params,
+                            &jobs[lo..hi],
+                        )
+                    } else {
+                        err_slice(want, || anyhow::Error::new(ShardFault { shard, round }))
+                    }
+                }
+                Ok(_) => err_slice(want, || anyhow::anyhow!("shard {s} sent a malformed slice")),
+                Err(e) => err_slice(want, || anyhow::anyhow!("shard {s} frame rejected: {e:#}")),
+            }
+        };
+        let parts = tree_reduce(
+            shards,
+            1,
+            self.inner.threads(),
+            |s, _| vec![(slice_bounds(n, shards, s).0, decode_shard(s))],
+            |mut a, mut b| {
+                a.append(&mut b);
+                a
+            },
+        )
+        .unwrap_or_default();
+
+        let mut out = Vec::with_capacity(n);
+        for (base, items) in parts {
+            debug_assert_eq!(base, out.len(), "shard slices must concatenate in order");
+            out.extend(items);
+        }
+        debug_assert_eq!(out.len(), n, "every job produced exactly one slot");
+        out
+    }
+
+    fn run_deltas(&self, old: &[Tensor], news: &[&[Tensor]]) -> Vec<crate::Result<Vec<Tensor>>> {
+        let n = news.len();
+        let shards = self.shards;
+
+        let mut txs = Vec::with_capacity(shards);
+        let mut rxs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = wire::mem_channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        std::thread::scope(|scope| {
+            for (s, mut tx) in txs.into_iter().enumerate() {
+                scope.spawn(move || {
+                    let (lo, hi) = slice_bounds(n, shards, s);
+                    let items = self
+                        .inner
+                        .run_deltas(old, &news[lo..hi])
+                        .into_iter()
+                        .map(|r| r.map_err(|e| format!("{e:#}")))
+                        .collect();
+                    let msg = ShardMessage::Deltas { shard: s, base: lo, items };
+                    let mut lane = self.lanes[s].lock().expect("shard lane poisoned");
+                    let lane = &mut *lane;
+                    wire::encode_message(&msg, &mut lane.blob, &mut lane.frame);
+                    let _ = tx.send(&lane.frame);
+                });
+            }
+        });
+
+        let mut recvs: Vec<crate::Result<()>> = Vec::with_capacity(shards);
+        for (s, mut rx) in rxs.into_iter().enumerate() {
+            let mut lane = self.lanes[s].lock().expect("shard lane poisoned");
+            recvs.push(rx.recv_into(&mut lane.rx_buf));
+        }
+
+        let decode_shard = |s: usize| -> Vec<crate::Result<Vec<Tensor>>> {
+            let (lo, hi) = slice_bounds(n, shards, s);
+            let want = hi - lo;
+            if let Err(e) = &recvs[s] {
+                return err_slice(want, || anyhow::anyhow!("shard {s} transport failed: {e:#}"));
+            }
+            let mut lane = self.lanes[s].lock().expect("shard lane poisoned");
+            let lane = &mut *lane;
+            match wire::decode_message(&lane.rx_buf, &mut lane.scratch) {
+                Ok(ShardMessage::Deltas { base, items, .. })
+                    if base == lo && items.len() == want =>
+                {
+                    items
+                        .into_iter()
+                        .map(|r| r.map_err(|e| anyhow::anyhow!(e)))
+                        .collect()
+                }
+                Ok(_) => err_slice(want, || anyhow::anyhow!("shard {s} sent a malformed slice")),
+                Err(e) => err_slice(want, || anyhow::anyhow!("shard {s} frame rejected: {e:#}")),
+            }
+        };
+        let parts = tree_reduce(
+            shards,
+            1,
+            self.inner.threads(),
+            |s, _| vec![(slice_bounds(n, shards, s).0, decode_shard(s))],
+            |mut a, mut b| {
+                a.append(&mut b);
+                a
+            },
+        )
+        .unwrap_or_default();
+
+        let mut out = Vec::with_capacity(n);
+        for (base, items) in parts {
+            debug_assert_eq!(base, out.len(), "shard slices must concatenate in order");
+            out.extend(items);
+        }
+        debug_assert_eq!(out.len(), n, "every voter produced exactly one slot");
+        out
+    }
+
+    fn evaluate(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        split: &Split,
+    ) -> crate::Result<(f64, f64)> {
+        self.inner.evaluate(params, masks, split)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::XStore;
+    use crate::engine::executor::SimExecutor;
+    use crate::model::sim_spec;
+
+    fn sim_cohort(n: usize) -> Vec<Client> {
+        (0..n)
+            .map(|i| {
+                Client::new(
+                    i * 5 + 1,
+                    0,
+                    Split {
+                        xs: XStore::F32(vec![0.0; 4 * (i + 2)]),
+                        ys: vec![0; i + 2],
+                        feature_len: 4,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    struct Round<'a> {
+        cohort: Vec<&'a Client>,
+        masks: Vec<&'a MaskSet>,
+        jobs: Vec<TrainJob>,
+    }
+
+    fn round<'a>(clients: &'a [Client], full: &'a MaskSet, round_idx: usize) -> Round<'a> {
+        Round {
+            cohort: clients.iter().collect(),
+            masks: clients.iter().map(|_| full).collect(),
+            jobs: clients
+                .iter()
+                .map(|c| TrainJob {
+                    client: c.id,
+                    round: round_idx,
+                    steps: 2,
+                    lr: 0.05,
+                    seed: 1234,
+                    use_fused: false,
+                })
+                .collect(),
+        }
+    }
+
+    fn assert_same_results(a: &[crate::Result<LocalResult>], b: &[crate::Result<LocalResult>]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+            assert_eq!(x.params, y.params);
+            assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits());
+            assert_eq!(x.mean_acc.to_bits(), y.mean_acc.to_bits());
+            assert_eq!(x.steps, y.steps);
+            assert_eq!(x.weight.to_bits(), y.weight.to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_matches_plain_executor_at_every_shard_count() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(7);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(11);
+        let r = round(&clients, &full, 3);
+        let plain_ex = SimExecutor::new(spec.clone(), 2);
+        let plain = plain_ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        for shards in [1usize, 2, 3, 4, 8, 16] {
+            let ex = ShardedExecutor::new(SimExecutor::new(spec.clone(), 2), shards);
+            let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+            assert_same_results(&plain, &got);
+            // second round through the same lanes: buffers are reused
+            let again = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+            assert_same_results(&plain, &again);
+        }
+    }
+
+    #[test]
+    fn sharded_deltas_match_plain_executor() {
+        let spec = sim_spec("femnist_cnn");
+        let old = spec.init_params(3);
+        let mut newer = old.clone();
+        for t in &mut newer {
+            for v in t.data_mut() {
+                *v += 0.25;
+            }
+        }
+        let news: Vec<&[Tensor]> = (0..5).map(|_| newer.as_slice()).collect();
+        let plain = SimExecutor::new(spec.clone(), 1).run_deltas(&old, &news);
+        for shards in [1usize, 2, 4, 8] {
+            let ex = ShardedExecutor::new(SimExecutor::new(spec.clone(), 2), shards);
+            let got = ex.run_deltas(&old, &news);
+            assert_eq!(plain.len(), got.len());
+            for (x, y) in plain.iter().zip(&got) {
+                assert_eq!(x.as_ref().unwrap(), y.as_ref().unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn killed_shard_fails_only_its_slice_with_shard_fault() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(7);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(8);
+        let r = round(&clients, &full, 5);
+        let ex = ShardedExecutor::with_fault(SimExecutor::new(spec, 1), 4, Some((1, 5)), false);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        // shard 1 of 4 over 8 jobs owns slots 2..4
+        for (i, slot) in got.iter().enumerate() {
+            if (2..4).contains(&i) {
+                let err = slot.as_ref().err().expect("doomed slice must fail");
+                let fault = err.downcast_ref::<ShardFault>().expect("typed ShardFault");
+                assert_eq!((fault.shard, fault.round), (1, 5));
+            } else {
+                assert!(slot.is_ok(), "slot {i} outside the dead shard must survive");
+            }
+        }
+    }
+
+    #[test]
+    fn fault_does_not_fire_before_its_round() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(2);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(6);
+        let early = round(&clients, &full, 1);
+        let ex = ShardedExecutor::with_fault(SimExecutor::new(spec, 1), 2, Some((0, 3)), false);
+        let before = ex.run_clients(&early.cohort, &early.masks, &params, &early.jobs);
+        assert!(before.iter().all(|r| r.is_ok()));
+        let due = round(&clients, &full, 3);
+        let got = ex.run_clients(&due.cohort, &due.masks, &params, &due.jobs);
+        assert!(got[0].is_err(), "fault fires once its round arrives");
+        // fire-once: the "restarted" shard works on the next round
+        let after = round(&clients, &full, 4);
+        let resumed = ex.run_clients(&after.cohort, &after.masks, &params, &after.jobs);
+        assert!(resumed.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn retry_redispatches_the_dead_slice_bit_identically() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(7);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(10);
+        let r = round(&clients, &full, 2);
+        let plain_ex = SimExecutor::new(spec.clone(), 2);
+        let plain = plain_ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        let ex = ShardedExecutor::with_fault(SimExecutor::new(spec, 2), 4, Some((2, 2)), true);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        assert_same_results(&plain, &got);
+    }
+
+    #[test]
+    fn empty_cohort_and_more_shards_than_jobs_are_fine() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(1);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(2);
+        let r = round(&clients, &full, 0);
+        let ex = ShardedExecutor::new(SimExecutor::new(spec.clone(), 1), 8);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        assert_eq!(got.len(), 2);
+        let none = ex.run_clients(&[], &[], &params, &[]);
+        assert!(none.is_empty());
+        let plain = SimExecutor::new(spec, 1).run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        assert_same_results(&plain, &got);
+    }
+}

@@ -1,0 +1,660 @@
+//! Process-agnostic wire framing for shard → root messages
+//! (DESIGN.md §11).
+//!
+//! The sharded executor ([`crate::engine::sharded`]) moves a shard's
+//! per-round output to the root reducer as one *frame*: the snapshot
+//! container's section framing ([`crate::snapshot::codec`] conventions —
+//! little-endian, length-prefixed, raw float bits) re-applied to a
+//! message instead of a file. A frame is
+//!
+//! ```text
+//! magic "FLWM" | version u32 | payload_len u64
+//! | section_count u32 | (id u32, start u64, len u64) x count
+//! | section blob | fnv1a-64 checksum u64
+//! ```
+//!
+//! where `payload_len` covers everything between itself and the
+//! checksum, section `start`/`len` index into the blob, and the checksum
+//! runs over every preceding byte. Readers look sections up *by id*, so
+//! a frame carrying sections this version does not know is still
+//! decodable (unknown sections are simply never read) — the same
+//! forward-compatibility rule the snapshot container follows. Decoding
+//! never panics: magic, version, lengths and the checksum are all
+//! validated before anything is interpreted or allocated, so a
+//! truncated or corrupted frame surfaces as a clean `Err`.
+//!
+//! Transport is behind the [`FrameTx`] / [`FrameRx`] pair so the message
+//! layer stays process-agnostic: [`mem_channel`] is the in-memory
+//! (scoped-thread) impl the executor uses today, [`StreamTx`] /
+//! [`StreamRx`] run the identical frames over any byte stream (pipes,
+//! sockets — see [`unix_pair`]), which is the seam a true multi-process
+//! deployment plugs into.
+//!
+//! Bit-exactness contract: tensors travel as raw IEEE-754 bit patterns
+//! ([`Writer::put_f32_bytes`]), and per-client errors travel as plain
+//! strings, so encode → decode → encode is a byte-for-byte fixpoint
+//! (pinned by the wire properties in `tests/properties.rs`).
+
+use crate::fl::{AggScratch, LocalResult};
+use crate::snapshot::{fnv1a, Reader, Writer};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context};
+
+/// Frame magic: **FL**uID **W**ire **M**essage.
+pub const WIRE_MAGIC: [u8; 4] = *b"FLWM";
+/// Wire format version. Readers reject frames from a different version;
+/// *within* a version, unknown section ids are skipped.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Section id: message header (kind, shard, round, base, item count).
+pub const SEC_HEAD: u32 = 1;
+/// Section id: the per-client item payloads.
+pub const SEC_ITEMS: u32 = 2;
+
+const KIND_RESULTS: u8 = 1;
+const KIND_DELTAS: u8 = 2;
+const KIND_FAULT: u8 = 3;
+
+/// magic + version + payload_len … section_count … checksum
+const FRAME_OVERHEAD: usize = 4 + 4 + 8 + 4 + 8;
+/// bytes per section-table entry
+const TABLE_ENTRY: usize = 4 + 8 + 8;
+
+/// Hard cap a [`StreamRx`] enforces on the length prefix before
+/// allocating — a corrupted stream cannot trigger a huge reservation.
+pub const MAX_FRAME_BYTES: u64 = 1 << 32;
+
+// ---------------------------------------------------------------------
+// frame container
+// ---------------------------------------------------------------------
+
+/// Assemble a checksummed frame from `(section id, bytes)` pairs into
+/// `out` (cleared first; capacity is reused across rounds).
+pub fn encode_frame(sections: &[(u32, &[u8])], out: &mut Vec<u8>) {
+    out.clear();
+    let blob_len: usize = sections.iter().map(|(_, b)| b.len()).sum();
+    let payload = 4 + TABLE_ENTRY * sections.len() + blob_len;
+    out.reserve(FRAME_OVERHEAD - 4 + payload);
+    out.extend_from_slice(&WIRE_MAGIC);
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload as u64).to_le_bytes());
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    let mut start = 0u64;
+    for (id, bytes) in sections {
+        out.extend_from_slice(&id.to_le_bytes());
+        out.extend_from_slice(&start.to_le_bytes());
+        out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+        start += bytes.len() as u64;
+    }
+    for (_, bytes) in sections {
+        out.extend_from_slice(bytes);
+    }
+    let sum = fnv1a(out);
+    out.extend_from_slice(&sum.to_le_bytes());
+}
+
+/// A decoded frame: validated sections, looked up by id.
+pub struct Frame<'a> {
+    sections: Vec<(u32, &'a [u8])>,
+}
+
+impl<'a> Frame<'a> {
+    /// The bytes of section `id`, if the frame carries it.
+    pub fn section(&self, id: u32) -> Option<&'a [u8]> {
+        self.sections
+            .iter()
+            .find(|(sid, _)| *sid == id)
+            .map(|(_, b)| *b)
+    }
+
+    /// Every `(id, bytes)` pair, in frame order.
+    pub fn sections(&self) -> &[(u32, &'a [u8])] {
+        &self.sections
+    }
+}
+
+/// Validate and index a frame. Every failure mode — short input, bad
+/// magic, version mismatch, checksum mismatch, lying lengths — is a
+/// clean `Err`; nothing is interpreted before the checksum passes.
+pub fn decode_frame(bytes: &[u8]) -> crate::Result<Frame<'_>> {
+    if bytes.len() < FRAME_OVERHEAD {
+        bail!(
+            "wire frame truncated: {} bytes, header+checksum need {FRAME_OVERHEAD}",
+            bytes.len()
+        );
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let mut trailer = [0u8; 8];
+    trailer.copy_from_slice(&bytes[bytes.len() - 8..]);
+    let want = u64::from_le_bytes(trailer);
+    let got = fnv1a(body);
+    if got != want {
+        bail!("wire frame checksum mismatch: computed {got:#018x}, frame says {want:#018x}");
+    }
+    let mut r = Reader::new(body);
+    let mut magic = [0u8; 4];
+    for m in &mut magic {
+        *m = r.take_u8()?;
+    }
+    if magic != WIRE_MAGIC {
+        bail!("bad wire frame magic {magic:02x?}");
+    }
+    let version = r.take_u32()?;
+    if version != WIRE_VERSION {
+        bail!("unsupported wire frame version {version} (this build speaks {WIRE_VERSION})");
+    }
+    let payload_len = r.take_u64()?;
+    if payload_len != r.remaining() as u64 {
+        bail!(
+            "wire frame payload length {payload_len} disagrees with the {} bytes present",
+            r.remaining()
+        );
+    }
+    let count = r.take_u32()? as usize;
+    let table_bytes = count
+        .checked_mul(TABLE_ENTRY)
+        .context("section count overflows")?;
+    if table_bytes > r.remaining() {
+        bail!("wire frame claims {count} sections, table does not fit");
+    }
+    let mut table = Vec::with_capacity(count);
+    for _ in 0..count {
+        let id = r.take_u32()?;
+        let start = r.take_usize()?;
+        let len = r.take_usize()?;
+        table.push((id, start, len));
+    }
+    let blob = &body[body.len() - r.remaining()..];
+    let mut sections = Vec::with_capacity(count);
+    for (id, start, len) in table {
+        let end = start
+            .checked_add(len)
+            .with_context(|| format!("section {id} range overflows"))?;
+        if end > blob.len() {
+            bail!(
+                "section {id} spans {start}..{end}, blob holds {} bytes",
+                blob.len()
+            );
+        }
+        sections.push((id, &blob[start..end]));
+    }
+    Ok(Frame { sections })
+}
+
+// ---------------------------------------------------------------------
+// shard messages
+// ---------------------------------------------------------------------
+
+/// What a shard sends the root reducer. Per-client failures are carried
+/// as plain strings (not live error values) so the message is a pure
+/// byte-level value: encode → decode → encode is a fixpoint.
+#[derive(Debug)]
+pub enum ShardMessage {
+    /// The shard's slice of per-client training results, job-aligned
+    /// with cohort positions `base .. base + items.len()`.
+    Results {
+        shard: usize,
+        round: usize,
+        base: usize,
+        items: Vec<Result<LocalResult, String>>,
+    },
+    /// The shard's slice of invariant delta-kernel outputs.
+    Deltas {
+        shard: usize,
+        base: usize,
+        items: Vec<Result<Vec<Tensor>, String>>,
+    },
+    /// The shard died mid-round (shard-level fault injection) before
+    /// producing its slice.
+    Fault { shard: usize, round: usize },
+}
+
+fn put_wire_tensor(w: &mut Writer, t: &Tensor) {
+    w.put_usizes(t.shape());
+    w.put_f32_bytes(t.data());
+}
+
+/// Decode one tensor, reusing a pooled buffer from `scratch` when a
+/// matching shape was recycled. The claimed element count is validated
+/// against the remaining frame bytes *before* any tensor is produced.
+fn take_wire_tensor(r: &mut Reader<'_>, scratch: &mut AggScratch) -> crate::Result<Tensor> {
+    let rank = r.take_usize()?;
+    if rank > 8 {
+        bail!("wire tensor rank {rank} exceeds the supported 8");
+    }
+    let mut shape = [0usize; 8];
+    let mut elems = 1usize;
+    for s in shape.iter_mut().take(rank) {
+        *s = r.take_usize()?;
+        elems = elems
+            .checked_mul(*s)
+            .context("wire tensor shape overflows")?;
+    }
+    let need = elems.checked_mul(4).context("wire tensor size overflows")?;
+    if need > r.remaining() {
+        bail!("wire tensor claims {elems} elements, only {} bytes left", r.remaining());
+    }
+    let mut t = scratch.take_out(&shape[..rank]);
+    r.take_f32_bytes_into(t.data_mut())?;
+    Ok(t)
+}
+
+/// Encode `msg` into the frame buffer `out`, staging section bytes in
+/// `blob`. Both buffers are cleared and refilled; their capacity is what
+/// a steady-state round reuses (the allocation gate pins this).
+pub fn encode_message(msg: &ShardMessage, blob: &mut Vec<u8>, out: &mut Vec<u8>) {
+    let mut w = Writer::from_vec(std::mem::take(blob));
+    let (kind, shard, round, base, count) = match msg {
+        ShardMessage::Results { shard, round, base, items } => {
+            (KIND_RESULTS, *shard, *round, *base, items.len())
+        }
+        ShardMessage::Deltas { shard, base, items } => {
+            (KIND_DELTAS, *shard, 0, *base, items.len())
+        }
+        ShardMessage::Fault { shard, round } => (KIND_FAULT, *shard, *round, 0, 0),
+    };
+    w.put_u8(kind);
+    w.put_usize(shard);
+    w.put_usize(round);
+    w.put_usize(base);
+    w.put_usize(count);
+    let head_len = w.len();
+    match msg {
+        ShardMessage::Results { items, .. } => {
+            for item in items {
+                match item {
+                    Ok(res) => {
+                        w.put_bool(true);
+                        w.put_usize(res.params.len());
+                        for t in &res.params {
+                            put_wire_tensor(&mut w, t);
+                        }
+                        w.put_f64(res.mean_loss);
+                        w.put_f64(res.mean_acc);
+                        w.put_usize(res.steps);
+                        w.put_f64(res.weight);
+                    }
+                    Err(e) => {
+                        w.put_bool(false);
+                        w.put_str(e);
+                    }
+                }
+            }
+        }
+        ShardMessage::Deltas { items, .. } => {
+            for item in items {
+                match item {
+                    Ok(tensors) => {
+                        w.put_bool(true);
+                        w.put_usize(tensors.len());
+                        for t in tensors {
+                            put_wire_tensor(&mut w, t);
+                        }
+                    }
+                    Err(e) => {
+                        w.put_bool(false);
+                        w.put_str(e);
+                    }
+                }
+            }
+        }
+        ShardMessage::Fault { .. } => {}
+    }
+    *blob = w.into_bytes();
+    encode_frame(
+        &[(SEC_HEAD, &blob[..head_len]), (SEC_ITEMS, &blob[head_len..])],
+        out,
+    );
+}
+
+/// Decode a frame back into a [`ShardMessage`]. Tensor buffers come from
+/// `scratch`'s recycle pool when shapes match, so a steady-state decode
+/// allocates O(message) at worst and nothing per column. Corrupted or
+/// truncated input is a clean `Err`, never a panic.
+pub fn decode_message(bytes: &[u8], scratch: &mut AggScratch) -> crate::Result<ShardMessage> {
+    let frame = decode_frame(bytes)?;
+    let head = frame
+        .section(SEC_HEAD)
+        .context("wire frame is missing the HEAD section")?;
+    let mut r = Reader::new(head);
+    let kind = r.take_u8()?;
+    let shard = r.take_usize()?;
+    let round = r.take_usize()?;
+    let base = r.take_usize()?;
+    let count = r.take_usize()?;
+    if kind == KIND_FAULT {
+        return Ok(ShardMessage::Fault { shard, round });
+    }
+    let items_bytes = frame
+        .section(SEC_ITEMS)
+        .context("wire frame is missing the ITEMS section")?;
+    // every item costs at least its ok/err byte, so a lying count cannot
+    // drive the Vec reservation past the frame size
+    if count > items_bytes.len() {
+        bail!("wire message claims {count} items in {} bytes", items_bytes.len());
+    }
+    let mut r = Reader::new(items_bytes);
+    match kind {
+        KIND_RESULTS => {
+            let mut items = Vec::with_capacity(count);
+            for _ in 0..count {
+                items.push(if r.take_bool()? {
+                    let nparams = r.take_usize()?;
+                    if nparams > r.remaining() {
+                        bail!("wire result claims {nparams} params, frame too short");
+                    }
+                    let mut params = Vec::with_capacity(nparams);
+                    for _ in 0..nparams {
+                        params.push(take_wire_tensor(&mut r, scratch)?);
+                    }
+                    let mean_loss = r.take_f64()?;
+                    let mean_acc = r.take_f64()?;
+                    let steps = r.take_usize()?;
+                    let weight = r.take_f64()?;
+                    Ok(LocalResult { params, mean_loss, mean_acc, steps, weight })
+                } else {
+                    Err(r.take_str()?)
+                });
+            }
+            Ok(ShardMessage::Results { shard, round, base, items })
+        }
+        KIND_DELTAS => {
+            let mut items = Vec::with_capacity(count);
+            for _ in 0..count {
+                items.push(if r.take_bool()? {
+                    let ntensors = r.take_usize()?;
+                    if ntensors > r.remaining() {
+                        bail!("wire deltas claim {ntensors} tensors, frame too short");
+                    }
+                    let mut tensors = Vec::with_capacity(ntensors);
+                    for _ in 0..ntensors {
+                        tensors.push(take_wire_tensor(&mut r, scratch)?);
+                    }
+                    Ok(tensors)
+                } else {
+                    Err(r.take_str()?)
+                });
+            }
+            Ok(ShardMessage::Deltas { shard, base, items })
+        }
+        other => bail!("unknown shard message kind {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// transport
+// ---------------------------------------------------------------------
+
+/// Sending half of a byte-frame channel. Implementations deliver each
+/// `send` as one whole frame on the receiving side.
+pub trait FrameTx: Send {
+    fn send(&mut self, frame: &[u8]) -> crate::Result<()>;
+}
+
+/// Receiving half: blocks for the next frame and leaves it in `buf`
+/// (cleared first; capacity is reused).
+pub trait FrameRx {
+    fn recv_into(&mut self, buf: &mut Vec<u8>) -> crate::Result<()>;
+}
+
+/// In-memory transport over `std::sync::mpsc` — the scoped-thread
+/// deployment. One owned `Vec<u8>` per frame: O(message), nothing per
+/// element beyond the copy.
+pub struct MemTx(std::sync::mpsc::Sender<Vec<u8>>);
+/// Receiving half of [`mem_channel`].
+pub struct MemRx(std::sync::mpsc::Receiver<Vec<u8>>);
+
+/// Build a connected in-memory frame channel.
+pub fn mem_channel() -> (MemTx, MemRx) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    (MemTx(tx), MemRx(rx))
+}
+
+impl FrameTx for MemTx {
+    fn send(&mut self, frame: &[u8]) -> crate::Result<()> {
+        self.0
+            .send(frame.to_vec())
+            .map_err(|_| anyhow::anyhow!("shard frame channel closed"))
+    }
+}
+
+impl FrameRx for MemRx {
+    fn recv_into(&mut self, buf: &mut Vec<u8>) -> crate::Result<()> {
+        let frame = self
+            .0
+            .recv()
+            .map_err(|_| anyhow::anyhow!("shard frame channel closed before a frame arrived"))?;
+        buf.clear();
+        buf.extend_from_slice(&frame);
+        Ok(())
+    }
+}
+
+/// Length-prefixed framing over any byte stream (pipe, socket): each
+/// frame travels as a `u64` little-endian byte count followed by the
+/// frame bytes. This is the process-boundary deployment of the same
+/// message layer the in-memory channel carries.
+pub struct StreamTx<W: std::io::Write + Send> {
+    w: W,
+}
+
+/// Receiving half of the stream transport.
+pub struct StreamRx<R: std::io::Read> {
+    r: R,
+}
+
+impl<W: std::io::Write + Send> StreamTx<W> {
+    pub fn new(w: W) -> Self {
+        Self { w }
+    }
+}
+
+impl<R: std::io::Read> StreamRx<R> {
+    pub fn new(r: R) -> Self {
+        Self { r }
+    }
+}
+
+impl<W: std::io::Write + Send> FrameTx for StreamTx<W> {
+    fn send(&mut self, frame: &[u8]) -> crate::Result<()> {
+        self.w.write_all(&(frame.len() as u64).to_le_bytes())?;
+        self.w.write_all(frame)?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+impl<R: std::io::Read> FrameRx for StreamRx<R> {
+    fn recv_into(&mut self, buf: &mut Vec<u8>) -> crate::Result<()> {
+        let mut len_bytes = [0u8; 8];
+        self.r
+            .read_exact(&mut len_bytes)
+            .context("reading shard frame length")?;
+        let len = u64::from_le_bytes(len_bytes);
+        if len > MAX_FRAME_BYTES {
+            bail!("shard frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap");
+        }
+        buf.clear();
+        buf.resize(len as usize, 0);
+        self.r
+            .read_exact(buf)
+            .context("reading shard frame body")?;
+        Ok(())
+    }
+}
+
+/// A connected [`StreamTx`] / [`StreamRx`] pair over an anonymous unix
+/// socket pair — one shard side, one root side, across a real OS
+/// descriptor (so the byte-stream transport is exercised end-to-end even
+/// in single-process tests).
+#[cfg(unix)]
+pub fn unix_pair() -> crate::Result<(
+    StreamTx<std::os::unix::net::UnixStream>,
+    StreamRx<std::os::unix::net::UnixStream>,
+)> {
+    let (a, b) = std::os::unix::net::UnixStream::pair().context("creating unix socket pair")?;
+    Ok((StreamTx::new(a), StreamRx::new(b)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_results() -> ShardMessage {
+        ShardMessage::Results {
+            shard: 2,
+            round: 7,
+            base: 5,
+            items: vec![
+                Ok(LocalResult {
+                    params: vec![
+                        Tensor::from_vec(&[2, 3], vec![1.0, -0.0, 2.5, f32::NAN, 4.0, -9.75]),
+                        Tensor::from_vec(&[2], vec![0.125, 7.0]),
+                    ],
+                    mean_loss: 0.75,
+                    mean_acc: 0.5,
+                    steps: 3,
+                    weight: 12.0,
+                }),
+                Err("client 9 exploded".to_string()),
+            ],
+        }
+    }
+
+    fn round_trip_fixpoint(msg: &ShardMessage) {
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(msg, &mut blob, &mut frame);
+        let mut scratch = AggScratch::new();
+        let decoded = decode_message(&frame, &mut scratch).unwrap();
+        let (mut blob2, mut frame2) = (Vec::new(), Vec::new());
+        encode_message(&decoded, &mut blob2, &mut frame2);
+        assert_eq!(frame, frame2, "encode -> decode -> encode is a fixpoint");
+    }
+
+    #[test]
+    fn every_message_kind_round_trips_to_a_byte_fixpoint() {
+        round_trip_fixpoint(&sample_results());
+        round_trip_fixpoint(&ShardMessage::Deltas {
+            shard: 0,
+            base: 0,
+            items: vec![
+                Ok(vec![Tensor::from_vec(&[3], vec![0.0, 1.0, f32::INFINITY])]),
+                Err("voter timed out".to_string()),
+                Ok(vec![]),
+            ],
+        });
+        round_trip_fixpoint(&ShardMessage::Fault { shard: 3, round: 11 });
+    }
+
+    #[test]
+    fn decode_survives_unknown_sections() {
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(&sample_results(), &mut blob, &mut frame);
+        // rebuild the frame with an extra section a future version might add
+        let parsed = decode_frame(&frame).unwrap();
+        let head = parsed.section(SEC_HEAD).unwrap().to_vec();
+        let items = parsed.section(SEC_ITEMS).unwrap().to_vec();
+        let mut extended = Vec::new();
+        encode_frame(
+            &[(SEC_HEAD, &head), (99, b"from the future"), (SEC_ITEMS, &items)],
+            &mut extended,
+        );
+        let mut scratch = AggScratch::new();
+        let decoded = decode_message(&extended, &mut scratch).unwrap();
+        match decoded {
+            ShardMessage::Results { shard, round, base, items } => {
+                assert_eq!((shard, round, base, items.len()), (2, 7, 5, 2));
+            }
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_clean_errors() {
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(&sample_results(), &mut blob, &mut frame);
+        let mut scratch = AggScratch::new();
+        // flip every byte in turn: the checksum (or, for trailer bytes,
+        // the compare against it) must reject each corruption cleanly
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0xA5;
+            assert!(decode_message(&bad, &mut scratch).is_err(), "flip at {i} accepted");
+        }
+        // every truncation point errors too
+        for cut in 0..frame.len() {
+            assert!(
+                decode_message(&frame[..cut], &mut scratch).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_reuses_pooled_tensor_buffers() {
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(&sample_results(), &mut blob, &mut frame);
+        let mut scratch = AggScratch::new();
+        let first = decode_message(&frame, &mut scratch).unwrap();
+        if let ShardMessage::Results { items, .. } = first {
+            for res in items.into_iter().flatten() {
+                scratch.recycle(res.params);
+            }
+        }
+        // second decode draws the same shapes back out of the pool
+        let second = decode_message(&frame, &mut scratch).unwrap();
+        match second {
+            ShardMessage::Results { items, .. } => {
+                let res = items[0].as_ref().unwrap();
+                assert_eq!(res.params[0].shape(), &[2, 3]);
+                assert_eq!(res.params[0].data()[0], 1.0);
+                assert!(res.params[0].data()[3].is_nan());
+            }
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mem_channel_delivers_whole_frames() {
+        let (mut tx, mut rx) = mem_channel();
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(&ShardMessage::Fault { shard: 1, round: 4 }, &mut blob, &mut frame);
+        tx.send(&frame).unwrap();
+        let mut buf = Vec::new();
+        rx.recv_into(&mut buf).unwrap();
+        assert_eq!(buf, frame);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_stream_transport_carries_identical_frames() {
+        let (mut tx, mut rx) = unix_pair().unwrap();
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(&sample_results(), &mut blob, &mut frame);
+        let sent = frame.clone();
+        let writer = std::thread::spawn(move || {
+            tx.send(&frame).unwrap();
+        });
+        let mut buf = Vec::new();
+        rx.recv_into(&mut buf).unwrap();
+        writer.join().unwrap();
+        assert_eq!(buf, sent);
+        let mut scratch = AggScratch::new();
+        let decoded = decode_message(&buf, &mut scratch).unwrap();
+        let (mut blob2, mut frame2) = (Vec::new(), Vec::new());
+        encode_message(&decoded, &mut blob2, &mut frame2);
+        assert_eq!(frame2, sent, "fixpoint survives the stream transport");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn stream_rx_rejects_absurd_length_prefix_before_allocating() {
+        use std::io::Write;
+        let (mut a, b) = std::os::unix::net::UnixStream::pair().unwrap();
+        a.write_all(&u64::MAX.to_le_bytes()).unwrap();
+        let mut rx = StreamRx::new(b);
+        let mut buf = Vec::new();
+        assert!(rx.recv_into(&mut buf).is_err());
+        assert!(buf.capacity() < 1024, "no huge reservation happened");
+    }
+}

@@ -71,9 +71,12 @@ fn train_args(program: &str) -> Args {
         .opt("checkpoint-keep", "3", "keep only the newest N snapshots")
         .opt("resume", "", "resume from a snapshot file, or a dir (newest snapshot)")
         .opt("crash-after", "", "fault injection: exit(137) once N rounds completed (soak)")
+        .opt("shards", "1", "aggregator shards (bit-identical at every value)")
+        .opt("shard-crash-after", "", "fault injection: kill shard S at round R (format S:R)")
         .opt("out", "", "write result JSON to this path")
         .opt("artifacts", "", "artifacts dir (default: ./artifacts or $FLUID_ARTIFACTS)")
         .flag("sim", "run the runtime-free simulation backend (no artifacts)")
+        .flag("shard-retry", "re-dispatch a killed shard's slice instead of failing")
         .flag("fluctuate", "enable the Fig-4b runtime fluctuation protocol")
         .flag("static-stragglers", "freeze the straggler set after first detection")
         .flag("synthetic-fleet", "use a synthetic fleet instead of the 5 phones")
@@ -173,6 +176,21 @@ fn build_config(a: &Args) -> ExperimentConfig {
     if !a.get("crash-after").is_empty() {
         cfg.crash_after = Some(a.get_usize("crash-after"));
     }
+    cfg.shards = a.get_usize("shards").max(1);
+    if !a.get("shard-crash-after").is_empty() {
+        let spec = a.get("shard-crash-after");
+        let parsed = spec.split_once(':').and_then(|(s, r)| {
+            Some((s.trim().parse::<usize>().ok()?, r.trim().parse::<usize>().ok()?))
+        });
+        match parsed {
+            Some(pair) => cfg.shard_crash_after = Some(pair),
+            None => {
+                eprintln!("invalid --shard-crash-after {spec:?} (expected SHARD:ROUND)");
+                std::process::exit(2);
+            }
+        }
+    }
+    cfg.shard_retry = a.get_flag("shard-retry");
     // the sim/fleet paths serve only the built-in synthetic datasets;
     // fail with a clean message instead of panicking deep in the engine
     // (the classic artifact path accepts any model with a manifest and
@@ -247,6 +265,13 @@ fn cmd_train(argv: &[String]) -> i32 {
             // --crash-after fault injection: die as if SIGKILLed (137),
             // which is what the kill/resume soak workflows assert on
             if let Some(f) = e.downcast_ref::<fluid::engine::FaultInjected>() {
+                eprintln!("fluid: {f} — exiting 137");
+                return 137;
+            }
+            // --shard-crash-after without --shard-retry: a shard died
+            // mid-round and its slice is unrecoverable — same exit
+            // convention as a whole-process kill
+            if let Some(f) = e.downcast_ref::<fluid::engine::ShardFault>() {
                 eprintln!("fluid: {f} — exiting 137");
                 return 137;
             }

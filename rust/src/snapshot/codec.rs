@@ -118,6 +118,20 @@ impl Writer {
         }
     }
 
+    /// Length-prefixed f32 slice stored as one raw little-endian byte
+    /// blob — the bulk twin of [`Writer::put_f32s`] for the wire hot
+    /// path. Same bit-exactness guarantee (raw IEEE-754 bit patterns),
+    /// but the prefix counts *bytes*, so the reader can validate and
+    /// copy straight into an existing tensor buffer without a per-element
+    /// length walk. Read back with [`Reader::take_f32_bytes_into`].
+    pub fn put_f32_bytes(&mut self, v: &[f32]) {
+        self.put_usize(v.len() * 4);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
     pub fn put_f64s(&mut self, v: &[f64]) {
         self.put_usize(v.len());
         for &x in v {
@@ -249,6 +263,25 @@ impl<'a> Reader<'a> {
         let n = self.take_len(8)?;
         (0..n).map(|_| self.take_f64()).collect()
     }
+
+    /// Read a [`Writer::put_f32_bytes`] blob into `out`, overwriting
+    /// every element. Like every other take, the byte length is
+    /// validated — against the remaining input *and* against `out` —
+    /// before anything is copied.
+    pub fn take_f32_bytes_into(&mut self, out: &mut [f32]) -> Result<()> {
+        let raw = self.take_bytes()?;
+        if raw.len() != out.len() * 4 {
+            bail!(
+                "f32 blob holds {} bytes, destination needs {}",
+                raw.len(),
+                out.len() * 4
+            );
+        }
+        for (dst, src) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *dst = f32::from_bits(u32::from_le_bytes([src[0], src[1], src[2], src[3]]));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -285,6 +318,27 @@ mod tests {
         assert_eq!(r.take_u32s().unwrap(), vec![1, 2, 3]);
         assert_eq!(r.take_usizes().unwrap(), vec![9, 8]);
         assert!(r.is_done());
+    }
+
+    #[test]
+    fn f32_byte_blob_round_trips_bit_exactly() {
+        let src = [1.5f32, -0.0, f32::NAN, f32::MIN_POSITIVE, 3.25e9];
+        let mut w = Writer::new();
+        w.put_f32_bytes(&src);
+        let bytes = w.into_bytes();
+        let mut out = [0.0f32; 5];
+        Reader::new(&bytes).take_f32_bytes_into(&mut out).unwrap();
+        for (a, b) in src.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // destination length mismatch is a clean error
+        let mut short = [0.0f32; 4];
+        assert!(Reader::new(&bytes).take_f32_bytes_into(&mut short).is_err());
+        // truncation at every cut is a clean error
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(r.take_f32_bytes_into(&mut out).is_err(), "cut at {cut}");
+        }
     }
 
     #[test]

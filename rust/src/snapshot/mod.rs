@@ -1030,6 +1030,13 @@ mod tests {
         b.checkpoint_keep = 9;
         b.resume_from = Some("/tmp/y".into());
         b.crash_after = Some(4);
+        // shard topology is non-semantic too — this is the N→M resume
+        // rule (DESIGN.md §11): a snapshot taken under 4 shards must
+        // resume under 1 shard (and vice versa) without a fingerprint
+        // mismatch, because results are bit-identical either way
+        b.shards = 4;
+        b.shard_crash_after = Some((1, 2));
+        b.shard_retry = true;
         assert_eq!(
             config_fingerprint(&a),
             config_fingerprint(&b),

@@ -11,6 +11,12 @@
 //! `threads = 1` (the inline, spawn-free path) so thread-stack setup
 //! does not pollute the counter; the thread-count property tests pin
 //! that the parallel path computes identical bytes.
+//!
+//! The shard wire codec (DESIGN.md §11) gets its own gate: steady-state
+//! `encode_message` reuses its blob/frame buffers outright, and
+//! `decode_message` allocates only O(message) container shells — the
+//! tensor columns themselves come back out of the [`AggScratch`]
+//! recycle pool, never a per-column fresh `Vec`.
 
 use fluid::fl::{
     fedavg_into, sample_cohort, AggScratch, AggregateMode, ClientUpdate, Fleet, SamplerKind,
@@ -190,4 +196,75 @@ fn churn_deltas_are_allocation_free_at_steady_state() {
         allocated_during(|| fleet.apply_churn(0.05, 0.30, &mut rng)).0
     });
     assert_eq!(bytes, 0, "steady-state churn delta allocated {bytes} bytes");
+}
+
+#[test]
+fn wire_codec_reuses_buffers_at_steady_state() {
+    use fluid::engine::wire::{decode_message, encode_message, ShardMessage};
+    use fluid::fl::LocalResult;
+
+    // a realistic shard slice: 16 clients, a 64x32 weight + 32-bias pair
+    // each, so the column data dwarfs every container shell
+    let nitems = 16usize;
+    let shape = [64usize, 32];
+    let elems: usize = shape.iter().product();
+    let items: Vec<Result<LocalResult, String>> = (0..nitems)
+        .map(|i| {
+            Ok(LocalResult {
+                params: vec![
+                    Tensor::from_vec(&shape, vec![0.5 + i as f32; elems]),
+                    Tensor::from_vec(&[shape[1]], vec![1.0; shape[1]]),
+                ],
+                mean_loss: 0.25,
+                mean_acc: 0.5,
+                steps: 4,
+                weight: 6.0,
+            })
+        })
+        .collect();
+    let msg = ShardMessage::Results { shard: 1, round: 9, base: 32, items };
+    let data_bytes = (nitems * (elems + shape[1]) * 4) as u64;
+
+    let (mut blob, mut frame) = (Vec::new(), Vec::new());
+    let mut scratch = AggScratch::new();
+    // warm: blob/frame reach their high-water capacity and the recycle
+    // pool learns both tensor shapes
+    for _ in 0..2 {
+        encode_message(&msg, &mut blob, &mut frame);
+        let decoded = decode_message(&frame, &mut scratch).unwrap();
+        if let ShardMessage::Results { items, .. } = decoded {
+            for r in items.into_iter().flatten() {
+                scratch.recycle(r.params);
+            }
+        }
+    }
+
+    // steady-state encode rewrites the same two buffers in place
+    let enc = min_allocated(5, || {
+        allocated_during(|| encode_message(&msg, &mut blob, &mut frame)).0
+    });
+    assert!(enc <= 64, "steady-state wire encode allocated {enc} bytes");
+
+    // steady-state decode: O(message) shells (item/param vectors, shape
+    // headers), never the columns — those come from the pool
+    let shell_budget = (nitems as u64) * 512 + 8192;
+    assert!(
+        shell_budget * 4 < data_bytes,
+        "gate budget {shell_budget} is not far below the {data_bytes}-byte column data"
+    );
+    let dec = min_allocated(5, || {
+        let (bytes, decoded) =
+            allocated_during(|| decode_message(&frame, &mut scratch).unwrap());
+        if let ShardMessage::Results { items, .. } = decoded {
+            for r in items.into_iter().flatten() {
+                scratch.recycle(r.params);
+            }
+        }
+        bytes
+    });
+    assert!(
+        dec <= shell_budget,
+        "steady-state wire decode allocated {dec} bytes (shell budget {shell_budget}, \
+         column data {data_bytes})"
+    );
 }

@@ -1148,3 +1148,296 @@ fn prop_snapshot_codec_round_trips() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// shard wire framing (DESIGN.md §11)
+// ---------------------------------------------------------------------
+
+fn rand_wire_tensor(rng: &mut fluid::util::prng::Pcg32) -> Tensor {
+    let rank = 1 + (rng.next_u32() as usize) % 3;
+    let shape: Vec<usize> = (0..rank).map(|_| 1 + (rng.next_u32() as usize) % 5).collect();
+    let n: usize = shape.iter().product();
+    // raw IEEE-754 bit patterns: NaNs, infinities, denormals and all
+    let data: Vec<f32> = (0..n).map(|_| f32::from_bits(rng.next_u32())).collect();
+    Tensor::from_vec(&shape, data)
+}
+
+/// A randomized shard message of the given kind, derived entirely from
+/// the seed so cases replay and shrink deterministically.
+fn rand_wire_message(kind: usize, nitems: usize, seed: u64) -> fluid::engine::wire::ShardMessage {
+    use fluid::engine::wire::ShardMessage;
+    use fluid::fl::LocalResult;
+    let mut rng = fluid::util::prng::Pcg32::new(seed, 91);
+    let shard = (rng.next_u32() as usize) % 16;
+    let round = (rng.next_u32() as usize) % 1000;
+    let base = (rng.next_u32() as usize) % 5000;
+    match kind {
+        0 => ShardMessage::Results {
+            shard,
+            round,
+            base,
+            items: (0..nitems)
+                .map(|i| {
+                    if rng.next_f32() < 0.75 {
+                        let np = 1 + (rng.next_u32() as usize) % 3;
+                        Ok(LocalResult {
+                            params: (0..np).map(|_| rand_wire_tensor(&mut rng)).collect(),
+                            mean_loss: f64::from_bits(rng.next_u64()),
+                            mean_acc: f64::from_bits(rng.next_u64()),
+                            steps: (rng.next_u32() as usize) % 100,
+                            weight: f64::from_bits(rng.next_u64()),
+                        })
+                    } else {
+                        Err(format!("client {i} failed: code {}", rng.next_u32()))
+                    }
+                })
+                .collect(),
+        },
+        1 => ShardMessage::Deltas {
+            shard,
+            base,
+            items: (0..nitems)
+                .map(|i| {
+                    if rng.next_f32() < 0.75 {
+                        let nt = (rng.next_u32() as usize) % 3;
+                        Ok((0..nt).map(|_| rand_wire_tensor(&mut rng)).collect())
+                    } else {
+                        Err(format!("voter {i} timed out after {}ms", rng.next_u32() % 10_000))
+                    }
+                })
+                .collect(),
+        },
+        _ => ShardMessage::Fault { shard, round },
+    }
+}
+
+/// Wire fixpoint: for every message kind, encode → decode → encode is
+/// byte-for-byte identical — floats travel as raw bit patterns and
+/// errors as plain strings, so nothing is lost or renormalized.
+#[test]
+fn prop_wire_message_encode_decode_is_a_byte_fixpoint() {
+    use fluid::engine::wire::{decode_message, encode_message};
+    let scratch = std::cell::RefCell::new(AggScratch::new());
+    check(
+        Config { cases: 60, ..Default::default() },
+        |g: &mut Gen| {
+            let kind = g.usize_in(0, 2);
+            let nitems = g.usize_in(0, 6);
+            let seed = g.rng.next_u64();
+            (kind, nitems, seed)
+        },
+        |_| vec![],
+        |&(kind, nitems, seed)| {
+            let msg = rand_wire_message(kind, nitems, seed);
+            let (mut blob, mut frame) = (Vec::new(), Vec::new());
+            encode_message(&msg, &mut blob, &mut frame);
+            let mut s = scratch.borrow_mut();
+            let decoded = decode_message(&frame, &mut s)
+                .map_err(|e| format!("decode failed: {e:#}"))?;
+            let (mut blob2, mut frame2) = (Vec::new(), Vec::new());
+            encode_message(&decoded, &mut blob2, &mut frame2);
+            if frame != frame2 {
+                return Err(format!(
+                    "kind {kind}: re-encode drifted ({} vs {} bytes)",
+                    frame.len(),
+                    frame2.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Robustness: any single corrupted byte and any truncation of a valid
+/// frame yields a clean `Err` from `decode_message` — never a panic,
+/// never a silently-wrong message.
+#[test]
+fn prop_wire_corruption_and_truncation_error_cleanly() {
+    use fluid::engine::wire::{decode_message, encode_message};
+    let scratch = std::cell::RefCell::new(AggScratch::new());
+    check(
+        Config { cases: 80, ..Default::default() },
+        |g: &mut Gen| {
+            let kind = g.usize_in(0, 2);
+            let nitems = g.usize_in(0, 5);
+            let seed = g.rng.next_u64();
+            let flip_at = g.rng.next_u64();
+            let flip_with = g.usize_in(1, 255) as u8;
+            let cut_at = g.rng.next_u64();
+            (kind, nitems, seed, flip_at, flip_with, cut_at)
+        },
+        |_| vec![],
+        |&(kind, nitems, seed, flip_at, flip_with, cut_at)| {
+            let msg = rand_wire_message(kind, nitems, seed);
+            let (mut blob, mut frame) = (Vec::new(), Vec::new());
+            encode_message(&msg, &mut blob, &mut frame);
+            let mut s = scratch.borrow_mut();
+
+            let pos = (flip_at % frame.len() as u64) as usize;
+            let mut bad = frame.clone();
+            bad[pos] ^= flip_with;
+            if decode_message(&bad, &mut s).is_ok() {
+                return Err(format!("flip {flip_with:#04x} at byte {pos} decoded fine"));
+            }
+
+            let cut = (cut_at % frame.len() as u64) as usize;
+            if decode_message(&frame[..cut], &mut s).is_ok() {
+                return Err(format!("truncation to {cut} bytes decoded fine"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The root-fold contract behind the sharded executor: split a cohort's
+/// updates into arbitrary contiguous shard slices, ship each slice
+/// through the wire codec, fold the slices back with `tree_reduce`'s
+/// ordered concatenation at an arbitrary thread count, and aggregate —
+/// the result is bit-identical to the serial scalar `fedavg` reference
+/// on the original updates, for every shard split and both modes.
+#[test]
+fn prop_sharded_wire_fold_matches_serial_fedavg() {
+    use fluid::engine::wire::{decode_message, encode_message, ShardMessage};
+    use fluid::fl::parallel::tree_reduce;
+    use fluid::fl::LocalResult;
+    let scratch = std::cell::RefCell::new(AggScratch::new());
+    check(
+        Config { cases: 32, ..Default::default() },
+        |g: &mut Gen| {
+            let n0 = g.usize_in(1, 5);
+            let n1 = g.usize_in(1, 10);
+            let nclients = g.usize_in(1, 8);
+            let shards = g.usize_in(1, 6);
+            let threads = g.usize_in(1, 4);
+            let seed = g.rng.next_u64();
+            (n0, n1, nclients, shards, threads, seed)
+        },
+        |_| vec![],
+        |&(n0, n1, nclients, shards, threads, seed)| {
+            let spec = spec_with_gate(n0, n1);
+            let mut rng = fluid::util::prng::Pcg32::new(seed, 17);
+            let rand_params = |rng: &mut fluid::util::prng::Pcg32| -> Vec<Tensor> {
+                spec.params
+                    .iter()
+                    .map(|p| {
+                        let len: usize = p.shape.iter().product();
+                        Tensor::from_vec(
+                            &p.shape,
+                            (0..len).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+                        )
+                    })
+                    .collect()
+            };
+            let global = rand_params(&mut rng);
+            let updates: Vec<ClientUpdate> = (0..nclients)
+                .map(|_| {
+                    let keep: Vec<Vec<bool>> = spec
+                        .masks
+                        .iter()
+                        .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.7).collect())
+                        .collect();
+                    ClientUpdate {
+                        params: rand_params(&mut rng),
+                        weight: rng.uniform(0.1, 5.0) as f64,
+                        mask: MaskSet::from_keep(&spec, &keep),
+                        staleness: (rng.next_u32() % 3) as usize,
+                    }
+                })
+                .collect();
+
+            // each shard encodes its contiguous slice as a wire message
+            let bounds = |s: usize| (s * nclients / shards, (s + 1) * nclients / shards);
+            let mut frames = Vec::with_capacity(shards);
+            for s in 0..shards {
+                let (lo, hi) = bounds(s);
+                let items: Vec<Result<LocalResult, String>> = updates[lo..hi]
+                    .iter()
+                    .map(|u| {
+                        Ok(LocalResult {
+                            params: u.params.clone(),
+                            mean_loss: 0.0,
+                            mean_acc: 0.0,
+                            steps: 1,
+                            weight: u.weight,
+                        })
+                    })
+                    .collect();
+                let msg = ShardMessage::Results { shard: s, round: 0, base: lo, items };
+                let (mut blob, mut frame) = (Vec::new(), Vec::new());
+                encode_message(&msg, &mut blob, &mut frame);
+                frames.push(frame);
+            }
+
+            // decode every slice, then fold through the fixed pairwise
+            // tree exactly as the sharded root does
+            let mut slices = Vec::with_capacity(shards);
+            for (s, frame) in frames.iter().enumerate() {
+                let mut sc = scratch.borrow_mut();
+                match decode_message(frame, &mut sc).map_err(|e| format!("{e:#}"))? {
+                    ShardMessage::Results { base, items, .. } => {
+                        if base != bounds(s).0 {
+                            return Err(format!("shard {s}: base {base} drifted"));
+                        }
+                        let res: Result<Vec<LocalResult>, String> = items.into_iter().collect();
+                        slices.push((base, res?));
+                    }
+                    other => return Err(format!("shard {s} decoded as {other:?}")),
+                }
+            }
+            let folded = tree_reduce(
+                shards,
+                1,
+                threads,
+                |s, _| vec![slices[s].clone()],
+                |mut a, mut b| {
+                    a.append(&mut b);
+                    a
+                },
+            )
+            .ok_or("tree_reduce returned None for a non-empty fold")?;
+            let mut rebuilt_results = Vec::with_capacity(nclients);
+            for (base, items) in folded {
+                if base != rebuilt_results.len() {
+                    return Err(format!(
+                        "fold order broken: slice base {base} at position {}",
+                        rebuilt_results.len()
+                    ));
+                }
+                rebuilt_results.extend(items);
+            }
+            if rebuilt_results.len() != nclients {
+                return Err(format!("fold produced {} of {nclients}", rebuilt_results.len()));
+            }
+
+            // aggregate the wire-rebuilt updates; compare bit-for-bit
+            // against the serial reference on the originals
+            let rebuilt: Vec<ClientUpdate> = rebuilt_results
+                .into_iter()
+                .zip(&updates)
+                .map(|(res, u)| ClientUpdate {
+                    params: res.params,
+                    weight: res.weight,
+                    mask: u.mask.clone(),
+                    staleness: u.staleness,
+                })
+                .collect();
+            for mode in [AggregateMode::Plain, AggregateMode::OwnershipWeighted] {
+                let want = reference_fedavg(&spec, &global, &updates, mode);
+                let mut s = scratch.borrow_mut();
+                let got = fedavg_into(&spec, &global, &rebuilt, mode, threads, &mut s);
+                for (pi, (a, b)) in got.iter().zip(&want).enumerate() {
+                    for (j, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "shards={shards} mode {mode:?} param {pi} elem {j}: \
+                                 {x} vs {y} after the wire fold"
+                            ));
+                        }
+                    }
+                }
+                s.recycle(got);
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,274 @@
+//! Cross-shard determinism & fault-injection suite for the sharded
+//! multi-aggregator tree (DESIGN.md §11).
+//!
+//! Everything runs through `coordinator::run_sim` with
+//! `ExperimentConfig::shards` varied, so the full stack is exercised:
+//! shard slicing, scoped worker dispatch, wire-framed shard→root
+//! messages, the `tree_reduce` ordered-concat fold, and the unchanged
+//! engine float path above the seam.
+//!
+//! Pinned invariants:
+//! * a 50k-client storm fleet is bit-identical across
+//!   `--shards` ∈ {1, 2, 4, 8} × `--threads` ∈ {1, 4};
+//! * shard-count invariance holds for all three `SamplerKind`s and all
+//!   three `SyncMode`s (each compared against the 1-shard serial run);
+//! * snapshots carry no shard state: checkpoint-under-4-shards resumes
+//!   bit-identically under 1 shard (and the reverse, and under 8) —
+//!   the N→M rule;
+//! * a shard killed mid-round surfaces a typed [`ShardFault`] after the
+//!   due checkpoint was written, leaks no partial state (the resumed
+//!   run matches an uninterrupted control bit-for-bit), and with
+//!   `--shard-retry` the run completes bit-identically instead.
+//!
+//! Wall-clock fields are host measurements and excluded, exactly as in
+//! `tests/determinism.rs`.
+
+use fluid::coordinator::{self, ExperimentConfig, ExperimentResult};
+use fluid::dropout::PolicyKind;
+use fluid::engine::{ScenarioConfig, ShardFault, SyncMode};
+use fluid::fl::SamplerKind;
+use std::time::Instant;
+
+/// NaN-aware bitwise equality.
+fn eq_f64(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+/// Bitwise comparison of everything the algorithm (not the host clock)
+/// produced — the same contract as `tests/determinism.rs`.
+fn assert_bit_identical(a: &ExperimentResult, b: &ExperimentResult, ctx: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        let rctx = format!("{ctx}: round {}", x.round);
+        assert_eq!(x.round, y.round, "{rctx}");
+        assert_eq!(x.cohort, y.cohort, "{rctx}: cohort");
+        assert_eq!(x.straggler_ids, y.straggler_ids, "{rctx}: stragglers");
+        assert_eq!(x.straggler_rates, y.straggler_rates, "{rctx}: rates");
+        assert!(eq_f64(x.round_time, y.round_time), "{rctx}: round_time");
+        assert!(eq_f64(x.vtime, y.vtime), "{rctx}: vtime");
+        assert!(eq_f64(x.t_target, y.t_target), "{rctx}: t_target");
+        assert!(
+            eq_f64(x.straggler_time, y.straggler_time),
+            "{rctx}: straggler_time"
+        );
+        assert!(eq_f64(x.train_loss, y.train_loss), "{rctx}: train_loss");
+        assert!(eq_f64(x.train_acc, y.train_acc), "{rctx}: train_acc");
+        assert!(eq_f64(x.test_loss, y.test_loss), "{rctx}: test_loss");
+        assert!(eq_f64(x.test_acc, y.test_acc), "{rctx}: test_acc");
+        assert!(
+            eq_f64(x.invariant_fraction, y.invariant_fraction),
+            "{rctx}: invariant_fraction"
+        );
+        assert_eq!(x.aggregated, y.aggregated, "{rctx}: aggregated");
+        assert_eq!(x.dropped_updates, y.dropped_updates, "{rctx}: dropped");
+        assert_eq!(x.stale_folded, y.stale_folded, "{rctx}: stale");
+    }
+    assert!(eq_f64(a.final_test_acc, b.final_test_acc), "{ctx}");
+    assert!(eq_f64(a.final_test_loss, b.final_test_loss), "{ctx}");
+    assert!(eq_f64(a.total_vtime, b.total_vtime), "{ctx}");
+    assert_eq!(a.seed, b.seed, "{ctx}");
+}
+
+/// The 50k storm fleet, sized (like `tests/determinism.rs`) so a
+/// debug-profile `cargo test` sweep over many runs stays in budget.
+fn storm_50k_cfg(rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 50_000, 256);
+    cfg.rounds = rounds;
+    cfg.samples_per_client = 4;
+    cfg.local_steps = 1;
+    cfg.eval_every = rounds;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    cfg.seed = 20_260_729;
+    cfg
+}
+
+/// A cheaper 2k storm fleet for the checkpoint/resume and fault legs.
+fn storm_2k_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 2000, 64);
+    cfg.rounds = 6;
+    cfg.samples_per_client = 4;
+    cfg.local_steps = 1;
+    cfg.eval_every = 3;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    cfg.seed = seed;
+    cfg
+}
+
+/// Unique scratch directory for snapshot files; removed (best-effort) by
+/// the tests that use it.
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fluid-sharded-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn snap_path(dir: &std::path::Path, round: usize) -> std::path::PathBuf {
+    dir.join(format!("snap-{round:06}.fluidsnap"))
+}
+
+/// The headline grid: the 50k storm fleet replays bit-identically at
+/// every `--shards` ∈ {1, 2, 4, 8} × `--threads` ∈ {1, 4} against the
+/// serial 1-shard / 1-thread baseline.
+#[test]
+fn storm_50k_is_bit_identical_at_every_shard_and_thread_count() {
+    let t0 = Instant::now();
+    let mut results = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        for threads in [1usize, 4] {
+            let mut cfg = storm_50k_cfg(3);
+            cfg.shards = shards;
+            cfg.threads = threads;
+            results.push((shards, threads, coordinator::run_sim(&cfg).unwrap()));
+        }
+    }
+    let (_, _, base) = &results[0];
+    assert_eq!(base.records.len(), 3);
+    for (shards, threads, r) in &results[1..] {
+        assert_bit_identical(base, r, &format!("shards={shards} threads={threads}"));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(secs < 240.0, "shard×thread grid took {secs:.1}s (budget 240s)");
+}
+
+/// Every `SamplerKind` is shard-count invariant on the 50k storm fleet:
+/// the 4-shard / 4-thread run matches the 1-shard / 1-thread run.
+#[test]
+fn storm_50k_samplers_are_shard_count_invariant() {
+    for sampler in [
+        SamplerKind::Uniform,
+        SamplerKind::WeightedByData,
+        SamplerKind::AvailabilityAware,
+    ] {
+        let mut cfg = storm_50k_cfg(2);
+        cfg.sampler = sampler;
+        let serial = coordinator::run_sim(&cfg).unwrap();
+        cfg.shards = 4;
+        cfg.threads = 4;
+        let sharded = coordinator::run_sim(&cfg).unwrap();
+        assert_bit_identical(
+            &serial,
+            &sharded,
+            &format!("sampler={} shards=4", sampler.name()),
+        );
+    }
+}
+
+/// Every `SyncMode` is shard-count invariant on the 50k storm fleet —
+/// late arrivals, deadlines and buffered folds all happen at the root,
+/// above the shard seam, so the shard count must not be observable.
+#[test]
+fn storm_50k_sync_modes_are_shard_count_invariant() {
+    for (name, mode) in [
+        ("full", SyncMode::FullBarrier),
+        ("deadline", SyncMode::Deadline { multiple_of_t_target: 1.25 }),
+        ("buffered", SyncMode::Buffered { k: 48 }),
+    ] {
+        let mut cfg = storm_50k_cfg(3);
+        cfg.sync_mode = mode;
+        let serial = coordinator::run_sim(&cfg).unwrap();
+        cfg.shards = 4;
+        cfg.threads = 4;
+        let sharded = coordinator::run_sim(&cfg).unwrap();
+        assert_bit_identical(&serial, &sharded, &format!("sync={name} shards=4"));
+    }
+}
+
+/// The N→M resume rule: snapshots carry no shard state, so a checkpoint
+/// taken under 4 shards resumes bit-identically under 1 shard, and a
+/// 1-shard checkpoint resumes under 4 (and 8) — all against a single
+/// uninterrupted serial control.
+#[test]
+fn snapshot_under_n_shards_resumes_bit_identically_under_m() {
+    let control = coordinator::run_sim(&storm_2k_cfg(4411)).unwrap();
+
+    // checkpoint under 4 shards, resume under 1 (and 8)
+    let dir = ckpt_dir("n4");
+    let mut cfg = storm_2k_cfg(4411);
+    cfg.shards = 4;
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep = cfg.rounds;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let four = coordinator::run_sim(&cfg).unwrap();
+    assert_bit_identical(&control, &four, "uninterrupted 4-shard run");
+    for (resume_shards, at) in [(1usize, 2usize), (1, 4), (8, 2)] {
+        let mut rcfg = storm_2k_cfg(4411);
+        rcfg.shards = resume_shards;
+        rcfg.resume_from = Some(snap_path(&dir, at));
+        let resumed = coordinator::run_sim(&rcfg).unwrap();
+        assert_bit_identical(
+            &control,
+            &resumed,
+            &format!("snap under 4 shards, resume@{at} under {resume_shards}"),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // the reverse: checkpoint under 1 shard, resume under 4
+    let dir = ckpt_dir("n1");
+    let mut cfg = storm_2k_cfg(4411);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep = cfg.rounds;
+    cfg.checkpoint_dir = Some(dir.clone());
+    coordinator::run_sim(&cfg).unwrap();
+    let mut rcfg = storm_2k_cfg(4411);
+    rcfg.shards = 4;
+    rcfg.resume_from = Some(snap_path(&dir, 4));
+    let resumed = coordinator::run_sim(&rcfg).unwrap();
+    assert_bit_identical(&control, &resumed, "snap under 1 shard, resume@4 under 4");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A shard killed mid-round surfaces a typed [`ShardFault`] (the engine
+/// aborts the round before touching global state), the due checkpoint
+/// is on disk, and the run resumed from it — under a *different* shard
+/// count, without the crash knob — matches an uninterrupted control bit
+/// for bit. No partial state leaks.
+#[test]
+fn killed_shard_checkpoints_then_resumes_bit_identically() {
+    let dir = ckpt_dir("kill");
+    let mut cfg = storm_2k_cfg(9177);
+    cfg.shards = 4;
+    cfg.shard_crash_after = Some((2, 4));
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let err = coordinator::run_sim(&cfg).unwrap_err();
+    let fault = err
+        .downcast_ref::<ShardFault>()
+        .unwrap_or_else(|| panic!("expected ShardFault, got: {err:#}"));
+    assert_eq!((fault.shard, fault.round), (2, 4));
+    assert!(snap_path(&dir, 4).exists(), "due checkpoint missing at shard kill");
+
+    let control = coordinator::run_sim(&storm_2k_cfg(9177)).unwrap();
+    let mut rcfg = storm_2k_cfg(9177);
+    rcfg.shards = 1; // resume under a different shard count (N→M)
+    rcfg.resume_from = Some(dir.clone());
+    let resumed = coordinator::run_sim(&rcfg).unwrap();
+    assert_bit_identical(&control, &resumed, "resume after shard kill");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// With `--shard-retry` the root re-dispatches the dead shard's slice
+/// instead of failing; purity makes the completed run bit-identical to
+/// the serial control.
+#[test]
+fn shard_retry_completes_bit_identically_despite_the_kill() {
+    let control = coordinator::run_sim(&storm_2k_cfg(5521)).unwrap();
+    let mut cfg = storm_2k_cfg(5521);
+    cfg.shards = 4;
+    cfg.shard_crash_after = Some((1, 3));
+    cfg.shard_retry = true;
+    let retried = coordinator::run_sim(&cfg).unwrap();
+    assert_bit_identical(&control, &retried, "retry after shard kill");
+}
+
+/// A fault aimed at a round the run never reaches changes nothing: the
+/// sharded run completes and stays bit-identical to the control.
+#[test]
+fn unfired_fault_knob_is_inert() {
+    let control = coordinator::run_sim(&storm_2k_cfg(808)).unwrap();
+    let mut cfg = storm_2k_cfg(808);
+    cfg.shards = 2;
+    cfg.shard_crash_after = Some((0, 1000));
+    let run = coordinator::run_sim(&cfg).unwrap();
+    assert_bit_identical(&control, &run, "unfired shard fault");
+}
