@@ -9,7 +9,10 @@
 //!   scenario churn at both scales, a full sim-backend fleet round, the
 //!   sharded aggregator tree at 50k (with an in-bench gate pinning the
 //!   4-shard round to <= 1.25x the single-engine round, DESIGN.md §11),
-//!   the shard wire codec round trip, and snapshot encode/decode.
+//!   the shard wire codec round trip, the update-payload codec (sparse
+//!   encode / q8 decode at ~50k params, with an in-bench gate pinning
+//!   sparse wire bytes at rate 0.5 to <= 0.6x dense, DESIGN.md §12),
+//!   payload-aware FedAvg, and snapshot encode/decode.
 //! * **PJRT sections** — `train_step` / `eval_step` / `delta_step` per
 //!   model, tensor→literal conversion, and one full coordinator round;
 //!   these need AOT artifacts and skip cleanly when the session cannot
@@ -38,7 +41,8 @@ use fluid::data::FlData;
 use fluid::dropout::{InvariantConfig, InvariantDropout, MaskSet, PolicyKind};
 use fluid::engine::ScenarioConfig;
 use fluid::fl::{
-    fedavg_into, sample_cohort, AggScratch, AggregateMode, ClientUpdate, Fleet, SamplerKind,
+    fedavg_into, sample_cohort, AggScratch, AggregateMode, ClientUpdate, Codec, Compression,
+    DeltaPayload, Fleet, SamplerKind, UpdateCodec,
 };
 use fluid::jsonlite::{self, Json};
 use fluid::model::{sim_spec, ModelSpec};
@@ -109,6 +113,27 @@ fn lstm_spec(hidden: usize) -> ModelSpec {
         .expect("bench manifest is statically valid")
 }
 
+/// The payload-codec bench model: one masked [192, 256] weight + [256]
+/// bias pair, ~50k parameters — big enough that framing cost is real,
+/// one group so the sparse/dense wire ratio at keep-rate 0.5 is a clean
+/// ~0.5 (plus fixed headers).
+fn codec_spec() -> ModelSpec {
+    let manifest = r#"{
+ "model": "bench_codec", "batch_size": 8,
+ "x_shape": [8, 16], "x_dtype": "f32", "num_classes": 10,
+ "params": [
+   {"name": "fc0_w", "shape": [192, 256]}, {"name": "fc0_b", "shape": [256]}
+ ],
+ "masks": [{"name": "fc0", "size": 256}],
+ "delta_groups": ["fc0"],
+ "delta_inputs": ["fc0_w"],
+ "artifacts": {"train": "sim", "eval": "sim", "delta": "sim"},
+ "train_outputs": []
+}"#;
+    ModelSpec::from_json_str(manifest, std::path::Path::new("/"))
+        .expect("bench manifest is statically valid")
+}
+
 /// A 64-update cohort over `spec`; every fourth client is a straggler
 /// whose mask keeps the first 75% of each group (so the ownership path
 /// exercises real dropped columns, not the all-kept fast case).
@@ -126,7 +151,7 @@ fn bench_updates(spec: &ModelSpec, n: usize) -> Vec<ClientUpdate> {
                 MaskSet::full(spec)
             };
             ClientUpdate {
-                params: spec.init_params(100 + i as u64),
+                payload: DeltaPayload::DenseF32(spec.init_params(100 + i as u64)),
                 weight: 16.0,
                 mask,
                 staleness: 0,
@@ -453,6 +478,118 @@ fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
         all.push(m);
     }
 
+    // update-payload codec (DESIGN.md §12): a ~50k-parameter layer pair
+    // ([192, 256] weight + [256] bias) packed at keep-rate 0.5. Encode
+    // is the engine-side seam (mask-pack + wire framing), decode the
+    // root-side one (frame parse into payload vectors). The in-bench
+    // gate pins the contract the compressed modes exist for: sparse
+    // wire bytes at rate 0.5 must stay under 0.6x the dense framing.
+    {
+        use fluid::fl::codec::{put_payload, take_payload};
+        use fluid::snapshot::{Reader, Writer};
+        const WIRE_GATE: f64 = 0.6;
+        let cspec = codec_spec();
+        let cglobal = cspec.init_params(2);
+        let keep: Vec<Vec<bool>> = cspec
+            .masks
+            .iter()
+            .map(|m| (0..m.size).map(|j| j % 2 == 0).collect())
+            .collect();
+        let cmask = MaskSet::from_keep(&cspec, &keep);
+        let cparams = cspec.init_params(9);
+
+        let dense_wire = DeltaPayload::DenseF32(cparams.clone()).wire_bytes();
+        let mut sparse_codec = Codec::new(Compression::Sparse);
+        let sparse_wire = sparse_codec
+            .encode(0, cparams.clone(), &cmask, &cglobal, &cspec, &mut scratch)
+            .wire_bytes();
+        let ratio = sparse_wire as f64 / dense_wire as f64;
+        println!(
+            "codec: sparse {sparse_wire} B / dense {dense_wire} B at rate 0.5 = \
+             {ratio:.3} (gate {WIRE_GATE:.2})"
+        );
+        assert!(
+            ratio <= WIRE_GATE,
+            "sparse wire framing moves {ratio:.3}x the dense bytes at keep-rate 0.5 \
+             (gate {WIRE_GATE:.2}x) — the packed encoding is no longer O(kept)"
+        );
+
+        let m = b.run("codec/encode-sparse-50k", || {
+            let payload = sparse_codec.encode(
+                1,
+                cparams.clone(),
+                &cmask,
+                &cglobal,
+                &cspec,
+                &mut scratch,
+            );
+            let mut wtr = Writer::new();
+            put_payload(&mut wtr, &payload);
+            std::hint::black_box(wtr.into_bytes().len());
+        });
+        println!("{}", m.report());
+        all.push(m);
+
+        let q8_frame = {
+            let mut q8_codec = Codec::new(Compression::Q8);
+            let payload =
+                q8_codec.encode(2, cparams.clone(), &cmask, &cglobal, &cspec, &mut scratch);
+            let mut wtr = Writer::new();
+            put_payload(&mut wtr, &payload);
+            wtr.into_bytes()
+        };
+        let m = b.run("codec/decode-q8-50k", || {
+            let payload = take_payload(&mut Reader::new(&q8_frame), &mut scratch).unwrap();
+            std::hint::black_box(payload.wire_bytes());
+        });
+        println!("{}", m.report());
+        all.push(m);
+    }
+
+    // payload-aware FedAvg: the same 64-update cohort as the dense
+    // sections, but entering the aggregator as sparse payloads (the
+    // fused unpack-accumulate path compressed experiments run)
+    {
+        let mut enc = Codec::new(Compression::Sparse);
+        let sparse_updates: Vec<ClientUpdate> = (0..64)
+            .map(|i| {
+                let mask = if i % 4 == 3 {
+                    let keep: Vec<Vec<bool>> = spec
+                        .masks
+                        .iter()
+                        .map(|m| (0..m.size).map(|j| j < m.size * 3 / 4).collect())
+                        .collect();
+                    MaskSet::from_keep(&spec, &keep)
+                } else {
+                    MaskSet::full(&spec)
+                };
+                let payload = enc.encode(
+                    i as u64,
+                    spec.init_params(100 + i as u64),
+                    &mask,
+                    &global,
+                    &spec,
+                    &mut scratch,
+                );
+                ClientUpdate { payload, weight: 16.0, mask, staleness: 0 }
+            })
+            .collect();
+        let m = b.run("aggregate/fedavg-sparse-64", || {
+            let out = fedavg_into(
+                &spec,
+                &global,
+                &sparse_updates,
+                AggregateMode::OwnershipWeighted,
+                threads,
+                &mut scratch,
+            );
+            std::hint::black_box(out.len());
+            scratch.recycle(out);
+        });
+        println!("{}", m.report());
+        all.push(m);
+    }
+
     // snapshot codec over a representative mid-run state
     let snap = synthetic_snapshot(&spec, 2000, 50);
     let m = b.run("snapshot/encode-2k-fleet", || {
@@ -506,6 +643,7 @@ fn synthetic_snapshot(
         last_full_latencies: (0..clients).map(|i| i as f64 * 0.0015).collect(),
         free_at: vec![0.0; clients],
         stale: Vec::new(),
+        resid: Vec::new(),
         records: (0..rounds)
             .map(|r| fluid::coordinator::RoundRecord {
                 round: r,
@@ -525,6 +663,7 @@ fn synthetic_snapshot(
                 aggregated: 32,
                 dropped_updates: 0,
                 stale_folded: 0,
+                update_bytes: 0,
             })
             .collect(),
     }

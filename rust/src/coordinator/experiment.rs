@@ -45,12 +45,16 @@ fn run_engine<E: ClientExecutor>(
     executor: E,
 ) -> crate::Result<ExperimentResult> {
     if sharded(cfg) {
+        // compressed configs ship mask-packed slices over the shard wire
+        // too (sparse packing for q8 as well — quantization stays at the
+        // root, see `engine::sharded`)
         let tree = ShardedExecutor::with_fault(
             executor,
             cfg.shards,
             cfg.shard_crash_after,
             cfg.shard_retry,
-        );
+        )
+        .with_compression(cfg.compress);
         RoundEngine::new(cfg, tree)?.run()
     } else {
         RoundEngine::new(cfg, executor)?.run()

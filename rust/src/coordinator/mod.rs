@@ -12,7 +12,7 @@ pub use experiment::{run, run_sim};
 
 use crate::dropout::PolicyKind;
 use crate::engine::{ScenarioConfig, SyncMode};
-use crate::fl::{AggregateMode, SamplerKind};
+use crate::fl::{AggregateMode, Compression, SamplerKind};
 use crate::jsonlite::Json;
 use crate::straggler::{AdaptConfig, AdaptMode};
 use std::path::PathBuf;
@@ -117,6 +117,12 @@ pub struct ExperimentConfig {
     /// re-dispatch a killed shard's slice at the root instead of
     /// failing the round
     pub shard_retry: bool,
+    /// update-codec mode (`--compress`): `Dense` is the bit-exact
+    /// reference every pinned trajectory runs under; `Sparse` packs only
+    /// the mask's kept columns; `Q8` adds int8 quantization with
+    /// error-feedback residuals (DESIGN.md §12). Semantic: part of the
+    /// snapshot fingerprint
+    pub compress: Compression,
 }
 
 impl ExperimentConfig {
@@ -162,6 +168,7 @@ impl ExperimentConfig {
             shards: 1,
             shard_crash_after: None,
             shard_retry: false,
+            compress: Compression::Dense,
         }
     }
 
@@ -328,6 +335,9 @@ pub struct RoundRecord {
     pub dropped_updates: usize,
     /// buffered semi-async updates folded in with a staleness discount
     pub stale_folded: usize,
+    /// summed wire bytes of every payload aggregated this round — the
+    /// bytes-moved figure the compression modes are compared on
+    pub update_bytes: usize,
 }
 
 /// Full outcome of one run.
@@ -386,6 +396,7 @@ impl ExperimentResult {
                     .set("aggregated", r.aggregated)
                     .set("dropped", r.dropped_updates)
                     .set("stale", r.stale_folded)
+                    .set("update_bytes", r.update_bytes)
             })
             .collect();
         Json::obj()
@@ -522,6 +533,7 @@ mod tests {
                 aggregated: 5,
                 dropped_updates: 0,
                 stale_folded: 0,
+                update_bytes: 120_000,
             }],
             final_test_acc: 0.8,
             final_test_loss: 0.7,
@@ -534,7 +546,13 @@ mod tests {
         let text = j.to_string_pretty();
         let back = crate::jsonlite::parse(&text).unwrap();
         assert_eq!(back.req("policy").unwrap().as_str(), Some("invariant"));
-        assert_eq!(back.req("rounds").unwrap().as_arr().unwrap().len(), 1);
+        let rounds = back.req("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 1);
+        // the bytes-moved report field rides along per round
+        assert_eq!(
+            rounds[0].req("update_bytes").unwrap().as_f64(),
+            Some(120_000.0)
+        );
         assert!(res.calibration_overhead() < 0.05);
     }
 }

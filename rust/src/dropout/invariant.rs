@@ -175,12 +175,12 @@ impl InvariantDropout {
     /// per-neuron relative-update vector of group `g` from client `c`
     /// (produced by the L1 `neuron_delta` kernel via `delta_step`).
     ///
-    /// Convenience wrapper over [`InvariantDropout::observe_with`] with a
-    /// throwaway scratch arena and one thread — bit-identical, just
-    /// slower; the engine calls the pooled variant.
+    /// Serial convenience entry: a one-line delegation to
+    /// [`InvariantDropout::observe_with`] with a throwaway scratch arena
+    /// and one thread — bit-identical, just slower; the engine calls the
+    /// pooled variant.
     pub fn observe(&mut self, per_client: &[Vec<Tensor>]) {
-        let mut scratch = AggScratch::new();
-        self.observe_with(per_client, 1, &mut scratch);
+        self.observe_with(per_client, 1, &mut AggScratch::new());
     }
 
     /// The observation hot path (DESIGN.md §7): the historical three

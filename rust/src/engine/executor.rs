@@ -22,7 +22,8 @@
 
 use crate::data::Split;
 use crate::dropout::MaskSet;
-use crate::fl::{self, Client, LocalResult};
+use crate::fl::codec::{pack_result, Compression};
+use crate::fl::{self, AggScratch, Client, LocalResult, PackedResult};
 use crate::model::ModelSpec;
 use crate::runtime::StepRunner;
 use crate::tensor::Tensor;
@@ -74,6 +75,29 @@ pub trait ClientExecutor: Sync {
         params: &[Tensor],
         jobs: &[TrainJob],
     ) -> Vec<crate::Result<LocalResult>>;
+
+    /// Run local training and pack each result into the wire
+    /// representation `mode` selects, reusing `scratch` pools for the
+    /// packing maps. Dense mode is a pure passthrough; sparse/q8 pack
+    /// only the mask's kept columns (quantization itself happens in the
+    /// root engine's [`crate::fl::Codec`], never on workers — see
+    /// `engine::sharded`). Provided so every backend gets the packed
+    /// path from its existing `run_clients`.
+    fn run_client_payloads(
+        &self,
+        cohort: &[&Client],
+        masks: &[&MaskSet],
+        params: &[Tensor],
+        jobs: &[TrainJob],
+        mode: Compression,
+        scratch: &mut AggScratch,
+    ) -> Vec<crate::Result<PackedResult>> {
+        self.run_clients(cohort, masks, params, jobs)
+            .into_iter()
+            .zip(masks)
+            .map(|(r, m)| r.map(|res| pack_result(res, m, self.spec(), mode, scratch)))
+            .collect()
+    }
 
     /// Execute the invariant delta kernel for each voter's parameters
     /// against the pre-aggregation globals.
@@ -366,6 +390,43 @@ mod tests {
         // weight is the shard size
         assert_eq!(a[0].weight, 2.0);
         assert_eq!(a[5].weight, 7.0);
+    }
+
+    #[test]
+    fn packed_payload_path_round_trips_sim_results() {
+        use crate::fl::codec::unpack_result;
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(5);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(4);
+        let cohort: Vec<&Client> = clients.iter().collect();
+        let masks: Vec<&MaskSet> = clients.iter().map(|_| &full).collect();
+        let jobs: Vec<TrainJob> = clients
+            .iter()
+            .map(|c| TrainJob {
+                client: c.id,
+                round: 1,
+                steps: 2,
+                lr: 0.02,
+                seed: 41,
+                use_fused: false,
+            })
+            .collect();
+        let ex = SimExecutor::new(spec.clone(), 2);
+        let plain = ex.run_clients(&cohort, &masks, &params, &jobs);
+        let mut scratch = AggScratch::new();
+        let packed =
+            ex.run_client_payloads(&cohort, &masks, &params, &jobs, Compression::Sparse, &mut scratch);
+        assert_eq!(plain.len(), packed.len());
+        for (p, pk) in plain.into_iter().zip(packed) {
+            let p = p.unwrap();
+            let got = unpack_result(pk.unwrap(), &full, &params, &spec, &mut scratch).unwrap();
+            // full masks: the sparse packing is lossless even for sim output
+            assert_eq!(p.params, got.params);
+            assert_eq!(p.mean_loss.to_bits(), got.mean_loss.to_bits());
+            assert_eq!(p.weight.to_bits(), got.weight.to_bits());
+            assert_eq!(p.steps, got.steps);
+        }
     }
 
     #[test]

@@ -64,7 +64,7 @@ use crate::data::{partition, FlData, ShardSizes, ShardSource, Split};
 use crate::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
 use crate::fl::{
     self, fedavg_into, sample_cohort, staleness_discount, AggScratch, Client, ClientUpdate,
-    Fleet,
+    Codec, DeltaPayload, Fleet, UpdateCodec,
 };
 use crate::model::ModelSpec;
 use crate::snapshot::{config_fingerprint, PolicyState, Snapshot, SnapshotStore, StaleEntry};
@@ -206,6 +206,11 @@ pub struct RoundEngine<'a, E: ClientExecutor> {
     /// paths (DESIGN.md §7): grown on the first round, allocation-free
     /// afterwards
     scratch: AggScratch,
+    /// the update codec (`ExperimentConfig::compress`): dense passthrough
+    /// by default, mask-sparse or int8-quantized payloads otherwise. Owns
+    /// the per-client q8 error-feedback residuals, which snapshot/restore
+    /// carry in the RESID section (DESIGN.md §12)
+    codec: Codec,
 }
 
 impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
@@ -336,6 +341,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             free_at: vec![0.0; n],
             threads,
             scratch: AggScratch::new(),
+            codec: Codec::new(cfg.compress),
         })
     }
 
@@ -387,6 +393,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 aggregated: o.aggregated,
                 dropped_updates: o.dropped_updates,
                 stale_folded: o.stale_folded,
+                update_bytes: o.update_bytes,
             });
             if let Some(store) = &store {
                 if (round + 1) % cfg.checkpoint_every == 0 {
@@ -472,6 +479,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     born_round: s.born_round,
                 })
                 .collect(),
+            resid: self.codec.export_resid(),
             records: records.to_vec(),
         }
     }
@@ -599,6 +607,9 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 self.cfg.policy
             ),
         }
+        // RESID validates inside import_resid (per-client tensor counts
+        // and lengths against the spec) before any state is installed
+        self.codec.import_resid(snap.resid, &self.spec)?;
         self.fleet.set_availability(&snap.availability);
         if let Some(ctrl) = snap.ctrl {
             self.controller.import_state(ctrl);
@@ -947,20 +958,35 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         calib_secs += calib_extra;
 
         // --- aggregation set: fresh on-time updates, then matured stale ------
+        // Fresh updates flow through the engine's codec: dense mode is a
+        // pure passthrough (the bit-exact reference), sparse/q8 re-encode
+        // into mask-packed payloads here at the root — `update_bytes`
+        // sums what each payload costs on the wire.
         let mut agg: Vec<ClientUpdate> = Vec::with_capacity(updates.len());
         let mut losses: Vec<f64> = Vec::new();
         let mut accs: Vec<f64> = Vec::new();
         let mut weights: Vec<f64> = Vec::new();
         let mut dropped_updates = 0usize;
+        let mut update_bytes = 0usize;
         for (c, u) in updates {
             if on_time_sorted.binary_search(&c).is_ok() {
                 losses.push(u.mean_loss);
                 accs.push(u.mean_acc);
                 weights.push(u.weight);
+                let mask = plan.masks.get(c).clone();
+                let payload = self.codec.encode(
+                    c as u64,
+                    u.params,
+                    &mask,
+                    &self.params,
+                    &self.spec,
+                    &mut self.scratch,
+                );
+                update_bytes += payload.wire_bytes();
                 agg.push(ClientUpdate {
-                    params: u.params,
+                    payload,
                     weight: u.weight,
-                    mask: plan.masks.get(c).clone(),
+                    mask,
                     staleness: 0,
                 });
             } else {
@@ -1010,8 +1036,14 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 losses.push(s.result.mean_loss);
                 accs.push(s.result.mean_acc);
                 weights.push(s.result.weight * staleness_discount(staleness));
+                // buffered folds stay dense: they were encoded against a
+                // *previous* round's globals, so a sparse/q8 re-encode
+                // against today's params would shift their reference
+                // point. They never re-cross the wire anyway.
+                let payload = DeltaPayload::DenseF32(s.result.params);
+                update_bytes += payload.wire_bytes();
                 agg.push(ClientUpdate {
-                    params: s.result.params,
+                    payload,
                     weight: s.result.weight,
                     mask: s.mask,
                     staleness,
@@ -1084,6 +1116,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             aggregated,
             dropped_updates,
             stale_folded,
+            update_bytes,
             calibration_secs: calib_secs,
         })
     }

@@ -170,6 +170,10 @@ pub struct RoundOutcome {
     pub dropped_updates: usize,
     /// buffered stale updates folded in with a staleness discount
     pub stale_folded: usize,
+    /// summed wire cost of every payload entering this round's FedAvg
+    /// ([`crate::fl::DeltaPayload::wire_bytes`]) — the bytes-moved
+    /// report the compression modes are judged by
+    pub update_bytes: usize,
     /// wall-clock seconds of planning + delta observation
     pub calibration_secs: f64,
 }

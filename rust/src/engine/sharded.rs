@@ -37,9 +37,20 @@
 //! `retry` the root re-dispatches the dead shard's slice on its own
 //! inner executor; purity makes the retried slice bit-identical to what
 //! the shard would have produced.
+//!
+//! **Compressed slices.** Under `--compress sparse|q8` each worker ships
+//! its slice as a [`wire::ShardMessage::Packed`] of kept-column sparse
+//! payloads ([`crate::fl::pack_result`]) and the root reconstructs dense
+//! results at decode. The shard wire always carries the *sparse* (not
+//! quantized) packing: q8's error-feedback residuals live in the root
+//! engine's codec, and keeping the wire stateless is what preserves the
+//! N→M resume rule for compressed runs. On a retried slice the root
+//! round-trips the re-run results through the same pack/unpack, so a
+//! fault-retry round stays bit-identical to the wire path.
 
 use crate::data::Split;
 use crate::dropout::MaskSet;
+use crate::fl::codec::{pack_result, unpack_result, Compression};
 use crate::fl::parallel::tree_reduce;
 use crate::fl::{AggScratch, Client, LocalResult};
 use crate::model::ModelSpec;
@@ -97,6 +108,10 @@ pub struct ShardedExecutor<E> {
     /// on a shard fault, re-dispatch the slice at the root instead of
     /// failing the round
     retry: bool,
+    /// how workers represent their slices on the wire (`Dense` ships
+    /// classic [`ShardMessage::Results`]; the compressed modes ship
+    /// sparse [`ShardMessage::Packed`] slices)
+    compression: Compression,
     fired: AtomicBool,
     lanes: Vec<Mutex<ShardLane>>,
 }
@@ -131,9 +146,16 @@ impl<E: ClientExecutor> ShardedExecutor<E> {
             shards,
             crash: crash_after,
             retry,
+            compression: Compression::Dense,
             fired: AtomicBool::new(false),
             lanes: (0..shards).map(|_| Mutex::new(ShardLane::default())).collect(),
         }
+    }
+
+    /// Select the wire representation of shard slices (builder style).
+    pub fn with_compression(mut self, compression: Compression) -> Self {
+        self.compression = compression;
+        self
     }
 
     pub fn shard_count(&self) -> usize {
@@ -185,9 +207,13 @@ impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
             for (s, mut tx) in txs.into_iter().enumerate() {
                 scope.spawn(move || {
                     let (lo, hi) = slice_bounds(n, shards, s);
+                    // the lane is this shard's private buffer set; the
+                    // root only touches it after every worker has joined
+                    let mut lane = self.lanes[s].lock().expect("shard lane poisoned");
+                    let lane = &mut *lane;
                     let msg = if self.fault_fires(s, round) {
                         ShardMessage::Fault { shard: s, round: round.unwrap_or(0) }
-                    } else {
+                    } else if self.compression == Compression::Dense {
                         let items = self
                             .inner
                             .run_clients(&cohort[lo..hi], &masks[lo..hi], params, &jobs[lo..hi])
@@ -200,9 +226,27 @@ impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
                             base: lo,
                             items,
                         }
+                    } else {
+                        let items = self
+                            .inner
+                            .run_client_payloads(
+                                &cohort[lo..hi],
+                                &masks[lo..hi],
+                                params,
+                                &jobs[lo..hi],
+                                self.compression,
+                                &mut lane.scratch,
+                            )
+                            .into_iter()
+                            .map(|r| r.map_err(|e| format!("{e:#}")))
+                            .collect();
+                        ShardMessage::Packed {
+                            shard: s,
+                            round: round.unwrap_or(0),
+                            base: lo,
+                            items,
+                        }
                     };
-                    let mut lane = self.lanes[s].lock().expect("shard lane poisoned");
-                    let lane = &mut *lane;
                     wire::encode_message(&msg, &mut lane.blob, &mut lane.frame);
                     let _ = tx.send(&lane.frame);
                 });
@@ -236,16 +280,61 @@ impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
                         .map(|r| r.map_err(|e| anyhow::anyhow!(e)))
                         .collect()
                 }
+                Ok(ShardMessage::Packed { base, items, .. })
+                    if base == lo && items.len() == want =>
+                {
+                    let spec = self.inner.spec();
+                    items
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, r)| match r {
+                            Ok(pr) => {
+                                unpack_result(pr, masks[lo + i], params, spec, &mut lane.scratch)
+                            }
+                            Err(e) => Err(anyhow::anyhow!(e)),
+                        })
+                        .collect()
+                }
                 Ok(ShardMessage::Fault { shard, round }) => {
                     if self.retry {
                         // purity makes the retried slice bit-identical
                         // to what the dead shard would have sent
-                        self.inner.run_clients(
+                        let rerun = self.inner.run_clients(
                             &cohort[lo..hi],
                             &masks[lo..hi],
                             params,
                             &jobs[lo..hi],
-                        )
+                        );
+                        if self.compression == Compression::Dense {
+                            rerun
+                        } else {
+                            // round-trip through the codec so the retried
+                            // slice is bit-identical to the wire path's
+                            // pack → frame → unpack reconstruction
+                            let spec = self.inner.spec();
+                            rerun
+                                .into_iter()
+                                .enumerate()
+                                .map(|(i, r)| {
+                                    r.and_then(|res| {
+                                        let pr = pack_result(
+                                            res,
+                                            masks[lo + i],
+                                            spec,
+                                            self.compression,
+                                            &mut lane.scratch,
+                                        );
+                                        unpack_result(
+                                            pr,
+                                            masks[lo + i],
+                                            params,
+                                            spec,
+                                            &mut lane.scratch,
+                                        )
+                                    })
+                                })
+                                .collect()
+                        }
                     } else {
                         err_slice(want, || anyhow::Error::new(ShardFault { shard, round }))
                     }
@@ -515,6 +604,103 @@ mod tests {
         let ex = ShardedExecutor::with_fault(SimExecutor::new(spec, 2), 4, Some((2, 2)), true);
         let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
         assert_same_results(&plain, &got);
+    }
+
+    #[test]
+    fn compressed_wire_matches_dense_under_full_masks() {
+        // full masks pack every column, so the sparse wire packing is
+        // lossless even for the sim backend: the packed path must be
+        // bit-identical to the dense wire at every shard count. (Q8 mode
+        // also ships sparse on the wire — quantization lives in the root
+        // engine's codec, not here.)
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(7);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(9);
+        let r = round(&clients, &full, 4);
+        let plain = SimExecutor::new(spec.clone(), 2)
+            .run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        for mode in [Compression::Sparse, Compression::Q8] {
+            for shards in [1usize, 2, 4] {
+                let ex = ShardedExecutor::new(SimExecutor::new(spec.clone(), 2), shards)
+                    .with_compression(mode);
+                let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+                assert_same_results(&plain, &got);
+                let again = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+                assert_same_results(&plain, &again);
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_wire_is_shard_count_invariant_under_partial_masks() {
+        // partial masks: the sim backend perturbs dropped columns too, so
+        // the packed wire *enforces* the invariant at unpack (dropped
+        // columns reconstruct the broadcast global). That reconstruction
+        // must not depend on the shard count.
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(3);
+        let keep: Vec<Vec<bool>> = spec
+            .masks
+            .iter()
+            .map(|m| (0..m.size).map(|j| j % 2 == 0).collect())
+            .collect();
+        let half = MaskSet::from_keep(&spec, &keep);
+        let clients = sim_cohort(10);
+        let r = round(&clients, &half, 2);
+        let reference = ShardedExecutor::new(SimExecutor::new(spec.clone(), 2), 1)
+            .with_compression(Compression::Sparse)
+            .run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        for shards in [2usize, 4, 8] {
+            let ex = ShardedExecutor::new(SimExecutor::new(spec.clone(), 2), shards)
+                .with_compression(Compression::Sparse);
+            let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+            assert_same_results(&reference, &got);
+        }
+        // and every dropped column did come back as the broadcast value
+        let res = reference[0].as_ref().unwrap();
+        let gidx = 0usize;
+        let m = half.tensors()[gidx].data();
+        for (pi, t) in res.params.iter().enumerate() {
+            if let Some((g, span)) = crate::fl::aggregate::group_of_param(&spec, pi) {
+                if g != gidx {
+                    continue;
+                }
+                let cols = *spec.params[pi].shape.last().unwrap();
+                let n = spec.masks[g].size;
+                for (e, x) in t.data().iter().enumerate() {
+                    let neuron = crate::fl::aggregate::neuron_of(e, cols, n, span);
+                    if m[neuron] == 0.0 {
+                        assert_eq!(
+                            x.to_bits(),
+                            params[pi].data()[e].to_bits(),
+                            "dropped col must reconstruct the broadcast global"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retry_under_compression_matches_the_packed_wire_path() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(7);
+        let keep: Vec<Vec<bool>> = spec
+            .masks
+            .iter()
+            .map(|m| (0..m.size).map(|j| j % 3 != 0).collect())
+            .collect();
+        let half = MaskSet::from_keep(&spec, &keep);
+        let clients = sim_cohort(10);
+        let r = round(&clients, &half, 2);
+        let clean = ShardedExecutor::new(SimExecutor::new(spec.clone(), 2), 4)
+            .with_compression(Compression::Sparse)
+            .run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        let ex = ShardedExecutor::with_fault(SimExecutor::new(spec, 2), 4, Some((2, 2)), true)
+            .with_compression(Compression::Sparse);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        assert_same_results(&clean, &got);
     }
 
     #[test]

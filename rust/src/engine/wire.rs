@@ -34,8 +34,18 @@
 //! ([`Writer::put_f32_bytes`]), and per-client errors travel as plain
 //! strings, so encode → decode → encode is a byte-for-byte fixpoint
 //! (pinned by the wire properties in `tests/properties.rs`).
+//!
+//! Compressed experiments ship their slices as [`ShardMessage::Packed`]:
+//! the items are [`PackedResult`]s whose tensors travel as
+//! [`crate::fl::DeltaPayload`] framings (written once, in
+//! `fl::codec::put_payload`, from the same shared `snapshot::codec` bulk
+//! helpers every other tensor byte in the repo uses) inside their own
+//! [`SEC_PAYLOAD`] section — an old reader skips the unknown section id
+//! instead of misparsing dense items.
 
-use crate::fl::{AggScratch, LocalResult};
+use crate::fl::codec::{put_payload, take_payload};
+use crate::fl::{AggScratch, LocalResult, PackedResult};
+use crate::snapshot::codec::{put_tensor_bulk, take_tensor_bulk};
 use crate::snapshot::{fnv1a, Reader, Writer};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context};
@@ -50,10 +60,16 @@ pub const WIRE_VERSION: u32 = 1;
 pub const SEC_HEAD: u32 = 1;
 /// Section id: the per-client item payloads.
 pub const SEC_ITEMS: u32 = 2;
+/// Section id: per-client items carried as `DeltaPayload` framings
+/// ([`ShardMessage::Packed`]). A separate id from [`SEC_ITEMS`] so a
+/// reader that predates payloads skips the section instead of
+/// misparsing it as dense items.
+pub const SEC_PAYLOAD: u32 = 3;
 
 const KIND_RESULTS: u8 = 1;
 const KIND_DELTAS: u8 = 2;
 const KIND_FAULT: u8 = 3;
+const KIND_PACKED: u8 = 4;
 
 /// magic + version + payload_len … section_count … checksum
 const FRAME_OVERHEAD: usize = 4 + 4 + 8 + 4 + 8;
@@ -207,36 +223,23 @@ pub enum ShardMessage {
     /// The shard died mid-round (shard-level fault injection) before
     /// producing its slice.
     Fault { shard: usize, round: usize },
-}
-
-fn put_wire_tensor(w: &mut Writer, t: &Tensor) {
-    w.put_usizes(t.shape());
-    w.put_f32_bytes(t.data());
+    /// The shard's slice of training results with tensors carried as
+    /// `DeltaPayload` framings (compressed experiments) — job-aligned
+    /// like [`ShardMessage::Results`], framed into [`SEC_PAYLOAD`].
+    Packed {
+        shard: usize,
+        round: usize,
+        base: usize,
+        items: Vec<Result<PackedResult, String>>,
+    },
 }
 
 /// Decode one tensor, reusing a pooled buffer from `scratch` when a
-/// matching shape was recycled. The claimed element count is validated
+/// matching shape was recycled. Thin seam over the shared
+/// [`take_tensor_bulk`] framing; the claimed element count is validated
 /// against the remaining frame bytes *before* any tensor is produced.
 fn take_wire_tensor(r: &mut Reader<'_>, scratch: &mut AggScratch) -> crate::Result<Tensor> {
-    let rank = r.take_usize()?;
-    if rank > 8 {
-        bail!("wire tensor rank {rank} exceeds the supported 8");
-    }
-    let mut shape = [0usize; 8];
-    let mut elems = 1usize;
-    for s in shape.iter_mut().take(rank) {
-        *s = r.take_usize()?;
-        elems = elems
-            .checked_mul(*s)
-            .context("wire tensor shape overflows")?;
-    }
-    let need = elems.checked_mul(4).context("wire tensor size overflows")?;
-    if need > r.remaining() {
-        bail!("wire tensor claims {elems} elements, only {} bytes left", r.remaining());
-    }
-    let mut t = scratch.take_out(&shape[..rank]);
-    r.take_f32_bytes_into(t.data_mut())?;
-    Ok(t)
+    take_tensor_bulk(r, |shape| scratch.take_out(shape))
 }
 
 /// Encode `msg` into the frame buffer `out`, staging section bytes in
@@ -252,6 +255,9 @@ pub fn encode_message(msg: &ShardMessage, blob: &mut Vec<u8>, out: &mut Vec<u8>)
             (KIND_DELTAS, *shard, 0, *base, items.len())
         }
         ShardMessage::Fault { shard, round } => (KIND_FAULT, *shard, *round, 0, 0),
+        ShardMessage::Packed { shard, round, base, items } => {
+            (KIND_PACKED, *shard, *round, *base, items.len())
+        }
     };
     w.put_u8(kind);
     w.put_usize(shard);
@@ -267,7 +273,7 @@ pub fn encode_message(msg: &ShardMessage, blob: &mut Vec<u8>, out: &mut Vec<u8>)
                         w.put_bool(true);
                         w.put_usize(res.params.len());
                         for t in &res.params {
-                            put_wire_tensor(&mut w, t);
+                            put_tensor_bulk(&mut w, t);
                         }
                         w.put_f64(res.mean_loss);
                         w.put_f64(res.mean_acc);
@@ -288,7 +294,7 @@ pub fn encode_message(msg: &ShardMessage, blob: &mut Vec<u8>, out: &mut Vec<u8>)
                         w.put_bool(true);
                         w.put_usize(tensors.len());
                         for t in tensors {
-                            put_wire_tensor(&mut w, t);
+                            put_tensor_bulk(&mut w, t);
                         }
                     }
                     Err(e) => {
@@ -299,10 +305,33 @@ pub fn encode_message(msg: &ShardMessage, blob: &mut Vec<u8>, out: &mut Vec<u8>)
             }
         }
         ShardMessage::Fault { .. } => {}
+        ShardMessage::Packed { items, .. } => {
+            for item in items {
+                match item {
+                    Ok(pr) => {
+                        w.put_bool(true);
+                        put_payload(&mut w, &pr.payload);
+                        w.put_f64(pr.mean_loss);
+                        w.put_f64(pr.mean_acc);
+                        w.put_usize(pr.steps);
+                        w.put_f64(pr.weight);
+                    }
+                    Err(e) => {
+                        w.put_bool(false);
+                        w.put_str(e);
+                    }
+                }
+            }
+        }
     }
     *blob = w.into_bytes();
+    let items_sec = if matches!(msg, ShardMessage::Packed { .. }) {
+        SEC_PAYLOAD
+    } else {
+        SEC_ITEMS
+    };
     encode_frame(
-        &[(SEC_HEAD, &blob[..head_len]), (SEC_ITEMS, &blob[head_len..])],
+        &[(SEC_HEAD, &blob[..head_len]), (items_sec, &blob[head_len..])],
         out,
     );
 }
@@ -325,9 +354,15 @@ pub fn decode_message(bytes: &[u8], scratch: &mut AggScratch) -> crate::Result<S
     if kind == KIND_FAULT {
         return Ok(ShardMessage::Fault { shard, round });
     }
-    let items_bytes = frame
-        .section(SEC_ITEMS)
-        .context("wire frame is missing the ITEMS section")?;
+    let items_bytes = if kind == KIND_PACKED {
+        frame
+            .section(SEC_PAYLOAD)
+            .context("wire frame is missing the PAYLOAD section")?
+    } else {
+        frame
+            .section(SEC_ITEMS)
+            .context("wire frame is missing the ITEMS section")?
+    };
     // every item costs at least its ok/err byte, so a lying count cannot
     // drive the Vec reservation past the frame size
     if count > items_bytes.len() {
@@ -353,7 +388,7 @@ pub fn decode_message(bytes: &[u8], scratch: &mut AggScratch) -> crate::Result<S
                     let weight = r.take_f64()?;
                     Ok(LocalResult { params, mean_loss, mean_acc, steps, weight })
                 } else {
-                    Err(r.take_str()?)
+                    Err(take_wire_err(&mut r, scratch)?)
                 });
             }
             Ok(ShardMessage::Results { shard, round, base, items })
@@ -372,13 +407,38 @@ pub fn decode_message(bytes: &[u8], scratch: &mut AggScratch) -> crate::Result<S
                     }
                     Ok(tensors)
                 } else {
-                    Err(r.take_str()?)
+                    Err(take_wire_err(&mut r, scratch)?)
                 });
             }
             Ok(ShardMessage::Deltas { shard, base, items })
         }
+        KIND_PACKED => {
+            let mut items = Vec::with_capacity(count);
+            for _ in 0..count {
+                items.push(if r.take_bool()? {
+                    let payload = take_payload(&mut r, scratch)?;
+                    let mean_loss = r.take_f64()?;
+                    let mean_acc = r.take_f64()?;
+                    let steps = r.take_usize()?;
+                    let weight = r.take_f64()?;
+                    Ok(PackedResult { payload, mean_loss, mean_acc, steps, weight })
+                } else {
+                    Err(take_wire_err(&mut r, scratch)?)
+                });
+            }
+            Ok(ShardMessage::Packed { shard, round, base, items })
+        }
         other => bail!("unknown shard message kind {other}"),
     }
+}
+
+/// Decode one per-client error string into a pooled `String` from
+/// `scratch`, so steady-state decode reuses error-shell capacity instead
+/// of allocating a fresh `String` per failed client every frame.
+fn take_wire_err(r: &mut Reader<'_>, scratch: &mut AggScratch) -> crate::Result<String> {
+    let mut e = scratch.take_err();
+    r.take_str_into(&mut e)?;
+    Ok(e)
 }
 
 // ---------------------------------------------------------------------
@@ -531,6 +591,47 @@ mod tests {
         assert_eq!(frame, frame2, "encode -> decode -> encode is a fixpoint");
     }
 
+    fn sample_packed() -> ShardMessage {
+        use crate::fl::{DeltaPayload, QuantUpdate, SparseUpdate};
+        ShardMessage::Packed {
+            shard: 1,
+            round: 9,
+            base: 3,
+            items: vec![
+                Ok(PackedResult {
+                    payload: DeltaPayload::SparseF32(SparseUpdate {
+                        values: vec![vec![1.0, -0.0, f32::NAN], vec![], vec![2.5]],
+                    }),
+                    mean_loss: 0.5,
+                    mean_acc: 0.25,
+                    steps: 2,
+                    weight: 8.0,
+                }),
+                Ok(PackedResult {
+                    payload: DeltaPayload::SparseQ8(QuantUpdate {
+                        scales: vec![0.125, 0.0],
+                        values: vec![vec![-128, -1, 0, 127], vec![]],
+                    }),
+                    mean_loss: 0.75,
+                    mean_acc: 0.5,
+                    steps: 3,
+                    weight: 4.0,
+                }),
+                Ok(PackedResult {
+                    payload: DeltaPayload::DenseF32(vec![Tensor::from_vec(
+                        &[2],
+                        vec![0.125, -9.75],
+                    )]),
+                    mean_loss: 0.0,
+                    mean_acc: 1.0,
+                    steps: 1,
+                    weight: 2.0,
+                }),
+                Err("client 4 exploded".to_string()),
+            ],
+        }
+    }
+
     #[test]
     fn every_message_kind_round_trips_to_a_byte_fixpoint() {
         round_trip_fixpoint(&sample_results());
@@ -544,6 +645,42 @@ mod tests {
             ],
         });
         round_trip_fixpoint(&ShardMessage::Fault { shard: 3, round: 11 });
+        round_trip_fixpoint(&sample_packed());
+    }
+
+    #[test]
+    fn packed_messages_travel_in_their_own_section() {
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(&sample_packed(), &mut blob, &mut frame);
+        let parsed = decode_frame(&frame).unwrap();
+        assert!(parsed.section(SEC_PAYLOAD).is_some());
+        assert!(parsed.section(SEC_ITEMS).is_none());
+        let mut scratch = AggScratch::new();
+        match decode_message(&frame, &mut scratch).unwrap() {
+            ShardMessage::Packed { shard, round, base, items } => {
+                assert_eq!((shard, round, base, items.len()), (1, 9, 3, 4));
+                assert!(items[3].is_err());
+            }
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn packed_corruption_and_truncation_are_clean_errors() {
+        let (mut blob, mut frame) = (Vec::new(), Vec::new());
+        encode_message(&sample_packed(), &mut blob, &mut frame);
+        let mut scratch = AggScratch::new();
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0xA5;
+            assert!(decode_message(&bad, &mut scratch).is_err(), "flip at {i} accepted");
+        }
+        for cut in 0..frame.len() {
+            assert!(
+                decode_message(&frame[..cut], &mut scratch).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
     }
 
     #[test]

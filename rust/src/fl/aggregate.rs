@@ -18,8 +18,14 @@
 //!
 //! Both modes execute through [`fedavg_into`] — the allocation-free,
 //! deterministically thread-parallel hot path over the
-//! [`super::parallel`] substrate (DESIGN.md §7).
+//! [`super::parallel`] substrate (DESIGN.md §7). Updates arrive as
+//! [`DeltaPayload`]s (DESIGN.md §12): an all-dense round takes the
+//! historical bit-exact sweep verbatim, while compressed payloads are
+//! folded by a fused dequantize-accumulate sweep that reads packed
+//! values in place — sparse and q8 updates are never expanded to dense
+//! tensors before aggregation.
 
+use super::codec::{column_ranks, DeltaPayload};
 use super::parallel::{for_each_chunk2_mut, AggScratch, CHUNK};
 use crate::dropout::MaskSet;
 use crate::model::ModelSpec;
@@ -27,7 +33,10 @@ use crate::tensor::Tensor;
 
 /// One client's contribution to a round.
 pub struct ClientUpdate {
-    pub params: Vec<Tensor>,
+    /// The update's tensors, in whatever representation the
+    /// experiment's codec produced. [`DeltaPayload::DenseF32`] is the
+    /// bit-exact reference; compressed payloads aggregate in place.
+    pub payload: DeltaPayload,
     /// FedAvg weight (number of local examples)
     pub weight: f64,
     pub mask: MaskSet,
@@ -36,6 +45,17 @@ pub struct ClientUpdate {
     /// buffered semi-async updates that missed their round's barrier and
     /// fold into a later aggregation ([`staleness_discount`]).
     pub staleness: usize,
+}
+
+impl ClientUpdate {
+    /// The dense tensors of a [`DeltaPayload::DenseF32`] update.
+    /// Reference/test accessor: panics on compressed payloads.
+    pub fn dense_params(&self) -> &[Tensor] {
+        match &self.payload {
+            DeltaPayload::DenseF32(ts) => ts,
+            other => panic!("dense_params on a {:?} payload", other.mode()),
+        }
+    }
 }
 
 /// Staleness discount for semi-async aggregation: a polynomial decay
@@ -74,7 +94,7 @@ pub enum AggregateMode {
 /// * group weight `{g}_w`-like: trailing dim == group size (neuron = col)
 ///   or == 4x group size (LSTM gates, neuron = col % H)
 /// * group bias: 1-D with the same correspondence
-fn group_of_param(spec: &ModelSpec, p_idx: usize) -> Option<(usize, usize)> {
+pub(crate) fn group_of_param(spec: &ModelSpec, p_idx: usize) -> Option<(usize, usize)> {
     let p = &spec.params[p_idx];
     let prefix: &str = p
         .name
@@ -96,7 +116,7 @@ fn group_of_param(spec: &ModelSpec, p_idx: usize) -> Option<(usize, usize)> {
 /// neuron index for a flat element index of a param with trailing dim
 /// `cols`, group size `n` and span (1 = direct, 4 = LSTM gates).
 #[inline]
-fn neuron_of(elem: usize, cols: usize, n: usize, span: usize) -> usize {
+pub(crate) fn neuron_of(elem: usize, cols: usize, n: usize, span: usize) -> usize {
     let col = elem % cols;
     if span == 1 {
         col
@@ -107,22 +127,33 @@ fn neuron_of(elem: usize, cols: usize, n: usize, span: usize) -> usize {
 
 /// Aggregate client updates into new global parameters.
 ///
-/// Convenience wrapper over [`fedavg_into`] with a throwaway scratch
-/// arena and a single thread — bit-identical to the engine's pooled
-/// path (pinned by the thread-count property test), just slower. Round
-/// loops should hold an [`AggScratch`] and call [`fedavg_into`].
+/// Serial convenience entry: a one-line delegation to [`fedavg_into`]
+/// with a throwaway scratch arena and a single thread — bit-identical to
+/// the engine's pooled path (pinned by the thread-count property test),
+/// just slower. Round loops should hold an [`AggScratch`] and call
+/// [`fedavg_into`].
 pub fn fedavg(
     spec: &ModelSpec,
     global: &[Tensor],
     updates: &[ClientUpdate],
     mode: AggregateMode,
 ) -> Vec<Tensor> {
-    let mut scratch = AggScratch::new();
-    fedavg_into(spec, global, updates, mode, 1, &mut scratch)
+    fedavg_into(spec, global, updates, mode, 1, &mut AggScratch::new())
 }
 
 /// Masked FedAvg through the allocation-free, thread-parallel hot path
 /// (DESIGN.md §7).
+///
+/// Dispatch: a round whose updates are all [`DeltaPayload::DenseF32`]
+/// (every pinned trajectory) takes the historical dense sweep verbatim —
+/// same chunking, same fold order, bit-identical. Any compressed payload
+/// routes the whole round through the payload sweep, which computes each
+/// element's f32 value from its packed representation (kept value,
+/// `global + scale * q`, or the broadcast global for dropped columns)
+/// and then accumulates in f64 **with the same expressions and update
+/// order as the dense sweep** — aggregating payloads directly equals
+/// aggregating their unpacked tensors, bit for bit (pinned in
+/// `tests/properties.rs`).
 ///
 /// Three structural changes over the historical per-element loop, all of
 /// them bit-preserving:
@@ -160,6 +191,32 @@ pub fn fedavg_into(
     scratch: &mut AggScratch,
 ) -> Vec<Tensor> {
     assert!(!updates.is_empty(), "fedavg with no updates");
+    if updates.iter().all(|u| u.payload.is_dense()) {
+        fedavg_dense_into(spec, global, updates, mode, threads, scratch)
+    } else {
+        fedavg_payload_into(spec, global, updates, mode, threads, scratch)
+    }
+}
+
+/// The dense tensors of an update on the all-dense fast path (the
+/// dispatcher has already checked every payload).
+#[inline]
+fn dense(u: &ClientUpdate) -> &[Tensor] {
+    match &u.payload {
+        DeltaPayload::DenseF32(ts) => ts,
+        _ => unreachable!("dense fast path requires DenseF32 payloads"),
+    }
+}
+
+/// The historical all-dense sweep — the bit-exact determinism reference.
+fn fedavg_dense_into(
+    spec: &ModelSpec,
+    global: &[Tensor],
+    updates: &[ClientUpdate],
+    mode: AggregateMode,
+    threads: usize,
+    scratch: &mut AggScratch,
+) -> Vec<Tensor> {
     let mut outs: Vec<Tensor> = global.iter().map(|t| scratch.take_out(t.shape())).collect();
     let AggScratch { acc, kw, den, w, .. } = scratch;
     w.clear();
@@ -173,7 +230,7 @@ pub fn fedavg_into(
         if len == 0 {
             continue;
         }
-        debug_assert!(updates.iter().all(|u| u.params[pi].len() == len));
+        debug_assert!(updates.iter().all(|u| dense(u)[pi].len() == len));
         let cols = *spec.params[pi].shape.last().unwrap_or(&1);
         let group = match mode {
             AggregateMode::Plain => None,
@@ -193,7 +250,7 @@ pub fn fedavg_into(
                 let o = out_t.data_mut();
                 for_each_chunk2_mut(acc.as_mut_slice(), o, CHUNK, threads, |start, a, oc| {
                     for (u, upd) in updates.iter().enumerate() {
-                        let d = &upd.params[pi].data()[start..start + a.len()];
+                        let d = &dense(upd)[pi].data()[start..start + a.len()];
                         let wu = w_s[u];
                         for (aj, &x) in a.iter_mut().zip(d) {
                             *aj += wu * x as f64;
@@ -247,7 +304,7 @@ pub fn fedavg_into(
                 let o = out_t.data_mut();
                 for_each_chunk2_mut(acc.as_mut_slice(), o, chunk, threads, |start, a, oc| {
                     for (u, upd) in updates.iter().enumerate() {
-                        let d = &upd.params[pi].data()[start..start + a.len()];
+                        let d = &dense(upd)[pi].data()[start..start + a.len()];
                         let kwu = &kw_s[u * cols..(u + 1) * cols];
                         let mut c = 0usize;
                         for (aj, &x) in a.iter_mut().zip(d) {
@@ -280,6 +337,236 @@ pub fn fedavg_into(
     outs
 }
 
+/// The payload sweep: folds mixed dense / sparse / q8 updates without
+/// expanding compressed payloads to dense tensors. Per chunk, each
+/// element's f32 value is materialized from its packed representation —
+/// a fused dequantize-accumulate — and added in f64 with exactly the
+/// dense sweep's expressions and update order, so the result is bitwise
+/// equal to running the dense sweep over the unpacked tensors. Packed
+/// params sweep wider row-aligned lanes (4x [`CHUNK`]) to amortize the
+/// per-chunk rank-map setup over more rows; chunk width cannot change
+/// the result (each element's accumulator is touched only by its own
+/// chunk).
+fn fedavg_payload_into(
+    spec: &ModelSpec,
+    global: &[Tensor],
+    updates: &[ClientUpdate],
+    mode: AggregateMode,
+    threads: usize,
+    scratch: &mut AggScratch,
+) -> Vec<Tensor> {
+    let mut outs: Vec<Tensor> = global.iter().map(|t| scratch.take_out(t.shape())).collect();
+    let AggScratch { acc, kw, den, w, cmap, kept, .. } = scratch;
+    w.clear();
+    w.extend(updates.iter().map(effective_weight));
+    let total_w: f64 = w.iter().sum();
+    assert!(total_w > 0.0);
+    let w_s: &[f64] = &w[..];
+
+    for (pi, (g_t, out_t)) in global.iter().zip(outs.iter_mut()).enumerate() {
+        let len = g_t.len();
+        if len == 0 {
+            continue;
+        }
+        let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+        // Packed layout is a property of the parameter (kept columns of
+        // its mask group), needed to *address* sparse values in every
+        // mode; ownership weighting stays mode-gated like the dense path.
+        let packing = group_of_param(spec, pi);
+        let own = mode == AggregateMode::OwnershipWeighted && packing.is_some();
+
+        if let Some((gidx, span)) = packing {
+            let n = spec.masks[gidx].size;
+            cmap.clear();
+            cmap.resize(updates.len() * cols, 0);
+            kept.clear();
+            for (u, upd) in updates.iter().enumerate() {
+                let m = upd.mask.tensors()[gidx].data();
+                debug_assert_eq!(m.len(), n);
+                let k = column_ranks(m, cols, n, span, &mut cmap[u * cols..(u + 1) * cols]);
+                kept.push(k as u32);
+            }
+            if own {
+                kw.clear();
+                kw.resize(updates.len() * cols, 0.0);
+                for (u, upd) in updates.iter().enumerate() {
+                    let m = upd.mask.tensors()[gidx].data();
+                    let row = &mut kw[u * cols..(u + 1) * cols];
+                    for (c, slot) in row.iter_mut().enumerate() {
+                        *slot = if m[neuron_of(c, cols, n, span)] == 1.0 {
+                            w_s[u]
+                        } else {
+                            0.0
+                        };
+                    }
+                }
+                den.clear();
+                den.resize(cols, 0.0);
+                for row in kw.chunks_exact(cols) {
+                    for (dc, &k) in den.iter_mut().zip(row) {
+                        *dc += k;
+                    }
+                }
+            }
+        }
+        let cmap_s: &[u32] = &cmap[..];
+        let kept_s: &[u32] = &kept[..];
+        let kw_s: &[f64] = &kw[..];
+        let den_s: &[f64] = &den[..];
+
+        acc.clear();
+        acc.resize(len, 0.0);
+        let g_data = g_t.data();
+        let o = out_t.data_mut();
+        let chunk = if packing.is_some() {
+            ((4 * CHUNK) / cols).max(1) * cols // wider lanes, row-aligned
+        } else {
+            4 * CHUNK
+        };
+        for_each_chunk2_mut(acc.as_mut_slice(), o, chunk, threads, |start, a, oc| {
+            for (u, upd) in updates.iter().enumerate() {
+                let wu = w_s[u];
+                match &upd.payload {
+                    DeltaPayload::DenseF32(ts) => {
+                        debug_assert_eq!(ts[pi].len(), len);
+                        let d = &ts[pi].data()[start..start + a.len()];
+                        if own {
+                            let kwu = &kw_s[u * cols..(u + 1) * cols];
+                            let mut c = 0usize;
+                            for (aj, &x) in a.iter_mut().zip(d) {
+                                let k = kwu[c];
+                                if k != 0.0 {
+                                    *aj += k * x as f64;
+                                }
+                                c += 1;
+                                if c == cols {
+                                    c = 0;
+                                }
+                            }
+                        } else {
+                            for (aj, &x) in a.iter_mut().zip(d) {
+                                *aj += wu * x as f64;
+                            }
+                        }
+                    }
+                    DeltaPayload::SparseF32(s) => {
+                        let vals = &s.values[pi][..];
+                        if packing.is_some() {
+                            let ranks = &cmap_s[u * cols..(u + 1) * cols];
+                            let kept_u = kept_s[u] as usize;
+                            debug_assert_eq!(vals.len(), (len / cols.max(1)) * kept_u);
+                            let mut c = 0usize;
+                            let mut base = (start / cols) * kept_u;
+                            if own {
+                                let kwu = &kw_s[u * cols..(u + 1) * cols];
+                                for aj in a.iter_mut() {
+                                    let k = kwu[c];
+                                    if k != 0.0 {
+                                        *aj += k * vals[base + ranks[c] as usize] as f64;
+                                    }
+                                    c += 1;
+                                    if c == cols {
+                                        c = 0;
+                                        base += kept_u;
+                                    }
+                                }
+                            } else {
+                                for (e, aj) in a.iter_mut().enumerate() {
+                                    let r = ranks[c];
+                                    let x = if r != u32::MAX {
+                                        vals[base + r as usize]
+                                    } else {
+                                        g_data[start + e] // dropped: the invariant's value
+                                    };
+                                    *aj += wu * x as f64;
+                                    c += 1;
+                                    if c == cols {
+                                        c = 0;
+                                        base += kept_u;
+                                    }
+                                }
+                            }
+                        } else {
+                            debug_assert_eq!(vals.len(), len);
+                            let d = &vals[start..start + a.len()];
+                            for (aj, &x) in a.iter_mut().zip(d) {
+                                *aj += wu * x as f64;
+                            }
+                        }
+                    }
+                    DeltaPayload::SparseQ8(q) => {
+                        let vals = &q.values[pi][..];
+                        let sc = q.scales[pi];
+                        if packing.is_some() {
+                            let ranks = &cmap_s[u * cols..(u + 1) * cols];
+                            let kept_u = kept_s[u] as usize;
+                            debug_assert_eq!(vals.len(), (len / cols.max(1)) * kept_u);
+                            let mut c = 0usize;
+                            let mut base = (start / cols) * kept_u;
+                            if own {
+                                let kwu = &kw_s[u * cols..(u + 1) * cols];
+                                for (e, aj) in a.iter_mut().enumerate() {
+                                    let k = kwu[c];
+                                    if k != 0.0 {
+                                        let qv = vals[base + ranks[c] as usize];
+                                        let x = g_data[start + e] + sc * qv as f32;
+                                        *aj += k * x as f64;
+                                    }
+                                    c += 1;
+                                    if c == cols {
+                                        c = 0;
+                                        base += kept_u;
+                                    }
+                                }
+                            } else {
+                                for (e, aj) in a.iter_mut().enumerate() {
+                                    let r = ranks[c];
+                                    let x = if r != u32::MAX {
+                                        g_data[start + e] + sc * vals[base + r as usize] as f32
+                                    } else {
+                                        g_data[start + e]
+                                    };
+                                    *aj += wu * x as f64;
+                                    c += 1;
+                                    if c == cols {
+                                        c = 0;
+                                        base += kept_u;
+                                    }
+                                }
+                            }
+                        } else {
+                            debug_assert_eq!(vals.len(), len);
+                            for (e, aj) in a.iter_mut().enumerate() {
+                                let x = g_data[start + e] + sc * vals[start + e] as f32;
+                                *aj += wu * x as f64;
+                            }
+                        }
+                    }
+                }
+            }
+            if own {
+                let mut c = 0usize;
+                for (e, (oj, &aj)) in oc.iter_mut().zip(a.iter()).enumerate() {
+                    *oj = if den_s[c] > 0.0 {
+                        (aj / den_s[c]) as f32
+                    } else {
+                        g_data[start + e] // nobody trained it: keep global
+                    };
+                    c += 1;
+                    if c == cols {
+                        c = 0;
+                    }
+                }
+            } else {
+                for (oj, &aj) in oc.iter_mut().zip(a.iter()) {
+                    *oj = (aj / total_w) as f32;
+                }
+            }
+        });
+    }
+    outs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,13 +585,13 @@ mod tests {
         let global = constant_params(&spec, 0.0);
         let updates = vec![
             ClientUpdate {
-                params: constant_params(&spec, 1.0),
+                payload: DeltaPayload::DenseF32(constant_params(&spec, 1.0)),
                 weight: 1.0,
                 mask: MaskSet::full(&spec),
                 staleness: 0,
             },
             ClientUpdate {
-                params: constant_params(&spec, 4.0),
+                payload: DeltaPayload::DenseF32(constant_params(&spec, 4.0)),
                 weight: 3.0,
                 mask: MaskSet::full(&spec),
                 staleness: 0,
@@ -332,13 +619,13 @@ mod tests {
         let b_mask = MaskSet::from_keep(&spec, &keep);
         let updates = vec![
             ClientUpdate {
-                params: constant_params(&spec, 1.0),
+                payload: DeltaPayload::DenseF32(constant_params(&spec, 1.0)),
                 weight: 1.0,
                 mask: MaskSet::full(&spec),
                 staleness: 0,
             },
             ClientUpdate {
-                params: {
+                payload: DeltaPayload::DenseF32({
                     // straggler: trained kept cols to 1.0, dropped cols
                     // still at broadcast 0.5
                     let mut ps = constant_params(&spec, 1.0);
@@ -354,7 +641,7 @@ mod tests {
                         b[c] = 0.5;
                     }
                     ps
-                },
+                }),
                 weight: 1.0,
                 mask: b_mask,
                 staleness: 0,
@@ -380,7 +667,7 @@ mod tests {
         keep[0][9] = false;
         let m = MaskSet::from_keep(&spec, &keep);
         let updates = vec![ClientUpdate {
-            params: constant_params(&spec, 2.0),
+            payload: DeltaPayload::DenseF32(constant_params(&spec, 2.0)),
             weight: 1.0,
             mask: m,
             staleness: 0,
@@ -434,7 +721,7 @@ mod tests {
         let spec = tiny_spec();
         let global = constant_params(&spec, 0.0);
         let mk = |v: f32, staleness: usize| ClientUpdate {
-            params: constant_params(&spec, v),
+            payload: DeltaPayload::DenseF32(constant_params(&spec, v)),
             weight: 1.0,
             mask: MaskSet::full(&spec),
             staleness,
@@ -463,5 +750,104 @@ mod tests {
             AggregateMode::Plain,
         );
         assert!((sync[0].data()[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn payload_fedavg_matches_dense_over_unpacked_tensors() {
+        use super::super::codec::{pack_sparse, Codec, Compression, UpdateCodec};
+
+        let spec = tiny_spec();
+        let global = spec.init_params(42);
+        // three clients: full, straggler (half mask), straggler (other mask)
+        let full = MaskSet::full(&spec);
+        let mut keep = vec![vec![true; 10], vec![true; 6]];
+        for k in keep[0].iter_mut().skip(5) {
+            *k = false;
+        }
+        keep[1][0] = false;
+        let half = MaskSet::from_keep(&spec, &keep);
+        let masks = [full, half.clone(), half];
+        let mut scratch = AggScratch::new();
+        let mut q8 = Codec::new(Compression::Q8);
+
+        // params obey the invariant: dropped columns == broadcast global
+        let mut dense_updates = Vec::new();
+        let mut payload_updates = Vec::new();
+        for (ci, mask) in masks.iter().enumerate() {
+            let mut ps = global.clone();
+            for (pi, t) in ps.iter_mut().enumerate() {
+                let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+                let trained = |e: usize| match group_of_param(&spec, pi) {
+                    Some((gidx, span)) => {
+                        let n = spec.masks[gidx].size;
+                        mask.tensors()[gidx].data()[neuron_of(e % cols, cols, n, span)] == 1.0
+                    }
+                    None => true,
+                };
+                for (e, x) in t.data_mut().iter_mut().enumerate() {
+                    if trained(e) {
+                        *x += 0.125 * (1 + (ci + e) % 5) as f32;
+                    }
+                }
+            }
+            // payloads: client 0 dense, 1 sparse, 2 q8 — a mixed round
+            let payload = match ci {
+                0 => DeltaPayload::DenseF32(ps.clone()),
+                1 => DeltaPayload::SparseF32(pack_sparse(&spec, &ps, mask, &mut scratch)),
+                _ => q8.encode(ci as u64, ps.clone(), mask, &global, &spec, &mut scratch),
+            };
+            // the dense reference aggregates the exact tensors each
+            // payload reconstructs to
+            let unpacked = super::super::codec::unpack(
+                payload.clone(),
+                mask,
+                &global,
+                &spec,
+                &mut scratch,
+            )
+            .unwrap();
+            dense_updates.push(ClientUpdate {
+                payload: DeltaPayload::DenseF32(unpacked),
+                weight: (ci + 1) as f64,
+                mask: mask.clone(),
+                staleness: ci % 2,
+            });
+            payload_updates.push(ClientUpdate {
+                payload,
+                weight: (ci + 1) as f64,
+                mask: mask.clone(),
+                staleness: ci % 2,
+            });
+        }
+
+        for mode in [AggregateMode::Plain, AggregateMode::OwnershipWeighted] {
+            for threads in [1usize, 4] {
+                let want = fedavg_into(
+                    &spec,
+                    &global,
+                    &dense_updates,
+                    mode,
+                    threads,
+                    &mut AggScratch::new(),
+                );
+                let got = fedavg_into(
+                    &spec,
+                    &global,
+                    &payload_updates,
+                    mode,
+                    threads,
+                    &mut AggScratch::new(),
+                );
+                for (a, b) in got.iter().zip(&want) {
+                    for (x, y) in a.data().iter().zip(b.data()) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "mode {mode:?} threads {threads}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,922 @@
+//! Client-update payload codec: sparse and quantized representations of
+//! the tensors a client returns, behind one [`DeltaPayload`] value
+//! (DESIGN.md §12).
+//!
+//! FLuID's invariant dropout guarantees that a straggler's dropped
+//! neurons come back *bit-equal* to the broadcast global weights (zero
+//! gradient — the L2 invariant the runtime tests pin). So a sub-model
+//! update only needs to move its **kept** columns: [`Compression::Sparse`]
+//! packs exactly those, reusing the [`MaskSet`] column indices the
+//! aggregator already derives instead of shipping explicit index lists,
+//! and reconstructs every dropped element from the broadcast global on
+//! decode. [`Compression::Q8`] additionally quantizes the packed *delta*
+//! (update minus broadcast) to int8 with one symmetric per-tensor scale,
+//! carrying per-client error-feedback residuals across rounds so the
+//! quantization error telescopes instead of accumulating.
+//!
+//! [`Compression::Dense`] (the default) is the bit-exact determinism
+//! reference: its payloads are the raw tensors, every pinned trajectory
+//! runs through it unchanged, and the compressed modes are *defined*
+//! against it (sparse is bit-equal to dense wherever the invariant
+//! holds; q8 is dense plus a bounded, error-fed quantization residual).
+//!
+//! Layering: the engine owns one [`Codec`] (the [`UpdateCodec`] impl
+//! holding q8 residual state) and encodes fresh updates at aggregation
+//! assembly; the shard wire carries stateless sparse packings (see
+//! [`pack_result`] — quantizer state must live in exactly one place or
+//! N→M shard resume would partition it); `fl::aggregate::fedavg_into`
+//! consumes payloads directly with a fused dequantize-accumulate sweep.
+
+use super::aggregate::{group_of_param, neuron_of};
+use super::client::LocalResult;
+use super::parallel::AggScratch;
+use crate::dropout::MaskSet;
+use crate::model::ModelSpec;
+use crate::snapshot::{codec, Reader, Writer};
+use crate::tensor::Tensor;
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// Which update representation an experiment moves and aggregates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    /// Raw f32 tensors — the bit-exact reference path.
+    Dense,
+    /// Kept-column packing over the sub-model mask, raw f32 values.
+    Sparse,
+    /// Kept-column packing of int8-quantized deltas with per-tensor
+    /// symmetric scales and per-client error feedback.
+    Q8,
+}
+
+impl Compression {
+    /// Parse a `--compress` flag value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "dense" => Some(Self::Dense),
+            "sparse" => Some(Self::Sparse),
+            "q8" => Some(Self::Q8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Sparse => "sparse",
+            Self::Q8 => "q8",
+        }
+    }
+}
+
+/// Kept-column packed update: one value vector per parameter. Group
+/// parameters carry `rows x kept_cols` values in row-major order, kept
+/// columns ascending (the rank order [`column_ranks`] assigns); non-group
+/// parameters are trained by every client and stay fully represented.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseUpdate {
+    pub values: Vec<Vec<f32>>,
+}
+
+/// Quantized kept-column packed delta: per-parameter symmetric scale
+/// (`x ≈ global + scale * q`) over the same packing as [`SparseUpdate`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantUpdate {
+    pub scales: Vec<f32>,
+    pub values: Vec<Vec<i8>>,
+}
+
+/// One client update as it moves between layers: produced by an
+/// [`UpdateCodec`], framed by `engine::wire`, consumed by
+/// `fl::aggregate::fedavg_into`.
+#[derive(Clone, Debug)]
+pub enum DeltaPayload {
+    DenseF32(Vec<Tensor>),
+    SparseF32(SparseUpdate),
+    SparseQ8(QuantUpdate),
+}
+
+impl DeltaPayload {
+    pub fn mode(&self) -> Compression {
+        match self {
+            Self::DenseF32(_) => Compression::Dense,
+            Self::SparseF32(_) => Compression::Sparse,
+            Self::SparseQ8(_) => Compression::Q8,
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Self::DenseF32(_))
+    }
+
+    /// Exact byte count this payload occupies inside a wire frame
+    /// (mirrors [`put_payload`] — the per-round bytes-moved report sums
+    /// this).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Self::DenseF32(ts) => {
+                1 + 8
+                    + ts.iter()
+                        .map(|t| 8 + 8 * t.shape().len() + 8 + 4 * t.len())
+                        .sum::<usize>()
+            }
+            Self::SparseF32(s) => {
+                1 + 8 + s.values.iter().map(|v| 8 + 4 * v.len()).sum::<usize>()
+            }
+            Self::SparseQ8(q) => {
+                1 + 8 + q.values.iter().map(|v| 4 + 8 + v.len()).sum::<usize>()
+            }
+        }
+    }
+}
+
+/// Fill `map[c]` with the packed rank of column `c` (kept columns number
+/// `0..kept` in ascending column order; dropped columns get `u32::MAX`)
+/// and return the kept-column count. `mask_g` is the group's mask tensor
+/// data (1.0 = kept), `span` the gate span ([`neuron_of`]).
+pub(crate) fn column_ranks(
+    mask_g: &[f32],
+    cols: usize,
+    n: usize,
+    span: usize,
+    map: &mut [u32],
+) -> usize {
+    debug_assert_eq!(map.len(), cols);
+    let mut rank = 0u32;
+    for (c, slot) in map.iter_mut().enumerate() {
+        if mask_g[neuron_of(c, cols, n, span)] == 1.0 {
+            *slot = rank;
+            rank += 1;
+        } else {
+            *slot = u32::MAX;
+        }
+    }
+    rank as usize
+}
+
+/// Stateless kept-column packing of a full parameter set against `mask`.
+/// Bit-lossless wherever the invariant holds (a dropped column equals
+/// the broadcast global, which [`unpack`] restores verbatim); the rank
+/// map is staged in `scratch.cmap` so steady-state packing allocates
+/// only the value vectors themselves.
+pub fn pack_sparse(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    mask: &MaskSet,
+    scratch: &mut AggScratch,
+) -> SparseUpdate {
+    let mut values = Vec::with_capacity(params.len());
+    for (pi, t) in params.iter().enumerate() {
+        let data = t.data();
+        match group_of_param(spec, pi) {
+            Some((gidx, span)) => {
+                let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+                let n = spec.masks[gidx].size;
+                scratch.cmap.clear();
+                scratch.cmap.resize(cols, 0);
+                let kept =
+                    column_ranks(mask.tensors()[gidx].data(), cols, n, span, &mut scratch.cmap);
+                let rows = data.len() / cols.max(1);
+                let mut v = Vec::with_capacity(rows * kept);
+                let mut c = 0usize;
+                for &x in data {
+                    if scratch.cmap[c] != u32::MAX {
+                        v.push(x);
+                    }
+                    c += 1;
+                    if c == cols {
+                        c = 0;
+                    }
+                }
+                values.push(v);
+            }
+            None => values.push(data.to_vec()),
+        }
+    }
+    SparseUpdate { values }
+}
+
+/// Reconstruct dense tensors from a payload against the broadcast
+/// `global` and the client's `mask`. Dense payloads pass through after
+/// shape validation; sparse payloads restore dropped columns from the
+/// global (exactly the invariant's value); q8 payloads dequantize
+/// `global + scale * q`. Output tensors come from `scratch`'s recycle
+/// pool. Wire data is untrusted, so every length is validated — any
+/// mismatch is a clean `Err`.
+pub fn unpack(
+    payload: DeltaPayload,
+    mask: &MaskSet,
+    global: &[Tensor],
+    spec: &ModelSpec,
+    scratch: &mut AggScratch,
+) -> crate::Result<Vec<Tensor>> {
+    match payload {
+        DeltaPayload::DenseF32(ts) => {
+            if ts.len() != spec.params.len() {
+                bail!("dense payload holds {} tensors, spec has {}", ts.len(), spec.params.len());
+            }
+            for (pi, t) in ts.iter().enumerate() {
+                if t.shape() != &spec.params[pi].shape[..] {
+                    bail!(
+                        "dense payload tensor {pi} has shape {:?}, spec wants {:?}",
+                        t.shape(),
+                        spec.params[pi].shape
+                    );
+                }
+            }
+            Ok(ts)
+        }
+        DeltaPayload::SparseF32(s) => {
+            unpack_packed(&s.values, None, mask, global, spec, scratch)
+        }
+        DeltaPayload::SparseQ8(q) => {
+            if q.scales.len() != spec.params.len() {
+                bail!("q8 payload holds {} scales, spec has {}", q.scales.len(), spec.params.len());
+            }
+            unpack_packed(&q.values, Some(&q.scales), mask, global, spec, scratch)
+        }
+    }
+}
+
+/// Shared reconstruction loop for the two packed representations: `V` is
+/// `f32` (raw kept values) or `i8` (quantized deltas, `scales` present).
+trait PackedValue: Copy {
+    /// The dense f32 this packed element reconstructs to.
+    fn expand(self, global: f32, scale: f32) -> f32;
+}
+
+impl PackedValue for f32 {
+    #[inline]
+    fn expand(self, _global: f32, _scale: f32) -> f32 {
+        self
+    }
+}
+
+impl PackedValue for i8 {
+    #[inline]
+    fn expand(self, global: f32, scale: f32) -> f32 {
+        global + scale * self as f32
+    }
+}
+
+fn unpack_packed<V: PackedValue>(
+    values: &[Vec<V>],
+    scales: Option<&[f32]>,
+    mask: &MaskSet,
+    global: &[Tensor],
+    spec: &ModelSpec,
+    scratch: &mut AggScratch,
+) -> crate::Result<Vec<Tensor>> {
+    if values.len() != spec.params.len() {
+        bail!("packed payload holds {} params, spec has {}", values.len(), spec.params.len());
+    }
+    if global.len() != spec.params.len() {
+        bail!("global holds {} params, spec has {}", global.len(), spec.params.len());
+    }
+    let mut outs = Vec::with_capacity(values.len());
+    for (pi, vals) in values.iter().enumerate() {
+        let g_t = &global[pi];
+        let len = g_t.len();
+        let scale = scales.map(|s| s[pi]).unwrap_or(0.0);
+        let mut out = scratch.take_out(g_t.shape());
+        {
+            let o = out.data_mut();
+            let g = g_t.data();
+            match group_of_param(spec, pi) {
+                Some((gidx, span)) => {
+                    let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+                    let n = spec.masks[gidx].size;
+                    scratch.cmap.clear();
+                    scratch.cmap.resize(cols, 0);
+                    let kept = column_ranks(
+                        mask.tensors()[gidx].data(),
+                        cols,
+                        n,
+                        span,
+                        &mut scratch.cmap,
+                    );
+                    let rows = len / cols.max(1);
+                    if vals.len() != rows * kept {
+                        bail!(
+                            "packed param {pi} holds {} values, mask wants {rows} x {kept}",
+                            vals.len()
+                        );
+                    }
+                    let mut c = 0usize;
+                    let mut base = 0usize;
+                    for (e, oj) in o.iter_mut().enumerate() {
+                        let r = scratch.cmap[c];
+                        *oj = if r != u32::MAX {
+                            vals[base + r as usize].expand(g[e], scale)
+                        } else {
+                            g[e]
+                        };
+                        c += 1;
+                        if c == cols {
+                            c = 0;
+                            base += kept;
+                        }
+                    }
+                }
+                None => {
+                    if vals.len() != len {
+                        bail!("packed param {pi} holds {} values, spec wants {len}", vals.len());
+                    }
+                    for ((oj, &v), &gj) in o.iter_mut().zip(vals).zip(g.iter()) {
+                        *oj = v.expand(gj, scale);
+                    }
+                }
+            }
+        }
+        outs.push(out);
+    }
+    Ok(outs)
+}
+
+// ---------------------------------------------------------------------
+// the stateful engine-side codec
+// ---------------------------------------------------------------------
+
+/// Encode/decode seam between raw client tensors and [`DeltaPayload`]s.
+/// `encode` is `&mut self` because q8 carries per-client error-feedback
+/// residual state across rounds.
+pub trait UpdateCodec {
+    fn mode(&self) -> Compression;
+
+    /// Consume a client's trained parameters and produce its payload.
+    /// Dense mode moves the tensors through untouched; the compressed
+    /// modes pack them and recycle the dense buffers into `scratch`.
+    fn encode(
+        &mut self,
+        client: u64,
+        params: Vec<Tensor>,
+        mask: &MaskSet,
+        global: &[Tensor],
+        spec: &ModelSpec,
+        scratch: &mut AggScratch,
+    ) -> DeltaPayload;
+}
+
+/// The engine's codec: mode from `ExperimentConfig::compress`, plus the
+/// q8 error-feedback residuals (one dense f32 set per client that has
+/// ever encoded under q8, keyed by client id in a `BTreeMap` so
+/// snapshot export is deterministically ordered).
+pub struct Codec {
+    mode: Compression,
+    resid: BTreeMap<u64, Vec<Vec<f32>>>,
+}
+
+impl Codec {
+    pub fn new(mode: Compression) -> Self {
+        Self { mode, resid: BTreeMap::new() }
+    }
+
+    /// Residual state for the snapshot RESID section, sorted by client.
+    pub fn export_resid(&self) -> Vec<(u64, Vec<Vec<f32>>)> {
+        self.resid.iter().map(|(c, v)| (*c, v.clone())).collect()
+    }
+
+    /// Restore residual state from a snapshot, validating every tensor
+    /// length against the spec before installing anything.
+    pub fn import_resid(
+        &mut self,
+        entries: Vec<(u64, Vec<Vec<f32>>)>,
+        spec: &ModelSpec,
+    ) -> crate::Result<()> {
+        let mut resid = BTreeMap::new();
+        for (client, params) in entries {
+            if params.len() != spec.params.len() {
+                bail!(
+                    "snapshot residuals for client {client} hold {} params, spec has {}",
+                    params.len(),
+                    spec.params.len()
+                );
+            }
+            for (pi, r) in params.iter().enumerate() {
+                let want: usize = spec.params[pi].shape.iter().product();
+                if r.len() != want {
+                    bail!(
+                        "snapshot residual {pi} for client {client} holds {} elements, \
+                         spec wants {want}",
+                        r.len()
+                    );
+                }
+            }
+            resid.insert(client, params);
+        }
+        self.resid = resid;
+        Ok(())
+    }
+
+    /// Quantize `params` against `global` under the client's residuals.
+    /// Scales are symmetric per tensor over the *packed* shifted deltas
+    /// (`x' = (param - global) + residual`); residuals advance on packed
+    /// elements only (`x' - scale * q`), so dropped columns — whose true
+    /// delta the invariant pins at zero — never accumulate phantom error.
+    fn encode_q8(
+        &mut self,
+        client: u64,
+        params: &[Tensor],
+        mask: &MaskSet,
+        global: &[Tensor],
+        spec: &ModelSpec,
+        scratch: &mut AggScratch,
+    ) -> QuantUpdate {
+        let resid = self
+            .resid
+            .entry(client)
+            .or_insert_with(|| params.iter().map(|t| vec![0.0f32; t.len()]).collect());
+        let mut scales = Vec::with_capacity(params.len());
+        let mut values = Vec::with_capacity(params.len());
+        for (pi, t) in params.iter().enumerate() {
+            let data = t.data();
+            let g = global[pi].data();
+            let r = &mut resid[pi];
+            let (cols, kept) = match group_of_param(spec, pi) {
+                Some((gidx, span)) => {
+                    let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+                    let n = spec.masks[gidx].size;
+                    scratch.cmap.clear();
+                    scratch.cmap.resize(cols, 0);
+                    let kept = column_ranks(
+                        mask.tensors()[gidx].data(),
+                        cols,
+                        n,
+                        span,
+                        &mut scratch.cmap,
+                    );
+                    (cols, kept)
+                }
+                None => {
+                    // fully represented: every column "kept"
+                    scratch.cmap.clear();
+                    scratch.cmap.resize(1, 0);
+                    (1, 1)
+                }
+            };
+            let rows = data.len() / cols.max(1);
+            // pass 1: symmetric max over the packed shifted deltas
+            let mut max = 0.0f32;
+            let mut c = 0usize;
+            for (e, &x) in data.iter().enumerate() {
+                if scratch.cmap[c] != u32::MAX {
+                    let xp = (x - g[e]) + r[e];
+                    max = max.max(xp.abs());
+                }
+                c += 1;
+                if c == cols {
+                    c = 0;
+                }
+            }
+            let scale = if max > 0.0 && max.is_finite() { max / 127.0 } else { 0.0 };
+            // pass 2: quantize packed elements, advance their residuals
+            let mut v = Vec::with_capacity(rows * kept);
+            let mut c = 0usize;
+            for (e, &x) in data.iter().enumerate() {
+                if scratch.cmap[c] != u32::MAX {
+                    let xp = (x - g[e]) + r[e];
+                    let q = if scale > 0.0 {
+                        (xp / scale).round().clamp(-127.0, 127.0) as i8
+                    } else {
+                        0
+                    };
+                    r[e] = xp - scale * q as f32;
+                    v.push(q);
+                }
+                c += 1;
+                if c == cols {
+                    c = 0;
+                }
+            }
+            scales.push(scale);
+            values.push(v);
+        }
+        QuantUpdate { scales, values }
+    }
+}
+
+impl UpdateCodec for Codec {
+    fn mode(&self) -> Compression {
+        self.mode
+    }
+
+    fn encode(
+        &mut self,
+        client: u64,
+        params: Vec<Tensor>,
+        mask: &MaskSet,
+        global: &[Tensor],
+        spec: &ModelSpec,
+        scratch: &mut AggScratch,
+    ) -> DeltaPayload {
+        match self.mode {
+            Compression::Dense => DeltaPayload::DenseF32(params),
+            Compression::Sparse => {
+                let packed = pack_sparse(spec, &params, mask, scratch);
+                scratch.recycle(params);
+                DeltaPayload::SparseF32(packed)
+            }
+            Compression::Q8 => {
+                let packed = self.encode_q8(client, &params, mask, global, spec, scratch);
+                scratch.recycle(params);
+                DeltaPayload::SparseQ8(packed)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// wire-side packing (stateless) and payload framing
+// ---------------------------------------------------------------------
+
+/// A shard-wire training result whose tensors travel as a payload
+/// instead of dense f32 columns (`ShardMessage::Packed`).
+#[derive(Clone, Debug)]
+pub struct PackedResult {
+    pub payload: DeltaPayload,
+    pub mean_loss: f64,
+    pub mean_acc: f64,
+    pub steps: usize,
+    pub weight: f64,
+}
+
+/// Pack one [`LocalResult`] for the shard wire. Compressed modes both
+/// ship the **sparse** packing here: the wire must stay lossless and
+/// stateless (q8's residuals live in the root engine's [`Codec`] — if
+/// shard workers quantized, the error-feedback state would partition by
+/// shard count and N→M resume could not be bit-identical). Dense mode
+/// passes the tensors through untouched.
+pub fn pack_result(
+    res: LocalResult,
+    mask: &MaskSet,
+    spec: &ModelSpec,
+    mode: Compression,
+    scratch: &mut AggScratch,
+) -> PackedResult {
+    let payload = match mode {
+        Compression::Dense => DeltaPayload::DenseF32(res.params),
+        Compression::Sparse | Compression::Q8 => {
+            let packed = pack_sparse(spec, &res.params, mask, scratch);
+            scratch.recycle(res.params);
+            DeltaPayload::SparseF32(packed)
+        }
+    };
+    PackedResult {
+        payload,
+        mean_loss: res.mean_loss,
+        mean_acc: res.mean_acc,
+        steps: res.steps,
+        weight: res.weight,
+    }
+}
+
+/// Reconstruct the dense [`LocalResult`] a packed wire item stands for.
+pub fn unpack_result(
+    pr: PackedResult,
+    mask: &MaskSet,
+    global: &[Tensor],
+    spec: &ModelSpec,
+    scratch: &mut AggScratch,
+) -> crate::Result<LocalResult> {
+    let params = unpack(pr.payload, mask, global, spec, scratch)?;
+    Ok(LocalResult {
+        params,
+        mean_loss: pr.mean_loss,
+        mean_acc: pr.mean_acc,
+        steps: pr.steps,
+        weight: pr.weight,
+    })
+}
+
+const TAG_DENSE: u8 = 0;
+const TAG_SPARSE: u8 = 1;
+const TAG_Q8: u8 = 2;
+
+/// Frame a payload into a wire writer. One encoder for all three
+/// representations, built entirely from the shared `snapshot::codec`
+/// bulk helpers — [`DeltaPayload`] framing is written exactly once.
+pub fn put_payload(w: &mut Writer, p: &DeltaPayload) {
+    match p {
+        DeltaPayload::DenseF32(ts) => {
+            w.put_u8(TAG_DENSE);
+            w.put_usize(ts.len());
+            for t in ts {
+                codec::put_tensor_bulk(w, t);
+            }
+        }
+        DeltaPayload::SparseF32(s) => {
+            w.put_u8(TAG_SPARSE);
+            w.put_usize(s.values.len());
+            for v in &s.values {
+                w.put_f32_bytes(v);
+            }
+        }
+        DeltaPayload::SparseQ8(q) => {
+            w.put_u8(TAG_Q8);
+            w.put_usize(q.values.len());
+            for (s, v) in q.scales.iter().zip(&q.values) {
+                w.put_f32(*s);
+                w.put_i8_bytes(v);
+            }
+        }
+    }
+}
+
+/// Decode a [`put_payload`] framing. Dense tensors come out of
+/// `scratch`'s recycle pool; packed value vectors allocate exactly their
+/// own storage (O(packed), never O(dense)). Lengths are validated before
+/// any allocation, so corrupt frames are a clean `Err`.
+pub fn take_payload(r: &mut Reader<'_>, scratch: &mut AggScratch) -> crate::Result<DeltaPayload> {
+    let tag = r.take_u8()?;
+    let count = r.take_usize()?;
+    if count > r.remaining() {
+        bail!("wire payload claims {count} params in {} bytes", r.remaining());
+    }
+    match tag {
+        TAG_DENSE => {
+            let mut ts = Vec::with_capacity(count);
+            for _ in 0..count {
+                ts.push(codec::take_tensor_bulk(r, |shape| scratch.take_out(shape))?);
+            }
+            Ok(DeltaPayload::DenseF32(ts))
+        }
+        TAG_SPARSE => {
+            let mut values = Vec::with_capacity(count);
+            for _ in 0..count {
+                values.push(r.take_f32_bytes()?);
+            }
+            Ok(DeltaPayload::SparseF32(SparseUpdate { values }))
+        }
+        TAG_Q8 => {
+            let mut scales = Vec::with_capacity(count);
+            let mut values = Vec::with_capacity(count);
+            for _ in 0..count {
+                scales.push(r.take_f32()?);
+                values.push(r.take_i8_bytes()?);
+            }
+            Ok(DeltaPayload::SparseQ8(QuantUpdate { scales, values }))
+        }
+        other => bail!("unknown wire payload tag {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::tests::tiny_spec;
+
+    fn half_mask(spec: &ModelSpec) -> MaskSet {
+        // keep the first half of every group (fc1: 5 of 10, fc2: 3 of 6)
+        let keep: Vec<Vec<bool>> = spec
+            .masks
+            .iter()
+            .map(|m| (0..m.size).map(|j| j < m.size / 2).collect())
+            .collect();
+        MaskSet::from_keep(spec, &keep)
+    }
+
+    /// Params that obey the invariant: kept columns trained away from
+    /// the global, dropped columns bit-equal to it.
+    fn invariant_params(spec: &ModelSpec, global: &[Tensor], mask: &MaskSet) -> Vec<Tensor> {
+        let mut out = global.to_vec();
+        for (pi, t) in out.iter_mut().enumerate() {
+            let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+            if let Some((gidx, span)) = group_of_param(spec, pi) {
+                let n = spec.masks[gidx].size;
+                let m = mask.tensors()[gidx].data().to_vec();
+                for (e, x) in t.data_mut().iter_mut().enumerate() {
+                    if m[neuron_of(e % cols, cols, n, span)] == 1.0 {
+                        *x += 0.25 + (e % 7) as f32 * 0.125;
+                    }
+                }
+            } else {
+                for (e, x) in t.data_mut().iter_mut().enumerate() {
+                    *x += 0.5 + (e % 3) as f32 * 0.25;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn compression_parses_flag_values() {
+        assert_eq!(Compression::parse("dense"), Some(Compression::Dense));
+        assert_eq!(Compression::parse("sparse"), Some(Compression::Sparse));
+        assert_eq!(Compression::parse("q8"), Some(Compression::Q8));
+        assert_eq!(Compression::parse("zstd"), None);
+        assert_eq!(Compression::Q8.name(), "q8");
+    }
+
+    #[test]
+    fn column_ranks_numbers_kept_columns_in_order() {
+        // 6 neurons, first half kept, span 1
+        let mask = [1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let mut map = vec![0u32; 6];
+        let kept = column_ranks(&mask, 6, 6, 1, &mut map);
+        assert_eq!(kept, 3);
+        assert_eq!(map, vec![0, 1, 2, u32::MAX, u32::MAX, u32::MAX]);
+        // LSTM gate span 4 over 2 neurons (cols = 8): neuron 1 dropped
+        let mask = [1.0f32, 0.0];
+        let mut map = vec![0u32; 8];
+        let kept = column_ranks(&mask, 8, 2, 4, &mut map);
+        assert_eq!(kept, 4);
+        assert_eq!(map[0], 0);
+        assert_eq!(map[1], u32::MAX);
+        assert_eq!(map[2], 1);
+        assert_eq!(map[6], 3);
+        assert_eq!(map[7], u32::MAX);
+    }
+
+    #[test]
+    fn sparse_round_trip_is_bit_exact_under_the_invariant() {
+        let spec = tiny_spec();
+        let global = spec.init_params(7);
+        let mask = half_mask(&spec);
+        let params = invariant_params(&spec, &global, &mask);
+        let mut scratch = AggScratch::new();
+        let packed = pack_sparse(&spec, &params, &mask, &mut scratch);
+        // group params shrink to their kept columns, non-group stay full
+        assert!(packed.values[0].len() < params[0].len());
+        let back = unpack(
+            DeltaPayload::SparseF32(packed),
+            &mask,
+            &global,
+            &spec,
+            &mut scratch,
+        )
+        .unwrap();
+        for (a, b) in back.iter().zip(&params) {
+            assert_eq!(a.shape(), b.shape());
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn full_mask_sparse_packing_matches_dense_layout() {
+        let spec = tiny_spec();
+        let global = spec.init_params(3);
+        let mask = MaskSet::full(&spec);
+        let params = invariant_params(&spec, &global, &mask);
+        let mut scratch = AggScratch::new();
+        let packed = pack_sparse(&spec, &params, &mask, &mut scratch);
+        for (v, t) in packed.values.iter().zip(&params) {
+            assert_eq!(v.len(), t.len());
+        }
+    }
+
+    #[test]
+    fn q8_error_is_bounded_by_half_scale() {
+        let spec = tiny_spec();
+        let global = spec.init_params(11);
+        let mask = half_mask(&spec);
+        let params = invariant_params(&spec, &global, &mask);
+        let mut scratch = AggScratch::new();
+        let mut codec = Codec::new(Compression::Q8);
+        let payload = codec.encode(9, params.clone(), &mask, &global, &spec, &mut scratch);
+        let scales = match &payload {
+            DeltaPayload::SparseQ8(q) => q.scales.clone(),
+            other => panic!("q8 codec produced {other:?}"),
+        };
+        let back = unpack(payload, &mask, &global, &spec, &mut scratch).unwrap();
+        for (pi, (a, b)) in back.iter().zip(&params).enumerate() {
+            let tol = scales[pi] * 0.5 + 1e-6;
+            let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+            let packed_col = |e: usize| match group_of_param(&spec, pi) {
+                Some((gidx, span)) => {
+                    let n = spec.masks[gidx].size;
+                    mask.tensors()[gidx].data()[neuron_of(e % cols, cols, n, span)] == 1.0
+                }
+                None => true,
+            };
+            for (e, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+                if packed_col(e) {
+                    assert!(
+                        (x - y).abs() <= tol,
+                        "param {pi} elem {e}: |{x} - {y}| > {tol}"
+                    );
+                } else {
+                    // dropped columns reconstruct the global exactly
+                    assert_eq!(x.to_bits(), global[pi].data()[e].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codec_residuals_export_import_round_trip() {
+        let spec = tiny_spec();
+        let global = spec.init_params(5);
+        let mask = half_mask(&spec);
+        let params = invariant_params(&spec, &global, &mask);
+        let mut scratch = AggScratch::new();
+        let mut codec = Codec::new(Compression::Q8);
+        codec.encode(3, params.clone(), &mask, &global, &spec, &mut scratch);
+        codec.encode(1, params, &mask, &global, &spec, &mut scratch);
+        let exported = codec.export_resid();
+        assert_eq!(exported.len(), 2);
+        assert!(exported[0].0 < exported[1].0, "export sorted by client id");
+        let mut fresh = Codec::new(Compression::Q8);
+        fresh.import_resid(exported.clone(), &spec).unwrap();
+        assert_eq!(fresh.export_resid(), exported);
+        // a residual tensor of the wrong length is rejected
+        let mut bad = exported;
+        bad[0].1[0].pop();
+        assert!(fresh.import_resid(bad, &spec).is_err());
+    }
+
+    #[test]
+    fn dense_mode_moves_tensors_through_unchanged() {
+        let spec = tiny_spec();
+        let global = spec.init_params(2);
+        let params = spec.init_params(4);
+        let want: Vec<Vec<u32>> = params
+            .iter()
+            .map(|t| t.data().iter().map(|x| x.to_bits()).collect())
+            .collect();
+        let mut scratch = AggScratch::new();
+        let mut codec = Codec::new(Compression::Dense);
+        let payload =
+            codec.encode(0, params, &MaskSet::full(&spec), &global, &spec, &mut scratch);
+        let back = unpack(payload, &MaskSet::full(&spec), &global, &spec, &mut scratch).unwrap();
+        for (t, bits) in back.iter().zip(&want) {
+            for (x, b) in t.data().iter().zip(bits) {
+                assert_eq!(x.to_bits(), *b);
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_rejects_mismatched_lengths() {
+        let spec = tiny_spec();
+        let global = spec.init_params(1);
+        let mask = half_mask(&spec);
+        let mut scratch = AggScratch::new();
+        let params = invariant_params(&spec, &global, &mask);
+        let packed = pack_sparse(&spec, &params, &mask, &mut scratch);
+        // drop one value: the rows x kept accounting must notice
+        let mut short = packed.clone();
+        short.values[0].pop();
+        assert!(unpack(
+            DeltaPayload::SparseF32(short),
+            &mask,
+            &global,
+            &spec,
+            &mut scratch
+        )
+        .is_err());
+        // wrong param count
+        let mut missing = packed;
+        missing.values.pop();
+        assert!(unpack(
+            DeltaPayload::SparseF32(missing),
+            &mask,
+            &global,
+            &spec,
+            &mut scratch
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn payload_framing_round_trips_all_representations() {
+        let spec = tiny_spec();
+        let global = spec.init_params(6);
+        let mask = half_mask(&spec);
+        let params = invariant_params(&spec, &global, &mask);
+        let mut scratch = AggScratch::new();
+        let payloads = vec![
+            DeltaPayload::DenseF32(params.clone()),
+            DeltaPayload::SparseF32(pack_sparse(&spec, &params, &mask, &mut scratch)),
+            DeltaPayload::SparseQ8(
+                Codec::new(Compression::Q8)
+                    .encode_q8(4, &params, &mask, &global, &spec, &mut scratch),
+            ),
+        ];
+        for p in payloads {
+            let mut w = Writer::new();
+            put_payload(&mut w, &p);
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), p.wire_bytes(), "wire_bytes mirrors the framing");
+            let mut r = Reader::new(&bytes);
+            let back = take_payload(&mut r, &mut scratch).unwrap();
+            assert!(r.is_done());
+            let mut w2 = Writer::new();
+            put_payload(&mut w2, &back);
+            assert_eq!(w2.into_bytes(), bytes, "encode -> decode -> encode fixpoint");
+        }
+    }
+
+    #[test]
+    fn sparse_wire_bytes_shrink_with_the_mask() {
+        let spec = tiny_spec();
+        let global = spec.init_params(8);
+        let mask = half_mask(&spec);
+        let params = invariant_params(&spec, &global, &mask);
+        let mut scratch = AggScratch::new();
+        let dense = DeltaPayload::DenseF32(params.clone());
+        let sparse = DeltaPayload::SparseF32(pack_sparse(&spec, &params, &mask, &mut scratch));
+        assert!(sparse.wire_bytes() < dense.wire_bytes());
+    }
+}

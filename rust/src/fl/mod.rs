@@ -5,12 +5,17 @@
 
 pub mod aggregate;
 pub mod client;
+pub mod codec;
 pub mod fleet;
 pub mod parallel;
 pub mod sampling;
 
 pub use aggregate::{fedavg, fedavg_into, staleness_discount, AggregateMode, ClientUpdate};
 pub use client::{Client, LocalResult};
+pub use codec::{
+    pack_result, pack_sparse, unpack, unpack_result, Codec, Compression, DeltaPayload,
+    PackedResult, QuantUpdate, SparseUpdate, UpdateCodec,
+};
 pub use fleet::{sample_cohort, ClientDescriptor, Fleet, SamplerKind};
 pub use sampling::CohortSampler;
 pub use parallel::AggScratch;

@@ -207,6 +207,13 @@ pub struct AggScratch {
     /// snapshot encoding: section blob + finished container
     pub(crate) snap_blob: Vec<u8>,
     pub(crate) snap_bytes: Vec<u8>,
+    /// payload codec: per-update packed column-rank maps, `updates x cols`
+    /// (kept column -> packed rank, dropped -> `u32::MAX`)
+    pub(crate) cmap: Vec<u32>,
+    /// payload codec: per-update kept-column counts
+    pub(crate) kept: Vec<u32>,
+    /// recycled per-client error strings for wire decode
+    pub(crate) errs: Vec<String>,
 }
 
 impl AggScratch {
@@ -233,6 +240,21 @@ impl AggScratch {
             if self.pool.len() < POOL_CAP {
                 self.pool.push(t);
             }
+        }
+    }
+
+    /// Fetch a pooled `String` for a decoded per-client error message.
+    /// Contents are unspecified; the caller overwrites them.
+    pub(crate) fn take_err(&mut self) -> String {
+        self.errs.pop().unwrap_or_default()
+    }
+
+    /// Return a retired error string so its capacity is reused by the
+    /// next decode.
+    pub fn recycle_err(&mut self, mut s: String) {
+        if self.errs.len() < POOL_CAP {
+            s.clear();
+            self.errs.push(s);
         }
     }
 }

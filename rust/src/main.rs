@@ -11,7 +11,7 @@
 use fluid::coordinator::{self, report, ExperimentConfig};
 use fluid::dropout::PolicyKind;
 use fluid::engine::{ScenarioConfig, SyncMode};
-use fluid::fl::SamplerKind;
+use fluid::fl::{Compression, SamplerKind};
 use fluid::runtime::Session;
 use fluid::straggler::{mobile_fleet, AdaptMode};
 use fluid::util::cli::Args;
@@ -73,6 +73,7 @@ fn train_args(program: &str) -> Args {
         .opt("crash-after", "", "fault injection: exit(137) once N rounds completed (soak)")
         .opt("shards", "1", "aggregator shards (bit-identical at every value)")
         .opt("shard-crash-after", "", "fault injection: kill shard S at round R (format S:R)")
+        .opt("compress", "dense", "update codec: dense|sparse|q8 (dense = bit-exact reference)")
         .opt("out", "", "write result JSON to this path")
         .opt("artifacts", "", "artifacts dir (default: ./artifacts or $FLUID_ARTIFACTS)")
         .flag("sim", "run the runtime-free simulation backend (no artifacts)")
@@ -191,6 +192,10 @@ fn build_config(a: &Args) -> ExperimentConfig {
         }
     }
     cfg.shard_retry = a.get_flag("shard-retry");
+    cfg.compress = Compression::parse(&a.get("compress")).unwrap_or_else(|| {
+        eprintln!("unknown compress mode {:?} (dense|sparse|q8)", a.get("compress"));
+        std::process::exit(2);
+    });
     // the sim/fleet paths serve only the built-in synthetic datasets;
     // fail with a clean message instead of panicking deep in the engine
     // (the classic artifact path accepts any model with a manifest and

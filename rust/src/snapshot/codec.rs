@@ -15,6 +15,7 @@
 //!   allocation, so a truncated or corrupted snapshot surfaces as a clean
 //!   `Err`, never an OOM or a slice panic.
 
+use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 
 /// FNV-1a 64-bit hash — the snapshot checksum. Not cryptographic; it
@@ -137,6 +138,15 @@ impl Writer {
         for &x in v {
             self.put_f64(x);
         }
+    }
+
+    /// Length-prefixed i8 slice stored as one raw byte blob (two's
+    /// complement, so the cast is value-preserving both ways). The
+    /// quantized-payload twin of [`Writer::put_f32_bytes`]; the prefix
+    /// counts bytes. Read back with [`Reader::take_i8_bytes`].
+    pub fn put_i8_bytes(&mut self, v: &[i8]) {
+        self.put_usize(v.len());
+        self.buf.extend(v.iter().map(|&x| x as u8));
     }
 }
 
@@ -282,6 +292,79 @@ impl<'a> Reader<'a> {
         }
         Ok(())
     }
+
+    /// Read a [`Writer::put_f32_bytes`] blob into a fresh `Vec` when the
+    /// element count is part of the message (packed payload values) —
+    /// the byte length is validated against the remaining input before
+    /// the allocation.
+    pub fn take_f32_bytes(&mut self) -> Result<Vec<f32>> {
+        let raw = self.take_bytes()?;
+        if raw.len() % 4 != 0 {
+            bail!("f32 blob holds {} bytes, not a multiple of 4", raw.len());
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+            .collect())
+    }
+
+    /// Read a [`Writer::put_i8_bytes`] blob into a fresh `Vec`.
+    pub fn take_i8_bytes(&mut self) -> Result<Vec<i8>> {
+        let raw = self.take_bytes()?;
+        Ok(raw.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Read a length-prefixed string into an existing `String`, reusing
+    /// its capacity — the pooled twin of [`Reader::take_str`].
+    pub fn take_str_into(&mut self, out: &mut String) -> Result<()> {
+        let raw = self.take_bytes()?;
+        let s = std::str::from_utf8(raw).context("snapshot string is not valid UTF-8")?;
+        out.clear();
+        out.push_str(s);
+        Ok(())
+    }
+}
+
+/// Shape + bulk data of one tensor: `put_usizes(shape)` then
+/// `put_f32_bytes(data)`. The single tensor framing shared by the
+/// snapshot sections, the shard wire, and `DeltaPayload` dense framing.
+pub fn put_tensor_bulk(w: &mut Writer, t: &Tensor) {
+    w.put_usizes(t.shape());
+    w.put_f32_bytes(t.data());
+}
+
+/// Decode a [`put_tensor_bulk`] framing, allocating the destination via
+/// `alloc` (pass a pool, e.g. `|s| scratch.take_out(s)`) only after the
+/// claimed element count has been validated against the remaining input.
+pub fn take_tensor_bulk(
+    r: &mut Reader<'_>,
+    mut alloc: impl FnMut(&[usize]) -> Tensor,
+) -> Result<Tensor> {
+    let rank = r.take_usize()?;
+    if rank > 8 {
+        bail!("tensor rank {rank} exceeds the supported 8");
+    }
+    let mut shape = [0usize; 8];
+    let mut elems = 1usize;
+    for s in shape.iter_mut().take(rank) {
+        *s = r.take_usize()?;
+        elems = elems
+            .checked_mul(*s)
+            .with_context(|| format!("tensor shape {:?} overflows", &shape[..rank]))?;
+    }
+    let need = elems
+        .checked_mul(4)
+        .with_context(|| format!("tensor byte size for {elems} elements overflows"))?;
+    if need > r.remaining() {
+        bail!(
+            "tensor claims {elems} elements ({need} bytes), only {} bytes left",
+            r.remaining()
+        );
+    }
+    let mut t = alloc(&shape[..rank]);
+    debug_assert_eq!(t.len(), elems);
+    r.take_f32_bytes_into(t.data_mut())?;
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -367,6 +450,86 @@ mod tests {
     fn invalid_bool_rejected() {
         let bytes = [2u8];
         assert!(Reader::new(&bytes).take_bool().is_err());
+    }
+
+    #[test]
+    fn i8_byte_blob_round_trips_full_range() {
+        let src: Vec<i8> = vec![-128, -127, -1, 0, 1, 63, 127];
+        let mut w = Writer::new();
+        w.put_i8_bytes(&src);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.take_i8_bytes().unwrap(), src);
+        assert!(r.is_done());
+        for cut in 0..bytes.len() {
+            assert!(Reader::new(&bytes[..cut]).take_i8_bytes().is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn f32_byte_blob_reads_into_fresh_vec() {
+        let src = [f32::NAN, -0.0, 2.5];
+        let mut w = Writer::new();
+        w.put_f32_bytes(&src);
+        let bytes = w.into_bytes();
+        let out = Reader::new(&bytes).take_f32_bytes().unwrap();
+        assert_eq!(out.len(), 3);
+        for (a, b) in src.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // a blob whose byte count is not a multiple of 4 is rejected
+        let mut w = Writer::new();
+        w.put_bytes(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).take_f32_bytes().is_err());
+    }
+
+    #[test]
+    fn take_str_into_reuses_capacity() {
+        let mut w = Writer::new();
+        w.put_str("first message");
+        w.put_str("second");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let mut s = String::with_capacity(64);
+        let cap = s.capacity();
+        r.take_str_into(&mut s).unwrap();
+        assert_eq!(s, "first message");
+        r.take_str_into(&mut s).unwrap();
+        assert_eq!(s, "second");
+        assert_eq!(s.capacity(), cap, "short strings reuse the pooled capacity");
+        // invalid UTF-8 is a clean error
+        let mut w = Writer::new();
+        w.put_bytes(&[0xFF, 0xFE]);
+        let bytes = w.into_bytes();
+        let mut junk = String::new();
+        assert!(Reader::new(&bytes).take_str_into(&mut junk).is_err());
+    }
+
+    #[test]
+    fn tensor_bulk_round_trips_and_rejects_corruption() {
+        let t = Tensor::full(&[3, 4], 1.25);
+        let mut w = Writer::new();
+        put_tensor_bulk(&mut w, &t);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let back = take_tensor_bulk(&mut r, Tensor::zeros).unwrap();
+        assert!(r.is_done());
+        assert_eq!(back.shape(), t.shape());
+        for (a, b) in back.data().iter().zip(t.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // truncation at every cut is a clean error, never a panic
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(take_tensor_bulk(&mut r, Tensor::zeros).is_err(), "cut at {cut}");
+        }
+        // an absurd element count is rejected before allocation
+        let mut w = Writer::new();
+        w.put_usizes(&[usize::MAX, 2]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(take_tensor_bulk(&mut r, Tensor::zeros).is_err());
     }
 
     #[test]

@@ -66,6 +66,10 @@ mod section {
     /// optional — readers treat an absent CTRL section as "no controller
     /// state", so pre-controller snapshots still resume
     pub const CTRL: u32 = 8;
+    /// per-client q8 error-feedback residuals (added with `fl/codec.rs`);
+    /// optional — absent means no client has encoded under q8 yet, so
+    /// dense/sparse runs and pre-codec snapshots carry no RESID section
+    pub const RESID: u32 = 9;
 }
 
 /// Evolving dropout-policy state. `Stateless` covers the policies whose
@@ -124,6 +128,10 @@ pub struct Snapshot {
     pub last_full_latencies: Vec<f64>,
     pub free_at: Vec<f64>,
     pub stale: Vec<StaleEntry>,
+    /// q8 error-feedback residuals, one dense per-param f32 set per
+    /// client that has encoded under q8, sorted by client id — carried so
+    /// a compressed run resumes bit-identically (empty outside q8 mode)
+    pub resid: Vec<(u64, Vec<Vec<f32>>)>,
     /// per-round history so a resumed run reports the full trajectory
     pub records: Vec<RoundRecord>,
 }
@@ -143,7 +151,7 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
          |sfrac={:016x}|fixed={:?}|menu={:?}|clusters={:?}|recal={}|fluct={}\
          |static={}|sample={:016x}|eval={}|agg={:?}|fused={}|th={:?}|mobile={}\
          |sync={:?}|fleet={:?}|k={}|sampler={}|scenario={:?}|seed={}\
-         |adapt={}|again={:016x}|adb={:016x}|rmin={:016x}",
+         |adapt={}|again={:016x}|adb={:016x}|rmin={:016x}|compress={}",
         cfg.model,
         cfg.policy.name(),
         cfg.rounds,
@@ -174,6 +182,7 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
         cfg.adapt_gain.to_bits(),
         cfg.adapt_deadband.to_bits(),
         cfg.rate_min.to_bits(),
+        cfg.compress.name(),
     )
 }
 
@@ -234,6 +243,7 @@ fn put_record(w: &mut Writer, rec: &RoundRecord) {
     w.put_usize(rec.aggregated);
     w.put_usize(rec.dropped_updates);
     w.put_usize(rec.stale_folded);
+    w.put_usize(rec.update_bytes);
 }
 
 fn take_record(r: &mut Reader) -> Result<RoundRecord> {
@@ -255,6 +265,7 @@ fn take_record(r: &mut Reader) -> Result<RoundRecord> {
         aggregated: r.take_usize()?,
         dropped_updates: r.take_usize()?,
         stale_folded: r.take_usize()?,
+        update_bytes: r.take_usize()?,
     })
 }
 
@@ -359,12 +370,23 @@ impl Snapshot {
         }
     }
 
+    fn enc_resid(&self, w: &mut Writer) {
+        w.put_usize(self.resid.len());
+        for (client, params) in &self.resid {
+            w.put_u64(*client);
+            w.put_usize(params.len());
+            for p in params {
+                w.put_f32_bytes(p);
+            }
+        }
+    }
+
     /// Encode every section into `w` in container order, returning the
     /// `(id, offset, len)` table (offsets relative to where `w` started).
     /// Shared by both encode paths so section order can never drift.
     fn write_sections(&self, w: &mut Writer) -> Vec<(u32, usize, usize)> {
         type Enc = fn(&Snapshot, &mut Writer);
-        let sections: [(u32, Enc); 8] = [
+        let sections: [(u32, Enc); 9] = [
             (section::META, Snapshot::enc_meta),
             (section::ENGINE, Snapshot::enc_engine),
             (section::MODEL, Snapshot::enc_model),
@@ -373,6 +395,7 @@ impl Snapshot {
             (section::SCHED, Snapshot::enc_sched),
             (section::HISTORY, Snapshot::enc_history),
             (section::CTRL, Snapshot::enc_ctrl),
+            (section::RESID, Snapshot::enc_resid),
         ];
         let base = w.len();
         let mut table = Vec::with_capacity(sections.len());
@@ -600,6 +623,28 @@ impl Snapshot {
             None
         };
 
+        // RESID — optional: absent means no q8 residual state (dense and
+        // sparse runs, plus every pre-codec snapshot)
+        let resid = if table.iter().any(|(id, _, _)| *id == section::RESID) {
+            let mut r = Reader::new(get(section::RESID)?);
+            let n_clients = r.take_usize().context("RESID section")?;
+            ensure!(n_clients <= 1 << 24, "residual client count {n_clients} implausible");
+            let mut resid = Vec::with_capacity(n_clients);
+            for i in 0..n_clients {
+                let client = r.take_u64().with_context(|| format!("residual {i} client"))?;
+                let np = r.take_usize()?;
+                ensure!(np <= 4096, "residual {i} param count {np} implausible");
+                let params = (0..np)
+                    .map(|_| r.take_f32_bytes())
+                    .collect::<Result<Vec<_>>>()
+                    .with_context(|| format!("residuals for client {client}"))?;
+                resid.push((client, params));
+            }
+            resid
+        } else {
+            Vec::new()
+        };
+
         Ok(Snapshot {
             fingerprint,
             next_round,
@@ -615,6 +660,7 @@ impl Snapshot {
             last_full_latencies,
             free_at,
             stale,
+            resid,
             records,
         })
     }
@@ -831,6 +877,10 @@ mod tests {
                 arrives_at: 42.0,
                 born_round: 5,
             }],
+            resid: vec![
+                (3, vec![vec![0.25, -0.5, 0.0, 1.0, -0.0, 2.5], vec![0.125, -0.125]]),
+                (11, vec![vec![0.0; 6], vec![7.75, f32::MIN_POSITIVE]]),
+            ],
             records: vec![RoundRecord {
                 round: 0,
                 round_time: 3.0,
@@ -849,6 +899,7 @@ mod tests {
                 aggregated: 3,
                 dropped_updates: 0,
                 stale_folded: 1,
+                update_bytes: 48_216,
             }],
         }
     }
@@ -874,6 +925,7 @@ mod tests {
                 (section::SCHED, mk(Snapshot::enc_sched)),
                 (section::HISTORY, mk(Snapshot::enc_history)),
                 (section::CTRL, mk(Snapshot::enc_ctrl)),
+                (section::RESID, mk(Snapshot::enc_resid)),
             ])
         };
         assert_eq!(snap.encode(), reference);
@@ -947,6 +999,7 @@ mod tests {
             (section::SCHED, enc(&snap, Snapshot::enc_sched)),
             (section::HISTORY, enc(&snap, Snapshot::enc_history)),
             (section::CTRL, enc(&snap, Snapshot::enc_ctrl)),
+            (section::RESID, enc(&snap, Snapshot::enc_resid)),
         ]);
         let back = Snapshot::decode(&out).unwrap();
         assert_eq!(back.next_round, snap.next_round);
@@ -970,6 +1023,9 @@ mod tests {
         ]);
         let back = Snapshot::decode(&out).unwrap();
         assert!(back.ctrl.is_none());
+        // the RESID section is likewise optional: absent means no q8
+        // residual state, not an error
+        assert!(back.resid.is_empty());
         assert_eq!(back.next_round, snap.next_round);
         assert_eq!(back.detection, snap.detection);
         // and a present-but-empty CTRL section is the same as none

@@ -19,7 +19,8 @@
 //! recycle pool, never a per-column fresh `Vec`.
 
 use fluid::fl::{
-    fedavg_into, sample_cohort, AggScratch, AggregateMode, ClientUpdate, Fleet, SamplerKind,
+    fedavg_into, pack_result, sample_cohort, AggScratch, AggregateMode, ClientUpdate, Compression,
+    DeltaPayload, Fleet, SamplerKind,
 };
 use fluid::dropout::{InvariantConfig, InvariantDropout, MaskSet};
 use fluid::model::sim_spec;
@@ -80,7 +81,7 @@ fn hot_path_is_allocation_free_at_steady_state() {
                 .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.8).collect())
                 .collect();
             ClientUpdate {
-                params: spec.init_params(100 + i),
+                payload: DeltaPayload::DenseF32(spec.init_params(100 + i)),
                 weight: 8.0,
                 mask: if i % 3 == 0 {
                     MaskSet::from_keep(&spec, &keep)
@@ -266,5 +267,80 @@ fn wire_codec_reuses_buffers_at_steady_state() {
         dec <= shell_budget,
         "steady-state wire decode allocated {dec} bytes (shell budget {shell_budget}, \
          column data {data_bytes})"
+    );
+}
+
+#[test]
+fn packed_payload_codec_allocates_packed_not_dense_bytes() {
+    use fluid::engine::wire::{decode_message, encode_message, ShardMessage};
+    use fluid::fl::LocalResult;
+
+    // a compressed shard slice: 8 clients of femnist-sim results packed
+    // at keep-rate 1/2, so the dense tensor data is ~2x the wire payload
+    let spec = sim_spec("femnist_cnn");
+    let keep: Vec<Vec<bool>> = spec
+        .masks
+        .iter()
+        .map(|m| (0..m.size).map(|j| j % 2 == 0).collect())
+        .collect();
+    let mask = MaskSet::from_keep(&spec, &keep);
+    let mut scratch = AggScratch::new();
+    let nitems = 8usize;
+    let per_client: u64 = spec
+        .params
+        .iter()
+        .map(|p| 4 * p.shape.iter().product::<usize>() as u64)
+        .sum();
+    let dense_bytes: u64 = nitems as u64 * per_client;
+    let items: Vec<Result<fluid::fl::PackedResult, String>> = (0..nitems)
+        .map(|i| {
+            let res = LocalResult {
+                params: spec.init_params(40 + i as u64),
+                mean_loss: 0.5,
+                mean_acc: 0.25,
+                steps: 3,
+                weight: 5.0,
+            };
+            Ok(pack_result(res, &mask, &spec, Compression::Sparse, &mut scratch))
+        })
+        .collect();
+    let packed_bytes: u64 = items
+        .iter()
+        .map(|r| r.as_ref().unwrap().payload.wire_bytes() as u64)
+        .sum();
+    assert!(
+        packed_bytes * 3 < dense_bytes * 2,
+        "packed {packed_bytes} bytes is not well below dense {dense_bytes} at rate 0.5"
+    );
+    let msg = ShardMessage::Packed { shard: 2, round: 5, base: 16, items };
+
+    let (mut blob, mut frame) = (Vec::new(), Vec::new());
+    // warm: blob/frame reach their high-water capacity
+    for _ in 0..2 {
+        encode_message(&msg, &mut blob, &mut frame);
+        decode_message(&frame, &mut scratch).unwrap();
+    }
+
+    // steady-state encode rewrites the same two buffers in place
+    let enc = min_allocated(5, || {
+        allocated_during(|| encode_message(&msg, &mut blob, &mut frame)).0
+    });
+    assert!(enc <= 64, "steady-state packed encode allocated {enc} bytes");
+
+    // steady-state decode allocates the packed value vectors themselves
+    // (they travel inside the payload, so they cannot come from a pool)
+    // plus O(message) container shells — never the dense tensor data
+    let shell_budget = packed_bytes + (nitems as u64) * 512 + 4096;
+    assert!(
+        shell_budget < dense_bytes,
+        "gate budget {shell_budget} is not below the {dense_bytes}-byte dense data"
+    );
+    let dec = min_allocated(5, || {
+        allocated_during(|| decode_message(&frame, &mut scratch).unwrap()).0
+    });
+    assert!(
+        dec <= shell_budget,
+        "steady-state packed decode allocated {dec} bytes \
+         (budget {shell_budget}, dense data {dense_bytes})"
     );
 }

@@ -17,7 +17,7 @@ use fluid::coordinator::{ExperimentConfig, ExperimentResult, RoundRecord};
 use fluid::data::FlData;
 use fluid::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
 use fluid::engine::SyncMode;
-use fluid::fl::{self, fedavg, Client, ClientUpdate};
+use fluid::fl::{self, fedavg, Client, ClientUpdate, DeltaPayload};
 use fluid::runtime::Session;
 use fluid::straggler::{
     detect_stragglers, mobile_fleet, snap_rate, synthetic_fleet, Detection,
@@ -206,7 +206,7 @@ fn reference_run(sess: &Session, cfg: &ExperimentConfig) -> fluid::Result<Experi
         let client_updates: Vec<ClientUpdate> = updates
             .iter()
             .map(|(c, u)| ClientUpdate {
-                params: u.params.clone(),
+                payload: DeltaPayload::DenseF32(u.params.clone()),
                 weight: u.weight,
                 mask: masks[*c].clone(),
                 staleness: 0,

@@ -8,7 +8,8 @@ use fluid::dropout::{
 };
 use fluid::engine::{ClientArrival, EventScheduler, SyncMode};
 use fluid::fl::{
-    fedavg, fedavg_into, staleness_discount, AggScratch, AggregateMode, ClientUpdate,
+    fedavg, fedavg_into, staleness_discount, unpack, AggScratch, AggregateMode, ClientUpdate,
+    Codec, Compression, DeltaPayload, PackedResult, QuantUpdate, SparseUpdate, UpdateCodec,
 };
 use fluid::jsonlite::{self, Json};
 use fluid::model::ModelSpec;
@@ -231,7 +232,7 @@ fn prop_plain_fedavg_preserves_constant_consensus() {
             let updates: Vec<ClientUpdate> = weights
                 .iter()
                 .map(|&w| ClientUpdate {
-                    params: params.clone(),
+                    payload: DeltaPayload::DenseF32(params.clone()),
                     weight: w,
                     mask: MaskSet::full(&spec),
                     staleness: 0,
@@ -286,11 +287,12 @@ fn prop_ownership_aggregation_keeps_untrained_at_global() {
                     }
                     keep[*drop_idx] = false;
                     ClientUpdate {
-                        params: spec
-                            .params
-                            .iter()
-                            .map(|p| Tensor::full(&p.shape, 2.0))
-                            .collect(),
+                        payload: DeltaPayload::DenseF32(
+                            spec.params
+                                .iter()
+                                .map(|p| Tensor::full(&p.shape, 2.0))
+                                .collect(),
+                        ),
                         weight: 1.0,
                         mask: MaskSet::from_keep(&spec, &[keep]),
                         staleness: 0,
@@ -382,7 +384,7 @@ fn reference_fedavg(
         let mut denom = vec![0.0f64; len];
         for u in updates {
             let w = eff(u);
-            let data = u.params[pi].data();
+            let data = u.dense_params()[pi].data();
             match group {
                 None => {
                     for j in 0..len {
@@ -459,7 +461,7 @@ fn prop_parallel_fedavg_bit_identical_to_scalar_reference() {
                         .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.7).collect())
                         .collect();
                     ClientUpdate {
-                        params: rand_params(&mut rng),
+                        payload: DeltaPayload::DenseF32(rand_params(&mut rng)),
                         weight: rng.uniform(0.1, 5.0) as f64,
                         mask: MaskSet::from_keep(&spec, &keep),
                         staleness: (rng.next_u32() % 3) as usize,
@@ -517,7 +519,7 @@ fn parallel_fedavg_matches_reference_across_chunk_boundary() {
                 .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.6).collect())
                 .collect();
             ClientUpdate {
-                params: rand_params(&mut rng),
+                payload: DeltaPayload::DenseF32(rand_params(&mut rng)),
                 weight: rng.uniform(0.5, 3.0) as f64,
                 mask: MaskSet::from_keep(&spec, &keep),
                 staleness: 0,
@@ -1037,6 +1039,7 @@ fn prop_snapshot_codec_round_trips() {
             aggregated: g.usize_in(0, 64),
             dropped_updates: g.usize_in(0, 8),
             stale_folded: g.usize_in(0, 8),
+            update_bytes: g.usize_in(0, 1 << 24),
         }
     }
 
@@ -1115,6 +1118,21 @@ fn prop_snapshot_codec_round_trips() {
                 last_full_latencies: (0..n).map(|_| g.rng.next_f64() * 10.0).collect(),
                 free_at: (0..n).map(|_| g.rng.next_f64() * 10.0).collect(),
                 stale,
+                // q8 residual state: arbitrary bit patterns must survive
+                resid: (0..g.usize_in(0, 3))
+                    .map(|c| {
+                        (
+                            c as u64 * 7 + g.rng.next_u64() % 100,
+                            (0..g.usize_in(1, 3))
+                                .map(|_| {
+                                    (0..g.usize_in(0, 6))
+                                        .map(|_| f32::from_bits(g.rng.next_u32()))
+                                        .collect()
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
                 records: (0..rounds).map(|r| random_record(g, r)).collect(),
             }
         },
@@ -1207,7 +1225,54 @@ fn rand_wire_message(kind: usize, nitems: usize, seed: u64) -> fluid::engine::wi
                 })
                 .collect(),
         },
-        _ => ShardMessage::Fault { shard, round },
+        2 => ShardMessage::Fault { shard, round },
+        _ => ShardMessage::Packed {
+            shard,
+            round,
+            base,
+            items: (0..nitems)
+                .map(|i| {
+                    if rng.next_f32() < 0.75 {
+                        let np = 1 + (rng.next_u32() as usize) % 3;
+                        let payload = match rng.next_u32() % 3 {
+                            0 => DeltaPayload::DenseF32(
+                                (0..np).map(|_| rand_wire_tensor(&mut rng)).collect(),
+                            ),
+                            1 => DeltaPayload::SparseF32(SparseUpdate {
+                                values: (0..np)
+                                    .map(|_| {
+                                        let n = (rng.next_u32() as usize) % 9;
+                                        (0..n)
+                                            .map(|_| f32::from_bits(rng.next_u32()))
+                                            .collect()
+                                    })
+                                    .collect(),
+                            }),
+                            _ => DeltaPayload::SparseQ8(QuantUpdate {
+                                scales: (0..np)
+                                    .map(|_| f32::from_bits(rng.next_u32()))
+                                    .collect(),
+                                values: (0..np)
+                                    .map(|_| {
+                                        let n = (rng.next_u32() as usize) % 9;
+                                        (0..n).map(|_| rng.next_u32() as i8).collect()
+                                    })
+                                    .collect(),
+                            }),
+                        };
+                        Ok(PackedResult {
+                            payload,
+                            mean_loss: f64::from_bits(rng.next_u64()),
+                            mean_acc: f64::from_bits(rng.next_u64()),
+                            steps: (rng.next_u32() as usize) % 100,
+                            weight: f64::from_bits(rng.next_u64()),
+                        })
+                    } else {
+                        Err(format!("client {i} failed: code {}", rng.next_u32()))
+                    }
+                })
+                .collect(),
+        },
     }
 }
 
@@ -1221,7 +1286,7 @@ fn prop_wire_message_encode_decode_is_a_byte_fixpoint() {
     check(
         Config { cases: 60, ..Default::default() },
         |g: &mut Gen| {
-            let kind = g.usize_in(0, 2);
+            let kind = g.usize_in(0, 3);
             let nitems = g.usize_in(0, 6);
             let seed = g.rng.next_u64();
             (kind, nitems, seed)
@@ -1258,7 +1323,7 @@ fn prop_wire_corruption_and_truncation_error_cleanly() {
     check(
         Config { cases: 80, ..Default::default() },
         |g: &mut Gen| {
-            let kind = g.usize_in(0, 2);
+            let kind = g.usize_in(0, 3);
             let nitems = g.usize_in(0, 5);
             let seed = g.rng.next_u64();
             let flip_at = g.rng.next_u64();
@@ -1337,7 +1402,7 @@ fn prop_sharded_wire_fold_matches_serial_fedavg() {
                         .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.7).collect())
                         .collect();
                     ClientUpdate {
-                        params: rand_params(&mut rng),
+                        payload: DeltaPayload::DenseF32(rand_params(&mut rng)),
                         weight: rng.uniform(0.1, 5.0) as f64,
                         mask: MaskSet::from_keep(&spec, &keep),
                         staleness: (rng.next_u32() % 3) as usize,
@@ -1354,7 +1419,7 @@ fn prop_sharded_wire_fold_matches_serial_fedavg() {
                     .iter()
                     .map(|u| {
                         Ok(LocalResult {
-                            params: u.params.clone(),
+                            params: u.dense_params().to_vec(),
                             mean_loss: 0.0,
                             mean_acc: 0.0,
                             steps: 1,
@@ -1415,7 +1480,7 @@ fn prop_sharded_wire_fold_matches_serial_fedavg() {
                 .into_iter()
                 .zip(&updates)
                 .map(|(res, u)| ClientUpdate {
-                    params: res.params,
+                    payload: DeltaPayload::DenseF32(res.params),
                     weight: res.weight,
                     mask: u.mask.clone(),
                     staleness: u.staleness,
@@ -1440,4 +1505,336 @@ fn prop_sharded_wire_fold_matches_serial_fedavg() {
             Ok(())
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// update codec: payloads, framing, quantization (DESIGN.md §12)
+// ---------------------------------------------------------------------
+
+/// The same name→group mapping the aggregator and codec use, rebuilt
+/// from public spec APIs so the tests don't lean on crate internals.
+fn group_span_of(spec: &ModelSpec, p_idx: usize) -> Option<(usize, usize)> {
+    let p = &spec.params[p_idx];
+    let prefix: &str = p.name.rsplit_once('_').map(|(a, _)| a).unwrap_or(&p.name);
+    let g = spec.mask_index(prefix)?;
+    let n = spec.masks[g].size;
+    let cols = *p.shape.last()?;
+    if cols == n {
+        Some((g, 1))
+    } else if cols == 4 * n {
+        Some((g, 4))
+    } else {
+        None
+    }
+}
+
+/// Random client params that honor the dropout invariant: dropped
+/// columns bit-equal the broadcast global, kept columns (and non-group
+/// params) perturbed.
+fn invariant_client_params(
+    spec: &ModelSpec,
+    global: &[Tensor],
+    mask: &MaskSet,
+    rng: &mut fluid::util::prng::Pcg32,
+) -> Vec<Tensor> {
+    global
+        .iter()
+        .enumerate()
+        .map(|(pi, t)| {
+            let mut q = t.clone();
+            let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+            match group_span_of(spec, pi) {
+                Some((g, span)) => {
+                    let n = spec.masks[g].size;
+                    for (e, v) in q.data_mut().iter_mut().enumerate() {
+                        let col = e % cols;
+                        let neuron = if span == 1 { col } else { col % n };
+                        if mask.is_kept(g, neuron) {
+                            *v += rng.uniform(-1.0, 1.0);
+                        }
+                    }
+                }
+                None => {
+                    for v in q.data_mut() {
+                        *v += rng.uniform(-1.0, 1.0);
+                    }
+                }
+            }
+            q
+        })
+        .collect()
+}
+
+fn rand_codec_setup(
+    n0: usize,
+    n1: usize,
+    seed: u64,
+) -> (ModelSpec, Vec<Tensor>, MaskSet, Vec<Tensor>) {
+    let spec = spec_with_gate(n0, n1);
+    let mut rng = fluid::util::prng::Pcg32::new(seed, 29);
+    let global: Vec<Tensor> = spec
+        .params
+        .iter()
+        .map(|p| {
+            let len: usize = p.shape.iter().product();
+            Tensor::from_vec(&p.shape, (0..len).map(|_| rng.uniform(-1.0, 1.0)).collect())
+        })
+        .collect();
+    let keep: Vec<Vec<bool>> = spec
+        .masks
+        .iter()
+        .map(|m| (0..m.size).map(|_| rng.next_f32() < 0.6).collect())
+        .collect();
+    let mask = MaskSet::from_keep(&spec, &keep);
+    let params = invariant_client_params(&spec, &global, &mask, &mut rng);
+    (spec, global, mask, params)
+}
+
+#[test]
+fn prop_payload_framing_is_a_byte_fixpoint_and_truncation_errs() {
+    // encode -> frame -> decode -> re-frame lands on the identical byte
+    // string for all three representations, wire_bytes() predicts the
+    // frame length exactly, and every strict prefix of a frame decodes
+    // to a clean Err (never a panic, never a silent partial payload)
+    use fluid::fl::codec::{put_payload, take_payload};
+    use fluid::snapshot::{Reader, Writer};
+    check(
+        Config { cases: 30, ..Default::default() },
+        |g: &mut Gen| {
+            let n0 = g.usize_in(1, 5);
+            let n1 = g.usize_in(1, 8);
+            let mode = g.usize_in(0, 2);
+            let seed = g.rng.next_u64();
+            (n0, n1, mode, seed)
+        },
+        |_| vec![],
+        |&(n0, n1, mode, seed)| {
+            let (spec, global, mask, params) = rand_codec_setup(n0, n1, seed);
+            let mode = match mode {
+                0 => Compression::Dense,
+                1 => Compression::Sparse,
+                _ => Compression::Q8,
+            };
+            let mut codec = Codec::new(mode);
+            let mut s = AggScratch::new();
+            let payload = codec.encode(7, params, &mask, &global, &spec, &mut s);
+            let mut w = Writer::new();
+            put_payload(&mut w, &payload);
+            let bytes = w.into_bytes();
+            if bytes.len() != payload.wire_bytes() {
+                return Err(format!(
+                    "{mode:?}: wire_bytes promises {} but the framing wrote {}",
+                    payload.wire_bytes(),
+                    bytes.len()
+                ));
+            }
+            let decoded = take_payload(&mut Reader::new(&bytes), &mut s)
+                .map_err(|e| format!("{mode:?}: decode failed: {e:#}"))?;
+            let mut w2 = Writer::new();
+            put_payload(&mut w2, &decoded);
+            if w2.into_bytes() != bytes {
+                return Err(format!("{mode:?}: encode -> decode -> re-encode drifted"));
+            }
+            for cut in 0..bytes.len() {
+                if take_payload(&mut Reader::new(&bytes[..cut]), &mut s).is_ok() {
+                    return Err(format!(
+                        "{mode:?}: frame truncated to {cut}/{} bytes decoded fine",
+                        bytes.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dense_and_sparse_payloads_round_trip_bit_exactly() {
+    // DenseF32 must carry the client's tensors untouched (it is the
+    // determinism reference), and the sparse packing must reconstruct
+    // them bit for bit wherever the invariant holds — dropped columns
+    // come back as the broadcast global, which is exactly what the
+    // client was sent
+    check(
+        Config { cases: 30, ..Default::default() },
+        |g: &mut Gen| {
+            let n0 = g.usize_in(1, 5);
+            let n1 = g.usize_in(1, 8);
+            let sparse = g.bool();
+            let seed = g.rng.next_u64();
+            (n0, n1, sparse, seed)
+        },
+        |_| vec![],
+        |&(n0, n1, sparse, seed)| {
+            let (spec, global, mask, params) = rand_codec_setup(n0, n1, seed);
+            let mode = if sparse { Compression::Sparse } else { Compression::Dense };
+            let mut codec = Codec::new(mode);
+            let mut s = AggScratch::new();
+            let payload = codec.encode(3, params.clone(), &mask, &global, &spec, &mut s);
+            if let DeltaPayload::DenseF32(ts) = &payload {
+                for (pi, (a, b)) in ts.iter().zip(&params).enumerate() {
+                    for (e, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!("dense payload mutated param {pi} elem {e}"));
+                        }
+                    }
+                }
+            } else if !sparse {
+                return Err(format!("dense mode produced {:?}", payload.mode()));
+            }
+            let back = unpack(payload, &mask, &global, &spec, &mut s)
+                .map_err(|e| format!("unpack: {e:#}"))?;
+            for (pi, (a, b)) in back.iter().zip(&params).enumerate() {
+                if a.shape() != b.shape() {
+                    return Err(format!("param {pi}: shape {:?} vs {:?}", a.shape(), b.shape()));
+                }
+                for (e, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "{mode:?} param {pi} elem {e}: {x} vs {y} after round trip"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_q8_dequantize_error_bounded_by_half_scale() {
+    // per element of the packed set: |dequantized - true| <= scale/2
+    // (plus f32 rounding headroom); dropped columns reconstruct the
+    // broadcast global bit-exactly
+    check(
+        Config { cases: 30, ..Default::default() },
+        |g: &mut Gen| {
+            let n0 = g.usize_in(1, 5);
+            let n1 = g.usize_in(1, 8);
+            let seed = g.rng.next_u64();
+            (n0, n1, seed)
+        },
+        |_| vec![],
+        |&(n0, n1, seed)| {
+            let (spec, global, mask, params) = rand_codec_setup(n0, n1, seed);
+            let mut codec = Codec::new(Compression::Q8);
+            let mut s = AggScratch::new();
+            let payload = codec.encode(1, params.clone(), &mask, &global, &spec, &mut s);
+            let scales: Vec<f32> = match &payload {
+                DeltaPayload::SparseQ8(q) => q.scales.clone(),
+                other => return Err(format!("q8 encode produced {:?}", other.mode())),
+            };
+            let back = unpack(payload, &mask, &global, &spec, &mut s)
+                .map_err(|e| format!("unpack: {e:#}"))?;
+            for (pi, (a, b)) in back.iter().zip(&params).enumerate() {
+                let cols = *spec.params[pi].shape.last().unwrap_or(&1);
+                let bound = scales[pi] as f64 * 0.5001 + 1e-6;
+                for (e, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+                    let packed = match group_span_of(&spec, pi) {
+                        Some((g, span)) => {
+                            let n = spec.masks[g].size;
+                            let col = e % cols;
+                            mask.is_kept(g, if span == 1 { col } else { col % n })
+                        }
+                        None => true,
+                    };
+                    if packed {
+                        let err = (*x as f64 - *y as f64).abs();
+                        if err > bound {
+                            return Err(format!(
+                                "param {pi} elem {e}: |{x} - {y}| = {err} > {bound} \
+                                 (scale {})",
+                                scales[pi]
+                            ));
+                        }
+                    } else if x.to_bits() != global[pi].data()[e].to_bits() {
+                        return Err(format!(
+                            "param {pi} elem {e}: dropped column {x} is not the global"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn q8_error_feedback_telescopes_to_the_exact_dense_sum() {
+    // Deliberately exact-arithmetic construction: element 0 of every
+    // tensor carries a delta of 15.875 = 127 x 0.125 each round (zero
+    // residual, pins the symmetric scale at exactly 1/8), every other
+    // delta is a multiple of scale/2 = 0.0625 in [-1, 1]. All the f32
+    // operations below are then exact, so the telescoped identity
+    //   sum(dequantized) + final residual == sum(true deltas)
+    // must hold BITWISE over repeated rounds — error feedback loses
+    // nothing, it only defers.
+    let spec = spec_with_groups(&[4]);
+    let global: Vec<Tensor> = spec.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+    let mask = MaskSet::full(&spec);
+    let mut codec = Codec::new(Compression::Q8);
+    let mut s = AggScratch::new();
+    let mut true_sum: Vec<Vec<f32>> = global.iter().map(|t| vec![0.0; t.len()]).collect();
+    let mut deq_sum: Vec<Vec<f32>> = global.iter().map(|t| vec![0.0; t.len()]).collect();
+    for r in 0..6usize {
+        let params: Vec<Tensor> = global
+            .iter()
+            .enumerate()
+            .map(|(pi, t)| {
+                let data: Vec<f32> = (0..t.len())
+                    .map(|e| {
+                        if e == 0 {
+                            15.875
+                        } else {
+                            (((r * 7 + pi * 5 + e) % 33) as f32 - 16.0) * 0.0625
+                        }
+                    })
+                    .collect();
+                Tensor::from_vec(t.shape(), data)
+            })
+            .collect();
+        for (pi, t) in params.iter().enumerate() {
+            for (e, v) in t.data().iter().enumerate() {
+                true_sum[pi][e] += v;
+            }
+        }
+        let payload = codec.encode(9, params, &mask, &global, &spec, &mut s);
+        if let DeltaPayload::SparseQ8(q) = &payload {
+            for (pi, sc) in q.scales.iter().enumerate() {
+                assert_eq!(
+                    sc.to_bits(),
+                    0.125f32.to_bits(),
+                    "round {r} param {pi}: scale {sc} drifted off the pinned 1/8"
+                );
+            }
+        } else {
+            panic!("q8 encode produced {:?}", payload.mode());
+        }
+        let back = unpack(payload, &mask, &global, &spec, &mut s).unwrap();
+        for (pi, t) in back.iter().enumerate() {
+            for (e, v) in t.data().iter().enumerate() {
+                deq_sum[pi][e] += v;
+            }
+        }
+    }
+    let resid = codec.export_resid();
+    assert_eq!(resid.len(), 1, "one client encoded, one residual set");
+    let (client, per_param) = &resid[0];
+    assert_eq!(*client, 9);
+    for (pi, rp) in per_param.iter().enumerate() {
+        for (e, (&deq, &truth)) in deq_sum[pi].iter().zip(&true_sum[pi]).enumerate() {
+            assert!(
+                rp[e].abs() <= 0.0625,
+                "param {pi} elem {e}: residual {} beyond scale/2",
+                rp[e]
+            );
+            let got = deq + rp[e];
+            assert_eq!(
+                got.to_bits(),
+                truth.to_bits(),
+                "param {pi} elem {e}: dequantized {deq} + residual {} = {got} != {truth}",
+                rp[e]
+            );
+        }
+    }
 }
