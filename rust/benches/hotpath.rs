@@ -12,7 +12,10 @@
 //!   the shard wire codec round trip, the update-payload codec (sparse
 //!   encode / q8 decode at ~50k params, with an in-bench gate pinning
 //!   sparse wire bytes at rate 0.5 to <= 0.6x dense, DESIGN.md §12),
-//!   payload-aware FedAvg, and snapshot encode/decode.
+//!   payload-aware FedAvg, the chaos-plane update validator and the
+//!   shard-fault retry re-dispatch (with an in-bench gate pinning the
+//!   zero-chaos sharded round to <= 1.05x its pre-chaos bound,
+//!   DESIGN.md §13), and snapshot encode/decode.
 //! * **PJRT sections** — `train_step` / `eval_step` / `delta_step` per
 //!   model, tensor→literal conversion, and one full coordinator round;
 //!   these need AOT artifacts and skip cleanly when the session cannot
@@ -436,8 +439,83 @@ fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
         "4-shard 50k round costs {ratio:.2}x the single-engine round (gate {SHARD_GATE:.2}x) \
          — the shard wire/fold overhead is no longer O(message)"
     );
+    let m1_min_ns = m1.min_s * 1e9;
     all.push(m1);
     all.push(m4);
+
+    // zero-chaos overhead gate (DESIGN.md §13): the chaos plane is
+    // always compiled in — the validator runs on every update and the
+    // executor carries the retry bookkeeping — so the clean sharded
+    // round above must stay within CHAOS_GATE of the bound the section
+    // was seeded with before the chaos plane existed. A breach means
+    // the zero-chaos path started paying for fault machinery it never
+    // uses (per-client draws, allocation in the validator, ...).
+    const PRE_CHAOS_ROUND_BOUND_NS: f64 = 2_000_000_000.0;
+    const CHAOS_GATE: f64 = 1.05;
+    let clean_ns = m1_min_ns;
+    println!(
+        "chaos: zero-chaos sharded round {clean_ns:.0} ns vs pre-chaos bound \
+         {PRE_CHAOS_ROUND_BOUND_NS:.0} ns (gate {CHAOS_GATE:.2}x)"
+    );
+    assert!(
+        clean_ns < CHAOS_GATE * PRE_CHAOS_ROUND_BOUND_NS,
+        "zero-chaos sharded round costs {clean_ns:.0} ns, over {CHAOS_GATE:.2}x the \
+         pre-chaos bound {PRE_CHAOS_ROUND_BOUND_NS:.0} ns — the fault plane is taxing \
+         clean rounds"
+    );
+
+    // shard-fault recovery: a 4-shard round where one worker slice dies
+    // and the bounded retry budget re-dispatches it — the marginal cost
+    // of recovery is (one extra slice run + wire round trip), pinned
+    // here so redispatch never silently becomes O(round)
+    {
+        use fluid::data::{Split, XStore};
+        use fluid::engine::{ShardedExecutor, SimExecutor, TrainJob};
+        use fluid::fl::Client;
+        let rspec = sim_spec("femnist_cnn");
+        let rparams = rspec.init_params(7);
+        let full = MaskSet::full(&rspec);
+        let rclients: Vec<Client> = (0..16)
+            .map(|i| {
+                Client::new(
+                    i,
+                    0,
+                    Split {
+                        xs: XStore::F32(vec![0.0; 4 * (i + 2)]),
+                        ys: vec![0; i + 2],
+                        feature_len: 4,
+                    },
+                )
+            })
+            .collect();
+        let cohort: Vec<&Client> = rclients.iter().collect();
+        let masks: Vec<&MaskSet> = rclients.iter().map(|_| &full).collect();
+        let jobs: Vec<TrainJob> = rclients
+            .iter()
+            .map(|c| TrainJob {
+                client: c.id,
+                round: 2,
+                steps: 2,
+                lr: 0.05,
+                seed: 1234,
+                use_fused: false,
+            })
+            .collect();
+        let m = b.run("sharded/retry-redispatch", || {
+            // fresh executor per iteration so the crash re-arms and the
+            // retry path runs every time (fire-once state is per-tree)
+            let ex = ShardedExecutor::with_fault(
+                SimExecutor::new(rspec.clone(), threads),
+                4,
+                Some((2, 2)),
+                true,
+            );
+            let got = ex.run_clients(&cohort, &masks, &rparams, &jobs);
+            std::hint::black_box(got.len());
+        });
+        println!("{}", m.report());
+        all.push(m);
+    }
 
     // shard wire codec round trip with warm buffers: a realistic
     // 16-client slice (a 64x32 weight + 32-bias pair each) through
@@ -546,6 +624,31 @@ fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
         all.push(m);
     }
 
+    // update validation (DESIGN.md §13): the full finiteness + shape +
+    // norm-bound sweep over a ~50k-parameter update, exactly as the
+    // engine runs it on every arrival — clean path, zero allocation
+    // (pinned in tests/alloc_gate.rs), cost must stay O(params)
+    {
+        use fluid::engine::UpdateValidator;
+        use fluid::fl::LocalResult;
+        let vspec = codec_spec();
+        let base = vspec.init_params(2);
+        let update = LocalResult {
+            params: vspec.init_params(9),
+            mean_loss: 0.25,
+            mean_acc: 0.5,
+            steps: 4,
+            weight: 6.0,
+        };
+        let validator = UpdateValidator::default();
+        let m = b.run("chaos/validate-50k", || {
+            let verdict = validator.validate(&update, &base);
+            std::hint::black_box(verdict.is_ok());
+        });
+        println!("{}", m.report());
+        all.push(m);
+    }
+
     // payload-aware FedAvg: the same 64-update cohort as the dense
     // sections, but entering the aggregator as sparse payloads (the
     // fused unpack-accumulate path compressed experiments run)
@@ -644,6 +747,14 @@ fn synthetic_snapshot(
         free_at: vec![0.0; clients],
         stale: Vec::new(),
         resid: Vec::new(),
+        quarantine: (0..4)
+            .map(|i| fluid::engine::QuarEntry {
+                client: i * 17 + 3,
+                strikes: 1 + i as u32,
+                barred_until: rounds + i,
+                last_strike: rounds.saturating_sub(2),
+            })
+            .collect(),
         records: (0..rounds)
             .map(|r| fluid::coordinator::RoundRecord {
                 round: r,
@@ -664,6 +775,10 @@ fn synthetic_snapshot(
                 dropped_updates: 0,
                 stale_folded: 0,
                 update_bytes: 0,
+                vanished: 0,
+                quarantined: 0,
+                shard_retries: 0,
+                quorum_fraction: 1.0,
             })
             .collect(),
     }

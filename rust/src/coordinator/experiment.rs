@@ -27,7 +27,9 @@
 //!   fleet-scale scenario studies and the determinism suite.
 
 use super::{ExperimentConfig, ExperimentResult};
-use crate::engine::{ClientExecutor, LocalExecutor, RoundEngine, ShardedExecutor, SimExecutor};
+use crate::engine::{
+    ChaosPlan, ClientExecutor, LocalExecutor, RoundEngine, ShardedExecutor, SimExecutor,
+};
 use crate::model::sim_spec;
 use crate::runtime::Session;
 use anyhow::Context;
@@ -35,9 +37,24 @@ use anyhow::Context;
 /// Does this config route through the sharded multi-aggregator tree?
 /// `--shards 1` without shard-fault knobs stays on the plain executor —
 /// not for correctness (a 1-shard tree is bit-identical, pinned by the
-/// determinism suite) but to keep the default path wire-free.
+/// determinism suite) but to keep the default path wire-free. A chaos
+/// script with shard events forces the tree even at `--shards 1`, so
+/// the faults have a worker to land on.
 fn sharded(cfg: &ExperimentConfig) -> bool {
-    cfg.shards > 1 || cfg.shard_crash_after.is_some()
+    cfg.shards > 1
+        || cfg.shard_crash_after.is_some()
+        || cfg.chaos.as_ref().is_some_and(|c| c.has_shard_faults())
+}
+
+/// The slice re-dispatch budget this config grants the tree:
+/// `--shard-retry-max` wins; the legacy single-shot `--shard-retry`
+/// switch maps to a budget of 1.
+fn retry_budget(cfg: &ExperimentConfig) -> usize {
+    if cfg.shard_retry_max > 0 {
+        cfg.shard_retry_max
+    } else {
+        usize::from(cfg.shard_retry)
+    }
 }
 
 fn run_engine<E: ClientExecutor>(
@@ -54,7 +71,14 @@ fn run_engine<E: ClientExecutor>(
             cfg.shard_crash_after,
             cfg.shard_retry,
         )
-        .with_compression(cfg.compress);
+        .with_compression(cfg.compress)
+        .with_retry_budget(retry_budget(cfg))
+        .with_chaos(
+            cfg.chaos
+                .as_ref()
+                .filter(|c| c.has_shard_faults())
+                .map(|c| ChaosPlan::new(c.clone(), cfg.seed)),
+        );
         RoundEngine::new(cfg, tree)?.run()
     } else {
         RoundEngine::new(cfg, executor)?.run()

@@ -11,7 +11,7 @@ pub mod report;
 pub use experiment::{run, run_sim};
 
 use crate::dropout::PolicyKind;
-use crate::engine::{ScenarioConfig, SyncMode};
+use crate::engine::{ChaosConfig, ScenarioConfig, SyncMode};
 use crate::fl::{AggregateMode, Compression, SamplerKind};
 use crate::jsonlite::Json;
 use crate::straggler::{AdaptConfig, AdaptMode};
@@ -123,6 +123,24 @@ pub struct ExperimentConfig {
     /// error-feedback residuals (DESIGN.md §12). Semantic: part of the
     /// snapshot fingerprint
     pub compress: Compression,
+    /// seeded chaos script (`--chaos`): per-client vanish/hang/corrupt/
+    /// nan-poison faults plus shard crash/stall events, replayed
+    /// bit-identically across threads and shards (DESIGN.md §13).
+    /// Semantic: part of the snapshot fingerprint
+    pub chaos: Option<ChaosConfig>,
+    /// minimum fraction of a round's participants that must deliver a
+    /// fresh, valid, on-time update (`--quorum`); below it the round
+    /// aborts with a typed `engine::QuorumFailed` (exit 137 in the
+    /// binary). 0 disables the check. An abort floor, not trajectory
+    /// state — excluded from the snapshot fingerprint so a failed run
+    /// can resume from its last checkpoint under a relaxed floor
+    pub quorum: f64,
+    /// bounded shard-slice retry budget (`--shard-retry-max`): how many
+    /// times the root may re-dispatch a faulted shard's slice per round
+    /// before surfacing `engine::ShardFault`. 0 defers to the legacy
+    /// single-shot [`ExperimentConfig::shard_retry`] switch. Recovery
+    /// topology only — not part of the snapshot fingerprint
+    pub shard_retry_max: usize,
 }
 
 impl ExperimentConfig {
@@ -169,6 +187,9 @@ impl ExperimentConfig {
             shard_crash_after: None,
             shard_retry: false,
             compress: Compression::Dense,
+            chaos: None,
+            quorum: 0.0,
+            shard_retry_max: 0,
         }
     }
 
@@ -268,6 +289,16 @@ impl ExperimentConfig {
                 self.shards
             );
         }
+        anyhow::ensure!(
+            self.quorum.is_finite() && (0.0..=1.0).contains(&self.quorum),
+            "quorum {} is outside [0, 1]",
+            self.quorum
+        );
+        if let Some(chaos) = &self.chaos {
+            chaos
+                .validate()
+                .map_err(|e| anyhow::anyhow!("chaos config: {e}"))?;
+        }
         Ok(())
     }
 
@@ -338,6 +369,15 @@ pub struct RoundRecord {
     /// summed wire bytes of every payload aggregated this round — the
     /// bytes-moved figure the compression modes are compared on
     pub update_bytes: usize,
+    /// participants lost to chaos Vanish/Hang faults this round
+    pub vanished: usize,
+    /// updates the validator refused and sent to quarantine
+    pub quarantined: usize,
+    /// shard-slice re-dispatches the executor performed this round
+    pub shard_retries: usize,
+    /// fresh on-time updates over planned participants (1.0 when the
+    /// round planned no participants)
+    pub quorum_fraction: f64,
 }
 
 /// Full outcome of one run.
@@ -397,6 +437,10 @@ impl ExperimentResult {
                     .set("dropped", r.dropped_updates)
                     .set("stale", r.stale_folded)
                     .set("update_bytes", r.update_bytes)
+                    .set("vanished", r.vanished)
+                    .set("quarantined", r.quarantined)
+                    .set("shard_retries", r.shard_retries)
+                    .set("quorum_fraction", r.quorum_fraction)
             })
             .collect();
         Json::obj()
@@ -438,6 +482,9 @@ mod tests {
         assert_eq!(f.sampler, SamplerKind::Uniform);
         assert!(f.scenario.is_none());
         assert!(!f.mobile_fleet);
+        assert!(m.chaos.is_none());
+        assert_eq!(m.quorum, 0.0);
+        assert_eq!(m.shard_retry_max, 0);
     }
 
     #[test]
@@ -499,6 +546,24 @@ mod tests {
         ok.adapt = AdaptMode::Ewma;
         assert!(ok.validate().is_ok());
 
+        // chaos + quorum knobs are validated up front
+        let mut bad = good.clone();
+        bad.quorum = 1.5;
+        assert!(bad.validate().is_err(), "quorum > 1 accepted");
+        let mut bad = good.clone();
+        bad.quorum = f64::NAN;
+        assert!(bad.validate().is_err(), "NaN quorum accepted");
+        let mut bad = good.clone();
+        bad.chaos = ChaosConfig::parse("storm").unwrap();
+        bad.chaos.as_mut().unwrap().vanish = 2.0;
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("chaos"), "{err}");
+        let mut ok = good.clone();
+        ok.chaos = ChaosConfig::parse("storm").unwrap();
+        ok.quorum = 0.5;
+        ok.shard_retry_max = 3;
+        assert!(ok.validate().is_ok());
+
         // the adapt knobs flow into the controller config
         let mut cfg = good.clone();
         cfg.adapt = AdaptMode::Ewma;
@@ -534,6 +599,10 @@ mod tests {
                 dropped_updates: 0,
                 stale_folded: 0,
                 update_bytes: 120_000,
+                vanished: 1,
+                quarantined: 2,
+                shard_retries: 1,
+                quorum_fraction: 0.75,
             }],
             final_test_acc: 0.8,
             final_test_loss: 0.7,
@@ -552,6 +621,14 @@ mod tests {
         assert_eq!(
             rounds[0].req("update_bytes").unwrap().as_f64(),
             Some(120_000.0)
+        );
+        // the fault-telemetry quad rides along per round
+        assert_eq!(rounds[0].req("vanished").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rounds[0].req("quarantined").unwrap().as_f64(), Some(2.0));
+        assert_eq!(rounds[0].req("shard_retries").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            rounds[0].req("quorum_fraction").unwrap().as_f64(),
+            Some(0.75)
         );
         assert!(res.calibration_overhead() < 0.05);
     }

@@ -1,0 +1,775 @@
+//! Seeded chaos injection and the graceful-degradation substrate.
+//!
+//! FLuID's premise is that real fleets misbehave — yet until this module
+//! the engine only modelled *slow* clients. A [`ChaosConfig`] is the
+//! declarative, replayable fault script (named presets or `name:rate`
+//! overrides on the CLI, exactly like `scenario.rs` compiles churn): it
+//! binds to the experiment seed as a [`ChaosPlan`] whose every draw runs
+//! on a dedicated PCG stream keyed by `(round, client)` — so a chaos run
+//! replays bit-identically across `--threads` and `--shards`, and the
+//! zero-chaos path consumes no randomness at all.
+//!
+//! The degradation side lives here too:
+//!
+//! * [`UpdateValidator`] — always-on, allocation-free admission check for
+//!   client updates (finite values, matching shapes, a relative L2 norm
+//!   bound). Chaos merely *exercises* it; a poisoned update is caught by
+//!   the same code path that guards production rounds.
+//! * [`QuarantineLedger`] — strike-escalating bar list for clients whose
+//!   updates failed validation, with deterministic decay-based
+//!   re-admission. It rides an optional snapshot section so kill/resume
+//!   preserves it.
+//! * [`QuorumFailed`] — the typed error a round raises when too few fresh
+//!   updates survive the barrier; never a panic, never a silent
+//!   half-round.
+
+use crate::fl::LocalResult;
+use crate::tensor::Tensor;
+use crate::util::prng::Pcg32;
+
+/// Relative-L2 admission bound for [`UpdateValidator`] — generous by
+/// design: a legitimate local-SGD update moves a small fraction of the
+/// broadcast norm, while a corrupted or diverged payload lands orders of
+/// magnitude out (property-tested in `tests/properties.rs`).
+pub const DEFAULT_NORM_BOUND: f64 = 1e3;
+
+/// First quarantine bar length in rounds; doubles per strike.
+pub const QUAR_BAR_BASE: usize = 2;
+/// Strike cap on bar doubling (longest bar: `QUAR_BAR_BASE << 6` rounds).
+const QUAR_BAR_CAP: u32 = 6;
+/// A clean streak this long forgives one strike.
+pub const QUAR_DECAY_EVERY: usize = 16;
+
+/// Base of the deterministic virtual-time backoff a shard-slice retry
+/// costs (doubles per attempt, capped — see [`retry_backoff_ms`]).
+const BACKOFF_BASE_MS: u64 = 50;
+
+/// Declarative description of one chaos script. All rates are per-round
+/// probabilities; the client-fault rates stack (their sum must stay
+/// within [0, 1]), as must the shard-fault rates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosConfig {
+    /// preset name (diagnostics / reports)
+    pub name: String,
+    /// client disappears mid-round: no arrival, no update
+    pub vanish: f64,
+    /// client hangs past the round deadline; dropped at the deadline
+    pub hang: f64,
+    /// client's payload fails wire decode and is quarantined
+    pub corrupt: f64,
+    /// client's update carries a seeded non-finite value
+    pub nan_poison: f64,
+    /// one shard worker crashes this round (slice re-dispatched)
+    pub shard_crash: f64,
+    /// one shard worker stalls once past its deadline
+    pub shard_stall: f64,
+    /// round deadline as a multiple of the barrier target — how long the
+    /// server waits for a hung client before dropping it
+    pub deadline_mult: f64,
+}
+
+impl ChaosConfig {
+    fn preset(name: &str) -> Option<ChaosConfig> {
+        let calm = ChaosConfig {
+            name: name.to_string(),
+            vanish: 0.0,
+            hang: 0.0,
+            corrupt: 0.0,
+            nan_poison: 0.0,
+            shard_crash: 0.0,
+            shard_stall: 0.0,
+            deadline_mult: 1.5,
+        };
+        Some(match name {
+            // clients disappear mid-round, nothing else
+            "vanish" => ChaosConfig {
+                vanish: 0.05,
+                ..calm
+            },
+            // clients hang past the deadline
+            "hang" => ChaosConfig { hang: 0.05, ..calm },
+            // payloads fail wire decode
+            "corrupt" => ChaosConfig {
+                corrupt: 0.05,
+                ..calm
+            },
+            // updates carry seeded non-finite values
+            "nan" => ChaosConfig {
+                nan_poison: 0.05,
+                ..calm
+            },
+            // shard workers crash / stall
+            "shards" => ChaosConfig {
+                shard_crash: 0.05,
+                shard_stall: 0.05,
+                ..calm
+            },
+            // everything at once
+            "storm" => ChaosConfig {
+                vanish: 0.04,
+                hang: 0.02,
+                corrupt: 0.02,
+                nan_poison: 0.01,
+                shard_crash: 0.03,
+                shard_stall: 0.02,
+                ..calm
+            },
+            _ => return None,
+        })
+    }
+
+    /// Parse a CLI chaos spec: `none`, a preset name, or `preset:rate`
+    /// where `rate` overrides the preset's headline knob (the vanish rate
+    /// for `vanish`/`storm`, the hang/corrupt/nan rate for those presets,
+    /// the shard-crash rate for `shards`).
+    pub fn parse(spec: &str) -> Result<Option<ChaosConfig>, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(None);
+        }
+        let (name, rate) = match spec.split_once(':') {
+            Some((n, r)) => {
+                let rate: f64 = r
+                    .parse()
+                    .map_err(|_| format!("chaos rate {r:?} is not a number"))?;
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(format!("chaos rate {rate} outside [0, 1]"));
+                }
+                (n, Some(rate))
+            }
+            None => (spec, None),
+        };
+        let mut cfg = ChaosConfig::preset(name).ok_or_else(|| {
+            format!("unknown chaos {name:?} (none|vanish|hang|corrupt|nan|shards|storm[:rate])")
+        })?;
+        if let Some(rate) = rate {
+            match name {
+                "vanish" | "storm" => cfg.vanish = rate,
+                "hang" => cfg.hang = rate,
+                "corrupt" => cfg.corrupt = rate,
+                "nan" => cfg.nan_poison = rate,
+                "shards" => cfg.shard_crash = rate,
+                _ => {}
+            }
+        }
+        cfg.validate()?;
+        Ok(Some(cfg))
+    }
+
+    /// Structural sanity: every rate a probability, the stacked draws
+    /// within [0, 1], the deadline multiple usable.
+    pub fn validate(&self) -> Result<(), String> {
+        for (knob, v) in [
+            ("vanish", self.vanish),
+            ("hang", self.hang),
+            ("corrupt", self.corrupt),
+            ("nan", self.nan_poison),
+            ("shard-crash", self.shard_crash),
+            ("shard-stall", self.shard_stall),
+        ] {
+            if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                return Err(format!("chaos {knob} rate {v} outside [0, 1]"));
+            }
+        }
+        let client = self.vanish + self.hang + self.corrupt + self.nan_poison;
+        if client > 1.0 {
+            return Err(format!("stacked client fault rates sum to {client} > 1"));
+        }
+        let shard = self.shard_crash + self.shard_stall;
+        if shard > 1.0 {
+            return Err(format!("stacked shard fault rates sum to {shard} > 1"));
+        }
+        if !self.deadline_mult.is_finite() || self.deadline_mult < 1.0 {
+            return Err(format!(
+                "chaos deadline multiple {} must be >= 1",
+                self.deadline_mult
+            ));
+        }
+        Ok(())
+    }
+
+    /// Does this script ever fault a client?
+    pub fn has_client_faults(&self) -> bool {
+        self.vanish + self.hang + self.corrupt + self.nan_poison > 0.0
+    }
+
+    /// Does this script ever fault a shard worker? (Decides whether the
+    /// run must route through the sharded tree even at `--shards 1`.)
+    pub fn has_shard_faults(&self) -> bool {
+        self.shard_crash + self.shard_stall > 0.0
+    }
+}
+
+/// One injected client-level fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientFault {
+    /// disappears mid-round: no arrival, no update, nothing observed
+    Vanish,
+    /// alive but past the deadline: dropped, the server waits out the
+    /// deadline (`deadline_mult` x the barrier target)
+    Hang,
+    /// payload fails wire decode — straight to quarantine
+    Corrupt,
+    /// update carries a seeded NaN — caught by the validator
+    NanPoison,
+}
+
+/// One injected shard-worker fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardFaultKind {
+    /// the worker dies; its slice must be re-dispatched
+    Crash,
+    /// the worker misses its deadline once, then recovers
+    StallOnce,
+}
+
+/// A shard fault drawn in *virtual slot space*: the event exists (or
+/// not) per round independent of the shard count, and maps onto an
+/// actual shard as `slot % shards` — so fault counts and retry telemetry
+/// are shard-count invariant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardEvent {
+    pub slot: u64,
+    pub kind: ShardFaultKind,
+}
+
+/// A chaos script bound to an experiment seed — the replayable executor
+/// of a [`ChaosConfig`]. Every query opens a fresh PCG stream keyed by
+/// `(round, client)`, so draws are order-free: any thread, any shard,
+/// any replay sees the same faults.
+#[derive(Clone, Debug)]
+pub struct ChaosPlan {
+    cfg: ChaosConfig,
+    seed: u64,
+}
+
+impl ChaosPlan {
+    pub fn new(cfg: ChaosConfig, experiment_seed: u64) -> Self {
+        Self {
+            cfg,
+            seed: experiment_seed ^ 0xC4A0_57A7,
+        }
+    }
+
+    pub fn cfg(&self) -> &ChaosConfig {
+        &self.cfg
+    }
+
+    /// The fault `client` suffers in `round`, if any. Pure in
+    /// `(plan, round, client)`.
+    pub fn client_fault(&self, round: usize, client: usize) -> Option<ClientFault> {
+        let c = &self.cfg;
+        if !c.has_client_faults() {
+            return None;
+        }
+        let mut rng = Pcg32::new(self.seed ^ ((round as u64) << 32), client as u64);
+        let x = rng.next_f64();
+        if x < c.vanish {
+            Some(ClientFault::Vanish)
+        } else if x < c.vanish + c.hang {
+            Some(ClientFault::Hang)
+        } else if x < c.vanish + c.hang + c.corrupt {
+            Some(ClientFault::Corrupt)
+        } else if x < c.vanish + c.hang + c.corrupt + c.nan_poison {
+            Some(ClientFault::NanPoison)
+        } else {
+            None
+        }
+    }
+
+    /// Which parameter element a NanPoison fault lands on, for an update
+    /// tensor of `len` elements.
+    pub fn poison_index(&self, round: usize, client: usize, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        let mut rng = Pcg32::new(
+            self.seed ^ 0x9015_0000 ^ ((round as u64) << 32),
+            client as u64,
+        );
+        rng.below_usize(len)
+    }
+
+    /// The shard fault drawn for `round`, if any — in virtual slot
+    /// space, shard-count independent (see [`ShardEvent`]).
+    pub fn shard_event(&self, round: usize) -> Option<ShardEvent> {
+        let c = &self.cfg;
+        if !c.has_shard_faults() {
+            return None;
+        }
+        let mut rng = Pcg32::new(self.seed ^ ((round as u64) << 32), 0x5AD_E);
+        let x = rng.next_f64();
+        let slot = rng.next_u64();
+        if x < c.shard_crash {
+            Some(ShardEvent {
+                slot,
+                kind: ShardFaultKind::Crash,
+            })
+        } else if x < c.shard_crash + c.shard_stall {
+            Some(ShardEvent {
+                slot,
+                kind: ShardFaultKind::StallOnce,
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// Deterministic virtual-time cost of shard-slice retry `attempt`
+/// (1-based): doubles per attempt, capped so a deep budget cannot run
+/// the virtual clock away. Telemetry/vtime only — never wall clock.
+pub fn retry_backoff_ms(attempt: usize) -> u64 {
+    BACKOFF_BASE_MS << (attempt.saturating_sub(1).min(6) as u32)
+}
+
+/// The typed error a round raises when fewer than the configured quorum
+/// fraction of its participants delivered a fresh, valid, on-time
+/// update. The engine raises it *before* aggregation mutates any state,
+/// so the last checkpoint remains a clean resume point.
+#[derive(Debug, Clone, Copy)]
+pub struct QuorumFailed {
+    pub round: usize,
+    /// fresh valid on-time updates that survived the barrier
+    pub arrived: usize,
+    /// participants the round dispatched
+    pub expected: usize,
+    /// the configured quorum fraction
+    pub quorum: f64,
+}
+
+impl std::fmt::Display for QuorumFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "quorum failed at round {}: {}/{} fresh updates (need fraction {})",
+            self.round, self.arrived, self.expected, self.quorum
+        )
+    }
+}
+
+impl std::error::Error for QuorumFailed {}
+
+/// Why an update was refused admission.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Violation {
+    /// payload failed wire decode / checksum
+    Decode,
+    /// tensor count or shape disagrees with the broadcast model
+    Shape,
+    /// a parameter or metric value is not finite
+    NonFinite,
+    /// relative L2 distance from the broadcast exceeded the bound
+    NormBound { ratio: f64 },
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::Decode => write!(f, "payload failed decode"),
+            Violation::Shape => write!(f, "shape mismatch with broadcast model"),
+            Violation::NonFinite => write!(f, "non-finite value"),
+            Violation::NormBound { ratio } => {
+                write!(f, "update norm {ratio:.3e}x the broadcast bound")
+            }
+        }
+    }
+}
+
+/// Always-on admission check for client updates. Allocation-free on the
+/// clean path (gated in `tests/alloc_gate.rs`): plain loops accumulating
+/// in f64, no intermediate tensors.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateValidator {
+    /// relative L2 bound: reject when
+    /// `||update - broadcast|| > bound * (1 + ||broadcast||)`
+    pub norm_bound: f64,
+}
+
+impl Default for UpdateValidator {
+    fn default() -> Self {
+        Self {
+            norm_bound: DEFAULT_NORM_BOUND,
+        }
+    }
+}
+
+impl UpdateValidator {
+    pub fn new(norm_bound: f64) -> Self {
+        Self { norm_bound }
+    }
+
+    /// Admit or refuse one local result against the broadcast model it
+    /// started from.
+    pub fn validate(&self, result: &LocalResult, broadcast: &[Tensor]) -> Result<(), Violation> {
+        if !result.mean_loss.is_finite() || !result.mean_acc.is_finite() {
+            return Err(Violation::NonFinite);
+        }
+        if result.params.len() != broadcast.len() {
+            return Err(Violation::Shape);
+        }
+        let mut diff2 = 0.0f64;
+        let mut base2 = 0.0f64;
+        for (u, b) in result.params.iter().zip(broadcast) {
+            if u.shape() != b.shape() {
+                return Err(Violation::Shape);
+            }
+            for (&x, &y) in u.data().iter().zip(b.data()) {
+                if !x.is_finite() {
+                    return Err(Violation::NonFinite);
+                }
+                let d = (x - y) as f64;
+                diff2 += d * d;
+                base2 += (y as f64) * (y as f64);
+            }
+        }
+        let ratio = diff2.sqrt() / (1.0 + base2.sqrt());
+        if ratio > self.norm_bound {
+            return Err(Violation::NormBound { ratio });
+        }
+        Ok(())
+    }
+}
+
+/// One quarantined client's record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuarEntry {
+    pub client: usize,
+    /// validation failures on record (>= 1 while the entry lives)
+    pub strikes: u32,
+    /// first round the client may participate again
+    pub barred_until: usize,
+    /// round of the most recent strike (decay anchor)
+    pub last_strike: usize,
+}
+
+/// Strike-escalating quarantine bar list, sorted by client id. Every
+/// validation failure extends the bar exponentially (capped); a clean
+/// streak of [`QUAR_DECAY_EVERY`] rounds forgives one strike, and an
+/// entry with no strikes left is dropped — decay-based re-admission.
+/// Persisted through the optional `QUAR` snapshot section so kill/resume
+/// preserves it.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QuarantineLedger {
+    /// sorted by client id, strikes >= 1
+    entries: Vec<QuarEntry>,
+}
+
+impl QuarantineLedger {
+    fn bar_len(strikes: u32) -> usize {
+        QUAR_BAR_BASE << strikes.saturating_sub(1).min(QUAR_BAR_CAP)
+    }
+
+    /// Register a validation failure for `client` in `round`.
+    pub fn record(&mut self, client: usize, round: usize) {
+        match self.entries.binary_search_by_key(&client, |e| e.client) {
+            Ok(i) => {
+                let e = &mut self.entries[i];
+                e.strikes = e.strikes.saturating_add(1);
+                e.last_strike = round;
+                e.barred_until = round + Self::bar_len(e.strikes);
+            }
+            Err(i) => self.entries.insert(
+                i,
+                QuarEntry {
+                    client,
+                    strikes: 1,
+                    barred_until: round + Self::bar_len(1),
+                    last_strike: round,
+                },
+            ),
+        }
+    }
+
+    /// Is `client` barred from participating in `round`? O(log entries),
+    /// allocation-free.
+    pub fn is_barred(&self, client: usize, round: usize) -> bool {
+        match self.entries.binary_search_by_key(&client, |e| e.client) {
+            Ok(i) => round < self.entries[i].barred_until,
+            Err(_) => false,
+        }
+    }
+
+    /// Advance decay to `round`: each full clean [`QUAR_DECAY_EVERY`]
+    /// streak since the last strike forgives one strike; strike-free
+    /// entries drop out. Deterministic in `round`, allocation-free.
+    pub fn decay(&mut self, round: usize) {
+        self.entries.retain_mut(|e| {
+            while e.strikes > 0 && round >= e.last_strike + QUAR_DECAY_EVERY {
+                e.strikes -= 1;
+                e.last_strike += QUAR_DECAY_EVERY;
+            }
+            e.strikes > 0
+        });
+    }
+
+    pub fn entries(&self) -> &[QuarEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Snapshot export — the raw sorted entry list.
+    pub fn export(&self) -> Vec<QuarEntry> {
+        self.entries.clone()
+    }
+
+    /// Rebuild from a snapshot section, validating the sort/dedup/strike
+    /// invariants a hand-edited or corrupted snapshot could break.
+    pub fn from_entries(entries: Vec<QuarEntry>) -> Result<QuarantineLedger, String> {
+        for w in entries.windows(2) {
+            if w[0].client >= w[1].client {
+                return Err("quarantine ledger not sorted by client".into());
+            }
+        }
+        if entries.iter().any(|e| e.strikes == 0) {
+            return Err("quarantine entry with zero strikes".into());
+        }
+        Ok(QuarantineLedger { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_none_is_none() {
+        assert_eq!(ChaosConfig::parse("none").unwrap(), None);
+        assert_eq!(ChaosConfig::parse("").unwrap(), None);
+        for name in ["vanish", "hang", "corrupt", "nan", "shards", "storm"] {
+            let c = ChaosConfig::parse(name).unwrap().unwrap();
+            assert_eq!(c.name, name);
+            c.validate().unwrap();
+        }
+        assert!(ChaosConfig::parse("bogus").is_err());
+        assert!(ChaosConfig::parse("vanish:2.0").is_err());
+        assert!(ChaosConfig::parse("vanish:x").is_err());
+    }
+
+    #[test]
+    fn rate_override_hits_the_headline_knob() {
+        assert_eq!(ChaosConfig::parse("vanish:0.2").unwrap().unwrap().vanish, 0.2);
+        assert_eq!(ChaosConfig::parse("hang:0.3").unwrap().unwrap().hang, 0.3);
+        assert_eq!(ChaosConfig::parse("corrupt:0.1").unwrap().unwrap().corrupt, 0.1);
+        assert_eq!(ChaosConfig::parse("nan:0.1").unwrap().unwrap().nan_poison, 0.1);
+        assert_eq!(
+            ChaosConfig::parse("shards:0.4").unwrap().unwrap().shard_crash,
+            0.4
+        );
+        assert_eq!(ChaosConfig::parse("storm:0.5").unwrap().unwrap().vanish, 0.5);
+    }
+
+    #[test]
+    fn validate_rejects_overstacked_rates() {
+        let mut c = ChaosConfig::parse("storm").unwrap().unwrap();
+        c.vanish = 0.6;
+        c.hang = 0.6;
+        assert!(c.validate().is_err());
+        let mut c = ChaosConfig::parse("shards").unwrap().unwrap();
+        c.deadline_mult = 0.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn client_faults_are_replayable_and_rate_bounded() {
+        let cfg = ChaosConfig::parse("storm").unwrap().unwrap();
+        let a = ChaosPlan::new(cfg.clone(), 42);
+        let b = ChaosPlan::new(cfg.clone(), 42);
+        let mut fired = 0usize;
+        let mut total = 0usize;
+        for round in 0..50 {
+            for client in 0..200 {
+                let fa = a.client_fault(round, client);
+                assert_eq!(fa, b.client_fault(round, client), "r{round} c{client}");
+                total += 1;
+                fired += fa.is_some() as usize;
+            }
+        }
+        let rate = fired as f64 / total as f64;
+        let expect = cfg.vanish + cfg.hang + cfg.corrupt + cfg.nan_poison;
+        assert!((rate - expect).abs() < 0.02, "fault rate {rate} vs {expect}");
+        // a different seed draws a different fault pattern
+        let c = ChaosPlan::new(cfg, 43);
+        let differs = (0..50)
+            .flat_map(|r| (0..200).map(move |cl| (r, cl)))
+            .any(|(r, cl)| a.client_fault(r, cl) != c.client_fault(r, cl));
+        assert!(differs);
+    }
+
+    #[test]
+    fn zero_rate_plan_never_fires() {
+        let mut cfg = ChaosConfig::parse("storm").unwrap().unwrap();
+        cfg.vanish = 0.0;
+        cfg.hang = 0.0;
+        cfg.corrupt = 0.0;
+        cfg.nan_poison = 0.0;
+        cfg.shard_crash = 0.0;
+        cfg.shard_stall = 0.0;
+        let p = ChaosPlan::new(cfg, 7);
+        for round in 0..20 {
+            assert_eq!(p.shard_event(round), None);
+            for client in 0..50 {
+                assert_eq!(p.client_fault(round, client), None);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_events_are_shard_count_independent() {
+        let cfg = ChaosConfig::parse("shards").unwrap().unwrap();
+        let p = ChaosPlan::new(cfg, 11);
+        let mut fired = 0usize;
+        for round in 0..200 {
+            // the *event* is drawn before any shard-count mapping
+            let ev = p.shard_event(round);
+            assert_eq!(ev, p.shard_event(round));
+            if let Some(ev) = ev {
+                fired += 1;
+                // maps onto every topology
+                for shards in [1usize, 2, 4, 8] {
+                    assert!(((ev.slot % shards as u64) as usize) < shards);
+                }
+            }
+        }
+        assert!(fired > 5, "shard events too rare: {fired}/200");
+        assert!(fired < 60, "shard events too common: {fired}/200");
+    }
+
+    #[test]
+    fn retry_backoff_doubles_and_caps() {
+        assert_eq!(retry_backoff_ms(1), 50);
+        assert_eq!(retry_backoff_ms(2), 100);
+        assert_eq!(retry_backoff_ms(3), 200);
+        assert_eq!(retry_backoff_ms(7), 3200);
+        assert_eq!(retry_backoff_ms(100), 3200, "backoff must cap");
+    }
+
+    fn clean_result(broadcast: &[Tensor]) -> LocalResult {
+        LocalResult {
+            params: broadcast
+                .iter()
+                .map(|t| {
+                    let mut t = t.clone();
+                    for x in t.data_mut() {
+                        *x += 0.01;
+                    }
+                    t
+                })
+                .collect(),
+            mean_loss: 0.7,
+            mean_acc: 0.5,
+            steps: 2,
+            weight: 8.0,
+        }
+    }
+
+    #[test]
+    fn validator_accepts_clean_and_rejects_poisoned() {
+        let broadcast = vec![Tensor::full(&[4, 3], 0.5), Tensor::zeros(&[3])];
+        let v = UpdateValidator::default();
+        assert_eq!(v.validate(&clean_result(&broadcast), &broadcast), Ok(()));
+
+        let mut nan = clean_result(&broadcast);
+        nan.params[1].data_mut()[1] = f32::NAN;
+        assert_eq!(v.validate(&nan, &broadcast), Err(Violation::NonFinite));
+
+        let mut inf_loss = clean_result(&broadcast);
+        inf_loss.mean_loss = f64::INFINITY;
+        assert_eq!(v.validate(&inf_loss, &broadcast), Err(Violation::NonFinite));
+
+        let mut huge = clean_result(&broadcast);
+        huge.params[0].data_mut()[0] = 1e9;
+        assert!(matches!(
+            v.validate(&huge, &broadcast),
+            Err(Violation::NormBound { .. })
+        ));
+
+        let mut wrong = clean_result(&broadcast);
+        wrong.params.pop();
+        assert_eq!(v.validate(&wrong, &broadcast), Err(Violation::Shape));
+    }
+
+    #[test]
+    fn poison_index_is_deterministic_and_in_bounds() {
+        let cfg = ChaosConfig::parse("nan").unwrap().unwrap();
+        let p = ChaosPlan::new(cfg, 3);
+        for round in 0..10 {
+            for client in 0..10 {
+                let i = p.poison_index(round, client, 577);
+                assert!(i < 577);
+                assert_eq!(i, p.poison_index(round, client, 577));
+            }
+        }
+        assert_eq!(p.poison_index(1, 1, 0), 0);
+    }
+
+    #[test]
+    fn ledger_bars_escalate_and_decay_readmits() {
+        let mut q = QuarantineLedger::default();
+        assert!(!q.is_barred(7, 0));
+        q.record(7, 10);
+        assert!(q.is_barred(7, 10));
+        assert!(q.is_barred(7, 11));
+        assert!(!q.is_barred(7, 10 + QUAR_BAR_BASE), "first bar expires");
+        // a second strike bars twice as long
+        q.record(7, 20);
+        assert!(q.is_barred(7, 20 + QUAR_BAR_BASE));
+        assert!(!q.is_barred(7, 20 + 2 * QUAR_BAR_BASE));
+        // decay forgives one strike per clean streak, then drops the entry
+        q.decay(20 + QUAR_DECAY_EVERY);
+        assert_eq!(q.entries()[0].strikes, 1);
+        q.decay(20 + 2 * QUAR_DECAY_EVERY);
+        assert!(q.is_empty(), "fully decayed entry drops out");
+        // the bar length caps
+        let mut q = QuarantineLedger::default();
+        for s in 0..40 {
+            q.record(3, s);
+        }
+        let e = q.entries()[0];
+        assert_eq!(e.strikes, 40);
+        assert_eq!(e.barred_until - e.last_strike, QUAR_BAR_BASE << 6);
+    }
+
+    #[test]
+    fn ledger_round_trips_and_rejects_bad_sections() {
+        let mut q = QuarantineLedger::default();
+        q.record(3, 5);
+        q.record(99, 6);
+        q.record(3, 8);
+        let back = QuarantineLedger::from_entries(q.export()).unwrap();
+        assert_eq!(back, q);
+        assert!(QuarantineLedger::from_entries(vec![
+            QuarEntry { client: 5, strikes: 1, barred_until: 9, last_strike: 7 },
+            QuarEntry { client: 5, strikes: 1, barred_until: 9, last_strike: 7 },
+        ])
+        .is_err());
+        assert!(QuarantineLedger::from_entries(vec![QuarEntry {
+            client: 5,
+            strikes: 0,
+            barred_until: 9,
+            last_strike: 7
+        }])
+        .is_err());
+    }
+
+    #[test]
+    fn quorum_failed_formats_and_is_an_error() {
+        let q = QuorumFailed {
+            round: 12,
+            arrived: 3,
+            expected: 16,
+            quorum: 0.5,
+        };
+        let msg = format!("{q}");
+        assert!(msg.contains("round 12"));
+        assert!(msg.contains("3/16"));
+        let _: &dyn std::error::Error = &q;
+    }
+}

@@ -114,6 +114,16 @@ pub trait ClientExecutor: Sync {
         masks: &[Tensor],
         split: &Split,
     ) -> crate::Result<(f64, f64)>;
+
+    /// Telemetry drain: `(retries, backoff_ms)` — shard-slice
+    /// re-dispatches performed since the last call and their summed
+    /// deterministic virtual backoff ([`crate::engine::chaos::retry_backoff_ms`])
+    /// in integer milliseconds. Plain executors never retry; the sharded
+    /// tree overrides this, and the engine drains it once per round into
+    /// the `shard_retries` telemetry.
+    fn drain_fault_retries(&self) -> (usize, u64) {
+        (0, 0)
+    }
 }
 
 /// In-process executor over the scoped thread pool — the historical

@@ -36,6 +36,14 @@
 //!   [`RoundEngine::run`] honors `ExperimentConfig::{checkpoint_every,
 //!   checkpoint_dir, resume_from}`.
 //!
+//! * the **chaos seam** — a seeded [`chaos::ChaosPlan`] (compiled from
+//!   `--chaos` specs exactly like scenarios) injects client vanish/hang/
+//!   corrupt/NaN faults and shard crashes on dedicated PCG streams; the
+//!   engine degrades gracefully through deadline drops, the always-on
+//!   [`UpdateValidator`] + [`QuarantineLedger`], a `--quorum` floor
+//!   ([`QuorumFailed`] is typed, never a panic), and the sharded tree's
+//!   bounded retry budget (DESIGN.md §13).
+//!
 //! * the **hot-path seam** — the engine owns an [`AggScratch`] arena and
 //!   mirrors the executor's thread budget ([`ClientExecutor::threads`])
 //!   into the allocation-free parallel aggregation
@@ -46,6 +54,7 @@
 //! See DESIGN.md §3 and §5 for the layering diagram, the exact SyncMode
 //! semantics and the RNG-stream layout.
 
+pub mod chaos;
 pub mod executor;
 pub mod plan;
 pub mod scenario;
@@ -53,6 +62,10 @@ pub mod sched;
 pub mod sharded;
 pub mod wire;
 
+pub use chaos::{
+    ChaosConfig, ChaosPlan, ClientFault, QuarEntry, QuarantineLedger, QuorumFailed,
+    ShardEvent, ShardFaultKind, UpdateValidator,
+};
 pub use executor::{ClientExecutor, LocalExecutor, SimExecutor, TrainJob};
 pub use plan::{MaskTable, RateTable, RoundOutcome, RoundPlan};
 pub use scenario::{ScenarioConfig, ScenarioSim};
@@ -211,6 +224,19 @@ pub struct RoundEngine<'a, E: ClientExecutor> {
     /// the per-client q8 error-feedback residuals, which snapshot/restore
     /// carry in the RESID section (DESIGN.md §12)
     codec: Codec,
+    /// the bound chaos script (`ExperimentConfig::chaos`): every fault
+    /// draw is a pure function of (plan, round, client) on a dedicated
+    /// PCG stream, so `None` consumes no randomness and a faulted run
+    /// replays bit-identically across thread and shard counts
+    /// (DESIGN.md §13)
+    chaos: Option<ChaosPlan>,
+    /// always-on admission check for client updates (finite values,
+    /// matching shapes, relative norm bound) — allocation-free on the
+    /// clean path
+    validator: UpdateValidator,
+    /// strike-escalating bar list for clients whose updates failed
+    /// validation; persisted through the optional QUAR snapshot section
+    quarantine: QuarantineLedger,
 }
 
 impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
@@ -342,6 +368,12 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             threads,
             scratch: AggScratch::new(),
             codec: Codec::new(cfg.compress),
+            chaos: cfg
+                .chaos
+                .as_ref()
+                .map(|c| ChaosPlan::new(c.clone(), cfg.seed)),
+            validator: UpdateValidator::default(),
+            quarantine: QuarantineLedger::default(),
         })
     }
 
@@ -394,6 +426,10 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 dropped_updates: o.dropped_updates,
                 stale_folded: o.stale_folded,
                 update_bytes: o.update_bytes,
+                vanished: o.vanished,
+                quarantined: o.quarantined,
+                shard_retries: o.shard_retries,
+                quorum_fraction: o.quorum_fraction,
             });
             if let Some(store) = &store {
                 if (round + 1) % cfg.checkpoint_every == 0 {
@@ -480,6 +516,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 })
                 .collect(),
             resid: self.codec.export_resid(),
+            quarantine: self.quarantine.export(),
             records: records.to_vec(),
         }
     }
@@ -591,6 +628,15 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 snap.next_round
             );
         }
+        // QUAR is optional: snapshots from pre-chaos writers carry none
+        // and the ledger starts empty. `from_entries` re-validates the
+        // sort/strike invariants a corrupted section could break.
+        let quarantine = QuarantineLedger::from_entries(snap.quarantine)
+            .map_err(|e| anyhow::anyhow!("snapshot quarantine section: {e}"))?;
+        anyhow::ensure!(
+            quarantine.entries().iter().all(|e| e.client < n),
+            "snapshot quarantine ledger names client ids outside the {n}-client population"
+        );
         match (&mut self.policy, &snap.policy) {
             (Policy::Random(p), PolicyState::Random { state, inc }) => {
                 p.set_rng_state(*state, *inc);
@@ -630,6 +676,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 born_round: s.born_round,
             })
             .collect();
+        self.quarantine = quarantine;
         self.params = snap.params;
         self.detection = snap.detection;
         self.last_latencies = snap.last_latencies;
@@ -754,14 +801,20 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
 
         // --- participation --------------------------------------------------
         // A selected client sits a round out when it churned away (fleet
-        // scenarios) or is still busy finishing a previous semi-async
-        // round; its buffered update folds in when it lands. Classic
-        // synchronous runs mark nobody unavailable or busy.
+        // scenarios), is still busy finishing a previous semi-async
+        // round, or is serving a quarantine bar; its buffered update
+        // folds in when it lands. Classic synchronous runs mark nobody
+        // unavailable or busy, and a clean run's ledger stays empty.
+        self.quarantine.decay(round);
         let round_start = self.vtime;
         let active: Vec<usize> = selected
             .iter()
             .copied()
-            .filter(|&c| self.fleet.is_available(c) && self.free_at[c] <= round_start)
+            .filter(|&c| {
+                self.fleet.is_available(c)
+                    && self.free_at[c] <= round_start
+                    && !self.quarantine.is_barred(c, round)
+            })
             .collect();
         // Exclude policy: stragglers neither train nor aggregate.
         let participants: Vec<usize> = active
@@ -848,9 +901,58 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         self.train_wall += t0.elapsed().as_secs_f64();
         drop(cohort);
         drop(cohort_owned);
+        // shard-slice re-dispatches the executor performed for this
+        // round (chaos shard faults or `--shard-crash-after` under a
+        // retry budget), plus their deterministic virtual backoff
+        let (shard_retries, retry_backoff_ms) = self.executor.drain_fault_retries();
+
+        // --- fault injection + admission ------------------------------------
+        // Client faults are drawn here at the root on dedicated
+        // per-(round, client) PCG streams — pure data, independent of
+        // thread and shard topology. A vanished/hung client is excluded
+        // now, *before* any observation or aggregation mutates state; a
+        // corrupted payload goes straight to quarantine (it failed wire
+        // decode, there is nothing to validate); a NaN-poisoned update
+        // flows on so the always-on validator catches it.
         let mut updates: Vec<(usize, fl::LocalResult)> = Vec::with_capacity(results.len());
+        let mut vanished_sorted: Vec<usize> = Vec::new();
+        let mut hung = 0usize;
+        let mut quarantined = 0usize;
         for (i, r) in results.into_iter().enumerate() {
-            updates.push((plan.participants[i], r?));
+            let c = plan.participants[i];
+            let mut u = r?;
+            match self.chaos.as_ref().and_then(|p| p.client_fault(plan.round, c)) {
+                Some(ClientFault::Vanish) => {
+                    vanished_sorted.push(c);
+                    continue;
+                }
+                Some(ClientFault::Hang) => {
+                    vanished_sorted.push(c);
+                    hung += 1;
+                    continue;
+                }
+                Some(ClientFault::Corrupt) => {
+                    self.quarantine.record(c, plan.round);
+                    quarantined += 1;
+                    continue;
+                }
+                Some(ClientFault::NanPoison) => {
+                    let p = self.chaos.as_ref().expect("fault implies a plan");
+                    if let Some(t) = u.params.first_mut() {
+                        if !t.is_empty() {
+                            let idx = p.poison_index(plan.round, c, t.len());
+                            t.data_mut()[idx] = f32::NAN;
+                        }
+                    }
+                }
+                None => {}
+            }
+            if self.validator.validate(&u, &self.params).is_err() {
+                self.quarantine.record(c, plan.round);
+                quarantined += 1;
+                continue;
+            }
+            updates.push((c, u));
         }
 
         // --- virtual-time arrival events ------------------------------------
@@ -873,27 +975,24 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             plan.t_frac,
             plan.round_seed,
         );
-        for (a, &rate) in arrivals.iter().zip(&active_rates) {
-            self.last_latencies[a.client] = a.at;
-            self.last_full_latencies[a.client] = a.full_latency;
-            // close the loop: the controller smooths these into its
-            // per-client profiles (no-op in paper mode). The applied
-            // rate rides along so evidence from a full-model fallback
-            // round can never drive a feedback step.
-            self.controller.observe(a.client, a.at, a.full_latency, rate);
-        }
 
         // membership structures are cohort-sized and sorted — binary
         // searches instead of the former O(fleet) bitmaps per round
         // (`plan.participants` is already sorted: it filters the sorted
-        // `selected` list)
+        // `selected` list, and `vanished_sorted` filters participants in
+        // order)
         debug_assert!(plan.participants.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(vanished_sorted.windows(2).all(|w| w[0] < w[1]));
 
         // the barrier only waits on clients that actually train; with the
-        // Exclude policy the round advances as soon as participants finish
+        // Exclude policy the round advances as soon as participants
+        // finish, and a vanished/hung client's arrival never comes
         let participant_arrivals: Vec<ClientArrival> = arrivals
             .iter()
-            .filter(|a| plan.participants.binary_search(&a.client).is_ok())
+            .filter(|a| {
+                plan.participants.binary_search(&a.client).is_ok()
+                    && vanished_sorted.binary_search(&a.client).is_err()
+            })
             .copied()
             .collect();
         let res = EventScheduler::resolve(cfg.sync_mode, &participant_arrivals, plan.t_target);
@@ -903,6 +1002,44 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let mut late_sorted: Vec<(usize, f64)> =
             res.late.iter().map(|a| (a.client, a.at)).collect();
         late_sorted.sort_unstable_by_key(|&(c, _)| c);
+
+        // --- quorum ---------------------------------------------------------
+        // Enough fresh, valid, on-time updates must survive the barrier,
+        // or the round is refused *before* observation or aggregation
+        // mutate any state — a typed error, never a silent half-round.
+        // (Stale folds don't count: they are yesterday's evidence.)
+        let fresh_on_time = updates
+            .iter()
+            .filter(|(c, _)| on_time_sorted.binary_search(c).is_ok())
+            .count();
+        let quorum_fraction = if plan.participants.is_empty() {
+            1.0
+        } else {
+            fresh_on_time as f64 / plan.participants.len() as f64
+        };
+        if cfg.quorum > 0.0 && !plan.participants.is_empty() && quorum_fraction < cfg.quorum {
+            return Err(anyhow::Error::new(QuorumFailed {
+                round: plan.round,
+                arrived: fresh_on_time,
+                expected: plan.participants.len(),
+                quorum: cfg.quorum,
+            }));
+        }
+
+        for (a, &rate) in arrivals.iter().zip(&active_rates) {
+            // a vanished/hung client reports nothing: no latency sample,
+            // no controller evidence
+            if vanished_sorted.binary_search(&a.client).is_ok() {
+                continue;
+            }
+            self.last_latencies[a.client] = a.at;
+            self.last_full_latencies[a.client] = a.full_latency;
+            // close the loop: the controller smooths these into its
+            // per-client profiles (no-op in paper mode). The applied
+            // rate rides along so evidence from a full-model fallback
+            // round can never drive a feedback step.
+            self.controller.observe(a.client, a.at, a.full_latency, rate);
+        }
 
         let round_start = self.vtime;
         let mut round_time = res.round_time;
@@ -918,6 +1055,20 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             {
                 round_time = (earliest - round_start).max(0.0);
             }
+        }
+        if hung > 0 {
+            // the server waits out the hung clients' deadline
+            // (`deadline_mult` x the barrier target) before abandoning
+            // them — a hang costs the round real virtual time
+            let mult = self.chaos.as_ref().map_or(1.0, |p| p.cfg().deadline_mult);
+            round_time = round_time.max(mult * plan.t_target.unwrap_or(res.round_time));
+        }
+        if self.chaos.is_some() && retry_backoff_ms > 0 {
+            // shard-slice retries cost their deterministic virtual
+            // backoff; gated on chaos so the legacy one-shot
+            // `--shard-crash-after --shard-retry` trajectories stay
+            // bit-identical to their pins
+            round_time += retry_backoff_ms as f64 / 1e3;
         }
         let round_end = round_start + round_time;
         self.vtime = round_end;
@@ -1118,6 +1269,10 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             stale_folded,
             update_bytes,
             calibration_secs: calib_secs,
+            vanished: vanished_sorted.len(),
+            quarantined,
+            shard_retries,
+            quorum_fraction,
         })
     }
 }

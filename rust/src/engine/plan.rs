@@ -176,6 +176,17 @@ pub struct RoundOutcome {
     pub update_bytes: usize,
     /// wall-clock seconds of planning + delta observation
     pub calibration_secs: f64,
+    /// participants whose updates never arrived this round (chaos
+    /// `Vanish`/`Hang` faults dropped at the deadline)
+    pub vanished: usize,
+    /// updates refused by the [`super::UpdateValidator`] (corrupt /
+    /// non-finite / out-of-bound payloads sent to quarantine)
+    pub quarantined: usize,
+    /// shard-slice re-dispatches the executor performed this round
+    pub shard_retries: usize,
+    /// fresh on-time updates as a fraction of the planned participants
+    /// (1.0 when the round planned no participants)
+    pub quorum_fraction: f64,
 }
 
 #[cfg(test)]

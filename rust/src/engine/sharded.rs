@@ -28,15 +28,25 @@
 //! shard state at all — a checkpoint taken under N shards resumes
 //! bit-identically under M shards (the N→M rule, DESIGN.md §11).
 //!
-//! **Fault injection.** `crash = Some((shard, round))` kills that shard
-//! the first time it starts round ≥ `round`: the worker sends a
-//! [`wire::ShardMessage::Fault`] frame instead of results. Without
-//! `retry` the root fails the slice cleanly — every slot surfaces a
-//! [`ShardFault`] error, which the engine propagates *before* touching
-//! any global state, so nothing partial leaks into the model. With
-//! `retry` the root re-dispatches the dead shard's slice on its own
-//! inner executor; purity makes the retried slice bit-identical to what
-//! the shard would have produced.
+//! **Fault injection.** Two sources feed the same recovery machinery.
+//! The legacy deterministic kill `crash = Some((shard, round))` fires
+//! `crash_times` faults (default 1) the first time that shard starts
+//! round ≥ `round`; a seeded [`ChaosPlan`] instead draws at most one
+//! shard event per round in virtual slot space (`slot % shards`), so
+//! the fault *schedule* is shard-count invariant. Either way the doomed
+//! worker sends a [`wire::ShardMessage::Fault`] frame instead of
+//! results, and the root resolves it against a bounded **retry budget**
+//! (`--shard-retry-max`): each attempt re-checks the fault (a chaos
+//! `Crash` kills the restarted worker once more; `StallOnce` recovers
+//! on the first retry), accrues a deterministic virtual-time backoff
+//! ([`chaos::retry_backoff_ms`], drained by the engine once per round
+//! via [`ClientExecutor::drain_fault_retries`]) and finally
+//! re-dispatches *only the dead shard's slice* on the root's own inner
+//! executor — purity makes the retried slice bit-identical to what the
+//! shard would have produced. A budget of 0, or exhaustion, fails the
+//! slice cleanly: every slot surfaces a typed [`ShardFault`] error,
+//! which the engine propagates *before* touching any global state, so
+//! nothing partial leaks into the model.
 //!
 //! **Compressed slices.** Under `--compress sparse|q8` each worker ships
 //! its slice as a [`wire::ShardMessage::Packed`] of kept-column sparse
@@ -55,9 +65,10 @@ use crate::fl::parallel::tree_reduce;
 use crate::fl::{AggScratch, Client, LocalResult};
 use crate::model::ModelSpec;
 use crate::tensor::Tensor;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use super::chaos::{self, ChaosPlan, ShardFaultKind};
 use super::executor::{ClientExecutor, TrainJob};
 use super::wire::{self, FrameRx, FrameTx, ShardMessage};
 
@@ -105,14 +116,26 @@ pub struct ShardedExecutor<E> {
     /// kill `(shard, round)`: that shard dies the first time it starts
     /// a round with index ≥ `round`
     crash: Option<(usize, usize)>,
-    /// on a shard fault, re-dispatch the slice at the root instead of
-    /// failing the round
-    retry: bool,
+    /// how many faults the injected `crash` has left to fire (default 1;
+    /// [`Self::with_crash_times`] raises it to model a shard whose
+    /// restart dies again)
+    fires_left: AtomicUsize,
+    /// bounded per-round retry budget: 0 fails a faulted slice outright,
+    /// N re-dispatches it up to N times before surfacing [`ShardFault`]
+    retry_budget: usize,
+    /// seeded shard-event schedule (chaos `Crash`/`StallOnce`)
+    chaos: Option<ChaosPlan>,
+    /// per-round chaos fault bookkeeping: bits 8.. hold `round + 1`,
+    /// bits 0..8 count fires consumed that round (resets on round change)
+    chaos_fired: AtomicU64,
+    /// slice re-dispatches since the last [`Self::drain_fault_retries`]
+    retries: AtomicUsize,
+    /// deterministic virtual-time backoff accrued since the last drain
+    backoff_ms: AtomicU64,
     /// how workers represent their slices on the wire (`Dense` ships
     /// classic [`ShardMessage::Results`]; the compressed modes ship
     /// sparse [`ShardMessage::Packed`] slices)
     compression: Compression,
-    fired: AtomicBool,
     lanes: Vec<Mutex<ShardLane>>,
 }
 
@@ -134,6 +157,8 @@ impl<E: ClientExecutor> ShardedExecutor<E> {
     }
 
     /// Build with shard-level fault injection (see the module docs).
+    /// `retry` is the legacy single-shot switch: it seeds a retry budget
+    /// of 1 ([`Self::with_retry_budget`] deepens it).
     pub fn with_fault(
         inner: E,
         shards: usize,
@@ -145,9 +170,13 @@ impl<E: ClientExecutor> ShardedExecutor<E> {
             inner,
             shards,
             crash: crash_after,
-            retry,
+            fires_left: AtomicUsize::new(1),
+            retry_budget: usize::from(retry),
+            chaos: None,
+            chaos_fired: AtomicU64::new(0),
+            retries: AtomicUsize::new(0),
+            backoff_ms: AtomicU64::new(0),
             compression: Compression::Dense,
-            fired: AtomicBool::new(false),
             lanes: (0..shards).map(|_| Mutex::new(ShardLane::default())).collect(),
         }
     }
@@ -158,20 +187,79 @@ impl<E: ClientExecutor> ShardedExecutor<E> {
         self
     }
 
+    /// Cap the per-round slice re-dispatch budget (builder style).
+    /// `--shard-retry-max N` lands here; 0 disables retry entirely.
+    pub fn with_retry_budget(mut self, budget: usize) -> Self {
+        self.retry_budget = budget;
+        self
+    }
+
+    /// Attach a seeded chaos schedule for shard events (builder style).
+    pub fn with_chaos(mut self, plan: Option<ChaosPlan>) -> Self {
+        self.chaos = plan;
+        self
+    }
+
+    /// How many times the injected `crash` fires before the shard stays
+    /// up (builder style; default 1). `times = 2` models a shard whose
+    /// restart dies again — the double-fault regression case.
+    pub fn with_crash_times(self, times: usize) -> Self {
+        self.fires_left.store(times, Ordering::SeqCst);
+        self
+    }
+
     pub fn shard_count(&self) -> usize {
         self.shards
     }
 
-    /// Does the injected fault fire for `shard` at `round`? Fires at
-    /// most once per process — the "restarted" shard works normally
-    /// afterwards, which is what the retry path relies on.
+    /// Does a fault fire for `shard` at `round`? Checked by the worker
+    /// before it runs its slice and re-checked by the root on every
+    /// retry attempt, so each call consumes one fire. The legacy crash
+    /// burns down `fires_left`; chaos events budget their fires per
+    /// round (`Crash` = 2 — the restarted worker dies once more —
+    /// `StallOnce` = 1) and reset when the round changes.
     fn fault_fires(&self, shard: usize, round: Option<usize>) -> bool {
-        match (self.crash, round) {
-            (Some((cs, after)), Some(r)) if cs == shard && r >= after => {
-                !self.fired.swap(true, Ordering::SeqCst)
+        if let (Some((cs, after)), Some(r)) = (self.crash, round) {
+            if cs == shard
+                && r >= after
+                && self
+                    .fires_left
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                    .is_ok()
+            {
+                return true;
             }
-            _ => false,
         }
+        self.chaos_fires(shard, round)
+    }
+
+    /// Chaos half of [`Self::fault_fires`]: does this round's seeded
+    /// shard event (if any) land on `shard`, with fires left to spend?
+    /// Only one shard per round can match (`slot % shards`), so the
+    /// counter is effectively single-writer within a round.
+    fn chaos_fires(&self, shard: usize, round: Option<usize>) -> bool {
+        let (plan, r) = match (&self.chaos, round) {
+            (Some(p), Some(r)) => (p, r),
+            _ => return false,
+        };
+        let ev = match plan.shard_event(r) {
+            Some(ev) => ev,
+            None => return false,
+        };
+        if (ev.slot % self.shards as u64) as usize != shard {
+            return false;
+        }
+        let fires: u64 = match ev.kind {
+            ShardFaultKind::Crash => 2,
+            ShardFaultKind::StallOnce => 1,
+        };
+        let key = (r as u64 + 1) << 8;
+        self.chaos_fired
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                let used = if v & !0xff == key { v & 0xff } else { 0 };
+                (used < fires).then_some(key | (used + 1))
+            })
+            .is_ok()
     }
 }
 
@@ -182,6 +270,13 @@ impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
 
     fn threads(&self) -> usize {
         self.inner.threads()
+    }
+
+    fn drain_fault_retries(&self) -> (usize, u64) {
+        (
+            self.retries.swap(0, Ordering::SeqCst),
+            self.backoff_ms.swap(0, Ordering::SeqCst),
+        )
     }
 
     fn run_clients(
@@ -295,8 +390,25 @@ impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
                         })
                         .collect()
                 }
-                Ok(ShardMessage::Fault { shard, round }) => {
-                    if self.retry {
+                Ok(ShardMessage::Fault { shard, round: fault_round }) => {
+                    let mut attempts = 0usize;
+                    loop {
+                        if attempts >= self.retry_budget {
+                            // budget exhausted (or zero): fail the slice
+                            // cleanly with the typed error
+                            break err_slice(want, || {
+                                anyhow::Error::new(ShardFault { shard, round: fault_round })
+                            });
+                        }
+                        attempts += 1;
+                        self.retries.fetch_add(1, Ordering::SeqCst);
+                        self.backoff_ms
+                            .fetch_add(chaos::retry_backoff_ms(attempts), Ordering::SeqCst);
+                        if self.fault_fires(shard, round) {
+                            // the restarted worker died again: spend
+                            // another attempt from the budget
+                            continue;
+                        }
                         // purity makes the retried slice bit-identical
                         // to what the dead shard would have sent
                         let rerun = self.inner.run_clients(
@@ -305,7 +417,7 @@ impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
                             params,
                             &jobs[lo..hi],
                         );
-                        if self.compression == Compression::Dense {
+                        break if self.compression == Compression::Dense {
                             rerun
                         } else {
                             // round-trip through the codec so the retried
@@ -334,9 +446,7 @@ impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
                                     })
                                 })
                                 .collect()
-                        }
-                    } else {
-                        err_slice(want, || anyhow::Error::new(ShardFault { shard, round }))
+                        };
                     }
                 }
                 Ok(_) => err_slice(want, || anyhow::anyhow!("shard {s} sent a malformed slice")),
@@ -456,6 +566,7 @@ impl<E: ClientExecutor> ClientExecutor for ShardedExecutor<E> {
 mod tests {
     use super::*;
     use crate::data::XStore;
+    use crate::engine::chaos::ChaosConfig;
     use crate::engine::executor::SimExecutor;
     use crate::model::sim_spec;
 
@@ -590,6 +701,93 @@ mod tests {
         let after = round(&clients, &full, 4);
         let resumed = ex.run_clients(&after.cohort, &after.masks, &params, &after.jobs);
         assert!(resumed.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn double_fault_exhausts_budget_one_but_completes_under_two() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(7);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(10);
+        let r = round(&clients, &full, 2);
+        let plain = SimExecutor::new(spec.clone(), 2)
+            .run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        // the restarted shard dies again: the legacy single-shot retry
+        // (--shard-retry) must fail the slice with the typed error...
+        let ex = ShardedExecutor::with_fault(SimExecutor::new(spec.clone(), 2), 4, Some((2, 2)), true)
+            .with_crash_times(2);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        // shard 2 of 4 over 10 jobs owns slots 5..7
+        for (i, slot) in got.iter().enumerate() {
+            if (5..7).contains(&i) {
+                let err = slot.as_ref().err().expect("doomed slice must fail");
+                let fault = err.downcast_ref::<ShardFault>().expect("typed ShardFault");
+                assert_eq!((fault.shard, fault.round), (2, 2));
+            } else {
+                assert!(slot.is_ok(), "slot {i} outside the dead shard must survive");
+            }
+        }
+        assert_eq!(ex.drain_fault_retries(), (1, 50), "one attempt was spent");
+        // ...while --shard-retry-max 2 absorbs the double fault
+        let ex = ShardedExecutor::with_fault(SimExecutor::new(spec, 2), 4, Some((2, 2)), true)
+            .with_crash_times(2)
+            .with_retry_budget(2);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        assert_same_results(&plain, &got);
+        assert_eq!(ex.drain_fault_retries(), (2, 150), "50ms + 100ms backoff");
+        assert_eq!(ex.drain_fault_retries(), (0, 0), "drain resets the counters");
+    }
+
+    #[test]
+    fn chaos_shard_events_recover_within_budget() {
+        let spec = sim_spec("femnist_cnn");
+        let params = spec.init_params(7);
+        let full = MaskSet::full(&spec);
+        let clients = sim_cohort(9);
+        let r = round(&clients, &full, 1);
+        let plain = SimExecutor::new(spec.clone(), 2)
+            .run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        let cfg = ChaosConfig {
+            name: "crash".into(),
+            vanish: 0.0,
+            hang: 0.0,
+            corrupt: 0.0,
+            nan_poison: 0.0,
+            shard_crash: 1.0,
+            shard_stall: 0.0,
+            deadline_mult: 1.5,
+        };
+        // a chaos Crash kills the worker *and* its restart: budget 2 recovers
+        let ex = ShardedExecutor::new(SimExecutor::new(spec.clone(), 2), 4)
+            .with_chaos(Some(ChaosPlan::new(cfg.clone(), 77)))
+            .with_retry_budget(2);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        assert_same_results(&plain, &got);
+        assert_eq!(ex.drain_fault_retries(), (2, 150));
+        // budget 1 exhausts: only the victim shard's slice fails, typed
+        let ex = ShardedExecutor::new(SimExecutor::new(spec.clone(), 2), 4)
+            .with_chaos(Some(ChaosPlan::new(cfg.clone(), 77)))
+            .with_retry_budget(1);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        let ev = ChaosPlan::new(cfg.clone(), 77).shard_event(1).expect("rate 1.0 always fires");
+        let victim = (ev.slot % 4) as usize;
+        let (lo, hi) = slice_bounds(9, 4, victim);
+        for (i, slot) in got.iter().enumerate() {
+            if (lo..hi).contains(&i) {
+                let err = slot.as_ref().err().expect("victim slice must fail");
+                assert!(err.downcast_ref::<ShardFault>().is_some(), "typed ShardFault");
+            } else {
+                assert!(slot.is_ok(), "slot {i} outside the victim shard must survive");
+            }
+        }
+        // a StallOnce recovers on the first retry
+        let stall = ChaosConfig { shard_crash: 0.0, shard_stall: 1.0, ..cfg };
+        let ex = ShardedExecutor::new(SimExecutor::new(spec, 2), 4)
+            .with_chaos(Some(ChaosPlan::new(stall, 77)))
+            .with_retry_budget(1);
+        let got = ex.run_clients(&r.cohort, &r.masks, &params, &r.jobs);
+        assert_same_results(&plain, &got);
+        assert_eq!(ex.drain_fault_retries(), (1, 50));
     }
 
     #[test]

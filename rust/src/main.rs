@@ -10,7 +10,7 @@
 
 use fluid::coordinator::{self, report, ExperimentConfig};
 use fluid::dropout::PolicyKind;
-use fluid::engine::{ScenarioConfig, SyncMode};
+use fluid::engine::{ChaosConfig, ScenarioConfig, SyncMode};
 use fluid::fl::{Compression, SamplerKind};
 use fluid::runtime::Session;
 use fluid::straggler::{mobile_fleet, AdaptMode};
@@ -73,6 +73,9 @@ fn train_args(program: &str) -> Args {
         .opt("crash-after", "", "fault injection: exit(137) once N rounds completed (soak)")
         .opt("shards", "1", "aggregator shards (bit-identical at every value)")
         .opt("shard-crash-after", "", "fault injection: kill shard S at round R (format S:R)")
+        .opt("shard-retry-max", "0", "bounded shard-slice retry budget (0 = legacy --shard-retry)")
+        .opt("chaos", "none", "seeded faults: none|vanish|hang|corrupt|nan|shards|storm[:rate]")
+        .opt("quorum", "0", "min fraction of fresh on-time updates per round (0 = off)")
         .opt("compress", "dense", "update codec: dense|sparse|q8 (dense = bit-exact reference)")
         .opt("out", "", "write result JSON to this path")
         .opt("artifacts", "", "artifacts dir (default: ./artifacts or $FLUID_ARTIFACTS)")
@@ -192,6 +195,15 @@ fn build_config(a: &Args) -> ExperimentConfig {
         }
     }
     cfg.shard_retry = a.get_flag("shard-retry");
+    cfg.shard_retry_max = a.get_usize("shard-retry-max");
+    cfg.chaos = match ChaosConfig::parse(&a.get("chaos")) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    cfg.quorum = a.get_f64("quorum");
     cfg.compress = Compression::parse(&a.get("compress")).unwrap_or_else(|| {
         eprintln!("unknown compress mode {:?} (dense|sparse|q8)", a.get("compress"));
         std::process::exit(2);
@@ -277,6 +289,14 @@ fn cmd_train(argv: &[String]) -> i32 {
             // mid-round and its slice is unrecoverable — same exit
             // convention as a whole-process kill
             if let Some(f) = e.downcast_ref::<fluid::engine::ShardFault>() {
+                eprintln!("fluid: {f} — exiting 137");
+                return 137;
+            }
+            // --quorum under chaos: too few fresh updates survived the
+            // barrier — the round aborted before any state mutated, so
+            // the last checkpoint is a clean resume point; same exit
+            // convention as the other injected faults
+            if let Some(f) = e.downcast_ref::<fluid::engine::QuorumFailed>() {
                 eprintln!("fluid: {f} — exiting 137");
                 return 137;
             }

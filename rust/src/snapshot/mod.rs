@@ -40,6 +40,7 @@ pub mod codec;
 pub use codec::{fnv1a, Reader, Writer};
 
 use crate::coordinator::{ExperimentConfig, RoundRecord};
+use crate::engine::QuarEntry;
 use crate::straggler::{CtrlState, Detection};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Context, Result};
@@ -70,6 +71,10 @@ mod section {
     /// optional — absent means no client has encoded under q8 yet, so
     /// dense/sparse runs and pre-codec snapshots carry no RESID section
     pub const RESID: u32 = 9;
+    /// quarantine ledger (added with `engine/chaos.rs`); optional —
+    /// absent means no client is quarantined (every zero-chaos run and
+    /// every pre-chaos snapshot), so readers rebuild an empty ledger
+    pub const QUAR: u32 = 10;
 }
 
 /// Evolving dropout-policy state. `Stateless` covers the policies whose
@@ -132,6 +137,10 @@ pub struct Snapshot {
     /// client that has encoded under q8, sorted by client id — carried so
     /// a compressed run resumes bit-identically (empty outside q8 mode)
     pub resid: Vec<(u64, Vec<Vec<f32>>)>,
+    /// quarantine ledger entries, sorted by client id — carried so a
+    /// chaos run's bar list survives kill/resume (empty when no client
+    /// is quarantined, which is every zero-chaos run)
+    pub quarantine: Vec<QuarEntry>,
     /// per-round history so a resumed run reports the full trajectory
     pub records: Vec<RoundRecord>,
 }
@@ -141,7 +150,12 @@ pub struct Snapshot {
 /// Floats enter as exact bit patterns. Deliberately excluded: `threads`
 /// (thread-count invariance is a pinned determinism contract) and the
 /// checkpoint/resume/fault-injection knobs themselves (a resumed run
-/// necessarily differs in those).
+/// necessarily differs in those). The chaos script *is* semantic — it
+/// shapes the trajectory (which clients vanish, which updates are
+/// poisoned) — while `quorum` (an abort floor: rounds that pass are
+/// bit-identical at any value, so a failed run may resume under a
+/// relaxed floor) and `shard_retry_max` (pure recovery topology) stay
+/// out, like `shards` itself.
 pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
     fn bits64(xs: &[f64]) -> Vec<u64> {
         xs.iter().map(|x| x.to_bits()).collect()
@@ -151,7 +165,8 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
          |sfrac={:016x}|fixed={:?}|menu={:?}|clusters={:?}|recal={}|fluct={}\
          |static={}|sample={:016x}|eval={}|agg={:?}|fused={}|th={:?}|mobile={}\
          |sync={:?}|fleet={:?}|k={}|sampler={}|scenario={:?}|seed={}\
-         |adapt={}|again={:016x}|adb={:016x}|rmin={:016x}|compress={}",
+         |adapt={}|again={:016x}|adb={:016x}|rmin={:016x}|compress={}\
+         |chaos={:?}",
         cfg.model,
         cfg.policy.name(),
         cfg.rounds,
@@ -183,6 +198,7 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
         cfg.adapt_deadband.to_bits(),
         cfg.rate_min.to_bits(),
         cfg.compress.name(),
+        cfg.chaos,
     )
 }
 
@@ -244,6 +260,10 @@ fn put_record(w: &mut Writer, rec: &RoundRecord) {
     w.put_usize(rec.dropped_updates);
     w.put_usize(rec.stale_folded);
     w.put_usize(rec.update_bytes);
+    w.put_usize(rec.vanished);
+    w.put_usize(rec.quarantined);
+    w.put_usize(rec.shard_retries);
+    w.put_f64(rec.quorum_fraction);
 }
 
 fn take_record(r: &mut Reader) -> Result<RoundRecord> {
@@ -266,6 +286,10 @@ fn take_record(r: &mut Reader) -> Result<RoundRecord> {
         dropped_updates: r.take_usize()?,
         stale_folded: r.take_usize()?,
         update_bytes: r.take_usize()?,
+        vanished: r.take_usize()?,
+        quarantined: r.take_usize()?,
+        shard_retries: r.take_usize()?,
+        quorum_fraction: r.take_f64()?,
     })
 }
 
@@ -381,12 +405,22 @@ impl Snapshot {
         }
     }
 
+    fn enc_quar(&self, w: &mut Writer) {
+        w.put_usize(self.quarantine.len());
+        for e in &self.quarantine {
+            w.put_usize(e.client);
+            w.put_u32(e.strikes);
+            w.put_usize(e.barred_until);
+            w.put_usize(e.last_strike);
+        }
+    }
+
     /// Encode every section into `w` in container order, returning the
     /// `(id, offset, len)` table (offsets relative to where `w` started).
     /// Shared by both encode paths so section order can never drift.
     fn write_sections(&self, w: &mut Writer) -> Vec<(u32, usize, usize)> {
         type Enc = fn(&Snapshot, &mut Writer);
-        let sections: [(u32, Enc); 9] = [
+        let sections: [(u32, Enc); 10] = [
             (section::META, Snapshot::enc_meta),
             (section::ENGINE, Snapshot::enc_engine),
             (section::MODEL, Snapshot::enc_model),
@@ -396,6 +430,7 @@ impl Snapshot {
             (section::HISTORY, Snapshot::enc_history),
             (section::CTRL, Snapshot::enc_ctrl),
             (section::RESID, Snapshot::enc_resid),
+            (section::QUAR, Snapshot::enc_quar),
         ];
         let base = w.len();
         let mut table = Vec::with_capacity(sections.len());
@@ -645,6 +680,28 @@ impl Snapshot {
             Vec::new()
         };
 
+        // QUAR — optional: absent means an empty quarantine ledger
+        // (zero-chaos runs and every pre-chaos snapshot)
+        let quarantine = if table.iter().any(|(id, _, _)| *id == section::QUAR) {
+            let mut r = Reader::new(get(section::QUAR)?);
+            let n = r.take_usize().context("QUAR section")?;
+            ensure!(n <= 1 << 24, "quarantine entry count {n} implausible");
+            let mut quarantine = Vec::with_capacity(n);
+            for i in 0..n {
+                quarantine.push(QuarEntry {
+                    client: r
+                        .take_usize()
+                        .with_context(|| format!("quarantine entry {i}"))?,
+                    strikes: r.take_u32()?,
+                    barred_until: r.take_usize()?,
+                    last_strike: r.take_usize()?,
+                });
+            }
+            quarantine
+        } else {
+            Vec::new()
+        };
+
         Ok(Snapshot {
             fingerprint,
             next_round,
@@ -661,6 +718,7 @@ impl Snapshot {
             free_at,
             stale,
             resid,
+            quarantine,
             records,
         })
     }
@@ -881,6 +939,10 @@ mod tests {
                 (3, vec![vec![0.25, -0.5, 0.0, 1.0, -0.0, 2.5], vec![0.125, -0.125]]),
                 (11, vec![vec![0.0; 6], vec![7.75, f32::MIN_POSITIVE]]),
             ],
+            quarantine: vec![
+                QuarEntry { client: 2, strikes: 3, barred_until: 14, last_strike: 6 },
+                QuarEntry { client: 8, strikes: 1, barred_until: 7, last_strike: 5 },
+            ],
             records: vec![RoundRecord {
                 round: 0,
                 round_time: 3.0,
@@ -900,6 +962,10 @@ mod tests {
                 dropped_updates: 0,
                 stale_folded: 1,
                 update_bytes: 48_216,
+                vanished: 2,
+                quarantined: 1,
+                shard_retries: 1,
+                quorum_fraction: 0.625,
             }],
         }
     }
@@ -926,6 +992,7 @@ mod tests {
                 (section::HISTORY, mk(Snapshot::enc_history)),
                 (section::CTRL, mk(Snapshot::enc_ctrl)),
                 (section::RESID, mk(Snapshot::enc_resid)),
+                (section::QUAR, mk(Snapshot::enc_quar)),
             ])
         };
         assert_eq!(snap.encode(), reference);
@@ -951,9 +1018,12 @@ mod tests {
         assert_eq!(back.next_round, 7);
         assert_eq!(back.records.len(), 1);
         assert!(back.records[0].test_loss.is_nan());
+        assert_eq!(back.records[0].vanished, 2);
+        assert_eq!(back.records[0].quorum_fraction, 0.625);
         assert_eq!(back.params[0].shape(), &[2, 3]);
         assert_eq!(back.availability, snap.availability);
         assert_eq!(back.detection, snap.detection);
+        assert_eq!(back.quarantine, snap.quarantine);
     }
 
     #[test]
@@ -1000,6 +1070,7 @@ mod tests {
             (section::HISTORY, enc(&snap, Snapshot::enc_history)),
             (section::CTRL, enc(&snap, Snapshot::enc_ctrl)),
             (section::RESID, enc(&snap, Snapshot::enc_resid)),
+            (section::QUAR, enc(&snap, Snapshot::enc_quar)),
         ]);
         let back = Snapshot::decode(&out).unwrap();
         assert_eq!(back.next_round, snap.next_round);
@@ -1026,6 +1097,9 @@ mod tests {
         // the RESID section is likewise optional: absent means no q8
         // residual state, not an error
         assert!(back.resid.is_empty());
+        // and so is QUAR: absent means an empty quarantine ledger, so
+        // pre-chaos snapshots stay resumable
+        assert!(back.quarantine.is_empty());
         assert_eq!(back.next_round, snap.next_round);
         assert_eq!(back.detection, snap.detection);
         // and a present-but-empty CTRL section is the same as none
@@ -1093,6 +1167,13 @@ mod tests {
         b.shards = 4;
         b.shard_crash_after = Some((1, 2));
         b.shard_retry = true;
+        // the retry budget is recovery topology, not trajectory: a run
+        // checkpointed under --shard-retry-max 1 resumes under 3
+        b.shard_retry_max = 3;
+        // the quorum floor only aborts — rounds that pass it are
+        // bit-identical at any value, so a QuorumFailed run can resume
+        // from its last checkpoint under a relaxed floor
+        b.quorum = 0.5;
         assert_eq!(
             config_fingerprint(&a),
             config_fingerprint(&b),
@@ -1112,5 +1193,9 @@ mod tests {
         let mut f = a.clone();
         f.adapt_gain = 0.75;
         assert_ne!(config_fingerprint(&a), config_fingerprint(&f));
+        // the chaos script shapes the trajectory: semantic
+        let mut g = a.clone();
+        g.chaos = crate::engine::ChaosConfig::parse("storm").unwrap();
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&g));
     }
 }

@@ -344,3 +344,70 @@ fn packed_payload_codec_allocates_packed_not_dense_bytes() {
          (budget {shell_budget}, dense data {dense_bytes})"
     );
 }
+
+#[test]
+fn chaos_clean_path_is_allocation_free() {
+    // DESIGN.md §13: the chaos plane's always-on pieces — validating a
+    // clean update against the broadcast model, the per-participant
+    // quarantine bar lookup, and the per-round ledger decay — sit on
+    // every round's hot path whether or not chaos is configured, so
+    // none of them may allocate. (Recording a strike is the fault path
+    // and may grow the ledger; it is not gated.)
+    use fluid::engine::{QuarantineLedger, UpdateValidator};
+    use fluid::fl::LocalResult;
+
+    let spec = sim_spec("femnist_cnn");
+    let broadcast = spec.init_params(2);
+    let result = LocalResult {
+        params: spec.init_params(9),
+        mean_loss: 0.25,
+        mean_acc: 0.5,
+        steps: 4,
+        weight: 6.0,
+    };
+    let validator = UpdateValidator::default();
+    assert!(
+        validator.validate(&result, &broadcast).is_ok(),
+        "gate input must be a clean update"
+    );
+    let bytes = min_allocated(5, || {
+        allocated_during(|| validator.validate(&result, &broadcast).unwrap()).0
+    });
+    assert_eq!(bytes, 0, "clean-path validate allocated {bytes} bytes");
+
+    // a populated ledger: bar lookups and decay sweeps are in-place
+    let mut ledger = QuarantineLedger::default();
+    for c in 0..64usize {
+        ledger.record(c * 3, c);
+        ledger.record(c * 3, c + 1); // second strike, extends the bar
+    }
+    let probe = min_allocated(5, || {
+        allocated_during(|| {
+            let mut barred = 0usize;
+            for c in 0..256usize {
+                if ledger.is_barred(c, 100) {
+                    barred += 1;
+                }
+            }
+            barred
+        })
+        .0
+    });
+    assert_eq!(probe, 0, "quarantine bar lookups allocated {probe} bytes");
+
+    let decay = min_allocated(5, || {
+        let (bytes, _) = allocated_during(|| {
+            // sweeps that forgive strikes and drop entries still mutate
+            // the entry vector in place
+            for r in 0..200usize {
+                ledger.decay(r);
+            }
+        });
+        // re-arm for the next rep so every window does real work
+        for c in 0..64usize {
+            ledger.record(c * 3, c);
+        }
+        bytes
+    });
+    assert_eq!(decay, 0, "ledger decay allocated {decay} bytes");
+}

@@ -1,0 +1,327 @@
+//! Determinism & recovery suite for the chaos plane (DESIGN.md §13).
+//!
+//! Everything runs through `coordinator::run_sim` with
+//! `ExperimentConfig::chaos` set, so the full stack is exercised: the
+//! root-side fault draws, the deadline drop of vanished/hung clients,
+//! the always-on validator + quarantine ledger, the `--quorum` floor,
+//! and the sharded tree's bounded retry budget.
+//!
+//! Pinned invariants:
+//! * a seeded chaos storm fleet is bit-identical — telemetry included —
+//!   across `--threads` ∈ {1, 4} × `--shards` ∈ {1, 4}: faults are pure
+//!   data drawn per `(round, client)`, never a function of topology;
+//! * a zero-rate chaos script is inert: bit-identical to `--chaos none`;
+//! * checkpoint-under-chaos resumes bit-for-bit, including the
+//!   QuarantineLedger section — a resumed run re-bars exactly the
+//!   clients the killed run had quarantined;
+//! * a quorum failure surfaces as a typed [`QuorumFailed`] (never a
+//!   panic, never a silent half-round), and the checkpoint it stopped
+//!   at resumes cleanly under a relaxed floor;
+//! * an exhausted shard-retry budget surfaces as a typed [`ShardFault`];
+//!   one more unit of budget completes the same run.
+//!
+//! Wall-clock fields are host measurements and excluded, exactly as in
+//! `tests/determinism.rs`.
+
+use fluid::coordinator::{self, ExperimentConfig, ExperimentResult};
+use fluid::dropout::PolicyKind;
+use fluid::engine::{ChaosConfig, QuorumFailed, ScenarioConfig, ShardFault};
+use fluid::snapshot::Snapshot;
+
+/// NaN-aware bitwise equality.
+fn eq_f64(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+/// Bitwise comparison of everything the algorithm (not the host clock)
+/// produced — the `tests/sharded_determinism.rs` contract plus the
+/// chaos telemetry: vanished/quarantined counts, shard retries and the
+/// quorum fraction must also be invariant across topology and resume.
+fn assert_bit_identical(a: &ExperimentResult, b: &ExperimentResult, ctx: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        let rctx = format!("{ctx}: round {}", x.round);
+        assert_eq!(x.round, y.round, "{rctx}");
+        assert_eq!(x.cohort, y.cohort, "{rctx}: cohort");
+        assert_eq!(x.straggler_ids, y.straggler_ids, "{rctx}: stragglers");
+        assert_eq!(x.straggler_rates, y.straggler_rates, "{rctx}: rates");
+        assert!(eq_f64(x.round_time, y.round_time), "{rctx}: round_time");
+        assert!(eq_f64(x.vtime, y.vtime), "{rctx}: vtime");
+        assert!(eq_f64(x.t_target, y.t_target), "{rctx}: t_target");
+        assert!(
+            eq_f64(x.straggler_time, y.straggler_time),
+            "{rctx}: straggler_time"
+        );
+        assert!(eq_f64(x.train_loss, y.train_loss), "{rctx}: train_loss");
+        assert!(eq_f64(x.train_acc, y.train_acc), "{rctx}: train_acc");
+        assert!(eq_f64(x.test_loss, y.test_loss), "{rctx}: test_loss");
+        assert!(eq_f64(x.test_acc, y.test_acc), "{rctx}: test_acc");
+        assert!(
+            eq_f64(x.invariant_fraction, y.invariant_fraction),
+            "{rctx}: invariant_fraction"
+        );
+        assert_eq!(x.aggregated, y.aggregated, "{rctx}: aggregated");
+        assert_eq!(x.dropped_updates, y.dropped_updates, "{rctx}: dropped");
+        assert_eq!(x.stale_folded, y.stale_folded, "{rctx}: stale");
+        assert_eq!(x.update_bytes, y.update_bytes, "{rctx}: update_bytes");
+        assert_eq!(x.vanished, y.vanished, "{rctx}: vanished");
+        assert_eq!(x.quarantined, y.quarantined, "{rctx}: quarantined");
+        assert_eq!(x.shard_retries, y.shard_retries, "{rctx}: shard_retries");
+        assert!(
+            eq_f64(x.quorum_fraction, y.quorum_fraction),
+            "{rctx}: quorum_fraction"
+        );
+    }
+    assert!(eq_f64(a.final_test_acc, b.final_test_acc), "{ctx}");
+    assert!(eq_f64(a.final_test_loss, b.final_test_loss), "{ctx}");
+    assert!(eq_f64(a.total_vtime, b.total_vtime), "{ctx}");
+    assert_eq!(a.seed, b.seed, "{ctx}");
+}
+
+/// The 2k storm fleet the sharded suite uses, with a chaos script bound.
+fn chaos_cfg(spec: &str, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 2000, 64);
+    cfg.rounds = 6;
+    cfg.samples_per_client = 4;
+    cfg.local_steps = 1;
+    cfg.eval_every = 3;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    cfg.seed = seed;
+    cfg.chaos = ChaosConfig::parse(spec).unwrap();
+    cfg
+}
+
+/// Unique scratch directory for snapshot files; removed (best-effort) by
+/// the tests that use it.
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fluid-chaos-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn snap_path(dir: &std::path::Path, round: usize) -> std::path::PathBuf {
+    dir.join(format!("snap-{round:06}.fluidsnap"))
+}
+
+/// The headline pin: a full chaos storm (client vanish/hang/corrupt/NaN
+/// plus shard crash/stall under a retry budget) replays bit-identically
+/// — including every fault-telemetry field — at every `--shards` ∈
+/// {1, 4} × `--threads` ∈ {1, 4}. Fault draws are pure data keyed by
+/// `(round, client)` and shard events live in virtual slot space, so
+/// topology can never be observable.
+#[test]
+fn chaos_storm_is_bit_identical_across_threads_and_shards() {
+    let mut results = Vec::new();
+    for shards in [1usize, 4] {
+        for threads in [1usize, 4] {
+            let mut cfg = chaos_cfg("storm", 20_260_729);
+            cfg.shards = shards;
+            cfg.threads = threads;
+            cfg.shard_retry_max = 3; // crash events need 2 fires to recover
+            cfg.quorum = 0.25; // exercised every round, never breached by storm rates
+            results.push((shards, threads, coordinator::run_sim(&cfg).unwrap()));
+        }
+    }
+    let (_, _, base) = &results[0];
+    assert_eq!(base.records.len(), 6);
+    // the storm actually happened: some client faults fired somewhere
+    let faults: usize = base
+        .records
+        .iter()
+        .map(|r| r.vanished + r.quarantined)
+        .sum();
+    assert!(faults > 0, "storm chaos drew no client faults at this seed");
+    for (shards, threads, r) in &results[1..] {
+        assert_bit_identical(base, r, &format!("shards={shards} threads={threads}"));
+    }
+}
+
+/// A chaos script with every rate at zero is inert: the run is
+/// bit-identical to `--chaos none` — on the plain executor and through
+/// the sharded tree — because a zero-rate plan draws nothing and the
+/// engine consumes no chaos randomness.
+#[test]
+fn zero_rate_chaos_is_inert() {
+    for shards in [1usize, 2] {
+        let mut plain = chaos_cfg("storm", 808);
+        plain.chaos = None;
+        plain.shards = shards;
+        let control = coordinator::run_sim(&plain).unwrap();
+        let mut zeroed = chaos_cfg("vanish:0.0", 808);
+        zeroed.shards = shards;
+        let run = coordinator::run_sim(&zeroed).unwrap();
+        assert_bit_identical(&control, &run, &format!("zero-rate chaos, shards={shards}"));
+        for r in &run.records {
+            assert_eq!(r.vanished, 0);
+            assert_eq!(r.quarantined, 0);
+            assert_eq!(r.shard_retries, 0);
+        }
+    }
+}
+
+/// Checkpoint-under-chaos resumes bit-for-bit, and the QUAR section is
+/// load-bearing: an aggressive corrupt script builds a non-empty
+/// quarantine ledger whose bars shape later cohorts, so the resumed run
+/// could only match the control if the ledger survived the snapshot.
+#[test]
+fn checkpoint_under_chaos_resumes_bit_for_bit_with_quarantine_ledger() {
+    let control = coordinator::run_sim(&chaos_cfg("corrupt:0.2", 4411)).unwrap();
+    let quarantined: usize = control.records.iter().map(|r| r.quarantined).sum();
+    assert!(quarantined > 0, "corrupt:0.2 drew no quarantines at this seed");
+
+    let dir = ckpt_dir("quar");
+    let mut cfg = chaos_cfg("corrupt:0.2", 4411);
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep = cfg.rounds;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let ckpt = coordinator::run_sim(&cfg).unwrap();
+    assert_bit_identical(&control, &ckpt, "uninterrupted checkpointing run");
+
+    // the mid-run snapshot carries the ledger
+    let bytes = std::fs::read(snap_path(&dir, 4)).expect("snapshot at round 4");
+    let snap = Snapshot::decode(&bytes).expect("snapshot decodes");
+    assert!(
+        !snap.quarantine.is_empty(),
+        "0.2 corrupt over 4 rounds must quarantine someone"
+    );
+
+    // resume from both boundaries, including under a different thread
+    // count — bars, strikes and decay anchors replay exactly
+    for (at, threads) in [(2usize, 1usize), (4, 1), (4, 2)] {
+        let mut rcfg = chaos_cfg("corrupt:0.2", 4411);
+        rcfg.threads = threads;
+        rcfg.resume_from = Some(snap_path(&dir, at));
+        let resumed = coordinator::run_sim(&rcfg).unwrap();
+        assert_bit_identical(
+            &control,
+            &resumed,
+            &format!("resume@{at} threads={threads}"),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The storm variant through the sharded tree: checkpoint under 4
+/// shards with live shard-crash chaos, resume under 1 shard (and the
+/// reverse) — the N→M rule holds under chaos because shard events are
+/// drawn in slot space and recovery is bit-exact re-dispatch.
+#[test]
+fn storm_checkpoint_resumes_across_shard_counts() {
+    let mut base = chaos_cfg("storm", 9177);
+    base.shard_retry_max = 3;
+    let control = coordinator::run_sim(&base).unwrap();
+
+    let dir = ckpt_dir("storm");
+    let mut cfg = base.clone();
+    cfg.shards = 4;
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_keep = cfg.rounds;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let four = coordinator::run_sim(&cfg).unwrap();
+    assert_bit_identical(&control, &four, "uninterrupted 4-shard storm");
+
+    for resume_shards in [1usize, 4] {
+        let mut rcfg = base.clone();
+        rcfg.shards = resume_shards;
+        rcfg.resume_from = Some(snap_path(&dir, 4));
+        let resumed = coordinator::run_sim(&rcfg).unwrap();
+        assert_bit_identical(
+            &control,
+            &resumed,
+            &format!("storm resume@4 under {resume_shards} shards"),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A quorum breach is a typed [`QuorumFailed`] — never a panic, never a
+/// silent half-round — raised before aggregation mutates state, so the
+/// checkpoint it stopped at resumes cleanly under a relaxed floor and
+/// completes bit-identically to an uninterrupted control.
+#[test]
+fn quorum_failure_is_typed_and_the_checkpoint_recovers() {
+    // storm rates leave ~90% of a round fresh: a 0.3 floor always
+    // passes, so the checkpointing run completes
+    let mut cfg = chaos_cfg("storm", 5521);
+    cfg.shard_retry_max = 3;
+    cfg.quorum = 0.3;
+    let dir = ckpt_dir("quorum");
+    let mut ckpt = cfg.clone();
+    ckpt.checkpoint_every = 2;
+    ckpt.checkpoint_keep = ckpt.rounds;
+    ckpt.checkpoint_dir = Some(dir.clone());
+    let control = coordinator::run_sim(&ckpt).unwrap();
+
+    // resume under a floor no storm round can meet: typed failure. The
+    // quorum floor is an abort knob, not trajectory state, so the
+    // fingerprint accepts the resume.
+    let mut strict = cfg.clone();
+    strict.quorum = 0.995;
+    strict.resume_from = Some(snap_path(&dir, 2));
+    let err = coordinator::run_sim(&strict).unwrap_err();
+    let qf = err
+        .downcast_ref::<QuorumFailed>()
+        .unwrap_or_else(|| panic!("expected QuorumFailed, got: {err:#}"));
+    assert!(qf.round >= 2, "resumed at round 2, failed at {}", qf.round);
+    assert!(qf.arrived < qf.expected);
+    assert!(eq_f64(qf.quorum, 0.995));
+    assert!(format!("{qf}").contains("quorum failed at round"));
+
+    // the checkpoint the failure stopped at is intact: relax the floor
+    // and the same snapshot completes bit-identically to the control
+    let mut relaxed = cfg.clone();
+    relaxed.resume_from = Some(snap_path(&dir, 2));
+    let resumed = coordinator::run_sim(&relaxed).unwrap();
+    assert_bit_identical(&control, &resumed, "resume under relaxed quorum");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An exhausted shard-retry budget surfaces as a typed [`ShardFault`]
+/// with the faulting round attached; granting one more unit of budget
+/// turns the same run into a clean completion. (A chaos `Crash` kills
+/// the worker *and* its restart — two fires — so budget 1 exhausts.)
+#[test]
+fn exhausted_shard_retry_budget_is_a_typed_fault() {
+    // crash-every-round: the headline "shards:<rate>" knob caps at
+    // crash + stall <= 1, so pin the script directly
+    let mut script = ChaosConfig::parse("shards").unwrap().unwrap();
+    script.shard_crash = 1.0;
+    script.shard_stall = 0.0;
+    let mut cfg = chaos_cfg("none", 313);
+    cfg.chaos = Some(script);
+    cfg.rounds = 3;
+    cfg.shards = 2;
+    cfg.shard_retry_max = 1;
+    let err = coordinator::run_sim(&cfg).unwrap_err();
+    let fault = err
+        .downcast_ref::<ShardFault>()
+        .unwrap_or_else(|| panic!("expected ShardFault, got: {err:#}"));
+    assert_eq!(fault.round, 0, "crash-every-round chaos fails immediately");
+
+    cfg.shard_retry_max = 2;
+    let run = coordinator::run_sim(&cfg).unwrap();
+    assert_eq!(run.records.len(), 3);
+    for r in &run.records {
+        assert_eq!(r.shard_retries, 2, "round {}: crash costs two re-dispatches", r.round);
+    }
+}
+
+/// Vanish telemetry: a heavy vanish script reports dropped participants
+/// in every run's totals, those clients contribute no updates
+/// (`aggregated` shrinks accordingly), and the run still completes —
+/// graceful degradation, not an error.
+#[test]
+fn vanish_storms_degrade_gracefully() {
+    let cfg = chaos_cfg("vanish:0.3", 2718);
+    let run = coordinator::run_sim(&cfg).unwrap();
+    let vanished: usize = run.records.iter().map(|r| r.vanished).sum();
+    assert!(vanished > 0, "vanish:0.3 drew nothing at this seed");
+    for r in &run.records {
+        assert!(
+            r.quorum_fraction >= 0.0 && r.quorum_fraction <= 1.0,
+            "round {}: quorum fraction {} out of range",
+            r.round,
+            r.quorum_fraction
+        );
+    }
+}

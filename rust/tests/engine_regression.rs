@@ -267,6 +267,13 @@ fn reference_run(sess: &Session, cfg: &ExperimentConfig) -> fluid::Result<Experi
             aggregated: updates.len(),
             dropped_updates: 0,
             stale_folded: 0,
+            // wire accounting and the chaos plane postdate this
+            // reference loop; neither is part of the bit-identity pin
+            update_bytes: 0,
+            vanished: 0,
+            quarantined: 0,
+            shard_retries: 0,
+            quorum_fraction: 1.0,
         });
     }
 

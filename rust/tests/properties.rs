@@ -1040,6 +1040,10 @@ fn prop_snapshot_codec_round_trips() {
             dropped_updates: g.usize_in(0, 8),
             stale_folded: g.usize_in(0, 8),
             update_bytes: g.usize_in(0, 1 << 24),
+            vanished: g.usize_in(0, 8),
+            quarantined: g.usize_in(0, 8),
+            shard_retries: g.usize_in(0, 4),
+            quorum_fraction: g.rng.next_f64(),
         }
     }
 
@@ -1131,6 +1135,14 @@ fn prop_snapshot_codec_round_trips() {
                                 })
                                 .collect(),
                         )
+                    })
+                    .collect(),
+                quarantine: (0..g.usize_in(0, 3))
+                    .map(|c| fluid::engine::QuarEntry {
+                        client: c * 3 + g.usize_in(0, 2),
+                        strikes: 1 + g.rng.next_u32() % 6,
+                        barred_until: g.usize_in(0, 200),
+                        last_strike: g.usize_in(0, 100),
                     })
                     .collect(),
                 records: (0..rounds).map(|r| random_record(g, r)).collect(),
@@ -1837,4 +1849,233 @@ fn q8_error_feedback_telescopes_to_the_exact_dense_sum() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// chaos plane: validator and quarantine laws (DESIGN.md §13)
+// ---------------------------------------------------------------------
+
+/// Validator law: admission is *exactly* the spec — a finite update
+/// whose relative-L2 ratio sits within the bound is never quarantined,
+/// one beyond the bound always is, and a single non-finite value or a
+/// dropped tensor flips the verdict regardless of norms. False
+/// quarantines would silently starve honest clients, so the clean
+/// direction is the load-bearing half.
+#[test]
+fn prop_validator_admits_exactly_the_in_bound_finite_updates() {
+    use fluid::engine::chaos::Violation;
+    use fluid::engine::UpdateValidator;
+    use fluid::fl::LocalResult;
+    check(
+        Config { cases: 80, ..Default::default() },
+        |g: &mut Gen| {
+            let ntensors = g.usize_in(1, 4);
+            let shapes: Vec<Vec<usize>> = (0..ntensors)
+                .map(|_| (0..g.usize_in(1, 2)).map(|_| g.usize_in(1, 12)).collect())
+                .collect();
+            let seed = g.rng.next_u64();
+            // straddles typical relative-L2 ratios of the cases below,
+            // so both verdicts are exercised
+            let bound = g.f32_in(0.0, 2.0) as f64;
+            (shapes, seed, bound)
+        },
+        |_| vec![],
+        |(shapes, seed, bound)| {
+            let mut rng = fluid::util::prng::Pcg32::new(*seed, 43);
+            let broadcast: Vec<Tensor> = shapes
+                .iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    Tensor::from_vec(s, (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect())
+                })
+                .collect();
+            let params: Vec<Tensor> = broadcast
+                .iter()
+                .map(|t| {
+                    let data: Vec<f32> =
+                        t.data().iter().map(|v| v + rng.uniform(-1.0, 1.0)).collect();
+                    Tensor::from_vec(t.shape(), data)
+                })
+                .collect();
+            // the spec'd ratio, replicated with the validator's exact
+            // accumulation order so the comparison is bit-honest
+            let (mut diff2, mut base2) = (0.0f64, 0.0f64);
+            for (u, b) in params.iter().zip(&broadcast) {
+                for (&x, &y) in u.data().iter().zip(b.data()) {
+                    let d = (x - y) as f64;
+                    diff2 += d * d;
+                    base2 += (y as f64) * (y as f64);
+                }
+            }
+            let ratio = diff2.sqrt() / (1.0 + base2.sqrt());
+            let result = LocalResult {
+                params,
+                mean_loss: rng.next_f64(),
+                mean_acc: rng.next_f64(),
+                steps: 2,
+                weight: 1.0,
+            };
+            let v = UpdateValidator::new(*bound);
+            match v.validate(&result, &broadcast) {
+                Ok(()) if ratio > *bound => {
+                    return Err(format!("ratio {ratio} > bound {bound} admitted"))
+                }
+                Err(Violation::NormBound { ratio: r }) => {
+                    if ratio <= *bound {
+                        return Err(format!("ratio {ratio} <= bound {bound} quarantined"));
+                    }
+                    if r.to_bits() != ratio.to_bits() {
+                        return Err(format!("reported ratio {r} != spec'd {ratio}"));
+                    }
+                }
+                Ok(()) => {}
+                Err(other) => return Err(format!("finite update refused as {other:?}")),
+            }
+            // one poisoned value is always NonFinite, whatever the bound
+            let mut poisoned = result.clone();
+            let pi = (rng.next_u32() as usize) % poisoned.params.len();
+            let e = (rng.next_u32() as usize) % poisoned.params[pi].len();
+            poisoned.params[pi].data_mut()[e] = f32::NAN;
+            if !matches!(
+                UpdateValidator::default().validate(&poisoned, &broadcast),
+                Err(Violation::NonFinite)
+            ) {
+                return Err("NaN-poisoned update not refused as NonFinite".into());
+            }
+            // a dropped tensor is always Shape
+            let mut clipped = result;
+            clipped.params.pop();
+            if !matches!(
+                UpdateValidator::default().validate(&clipped, &broadcast),
+                Err(Violation::Shape)
+            ) {
+                return Err("short tensor list not refused as Shape".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Quarantine law: strikes escalate the bar exponentially (capped), a
+/// barred client stays barred for exactly the advertised window, and
+/// decay forgives — any strike sequence ends with the ledger empty
+/// after enough clean rounds. Re-admission is the half that matters:
+/// a ledger that never forgives turns one bad radio day into permanent
+/// exclusion.
+#[test]
+fn prop_quarantine_bars_escalate_and_decay_to_empty() {
+    use fluid::engine::chaos::{QUAR_BAR_BASE, QUAR_DECAY_EVERY};
+    use fluid::engine::QuarantineLedger;
+    check(
+        Config { cases: 80, ..Default::default() },
+        |g: &mut Gen| {
+            // distinct, increasing client ids so each batch owns its
+            // strike count
+            let k = g.usize_in(1, 5);
+            let clients: Vec<usize> = (0..k).map(|i| i * 7 + g.usize_in(0, 6)).collect();
+            let strikes: Vec<usize> = clients.iter().map(|_| g.usize_in(1, 9)).collect();
+            (clients, strikes)
+        },
+        |_| vec![],
+        |(clients, strikes)| {
+            let mut ledger = QuarantineLedger::default();
+            let mut round = 0usize;
+            let mut max_strikes = 0usize;
+            for (&c, &n) in clients.iter().zip(strikes) {
+                for _ in 0..n {
+                    ledger.record(c, round);
+                    round += 1;
+                }
+                max_strikes = max_strikes.max(n);
+                // the bar doubles per strike up to the <<6 cap, counted
+                // from the last strike: barred through its final round,
+                // free the round after
+                let bar = QUAR_BAR_BASE << (n - 1).min(6);
+                let last = round - 1;
+                if !ledger.is_barred(c, round) {
+                    return Err(format!("client {c} free right after strike {n}"));
+                }
+                if !ledger.is_barred(c, last + bar - 1) {
+                    return Err(format!("client {c} freed inside a {bar}-round bar"));
+                }
+                if ledger.is_barred(c, last + bar) {
+                    return Err(format!("client {c} barred past its {bar}-round window"));
+                }
+            }
+            // entries stay sorted by client and export/rebuild is faithful
+            let entries = ledger.export();
+            if !entries.windows(2).all(|w| w[0].client < w[1].client) {
+                return Err("ledger entries not sorted by client".into());
+            }
+            let rebuilt = QuarantineLedger::from_entries(entries).map_err(|e| e.to_string())?;
+            if rebuilt != ledger {
+                return Err("export -> from_entries drifted".into());
+            }
+            // clean rounds forgive one strike per window: after
+            // max_strikes windows past every bar, the ledger is empty
+            let horizon = round + (QUAR_BAR_BASE << 7) + (max_strikes + 1) * QUAR_DECAY_EVERY;
+            for r in round..=horizon {
+                ledger.decay(r);
+            }
+            if !ledger.is_empty() {
+                return Err(format!(
+                    "{} entries survived {} clean rounds",
+                    ledger.len(),
+                    horizon - round
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Vanish law (end-to-end): a vanished client's work must never reach
+/// any server-side state — not the aggregate, not the stale buffer.
+/// Under buffered sync with `vanish: 1.0` every participant vanishes
+/// every round, so every checkpoint must show an *empty* stale buffer
+/// and every record zero aggregated updates, while the run itself
+/// completes gracefully (frozen params, NaN train metrics — never a
+/// panic, never a phantom update).
+#[test]
+fn vanished_clients_never_reach_the_stale_buffer() {
+    use fluid::coordinator::{self, ExperimentConfig};
+    use fluid::dropout::PolicyKind;
+    use fluid::engine::{ChaosConfig, ScenarioConfig, SyncMode};
+    use fluid::snapshot::Snapshot;
+
+    let dir = std::env::temp_dir().join(format!("fluid-vanish-law-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 2000, 64);
+    cfg.rounds = 4;
+    cfg.samples_per_client = 4;
+    cfg.local_steps = 1;
+    cfg.eval_every = cfg.rounds;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    cfg.seed = 6161;
+    cfg.sync_mode = SyncMode::Buffered { k: 8 };
+    cfg.chaos = Some(ChaosConfig {
+        vanish: 1.0,
+        ..ChaosConfig::parse("vanish").unwrap().unwrap()
+    });
+    cfg.checkpoint_every = 1;
+    cfg.checkpoint_keep = cfg.rounds;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let run = coordinator::run_sim(&cfg).expect("all-vanish run completes gracefully");
+    for r in &run.records {
+        assert!(r.vanished > 0, "round {}: nobody vanished at rate 1.0", r.round);
+        assert_eq!(r.aggregated, 0, "round {}: phantom aggregation", r.round);
+        assert_eq!(r.stale_folded, 0, "round {}: phantom stale fold", r.round);
+    }
+    for round in 1..=cfg.rounds {
+        let path = dir.join(format!("snap-{round:06}.fluidsnap"));
+        let bytes = std::fs::read(&path)
+            .unwrap_or_else(|e| panic!("checkpoint {} unreadable: {e}", path.display()));
+        let snap = Snapshot::decode(&bytes).expect("checkpoint decodes");
+        assert!(
+            snap.stale.is_empty(),
+            "round {round}: {} vanished-client entries leaked into the stale buffer",
+            snap.stale.len()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
