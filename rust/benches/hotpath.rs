@@ -7,7 +7,8 @@
 //!   mask extraction, fleet cohort sampling at 50k AND 1M clients (with
 //!   an in-bench sub-linear scaling gate pinning the 1M/50k cost ratio),
 //!   scenario churn at both scales, a full sim-backend fleet round, the
-//!   sharded aggregator tree at 50k (with an in-bench gate pinning the
+//!   MitigationPolicy planning dispatch on a 50k fleet (DESIGN.md §14),
+//!   the sharded aggregator tree at 50k (with an in-bench gate pinning the
 //!   4-shard round to <= 1.25x the single-engine round, DESIGN.md §11),
 //!   the shard wire codec round trip, the update-payload codec (sparse
 //!   encode / q8 decode at ~50k params, with an in-bench gate pinning
@@ -404,6 +405,37 @@ fn pure_benches(b: &Bench, all: &mut Vec<Measurement>) {
     println!("{}", m.report());
     all.push(m);
 
+    // MitigationPolicy seam dispatch (DESIGN.md §14): one planning call
+    // on a 50k fleet through the boxed trait object — straggler
+    // recalibration over the measured 256-cohort plus invariant-path
+    // sub-model assignment. The full invariant round stays gated by
+    // sharded/round-50k below (seeded pre-seam, so the refactor itself
+    // is regression-checked); this section isolates the per-round
+    // planning dispatch the seam added.
+    let pspec = sim_spec("femnist_cnn");
+    let pcfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::Invariant, 50_000, 256);
+    let mut mit = fluid::policy::build(&pcfg, &pspec, 50_000);
+    let pfull = MaskSet::full(&pspec);
+    // a measured fleet with a deterministic latency spread, cohort
+    // spanning the id range
+    let plat: Vec<f64> = (0..50_000).map(|c| 1.0 + (c % 97) as f64 * 0.01).collect();
+    let pselected: Vec<usize> = (0..256).map(|i| i * 195).collect();
+    let mut pround = 1usize;
+    let m = b.run("policy/dispatch-50k", || {
+        let a = mit.plan(fluid::policy::PlanCtx {
+            round: pround,
+            selected: &pselected,
+            fleet_mode: true,
+            last_full_latencies: &plat,
+            spec: &pspec,
+            full_mask: &pfull,
+        });
+        pround += 1;
+        std::hint::black_box(a.straggler_ids.len());
+    });
+    println!("{}", m.report());
+    all.push(m);
+
     // sharded multi-aggregator tree (DESIGN.md §11): the same 50k storm
     // fleet run once on the plain executor and once split across 4 shard
     // workers. The output is bit-identical by construction (pinned in
@@ -747,6 +779,7 @@ fn synthetic_snapshot(
         free_at: vec![0.0; clients],
         stale: Vec::new(),
         resid: Vec::new(),
+        zoo: None,
         quarantine: (0..4)
             .map(|i| fluid::engine::QuarEntry {
                 client: i * 17 + 3,
@@ -779,6 +812,9 @@ fn synthetic_snapshot(
                 quarantined: 0,
                 shard_retries: 0,
                 quorum_fraction: 1.0,
+                straggler_wait: 0.5,
+                admitted_stale: 0,
+                soft_fraction: 1.0,
             })
             .collect(),
     }

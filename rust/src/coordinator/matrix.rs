@@ -1,0 +1,307 @@
+//! The policy × scenario leaderboard harness (`fluid train --matrix`).
+//!
+//! Races every requested mitigation policy against every requested fleet
+//! scenario under *identical seeds* — same cohort draws, same latency
+//! jitter, same churn script — so the only thing that differs between
+//! two cells in a column is the mitigation itself. Each cell runs the
+//! runtime-free simulation backend ([`super::run_sim`]), which is pinned
+//! bit-identical across `--threads` and `--shards`, so the emitted
+//! leaderboard JSON is byte-identical across runs at any thread count
+//! (the suite's matrix smoke diffs two runs outright).
+//!
+//! The report carries only *algorithmic* quantities (virtual time,
+//! accuracy, bytes moved, admission counts) — never wall-clock — and is
+//! emitted through [`crate::jsonlite`], whose sorted-key objects make
+//! the byte layout a pure function of the values.
+
+use super::{run_sim, ExperimentConfig, ExperimentResult};
+use crate::engine::{ScenarioConfig, SyncMode};
+use crate::jsonlite::Json;
+use crate::policy::{active_id, parse_policy_arg, Mitigation};
+
+/// Schema tag stamped into the leaderboard JSON; bump when the cell
+/// field set changes shape.
+pub const LEADERBOARD_SCHEMA: &str = "fluid-leaderboard-v1";
+
+/// One policy × scenario grid to race.
+#[derive(Clone, Debug)]
+pub struct MatrixConfig {
+    /// the shared experiment shape: model, fleet, rounds, seed — every
+    /// cell clones this and changes only policy + scenario
+    pub base: ExperimentConfig,
+    /// `--policy` argument per column (dropout names and zoo names alike)
+    pub policies: Vec<String>,
+    /// `--scenario` argument per row (`none` is legal)
+    pub scenarios: Vec<String>,
+    /// accuracy bar for the time-to-accuracy metric
+    pub target_acc: f64,
+}
+
+/// The algorithmic summary of one finished cell.
+#[derive(Clone, Debug)]
+pub struct CellMetrics {
+    /// reporting id ([`active_id`]) of the policy the cell ran
+    pub policy: &'static str,
+    pub scenario: String,
+    pub final_test_acc: f64,
+    /// virtual seconds until test accuracy first reached the target
+    /// (-1.0 when it never did)
+    pub time_to_target: f64,
+    /// rounds completed when the target was first reached (-1 otherwise)
+    pub rounds_to_target: i64,
+    /// mean per-round wait on the slowest straggler beyond T_target
+    pub mean_straggler_wait: f64,
+    pub mean_round_time: f64,
+    /// summed wire bytes across every aggregated payload
+    pub total_update_bytes: usize,
+    /// stale updates admitted (semi-async lag tolerance)
+    pub admitted_stale: usize,
+    /// late/stale updates refused or discarded
+    pub dropped_updates: usize,
+    /// mean soft-training fraction (1.0 unless a policy trims epochs)
+    pub mean_soft_fraction: f64,
+}
+
+/// Derive one cell's config from the shared base. Zoo policies get the
+/// coherence adjustments `ExperimentConfig::validate` demands, applied
+/// the same deterministic way for every cell:
+///
+/// * `fedprox` — `mitigation_trade_off` defaults to 0.5 when the base
+///   left it at the no-op 1.0 (a λ=1 cell would be indistinguishable
+///   from `none`); other policies force it back to 1.0.
+/// * `safa` — requires `SyncMode::Buffered`; when the base runs another
+///   barrier, the cell switches to `Buffered{k = max(1, ⌊0.8·cohort⌋)}`.
+/// * every zoo policy runs `PolicyKind::None` + paper detection (that is
+///   what [`parse_policy_arg`] returns).
+pub fn cell_config(
+    base: &ExperimentConfig,
+    policy_arg: &str,
+    scenario_arg: &str,
+) -> crate::Result<ExperimentConfig> {
+    let (kind, mitigation) = parse_policy_arg(policy_arg).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown policy {policy_arg:?} \
+             (none|random|ordered|invariant|exclude|fedprox|safa|helios)"
+        )
+    })?;
+    let mut cfg = base.clone();
+    cfg.policy = kind;
+    cfg.mitigation = mitigation;
+    cfg.scenario = ScenarioConfig::parse(scenario_arg)
+        .map_err(|e| anyhow::anyhow!("scenario {scenario_arg:?}: {e}"))?;
+    cfg.mitigation_trade_off = if mitigation == Mitigation::FedProx {
+        if base.mitigation_trade_off == 1.0 {
+            0.5
+        } else {
+            base.mitigation_trade_off
+        }
+    } else {
+        1.0
+    };
+    if mitigation == Mitigation::Safa && !matches!(cfg.sync_mode, SyncMode::Buffered { .. }) {
+        let cohort = cfg.fleet_size.map(|_| cfg.sample_k).unwrap_or(cfg.clients);
+        cfg.sync_mode = SyncMode::Buffered {
+            k: (cohort * 4 / 5).max(1),
+        };
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Reduce one finished run to its leaderboard cell.
+pub fn cell_metrics(
+    res: &ExperimentResult,
+    scenario: &str,
+    target_acc: f64,
+) -> CellMetrics {
+    let n = res.records.len().max(1) as f64;
+    let hit = res
+        .records
+        .iter()
+        .find(|r| !r.test_acc.is_nan() && r.test_acc >= target_acc);
+    CellMetrics {
+        policy: active_id(res.mitigation, res.policy),
+        scenario: scenario.to_string(),
+        final_test_acc: res.final_test_acc,
+        time_to_target: hit.map_or(-1.0, |r| r.vtime),
+        rounds_to_target: hit.map_or(-1, |r| r.round as i64 + 1),
+        mean_straggler_wait: res.records.iter().map(|r| r.straggler_wait).sum::<f64>() / n,
+        mean_round_time: res.records.iter().map(|r| r.round_time).sum::<f64>() / n,
+        total_update_bytes: res.records.iter().map(|r| r.update_bytes).sum(),
+        admitted_stale: res.records.iter().map(|r| r.admitted_stale).sum(),
+        dropped_updates: res.records.iter().map(|r| r.dropped_updates).sum(),
+        mean_soft_fraction: res.records.iter().map(|r| r.soft_fraction).sum::<f64>() / n,
+    }
+}
+
+impl CellMetrics {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("policy", self.policy)
+            .set("scenario", self.scenario.as_str())
+            .set("final_test_acc", self.final_test_acc)
+            .set("time_to_target", self.time_to_target)
+            .set("rounds_to_target", self.rounds_to_target)
+            .set("mean_straggler_wait", self.mean_straggler_wait)
+            .set("mean_round_time", self.mean_round_time)
+            .set("total_update_bytes", self.total_update_bytes)
+            .set("admitted_stale", self.admitted_stale)
+            .set("dropped_updates", self.dropped_updates)
+            .set("mean_soft_fraction", self.mean_soft_fraction)
+    }
+}
+
+/// Rank one scenario's cells, best first: reached-target cells by
+/// time-to-accuracy, then unreached cells by final accuracy; exact ties
+/// break on the policy name so the order is total and deterministic.
+pub fn rank(cells: &[CellMetrics]) -> Vec<&'static str> {
+    let mut order: Vec<&CellMetrics> = cells.iter().collect();
+    order.sort_by(|a, b| {
+        let ka = if a.time_to_target < 0.0 { f64::INFINITY } else { a.time_to_target };
+        let kb = if b.time_to_target < 0.0 { f64::INFINITY } else { b.time_to_target };
+        ka.total_cmp(&kb)
+            .then(b.final_test_acc.total_cmp(&a.final_test_acc))
+            .then(a.policy.cmp(b.policy))
+    });
+    order.into_iter().map(|c| c.policy).collect()
+}
+
+/// Execute the whole grid through the simulation backend and emit the
+/// leaderboard JSON. Cells run sequentially under identical seeds; a
+/// failing cell fails the matrix (partial leaderboards would silently
+/// bias comparisons).
+pub fn run_matrix(mc: &MatrixConfig) -> crate::Result<Json> {
+    anyhow::ensure!(!mc.policies.is_empty(), "matrix needs at least one policy");
+    anyhow::ensure!(!mc.scenarios.is_empty(), "matrix needs at least one scenario");
+    let mut cells: Vec<CellMetrics> = Vec::new();
+    let mut board: Vec<Json> = Vec::new();
+    for scenario in &mc.scenarios {
+        let mut row: Vec<CellMetrics> = Vec::new();
+        for policy in &mc.policies {
+            let cfg = cell_config(&mc.base, policy, scenario)?;
+            let res = run_sim(&cfg).map_err(|e| {
+                anyhow::anyhow!("matrix cell ({policy}, {scenario}) failed: {e:#}")
+            })?;
+            row.push(cell_metrics(&res, scenario, mc.target_acc));
+        }
+        board.push(
+            Json::obj()
+                .set("scenario", scenario.as_str())
+                .set(
+                    "ranking",
+                    Json::Arr(rank(&row).into_iter().map(Json::from).collect()),
+                ),
+        );
+        cells.extend(row);
+    }
+    Ok(Json::obj()
+        .set("schema", LEADERBOARD_SCHEMA)
+        .set("model", mc.base.model.as_str())
+        .set("seed", mc.base.seed as i64)
+        .set("rounds", mc.base.rounds)
+        .set(
+            "fleet_size",
+            mc.base.fleet_size.map(|v| v as i64).unwrap_or(0),
+        )
+        .set("sample_k", mc.base.sample_k)
+        .set("target_acc", mc.target_acc)
+        .set(
+            "policies",
+            Json::Arr(mc.policies.iter().map(|p| Json::from(p.as_str())).collect()),
+        )
+        .set(
+            "scenarios",
+            Json::Arr(mc.scenarios.iter().map(|s| Json::from(s.as_str())).collect()),
+        )
+        .set("cells", Json::Arr(cells.iter().map(CellMetrics::to_json).collect()))
+        .set("leaderboard", Json::Arr(board)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::PolicyKind;
+
+    fn base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::None, 256, 16);
+        cfg.rounds = 4;
+        cfg.eval_every = 2;
+        cfg
+    }
+
+    #[test]
+    fn cell_config_applies_zoo_coherence() {
+        let b = base();
+        let safa = cell_config(&b, "safa", "storm").unwrap();
+        assert_eq!(safa.mitigation, Mitigation::Safa);
+        assert_eq!(safa.policy, PolicyKind::None);
+        assert!(matches!(safa.sync_mode, SyncMode::Buffered { k: 12 }));
+
+        let prox = cell_config(&b, "fedprox", "drift").unwrap();
+        assert_eq!(prox.mitigation_trade_off, 0.5, "λ=1 cell would alias none");
+        let inv = cell_config(&b, "invariant", "none").unwrap();
+        assert_eq!(inv.mitigation, Mitigation::Fluid);
+        assert_eq!(inv.policy, PolicyKind::Invariant);
+        assert_eq!(inv.mitigation_trade_off, 1.0);
+
+        assert!(cell_config(&b, "bogus", "storm").is_err());
+        assert!(cell_config(&b, "safa", "not-a-scenario").is_err());
+    }
+
+    #[test]
+    fn ranking_is_total_and_prefers_reached_targets() {
+        let mk = |policy: &'static str, ttt: f64, acc: f64| CellMetrics {
+            policy,
+            scenario: "storm".into(),
+            final_test_acc: acc,
+            time_to_target: ttt,
+            rounds_to_target: if ttt < 0.0 { -1 } else { 3 },
+            mean_straggler_wait: 0.0,
+            mean_round_time: 1.0,
+            total_update_bytes: 0,
+            admitted_stale: 0,
+            dropped_updates: 0,
+            mean_soft_fraction: 1.0,
+        };
+        let cells = vec![
+            mk("none", -1.0, 0.40),
+            mk("invariant", 12.0, 0.55),
+            mk("safa", 15.0, 0.60),
+            mk("helios", -1.0, 0.45),
+        ];
+        assert_eq!(rank(&cells), vec!["invariant", "safa", "helios", "none"]);
+    }
+
+    #[test]
+    fn matrix_runs_the_grid_and_is_replay_stable() {
+        let mc = MatrixConfig {
+            base: base(),
+            policies: vec!["none".into(), "invariant".into(), "fedprox".into()],
+            scenarios: vec!["storm".into()],
+            target_acc: 0.99, // unreachable in 4 pseudo-training rounds
+        };
+        let a = run_matrix(&mc).unwrap().to_string_pretty();
+        let mut mc2 = mc.clone();
+        mc2.base.threads = mc.base.threads.saturating_add(1).max(2);
+        let b = run_matrix(&mc2).unwrap().to_string_pretty();
+        assert_eq!(a, b, "leaderboard must be byte-identical across threads");
+
+        let parsed = crate::jsonlite::parse(&a).unwrap();
+        assert_eq!(
+            parsed.req("schema").unwrap().as_str(),
+            Some(LEADERBOARD_SCHEMA)
+        );
+        let cells = parsed.req("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 3);
+        for c in cells {
+            assert!(c.req("mean_round_time").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(c.req("rounds_to_target").unwrap().as_f64(), Some(-1.0));
+        }
+        let board = parsed.req("leaderboard").unwrap().as_arr().unwrap();
+        assert_eq!(board.len(), 1);
+        assert_eq!(
+            board[0].req("ranking").unwrap().as_arr().unwrap().len(),
+            3
+        );
+    }
+}

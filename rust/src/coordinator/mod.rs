@@ -6,14 +6,17 @@
 //! per-round history the benches turn into the paper's tables/figures.
 
 pub mod experiment;
+pub mod matrix;
 pub mod report;
 
 pub use experiment::{run, run_sim};
+pub use matrix::{run_matrix, MatrixConfig};
 
 use crate::dropout::PolicyKind;
 use crate::engine::{ChaosConfig, ScenarioConfig, SyncMode};
 use crate::fl::{AggregateMode, Compression, SamplerKind};
 use crate::jsonlite::Json;
+use crate::policy::Mitigation;
 use crate::straggler::{AdaptConfig, AdaptMode};
 use std::path::PathBuf;
 
@@ -141,6 +144,20 @@ pub struct ExperimentConfig {
     /// single-shot [`ExperimentConfig::shard_retry`] switch. Recovery
     /// topology only — not part of the snapshot fingerprint
     pub shard_retry_max: usize,
+    /// which straggler-mitigation family runs the round (`--policy`):
+    /// `Fluid` hosts the five dropout policies above; `FedProx`, `Safa`
+    /// and `Helios` are the zoo alternatives behind the
+    /// `policy::MitigationPolicy` seam. Semantic: part of the snapshot
+    /// fingerprint
+    pub mitigation: Mitigation,
+    /// FedProx elastic-aggregation knob (`--trade-off`): the aggregated
+    /// proposal is blended as `new = α·proposal + (1-α)·old`. 1.0 (the
+    /// default, and the only legal value outside `--policy fedprox`)
+    /// is plain FedAvg, bit-identically
+    pub mitigation_trade_off: f64,
+    /// SAFA staleness-admission bound (`--safa-lag`): a buffered update
+    /// is folded only while its version lag is within this many rounds
+    pub safa_lag: usize,
 }
 
 impl ExperimentConfig {
@@ -190,6 +207,9 @@ impl ExperimentConfig {
             chaos: None,
             quorum: 0.0,
             shard_retry_max: 0,
+            mitigation: Mitigation::Fluid,
+            mitigation_trade_off: 1.0,
+            safa_lag: 2,
         }
     }
 
@@ -299,6 +319,46 @@ impl ExperimentConfig {
                 .validate()
                 .map_err(|e| anyhow::anyhow!("chaos config: {e}"))?;
         }
+        anyhow::ensure!(
+            self.mitigation_trade_off.is_finite()
+                && self.mitigation_trade_off > 0.0
+                && self.mitigation_trade_off <= 1.0,
+            "mitigation_trade_off {} is outside (0, 1]",
+            self.mitigation_trade_off
+        );
+        anyhow::ensure!(self.safa_lag >= 1, "safa_lag must be at least 1");
+        if self.mitigation != Mitigation::Fluid {
+            // the zoo policies answer "what to do about stragglers"
+            // themselves — a dropout policy or the ewma rate loop
+            // underneath them would fight over the same assignment
+            anyhow::ensure!(
+                self.policy == PolicyKind::None,
+                "--policy {} does not compose with the {} dropout policy \
+                 (the zoo mitigations own straggler handling)",
+                self.mitigation.name(),
+                self.policy.name()
+            );
+            anyhow::ensure!(
+                self.adapt == AdaptMode::Paper,
+                "--policy {} is incompatible with --adapt ewma \
+                 (zoo mitigations reuse the paper's one-shot detection)",
+                self.mitigation.name()
+            );
+        }
+        if self.mitigation != Mitigation::FedProx {
+            anyhow::ensure!(
+                self.mitigation_trade_off == 1.0,
+                "--trade-off only applies to --policy fedprox"
+            );
+        }
+        if self.mitigation == Mitigation::Safa {
+            anyhow::ensure!(
+                matches!(self.sync_mode, SyncMode::Buffered { .. }),
+                "--policy safa requires buffered semi-async sync \
+                 (--sync buffered:K): lag-tolerant admission only exists \
+                 where late updates are buffered, not dropped"
+            );
+        }
         Ok(())
     }
 
@@ -378,6 +438,15 @@ pub struct RoundRecord {
     /// fresh on-time updates over planned participants (1.0 when the
     /// round planned no participants)
     pub quorum_fraction: f64,
+    /// virtual seconds the round waited on its slowest straggler beyond
+    /// the detection target (`max(0, straggler_time - t_target)`)
+    pub straggler_wait: f64,
+    /// stale updates the mitigation policy admitted into this round's
+    /// aggregation (subset of `stale_folded`'s pre-seam meaning)
+    pub admitted_stale: usize,
+    /// mean soft-training fraction over this round's participants
+    /// (1.0 unless a Helios-style policy trims local epochs)
+    pub soft_fraction: f64,
 }
 
 /// Full outcome of one run.
@@ -385,6 +454,9 @@ pub struct RoundRecord {
 pub struct ExperimentResult {
     pub model: String,
     pub policy: PolicyKind,
+    /// the mitigation family the run executed under (fluid hosts the
+    /// dropout policies; the zoo alternatives report their own name)
+    pub mitigation: Mitigation,
     pub records: Vec<RoundRecord>,
     pub final_test_acc: f64,
     pub final_test_loss: f64,
@@ -441,11 +513,16 @@ impl ExperimentResult {
                     .set("quarantined", r.quarantined)
                     .set("shard_retries", r.shard_retries)
                     .set("quorum_fraction", r.quorum_fraction)
+                    .set("policy", crate::policy::active_id(self.mitigation, self.policy))
+                    .set("straggler_wait", r.straggler_wait)
+                    .set("admitted_stale", r.admitted_stale)
+                    .set("soft_fraction", r.soft_fraction)
             })
             .collect();
         Json::obj()
             .set("model", self.model.as_str())
             .set("policy", self.policy.name())
+            .set("mitigation", self.mitigation.name())
             .set("final_test_acc", self.final_test_acc)
             .set("final_test_loss", self.final_test_loss)
             .set("total_vtime", self.total_vtime)
@@ -485,6 +562,9 @@ mod tests {
         assert!(m.chaos.is_none());
         assert_eq!(m.quorum, 0.0);
         assert_eq!(m.shard_retry_max, 0);
+        assert_eq!(m.mitigation, Mitigation::Fluid);
+        assert_eq!(m.mitigation_trade_off, 1.0);
+        assert_eq!(m.safa_lag, 2);
     }
 
     #[test]
@@ -576,10 +656,71 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_incoherent_mitigation_combos() {
+        let base = ExperimentConfig::mobile("femnist_cnn", PolicyKind::None);
+
+        // fedprox composes with neither ewma nor a dropout policy
+        let mut bad = base.clone();
+        bad.mitigation = Mitigation::FedProx;
+        bad.adapt = AdaptMode::Ewma;
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("ewma"), "{err}");
+        let mut bad = base.clone();
+        bad.mitigation = Mitigation::FedProx;
+        bad.policy = PolicyKind::Invariant;
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("dropout"), "{err}");
+
+        // the trade-off knob belongs to fedprox alone, in (0, 1]
+        let mut bad = base.clone();
+        bad.mitigation_trade_off = 0.5;
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("fedprox"), "{err}");
+        let mut bad = base.clone();
+        bad.mitigation = Mitigation::FedProx;
+        bad.mitigation_trade_off = 0.0;
+        assert!(bad.validate().is_err(), "trade-off 0 accepted");
+        let mut bad = base.clone();
+        bad.mitigation = Mitigation::FedProx;
+        bad.mitigation_trade_off = f64::NAN;
+        assert!(bad.validate().is_err(), "NaN trade-off accepted");
+        let mut ok = base.clone();
+        ok.mitigation = Mitigation::FedProx;
+        ok.mitigation_trade_off = 0.5;
+        assert!(ok.validate().is_ok());
+
+        // safa needs the buffered barrier and a sane lag bound
+        let mut bad = base.clone();
+        bad.mitigation = Mitigation::Safa;
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("buffered"), "{err}");
+        let mut bad = base.clone();
+        bad.mitigation = Mitigation::Safa;
+        bad.sync_mode = SyncMode::Buffered { k: 3 };
+        bad.safa_lag = 0;
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("safa_lag"), "{err}");
+        let mut ok = base.clone();
+        ok.mitigation = Mitigation::Safa;
+        ok.sync_mode = SyncMode::Buffered { k: 3 };
+        assert!(ok.validate().is_ok());
+
+        // helios: no dropout policy underneath, paper detection only
+        let mut bad = base.clone();
+        bad.mitigation = Mitigation::Helios;
+        bad.policy = PolicyKind::Random;
+        assert!(bad.validate().is_err(), "helios + dropout accepted");
+        let mut ok = base.clone();
+        ok.mitigation = Mitigation::Helios;
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
     fn result_json_round_trips() {
         let res = ExperimentResult {
             model: "femnist_cnn".into(),
             policy: PolicyKind::Invariant,
+            mitigation: Mitigation::Fluid,
             records: vec![RoundRecord {
                 round: 0,
                 round_time: 3.0,
@@ -603,6 +744,9 @@ mod tests {
                 quarantined: 2,
                 shard_retries: 1,
                 quorum_fraction: 0.75,
+                straggler_wait: 0.2,
+                admitted_stale: 0,
+                soft_fraction: 1.0,
             }],
             final_test_acc: 0.8,
             final_test_loss: 0.7,
@@ -630,6 +774,13 @@ mod tests {
             rounds[0].req("quorum_fraction").unwrap().as_f64(),
             Some(0.75)
         );
+        // the mitigation telemetry rides along per round: the active
+        // policy id plus the three policy-zoo metrics
+        assert_eq!(back.req("mitigation").unwrap().as_str(), Some("fluid"));
+        assert_eq!(rounds[0].req("policy").unwrap().as_str(), Some("invariant"));
+        assert_eq!(rounds[0].req("straggler_wait").unwrap().as_f64(), Some(0.2));
+        assert_eq!(rounds[0].req("admitted_stale").unwrap().as_f64(), Some(0.0));
+        assert_eq!(rounds[0].req("soft_fraction").unwrap().as_f64(), Some(1.0));
         assert!(res.calibration_overhead() < 0.05);
     }
 }

@@ -124,6 +124,15 @@ impl Policy {
         }
     }
 
+    /// Fraction of neurons currently held invariant — 0.0 for every
+    /// policy except invariant dropout (reported per round).
+    pub fn invariant_fraction(&self) -> f64 {
+        match self {
+            Policy::Invariant(p) => p.invariant_fraction(),
+            _ => 0.0,
+        }
+    }
+
     /// [`Policy::observe_deltas`] through the pooled hot path: the round
     /// engine passes its scratch arena and thread budget so the fused
     /// observation sweep allocates nothing and parallelizes over neuron

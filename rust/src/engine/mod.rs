@@ -16,8 +16,8 @@
 //!   become arrival *events*, and each [`SyncMode`] resolves those events
 //!   into a barrier decision instead of an implicit `fold(max)`.
 //! * [`RoundPlan`] / [`RoundOutcome`] — the narrow calibration interface
-//!   through which `dropout::Policy` and `straggler::detect` drive the
-//!   engine.
+//!   through which the [`crate::policy::MitigationPolicy`] seam drives
+//!   the engine (DESIGN.md §14).
 //! * [`SyncMode`] — the round-synchronization policy: classic full
 //!   barrier (bit-identical to the historical loop), SALF-style deadline
 //!   rounds, or FedBuff-style buffered semi-async rounds.
@@ -74,16 +74,15 @@ pub use sharded::{ShardFault, ShardedExecutor};
 
 use crate::coordinator::{ExperimentConfig, ExperimentResult, RoundRecord};
 use crate::data::{partition, FlData, ShardSizes, ShardSource, Split};
-use crate::dropout::{InvariantConfig, MaskSet, Policy, PolicyKind};
+use crate::dropout::MaskSet;
 use crate::fl::{
-    self, fedavg_into, sample_cohort, staleness_discount, AggScratch, Client, ClientUpdate,
-    Codec, DeltaPayload, Fleet, UpdateCodec,
+    self, fedavg_into, policy_weight, sample_cohort, staleness_discount, AggScratch, Client,
+    ClientUpdate, Codec, DeltaPayload, Fleet, UpdateCodec,
 };
 use crate::model::ModelSpec;
-use crate::snapshot::{config_fingerprint, PolicyState, Snapshot, SnapshotStore, StaleEntry};
-use crate::straggler::{
-    snap_rate, AdaptMode, Detection, FluctuationSchedule, PerfModel, RateController,
-};
+use crate::policy::{MitigationPolicy, MitigationState, PlanCtx, UpdateCtx};
+use crate::snapshot::{config_fingerprint, Snapshot, SnapshotStore, StaleEntry};
+use crate::straggler::{FluctuationSchedule, PerfModel};
 use crate::tensor::Tensor;
 use crate::util::prng::Pcg32;
 use crate::util::stats;
@@ -162,6 +161,8 @@ struct StaleUpdate {
     arrives_at: f64,
     /// round whose broadcast params the update was trained from
     born_round: usize,
+    /// the client that produced it (per-client staleness admission)
+    client: usize,
 }
 
 /// Where client shards live.
@@ -188,12 +189,11 @@ pub struct RoundEngine<'a, E: ClientExecutor> {
     test_split: Split,
     scheduler: EventScheduler,
     scenario: Option<ScenarioSim>,
-    policy: Policy,
-    detection: Option<Detection>,
-    /// the calibration seam (straggler/adapt.rs): `paper` mode replays
-    /// the historic one-shot menu snap through it bit-for-bit, `ewma`
-    /// mode closes the feedback loop over smoothed latency profiles
-    controller: RateController,
+    /// the mitigation seam (`policy/`): who is a straggler and what
+    /// each one gets — dropout masks (the FLuID family), elastic
+    /// aggregation, lag-tolerant admission, or soft training (the zoo).
+    /// Round mechanics never reach around it into policy state.
+    mitigation: Box<dyn MitigationPolicy + 'a>,
     params: Vec<Tensor>,
     full_mask: MaskSet,
     /// actual end-to-end latency each client last reported (under its
@@ -334,11 +334,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             FluctuationSchedule::none()
         };
 
-        let inv_cfg = InvariantConfig {
-            th_override: cfg.invariant_th_override,
-            ..Default::default()
-        };
-        let policy = Policy::new_with(cfg.policy, &spec, cfg.seed ^ 0xD20, inv_cfg);
+        let mitigation = crate::policy::build(cfg, &spec, n);
         let params = spec.init_params(cfg.seed);
         let full_mask = MaskSet::full(&spec);
         let threads = executor.threads();
@@ -353,9 +349,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             test_split,
             scheduler: EventScheduler::new(perf, fluct),
             scenario,
-            policy,
-            detection: None,
-            controller: RateController::new(n, cfg.adapt_config()),
+            mitigation,
             params,
             full_mask,
             last_latencies: vec![0.0; n],
@@ -430,6 +424,9 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 quarantined: o.quarantined,
                 shard_retries: o.shard_retries,
                 quorum_fraction: o.quorum_fraction,
+                straggler_wait: o.straggler_wait,
+                admitted_stale: o.admitted_stale,
+                soft_fraction: o.soft_fraction,
             });
             if let Some(store) = &store {
                 if (round + 1) % cfg.checkpoint_every == 0 {
@@ -462,6 +459,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         Ok(ExperimentResult {
             model: cfg.model.clone(),
             policy: cfg.policy,
+            mitigation: cfg.mitigation,
             records,
             final_test_acc: last_eval.1,
             final_test_loss: last_eval.0,
@@ -476,17 +474,9 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
     /// rounds have completed (and produced `records`), and the returned
     /// snapshot replays the rest bit-identically through [`Self::restore`].
     pub fn snapshot_at(&self, next_round: usize, records: &[RoundRecord]) -> Snapshot {
-        let policy = match &self.policy {
-            Policy::Random(p) => {
-                let (state, inc) = p.rng_state();
-                PolicyState::Random { state, inc }
-            }
-            Policy::Invariant(p) => {
-                let (th, streak, score, observations) = p.export_state();
-                PolicyState::Invariant { th, streak, score, observations }
-            }
-            Policy::None | Policy::Ordered(_) | Policy::Exclude => PolicyState::Stateless,
-        };
+        // one dispatch site: the policy exports its own evolving state
+        // (dropout PRNG / thresholds, detection, controller, zoo ledger)
+        let mit = self.mitigation.snapshot_state();
         Snapshot {
             fingerprint: config_fingerprint(self.cfg),
             next_round,
@@ -494,10 +484,11 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             calib_total: self.calib_total,
             train_wall: self.train_wall,
             params: self.params.clone(),
-            policy,
+            policy: mit.policy,
             availability: self.fleet.availability(),
-            detection: self.detection.clone(),
-            ctrl: self.controller.export_state(),
+            detection: mit.detection,
+            ctrl: mit.ctrl,
+            zoo: mit.zoo,
             last_latencies: self.last_latencies.clone(),
             last_full_latencies: self.last_full_latencies.clone(),
             free_at: self.free_at.clone(),
@@ -513,6 +504,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                     mask: s.mask.tensors().to_vec(),
                     arrives_at: s.arrives_at,
                     born_round: s.born_round,
+                    client: s.client,
                 })
                 .collect(),
             resid: self.codec.export_resid(),
@@ -627,6 +619,11 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 s.born_round,
                 snap.next_round
             );
+            anyhow::ensure!(
+                s.client < n,
+                "stale update {i}: client {} is outside the {n}-client population",
+                s.client
+            );
         }
         // QUAR is optional: snapshots from pre-chaos writers carry none
         // and the ledger starts empty. `from_entries` re-validates the
@@ -637,29 +634,19 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             quarantine.entries().iter().all(|e| e.client < n),
             "snapshot quarantine ledger names client ids outside the {n}-client population"
         );
-        match (&mut self.policy, &snap.policy) {
-            (Policy::Random(p), PolicyState::Random { state, inc }) => {
-                p.set_rng_state(*state, *inc);
-            }
-            (Policy::Invariant(p), PolicyState::Invariant { th, streak, score, observations }) => {
-                p.import_state(th.clone(), streak.clone(), score.clone(), *observations)?;
-            }
-            (
-                Policy::None | Policy::Ordered(_) | Policy::Exclude,
-                PolicyState::Stateless,
-            ) => {}
-            _ => anyhow::bail!(
-                "snapshot policy state does not match the configured policy {:?}",
-                self.cfg.policy
-            ),
-        }
+        // One dispatch site: the policy validates its own state pairing
+        // (a mismatched PolicyState/ZooState variant is still a clean
+        // fingerprint-style error) and installs detection + controller.
+        self.mitigation.restore_state(MitigationState {
+            policy: snap.policy,
+            detection: snap.detection,
+            ctrl: snap.ctrl,
+            zoo: snap.zoo,
+        })?;
         // RESID validates inside import_resid (per-client tensor counts
         // and lengths against the spec) before any state is installed
         self.codec.import_resid(snap.resid, &self.spec)?;
         self.fleet.set_availability(&snap.availability);
-        if let Some(ctrl) = snap.ctrl {
-            self.controller.import_state(ctrl);
-        }
         self.stale = snap
             .stale
             .into_iter()
@@ -674,11 +661,11 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 mask: MaskSet::from_tensors(s.mask),
                 arrives_at: s.arrives_at,
                 born_round: s.born_round,
+                client: s.client,
             })
             .collect();
         self.quarantine = quarantine;
         self.params = snap.params;
-        self.detection = snap.detection;
         self.last_latencies = snap.last_latencies;
         self.last_full_latencies = snap.last_full_latencies;
         self.free_at = snap.free_at;
@@ -719,82 +706,29 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             s
         };
 
-        // --- straggler recalibration ----------------------------------------
-        let recalibrate = round > 0
-            && round % cfg.recalibrate_every == 0
-            && !(cfg.static_stragglers && self.detection.is_some());
-        if recalibrate {
-            // Fleet mode: a fresh cohort is mostly *unmeasured* (latency
-            // still 0.0) — zeros would both collapse t_target to 0 and
-            // flag every measured client as a straggler, so detection
-            // only reads clients with a real measurement. The classic
-            // path keeps the historic behavior bit-for-bit (zeros
-            // included), as pinned by tests/engine_regression.rs.
-            let pool: Vec<usize> = if self.fleet_mode() {
-                selected
-                    .iter()
-                    .copied()
-                    .filter(|&c| self.last_full_latencies[c] > 0.0)
-                    .collect()
-            } else {
-                selected.clone()
-            };
-            // The controller is the calibration seam: `paper` mode
-            // reproduces the historic one-shot detect + menu snap
-            // bit-for-bit (sample-local ids mapped back); `ewma` mode
-            // closes the loop over its smoothed per-client profiles and
-            // promotes/demotes stragglers as scenarios shift load. A
-            // `None` keeps the previous detection, as the pre-controller
-            // loop did for an empty pool.
-            if let Some(det) = self.controller.recalibrate(
-                &pool,
-                &self.last_full_latencies,
-                cfg.straggler_fraction,
-                0.02,
-                &cfg.rates_menu,
-            ) {
-                self.detection = Some(det);
-            }
-        }
-
-        // --- sub-model assignment -------------------------------------------
+        // --- mitigation planning (recalibration + assignment) ---------------
+        // The seam: the policy recalibrates its detection and decides who
+        // is a straggler and what each one gets — a sub-model mask (the
+        // FLuID family), a trimmed step budget (Helios), or nothing but
+        // membership (FedProx / SAFA). The engine only executes.
         let calib_start = Instant::now();
-        let ewma = cfg.adapt == AdaptMode::Ewma;
-        let mut masks = MaskTable::new(self.full_mask.clone());
-        // rates and straggler membership are sparse: O(stragglers) per
-        // round where the former dense tables were O(fleet)
-        let mut rates = RateTable::new();
-        let mut straggler_ids: Vec<usize> = Vec::new();
-        if let Some(det) = &self.detection {
-            for (k, &c) in det.stragglers.iter().enumerate() {
-                let desired = cfg.fixed_rate.unwrap_or(det.rates[k]);
-                let r = match &cfg.cluster_rates {
-                    Some(menu) => snap_rate(desired, menu),
-                    None => desired,
-                };
-                // The controller's straggler set persists across cohorts,
-                // so in ewma mode only clients actually sampled this
-                // round get a mask cut (mask extraction advances policy
-                // state — random dropout's PRNG — so the classic paper
-                // path keeps cutting one per straggler, bit-identically
-                // to the pre-controller loop). `selected` is sorted.
-                let sampled_now = !ewma || selected.binary_search(&c).is_ok();
-                if sampled_now
-                    && cfg.policy != PolicyKind::None
-                    && cfg.policy != PolicyKind::Exclude
-                {
-                    let m = self.policy.make_mask(&self.spec, r);
-                    // the straggler only speeds up if it actually received
-                    // a sub-model (invariant dropout returns the full mask
-                    // until its first calibration observation)
-                    if !m.is_full() {
-                        rates.set(c, r);
-                        masks.set(c, m);
-                    }
-                }
-                straggler_ids.push(c);
-            }
-        }
+        let assignments = self.mitigation.plan(PlanCtx {
+            round,
+            selected: &selected,
+            fleet_mode: cfg.fleet_size.is_some(),
+            last_full_latencies: &self.last_full_latencies,
+            spec: &self.spec,
+            full_mask: &self.full_mask,
+        });
+        let crate::policy::Assignments {
+            straggler_ids,
+            rates,
+            masks,
+            train_frac,
+            t_target,
+            exclude_stragglers,
+        } = assignments;
+        let masks = masks.unwrap_or_else(|| MaskTable::new(self.full_mask.clone()));
         let mut straggler_sorted = straggler_ids.clone();
         straggler_sorted.sort_unstable();
         let calib_secs = calib_start.elapsed().as_secs_f64();
@@ -821,8 +755,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             .iter()
             .copied()
             .filter(|&c| {
-                cfg.policy != PolicyKind::Exclude
-                    || straggler_sorted.binary_search(&c).is_err()
+                !exclude_stragglers || straggler_sorted.binary_search(&c).is_err()
             })
             .collect();
 
@@ -837,9 +770,10 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             straggler_sorted,
             rates,
             masks,
-            t_target: self.detection.as_ref().map(|d| d.t_target),
+            t_target,
             is_calib_round: round % cfg.recalibrate_every == 0,
             calib_secs,
+            train_frac,
         }
     }
 
@@ -858,7 +792,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             .map(|&c| TrainJob {
                 client: c,
                 round: plan.round,
-                steps: cfg.local_steps,
+                steps: plan.train_steps(c, cfg.local_steps),
                 lr: cfg.lr,
                 seed: plan.round_seed,
                 use_fused: cfg.use_fused_steps,
@@ -1034,11 +968,11 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             }
             self.last_latencies[a.client] = a.at;
             self.last_full_latencies[a.client] = a.full_latency;
-            // close the loop: the controller smooths these into its
-            // per-client profiles (no-op in paper mode). The applied
-            // rate rides along so evidence from a full-model fallback
-            // round can never drive a feedback step.
-            self.controller.observe(a.client, a.at, a.full_latency, rate);
+            // close the loop through the seam: every policy sees the
+            // arrivals (the FLuID family feeds its rate controller; the
+            // applied rate rides along so evidence from a full-model
+            // fallback round can never drive a feedback step)
+            self.mitigation.observe(a.client, a.at, a.full_latency, rate);
         }
 
         let round_start = self.vtime;
@@ -1088,7 +1022,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         // them; the observation only needs shared borrows and the
         // pre-aggregation globals either way.
         let mut calib_extra = 0.0f64;
-        if plan.is_calib_round && matches!(self.policy, Policy::Invariant(_)) {
+        if plan.is_calib_round && self.mitigation.wants_delta_observations() {
             let t0 = Instant::now();
             let voters: Vec<&[Tensor]> = updates
                 .iter()
@@ -1102,8 +1036,8 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             let per_client = per_client
                 .into_iter()
                 .collect::<crate::Result<Vec<_>>>()?;
-            self.policy
-                .observe_deltas_with(&per_client, self.threads, &mut self.scratch);
+            self.mitigation
+                .observe_deltas(&per_client, self.threads, &mut self.scratch);
             calib_extra = t0.elapsed().as_secs_f64();
         }
         calib_secs += calib_extra;
@@ -1121,9 +1055,18 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         let mut update_bytes = 0usize;
         for (c, u) in updates {
             if on_time_sorted.binary_search(&c).is_ok() {
+                // the policy may reweigh the update; `policy_weight` is a
+                // pure passthrough at the default multiplier of 1.0, so
+                // the FLuID family's weights stay bit-identical
+                let m = self.mitigation.weigh(&UpdateCtx {
+                    client: c,
+                    staleness: 0,
+                    is_straggler: plan.is_straggler(c),
+                });
+                let w = policy_weight(u.weight, m);
                 losses.push(u.mean_loss);
                 accs.push(u.mean_acc);
-                weights.push(u.weight);
+                weights.push(w);
                 let mask = plan.masks.get(c).clone();
                 let payload = self.codec.encode(
                     c as u64,
@@ -1136,10 +1079,11 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 update_bytes += payload.wire_bytes();
                 agg.push(ClientUpdate {
                     payload,
-                    weight: u.weight,
+                    weight: w,
                     mask,
                     staleness: 0,
                 });
+                self.mitigation.record_contribution(c, plan.round);
             } else {
                 match cfg.sync_mode {
                     // late under a deadline: the update is discarded and
@@ -1161,6 +1105,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                         } else {
                             self.free_at[c] = round_start + at;
                             self.stale.push(StaleUpdate {
+                                client: c,
                                 result: u,
                                 mask: plan.masks.get(c).clone(),
                                 arrives_at: round_start + at,
@@ -1182,11 +1127,24 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
         for s in std::mem::take(&mut self.stale) {
             if s.born_round < plan.round && s.arrives_at <= round_end {
                 let staleness = plan.round - s.born_round;
+                // lag-tolerant policies gate admission on staleness
+                // (SAFA's version lag); everyone else admits everything,
+                // exactly as before the seam
+                if !self.mitigation.admit_stale(s.client, staleness) {
+                    dropped_updates += 1;
+                    continue;
+                }
+                let m = self.mitigation.weigh(&UpdateCtx {
+                    client: s.client,
+                    staleness,
+                    is_straggler: plan.is_straggler(s.client),
+                });
+                let w = policy_weight(s.result.weight, m);
                 // metrics carry the same staleness-discounted weight
                 // the aggregation applies
                 losses.push(s.result.mean_loss);
                 accs.push(s.result.mean_acc);
-                weights.push(s.result.weight * staleness_discount(staleness));
+                weights.push(w * staleness_discount(staleness));
                 // buffered folds stay dense: they were encoded against a
                 // *previous* round's globals, so a sparse/q8 re-encode
                 // against today's params would shift their reference
@@ -1195,10 +1153,11 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 update_bytes += payload.wire_bytes();
                 agg.push(ClientUpdate {
                     payload,
-                    weight: s.result.weight,
+                    weight: w,
                     mask: s.mask,
                     staleness,
                 });
+                self.mitigation.record_contribution(s.client, plan.round);
                 stale_folded += 1;
             } else {
                 still.push(s);
@@ -1218,7 +1177,7 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             )
         };
         let aggregated = agg.len();
-        let new_params = if agg.is_empty() {
+        let mut new_params = if agg.is_empty() {
             self.params.clone()
         } else {
             // the allocation-free parallel hot path: accumulators and
@@ -1233,6 +1192,18 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             )
         };
         drop(agg);
+        // elastic (FedProx-style) server step: pull the FedAvg proposal
+        // back toward the previous globals. λ = 1.0 (every FLuID path)
+        // skips the loop entirely, so pinned trajectories see no float op
+        let lam = self.mitigation.elastic_lambda();
+        if lam != 1.0 && aggregated > 0 {
+            let l = lam as f32;
+            for (np, op) in new_params.iter_mut().zip(&self.params) {
+                for (x, &o) in np.data_mut().iter_mut().zip(op.data()) {
+                    *x = l * *x + (1.0 - l) * o;
+                }
+            }
+        }
         // retire the previous globals into the arena so next round's
         // aggregation writes into their buffers instead of allocating
         let prev = std::mem::replace(&mut self.params, new_params);
@@ -1250,9 +1221,19 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
                 (f64::NAN, f64::NAN)
             };
 
-        let invariant_fraction = match &self.policy {
-            Policy::Invariant(p) => p.invariant_fraction(),
-            _ => 0.0,
+        let invariant_fraction = self.mitigation.invariant_fraction();
+        // mitigation-facing metrics: how long the round waited on its
+        // slowest straggler past the target, and how much local work the
+        // soft-training path actually scheduled
+        let straggler_wait = (straggler_time - t_target).max(0.0);
+        let soft_fraction = if plan.train_frac.is_empty() || plan.participants.is_empty() {
+            1.0
+        } else {
+            plan.participants
+                .iter()
+                .map(|&c| plan.train_fraction(c))
+                .sum::<f64>()
+                / plan.participants.len() as f64
         };
 
         Ok(RoundOutcome {
@@ -1273,6 +1254,9 @@ impl<'a, E: ClientExecutor> RoundEngine<'a, E> {
             quarantined,
             shard_retries,
             quorum_fraction,
+            straggler_wait,
+            admitted_stale: stale_folded,
+            soft_fraction,
         })
     }
 }

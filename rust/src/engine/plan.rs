@@ -132,6 +132,10 @@ pub struct RoundPlan {
     pub is_calib_round: bool,
     /// wall-clock seconds spent on server-side planning
     pub calib_secs: f64,
+    /// per-client soft-training fractions, sparse over 1.0 (full local
+    /// epoch) — Helios-style policies trim local steps instead of the
+    /// model; empty for the whole FLuID family
+    pub train_frac: Vec<(usize, f64)>,
 }
 
 impl RoundPlan {
@@ -143,6 +147,27 @@ impl RoundPlan {
     /// The keep-rate `client` trains under (1.0 = full model).
     pub fn rate(&self, client: usize) -> f64 {
         self.rates.get(client)
+    }
+
+    /// The soft-training fraction `client` runs under (1.0 = full epoch).
+    pub fn train_fraction(&self, client: usize) -> f64 {
+        match self.train_frac.binary_search_by_key(&client, |(c, _)| *c) {
+            Ok(i) => self.train_frac[i].1,
+            Err(_) => 1.0,
+        }
+    }
+
+    /// Local steps for `client` given the configured budget. Returns
+    /// `base` exactly (no float ops) when no fraction is assigned, so
+    /// FLuID-family rounds are untouched by the soft-training seam.
+    pub fn train_steps(&self, client: usize, base: usize) -> usize {
+        if self.train_frac.is_empty() {
+            return base;
+        }
+        match self.train_frac.binary_search_by_key(&client, |(c, _)| *c) {
+            Ok(i) => ((base as f64 * self.train_frac[i].1).round() as usize).max(1),
+            Err(_) => base,
+        }
     }
 }
 
@@ -187,6 +212,14 @@ pub struct RoundOutcome {
     /// fresh on-time updates as a fraction of the planned participants
     /// (1.0 when the round planned no participants)
     pub quorum_fraction: f64,
+    /// virtual seconds the round waited on its slowest straggler beyond
+    /// the detection target
+    pub straggler_wait: f64,
+    /// stale updates the mitigation policy admitted this round
+    pub admitted_stale: usize,
+    /// mean soft-training fraction over participants (1.0 when no
+    /// policy trims local epochs)
+    pub soft_fraction: f64,
 }
 
 #[cfg(test)]
@@ -217,6 +250,39 @@ mod tests {
         assert!(t.get(3).is_full());
         assert!(t.override_for(1).is_some());
         assert!(t.override_for(2).is_none());
+    }
+
+    fn empty_plan() -> RoundPlan {
+        let spec = tiny_spec();
+        RoundPlan {
+            round: 0,
+            t_frac: 0.0,
+            round_seed: 0,
+            selected: vec![],
+            active: vec![],
+            participants: vec![],
+            straggler_ids: vec![],
+            straggler_sorted: vec![],
+            rates: RateTable::new(),
+            masks: MaskTable::new(MaskSet::full(&spec)),
+            t_target: None,
+            is_calib_round: false,
+            calib_secs: 0.0,
+            train_frac: vec![],
+        }
+    }
+
+    #[test]
+    fn train_steps_are_exact_without_fractions_and_scaled_with() {
+        let mut p = empty_plan();
+        // no table: the base budget passes through untouched
+        assert_eq!(p.train_steps(3, 4), 4);
+        assert_eq!(p.train_fraction(3), 1.0);
+        p.train_frac = vec![(2, 0.5), (5, 0.1)];
+        assert_eq!(p.train_steps(2, 4), 2);
+        assert_eq!(p.train_steps(5, 4), 1, "floored at one step");
+        assert_eq!(p.train_steps(3, 4), 4, "unlisted client keeps base");
+        assert_eq!(p.train_fraction(5), 0.1);
     }
 
     #[test]

@@ -83,6 +83,18 @@ fn effective_weight(u: &ClientUpdate) -> f64 {
     }
 }
 
+/// Apply a mitigation policy's `weigh()` multiplier to a FedAvg weight.
+/// Skips the multiply entirely at 1.0, so every policy that does not
+/// re-weight (the whole FLuID family) costs zero float ops here and the
+/// pre-seam trajectories stay bit-identical.
+pub fn policy_weight(base: f64, multiplier: f64) -> f64 {
+    if multiplier == 1.0 {
+        base
+    } else {
+        base * multiplier
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AggregateMode {
     Plain,

@@ -10,7 +10,9 @@ pub mod fleet;
 pub mod parallel;
 pub mod sampling;
 
-pub use aggregate::{fedavg, fedavg_into, staleness_discount, AggregateMode, ClientUpdate};
+pub use aggregate::{
+    fedavg, fedavg_into, policy_weight, staleness_discount, AggregateMode, ClientUpdate,
+};
 pub use client::{Client, LocalResult};
 pub use codec::{
     pack_result, pack_sparse, unpack, unpack_result, Codec, Compression, DeltaPayload,

@@ -26,6 +26,7 @@ pub mod engine;
 pub mod fl;
 pub mod jsonlite;
 pub mod model;
+pub mod policy;
 pub mod runtime;
 pub mod snapshot;
 pub mod straggler;

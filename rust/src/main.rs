@@ -42,7 +42,9 @@ fn main() {
 fn train_args(program: &str) -> Args {
     Args::new(program, "run one FLuID experiment")
         .opt("model", "femnist_cnn", "femnist_cnn|cifar_vgg9|shakespeare_lstm|cifar_resnet18")
-        .opt("policy", "invariant", "none|random|ordered|invariant|exclude")
+        .opt("policy", "invariant", "none|random|ordered|invariant|exclude|fedprox|safa|helios")
+        .opt("trade-off", "1", "fedprox: elastic mix new = λ·agg + (1-λ)·old")
+        .opt("safa-lag", "2", "safa: admit stale updates up to this version lag")
         .opt("rounds", "30", "federated rounds")
         .opt("clients", "5", "number of clients")
         .opt("spc", "60", "samples per client")
@@ -88,11 +90,21 @@ fn train_args(program: &str) -> Args {
 
 fn build_config(a: &Args) -> ExperimentConfig {
     let model = a.get("model");
-    let policy = PolicyKind::parse(&a.get("policy")).unwrap_or_else(|| {
-        eprintln!("unknown policy {:?}", a.get("policy"));
-        std::process::exit(2);
-    });
+    // dropout names select a policy under the fluid mitigation; the zoo
+    // names (fedprox|safa|helios) select a whole mitigation family
+    let (policy, mitigation) =
+        fluid::policy::parse_policy_arg(&a.get("policy")).unwrap_or_else(|| {
+            eprintln!(
+                "unknown policy {:?} \
+                 (none|random|ordered|invariant|exclude|fedprox|safa|helios)",
+                a.get("policy")
+            );
+            std::process::exit(2);
+        });
     let mut cfg = ExperimentConfig::mobile(&model, policy);
+    cfg.mitigation = mitigation;
+    cfg.mitigation_trade_off = a.get_f64("trade-off");
+    cfg.safa_lag = a.get_usize("safa-lag");
     cfg.rounds = a.get_usize("rounds");
     cfg.clients = a.get_usize("clients");
     cfg.samples_per_client = a.get_usize("spc");
@@ -244,7 +256,13 @@ fn open_session(a: &Args) -> Session {
 }
 
 fn cmd_train(argv: &[String]) -> i32 {
-    let a = match train_args("fluid train").parse_from(argv) {
+    let a = match train_args("fluid train")
+        .flag("matrix", "run the policy x scenario leaderboard grid (sim backend)")
+        .opt("policies", "none,invariant,fedprox,safa,helios", "matrix: policies to race")
+        .opt("scenarios", "storm,drift", "matrix: fleet scenarios to race under")
+        .opt("target-acc", "0.5", "matrix: test-acc threshold for time-to-target")
+        .parse_from(argv)
+    {
         Ok(a) => a,
         Err(e) => {
             eprintln!("{e}");
@@ -252,6 +270,9 @@ fn cmd_train(argv: &[String]) -> i32 {
         }
     };
     let cfg = build_config(&a);
+    if a.get_flag("matrix") {
+        return cmd_matrix(&a, cfg);
+    }
     let population = cfg.fleet_size.unwrap_or(cfg.clients);
     let result = if a.get_flag("sim") {
         println!(
@@ -346,6 +367,48 @@ fn cmd_train(argv: &[String]) -> i32 {
             return 1;
         }
         println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_matrix(a: &Args, base: ExperimentConfig) -> i32 {
+    // the grid always runs on the deterministic sim backend so the
+    // leaderboard JSON is byte-identical at any --threads
+    if !fluid::data::is_known_model(&base.model) {
+        eprintln!(
+            "unknown model {:?} for --matrix (sim backend only)",
+            base.model
+        );
+        return 2;
+    }
+    let mc = coordinator::MatrixConfig {
+        base,
+        policies: a.get_list("policies"),
+        scenarios: a.get_list("scenarios"),
+        target_acc: a.get_f64("target-acc"),
+    };
+    eprintln!(
+        "fluid matrix: {} policies x {} scenarios (backend=sim)",
+        mc.policies.len(),
+        mc.scenarios.len()
+    );
+    let json = match coordinator::run_matrix(&mc) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("matrix failed: {e:#}");
+            return 1;
+        }
+    };
+    let text = json.to_string_pretty();
+    if a.get("out").is_empty() {
+        println!("{text}");
+    } else {
+        let path = a.get("out");
+        if let Err(e) = std::fs::write(&path, &text) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
     }
     0
 }

@@ -1,0 +1,251 @@
+//! The FLuID family behind the [`MitigationPolicy`] seam.
+//!
+//! `FluidPolicy` hosts all five dropout policies (invariant / random /
+//! ordered / none / exclude) and both adaptation modes (paper menu snap,
+//! ewma closed loop). The planning, observation, and snapshot logic is
+//! the engine's historical code moved here verbatim — every pinned
+//! trajectory replays bit-identically through the trait (the regression
+//! and determinism suites compare against the pre-seam reference loop).
+
+use super::{recalibrate_detection, Assignments, MitigationPolicy, MitigationState, PlanCtx};
+use crate::coordinator::ExperimentConfig;
+use crate::dropout::{InvariantConfig, Policy, PolicyKind};
+use crate::engine::plan::{MaskTable, RateTable};
+use crate::fl::AggScratch;
+use crate::model::ModelSpec;
+use crate::snapshot::PolicyState;
+use crate::straggler::{snap_rate, AdaptMode, Detection, RateController};
+use crate::tensor::Tensor;
+
+/// FLuID + its dropout baselines: detection through the calibration
+/// seam ([`RateController`]), sub-model masks through the configured
+/// [`Policy`].
+pub struct FluidPolicy<'c> {
+    cfg: &'c ExperimentConfig,
+    policy: Policy,
+    controller: RateController,
+    detection: Option<Detection>,
+}
+
+impl<'c> FluidPolicy<'c> {
+    pub fn new(cfg: &'c ExperimentConfig, spec: &ModelSpec, n: usize) -> Self {
+        let inv_cfg = InvariantConfig {
+            th_override: cfg.invariant_th_override,
+            ..Default::default()
+        };
+        Self {
+            cfg,
+            policy: Policy::new_with(cfg.policy, spec, cfg.seed ^ 0xD20, inv_cfg),
+            controller: RateController::new(n, cfg.adapt_config()),
+            detection: None,
+        }
+    }
+}
+
+impl MitigationPolicy for FluidPolicy<'_> {
+    fn id(&self) -> &'static str {
+        self.cfg.policy.name()
+    }
+
+    fn plan(&mut self, ctx: PlanCtx<'_>) -> Assignments {
+        let cfg = self.cfg;
+        recalibrate_detection(&mut self.controller, &mut self.detection, cfg, &ctx);
+
+        // --- sub-model assignment ---------------------------------------
+        let ewma = cfg.adapt == AdaptMode::Ewma;
+        let mut masks = MaskTable::new(ctx.full_mask.clone());
+        // rates and straggler membership are sparse: O(stragglers) per
+        // round where the former dense tables were O(fleet)
+        let mut rates = RateTable::new();
+        let mut straggler_ids: Vec<usize> = Vec::new();
+        if let Some(det) = &self.detection {
+            for (k, &c) in det.stragglers.iter().enumerate() {
+                let desired = cfg.fixed_rate.unwrap_or(det.rates[k]);
+                let r = match &cfg.cluster_rates {
+                    Some(menu) => snap_rate(desired, menu),
+                    None => desired,
+                };
+                // The controller's straggler set persists across cohorts,
+                // so in ewma mode only clients actually sampled this
+                // round get a mask cut (mask extraction advances policy
+                // state — random dropout's PRNG — so the classic paper
+                // path keeps cutting one per straggler, bit-identically
+                // to the pre-controller loop). `selected` is sorted.
+                let sampled_now = !ewma || ctx.selected.binary_search(&c).is_ok();
+                if sampled_now
+                    && cfg.policy != PolicyKind::None
+                    && cfg.policy != PolicyKind::Exclude
+                {
+                    let m = self.policy.make_mask(ctx.spec, r);
+                    // the straggler only speeds up if it actually received
+                    // a sub-model (invariant dropout returns the full mask
+                    // until its first calibration observation)
+                    if !m.is_full() {
+                        rates.set(c, r);
+                        masks.set(c, m);
+                    }
+                }
+                straggler_ids.push(c);
+            }
+        }
+
+        Assignments {
+            straggler_ids,
+            rates,
+            masks: Some(masks),
+            train_frac: Vec::new(),
+            t_target: self.detection.as_ref().map(|d| d.t_target),
+            exclude_stragglers: cfg.policy == PolicyKind::Exclude,
+        }
+    }
+
+    fn observe(&mut self, client: usize, latency: f64, full_latency: f64, applied_rate: f64) {
+        // close the loop: the controller smooths these into its
+        // per-client profiles (no-op in paper mode). The applied rate
+        // rides along so evidence from a full-model fallback round can
+        // never drive a feedback step.
+        self.controller.observe(client, latency, full_latency, applied_rate);
+    }
+
+    fn wants_delta_observations(&self) -> bool {
+        matches!(self.policy, Policy::Invariant(_))
+    }
+
+    fn observe_deltas(
+        &mut self,
+        per_client: &[Vec<Tensor>],
+        threads: usize,
+        scratch: &mut AggScratch,
+    ) {
+        self.policy.observe_deltas_with(per_client, threads, scratch);
+    }
+
+    fn invariant_fraction(&self) -> f64 {
+        self.policy.invariant_fraction()
+    }
+
+    fn snapshot_state(&self) -> MitigationState {
+        let policy = match &self.policy {
+            Policy::Random(p) => {
+                let (state, inc) = p.rng_state();
+                PolicyState::Random { state, inc }
+            }
+            Policy::Invariant(p) => {
+                let (th, streak, score, observations) = p.export_state();
+                PolicyState::Invariant { th, streak, score, observations }
+            }
+            Policy::None | Policy::Ordered(_) | Policy::Exclude => PolicyState::Stateless,
+        };
+        MitigationState {
+            policy,
+            detection: self.detection.clone(),
+            ctrl: self.controller.export_state(),
+            zoo: None,
+        }
+    }
+
+    fn restore_state(&mut self, state: MitigationState) -> crate::Result<()> {
+        // refuse before touching any state, so a bad snapshot can never
+        // half-apply (the policy match below mutates on its happy arms)
+        anyhow::ensure!(
+            state.zoo.is_none(),
+            "snapshot carries zoo policy state, but the configured mitigation is fluid"
+        );
+        match (&mut self.policy, &state.policy) {
+            (Policy::Random(p), PolicyState::Random { state, inc }) => {
+                p.set_rng_state(*state, *inc);
+            }
+            (Policy::Invariant(p), PolicyState::Invariant { th, streak, score, observations }) => {
+                p.import_state(th.clone(), streak.clone(), score.clone(), *observations)?;
+            }
+            (
+                Policy::None | Policy::Ordered(_) | Policy::Exclude,
+                PolicyState::Stateless,
+            ) => {}
+            _ => anyhow::bail!(
+                "snapshot policy state does not match the configured policy {:?}",
+                self.cfg.policy
+            ),
+        }
+        self.detection = state.detection;
+        if let Some(ctrl) = state.ctrl {
+            self.controller.import_state(ctrl);
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for FluidPolicy<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FluidPolicy")
+            .field("policy", &self.cfg.policy)
+            .field("adapt", &self.cfg.adapt)
+            .field("detected", &self.detection.is_some())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snapshot::ZooState;
+
+    fn spec() -> ModelSpec {
+        crate::model::sim_spec("femnist_cnn")
+    }
+
+    #[test]
+    fn fluid_rejects_zoo_snapshot_state() {
+        let cfg = ExperimentConfig::mobile("femnist_cnn", PolicyKind::None);
+        let mut p = FluidPolicy::new(&cfg, &spec(), cfg.clients);
+        let err = p
+            .restore_state(MitigationState {
+                policy: PolicyState::Stateless,
+                detection: None,
+                ctrl: None,
+                zoo: Some(ZooState::Safa { version: vec![0; 5] }),
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("zoo"), "{err:#}");
+    }
+
+    #[test]
+    fn fluid_rejects_mismatched_policy_state() {
+        let cfg = ExperimentConfig::mobile("femnist_cnn", PolicyKind::Invariant);
+        let mut p = FluidPolicy::new(&cfg, &spec(), cfg.clients);
+        let err = p
+            .restore_state(MitigationState {
+                policy: PolicyState::Random { state: 1, inc: 3 },
+                detection: None,
+                ctrl: None,
+                zoo: None,
+            })
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("does not match the configured policy"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn plan_without_detection_assigns_nothing() {
+        let cfg = ExperimentConfig::mobile("femnist_cnn", PolicyKind::Invariant);
+        let spec = spec();
+        let full = crate::dropout::MaskSet::full(&spec);
+        let mut p = FluidPolicy::new(&cfg, &spec, cfg.clients);
+        let selected: Vec<usize> = (0..cfg.clients).collect();
+        let lat = vec![0.0; cfg.clients];
+        let a = p.plan(PlanCtx {
+            round: 0,
+            selected: &selected,
+            fleet_mode: false,
+            last_full_latencies: &lat,
+            spec: &spec,
+            full_mask: &full,
+        });
+        assert!(a.straggler_ids.is_empty());
+        assert!(a.rates.entries().is_empty());
+        assert!(a.t_target.is_none());
+        assert!(!a.exclude_stragglers);
+    }
+}

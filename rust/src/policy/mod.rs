@@ -1,0 +1,332 @@
+//! The unified straggler-mitigation seam (DESIGN.md §14).
+//!
+//! FLuID's mitigation behavior used to be smeared across four layers:
+//! dropout-policy `match` arms in `engine/mod.rs` (construction, snapshot
+//! pairing, mask cutting, calibration gating), detection/adaptation in
+//! `straggler/{detect,adapt}.rs`, staleness weighting in
+//! `fl/aggregate.rs`, and round-cut rules in `engine/sched.rs`. Adding a
+//! neighboring method meant touching all of them in lock-step.
+//!
+//! [`MitigationPolicy`] is the one seam the round engine talks to
+//! instead. Its lifecycle hooks mirror the engine's round phases:
+//!
+//! * [`MitigationPolicy::plan`] — who is a straggler this round, and
+//!   what rate / mask / soft-training fraction each one gets
+//!   ([`Assignments`]);
+//! * [`MitigationPolicy::observe`] — per-arrival latency evidence
+//!   (closes the adaptive loop; a no-op for open-loop policies);
+//! * [`MitigationPolicy::weigh`] — a per-update aggregation-weight
+//!   multiplier consumed by the masked-FedAvg weight
+//!   ([`crate::fl::policy_weight`]); `1.0` leaves the update untouched
+//!   *without* a float multiply, so the FLuID paths stay bit-identical;
+//! * [`MitigationPolicy::admit_stale`] — the semi-async admission gate
+//!   for matured buffered updates (SAFA's lag tolerance);
+//! * [`MitigationPolicy::elastic_lambda`] — the post-aggregation elastic
+//!   mix `new = λ·agg + (1−λ)·old` (FedProx-style; `1.0` skips the
+//!   blend entirely);
+//! * [`MitigationPolicy::snapshot_state`] / `restore_state` — the single
+//!   dispatch site for checkpoint/resume policy state (collapses the old
+//!   engine-side `(Policy, PolicyState)` double-`match`).
+//!
+//! [`Mitigation`] selects the active implementation: `fluid` hosts every
+//! pre-existing path (the five dropout policies × paper/ewma adaptation)
+//! with every pinned trajectory bit-identical; `fedprox`, `safa`, and
+//! `helios` are the policy zoo. `coordinator::matrix` races them under
+//! identical seeds and emits the leaderboard JSON.
+
+mod fluid;
+mod zoo;
+
+pub use fluid::FluidPolicy;
+pub use zoo::{FedProxPolicy, HeliosPolicy, SafaPolicy};
+
+use crate::coordinator::ExperimentConfig;
+use crate::dropout::PolicyKind;
+use crate::engine::plan::{MaskTable, RateTable};
+use crate::fl::AggScratch;
+use crate::model::ModelSpec;
+use crate::snapshot::{PolicyState, ZooState};
+use crate::straggler::{CtrlState, Detection};
+use crate::tensor::Tensor;
+
+/// Which mitigation family an experiment runs. `Fluid` hosts all five
+/// dropout policies (the paper + its baselines) behind the historical
+/// code paths; the others are the policy zoo.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Mitigation {
+    /// FLuID and its dropout baselines (`PolicyKind` selects which)
+    #[default]
+    Fluid,
+    /// FedProx-style elastic aggregation: stragglers run the full model,
+    /// and the global step is damped by `mitigation_trade_off` (λ):
+    /// `new = λ·agg + (1−λ)·old`. λ = 1 is exactly the `none` baseline.
+    FedProx,
+    /// SAFA-style lag-tolerant semi-async: no sub-models; buffered late
+    /// updates are admitted only while their version lag stays within
+    /// `safa_lag` rounds, and admitted stale updates are damped by
+    /// `1/(1+staleness)` on top of the engine's staleness discount.
+    Safa,
+    /// Helios-style soft-training: stragglers keep the full model but
+    /// run a smoothed fraction of their local steps (partial epochs
+    /// instead of sub-models); communication stays full-size.
+    Helios,
+}
+
+impl Mitigation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mitigation::Fluid => "fluid",
+            Mitigation::FedProx => "fedprox",
+            Mitigation::Safa => "safa",
+            Mitigation::Helios => "helios",
+        }
+    }
+}
+
+/// The id string a run reports per round: the dropout-policy name under
+/// `fluid` (these are the paper's comparison axes), the zoo policy name
+/// otherwise.
+pub fn active_id(mitigation: Mitigation, policy: PolicyKind) -> &'static str {
+    match mitigation {
+        Mitigation::Fluid => policy.name(),
+        other => other.name(),
+    }
+}
+
+/// Parse a `--policy` argument into the `(PolicyKind, Mitigation)` pair.
+/// The five historical names select a dropout policy under `fluid`; the
+/// zoo names select a mitigation with no dropout masks at all.
+pub fn parse_policy_arg(s: &str) -> Option<(PolicyKind, Mitigation)> {
+    if let Some(kind) = PolicyKind::parse(s) {
+        return Some((kind, Mitigation::Fluid));
+    }
+    let mit = match s.to_ascii_lowercase().as_str() {
+        "fedprox" => Mitigation::FedProx,
+        "safa" => Mitigation::Safa,
+        "helios" => Mitigation::Helios,
+        _ => return None,
+    };
+    Some((PolicyKind::None, mit))
+}
+
+/// Everything `plan` may read. Borrowed from the engine for the duration
+/// of one planning call; policies must not retain any of it.
+pub struct PlanCtx<'c> {
+    pub round: usize,
+    /// this round's sampled cohort, sorted by client id
+    pub selected: &'c [usize],
+    /// fleet mode filters unmeasured clients out of the detection pool
+    pub fleet_mode: bool,
+    /// full-model-normalized latency each client last reported
+    pub last_full_latencies: &'c [f64],
+    pub spec: &'c ModelSpec,
+    /// the all-ones mask `MaskTable` defaults to
+    pub full_mask: &'c crate::dropout::MaskSet,
+}
+
+/// One aggregation candidate, as `weigh` sees it.
+pub struct UpdateCtx {
+    pub client: usize,
+    /// rounds between the update's birth and this aggregation (0 = fresh)
+    pub staleness: usize,
+    pub is_straggler: bool,
+}
+
+/// Per-round mitigation assignments: who is a straggler and what each
+/// one gets. Tables are sparse (absent = full model, rate 1.0, full
+/// local steps), so a quiet round costs O(stragglers), never O(fleet).
+#[derive(Default)]
+pub struct Assignments {
+    /// detection order (the order rates were assigned in)
+    pub straggler_ids: Vec<usize>,
+    pub rates: RateTable,
+    pub masks: Option<MaskTable>,
+    /// per-client soft-training fractions (Helios): `local_steps` scales
+    /// by the fraction, communication stays full
+    pub train_frac: Vec<(usize, f64)>,
+    /// the barrier target (slowest non-straggler latency), when known
+    pub t_target: Option<f64>,
+    /// Exclude policy: stragglers neither train nor aggregate
+    pub exclude_stragglers: bool,
+}
+
+/// The full per-policy state a snapshot carries, and the one dispatch
+/// site for restoring it. The engine maps these fields 1:1 onto the
+/// snapshot container's POLICY / SCHED / CTRL / ZOO sections, so every
+/// pre-seam snapshot stays byte-compatible.
+pub struct MitigationState {
+    pub policy: PolicyState,
+    pub detection: Option<Detection>,
+    pub ctrl: Option<CtrlState>,
+    pub zoo: Option<ZooState>,
+}
+
+/// The unified mitigation seam. One implementation is active per run;
+/// the engine calls the hooks in round order (`plan` → `observe` →
+/// `weigh`/`admit_stale` → `elastic_lambda`) and snapshot boundaries use
+/// `snapshot_state`/`restore_state`.
+pub trait MitigationPolicy {
+    /// Stable id for reports and the leaderboard.
+    fn id(&self) -> &'static str;
+
+    /// Straggler detection + per-client assignments for one round.
+    fn plan(&mut self, ctx: PlanCtx<'_>) -> Assignments;
+
+    /// Per-arrival latency evidence (no-op for open-loop policies).
+    fn observe(&mut self, client: usize, latency: f64, full_latency: f64, applied_rate: f64);
+
+    /// Aggregation-weight multiplier for one update. `1.0` means
+    /// "untouched" and skips the multiply (bit-identity contract).
+    fn weigh(&self, ctx: &UpdateCtx) -> f64 {
+        let _ = ctx;
+        1.0
+    }
+
+    /// Admission gate for a matured buffered update. Rejected updates
+    /// are dropped (counted in `dropped_updates`), never aggregated.
+    fn admit_stale(&self, client: usize, staleness: usize) -> bool {
+        let _ = (client, staleness);
+        true
+    }
+
+    /// A fresh or stale update from `client` entered this round's
+    /// aggregation (version bookkeeping for lag-tolerant policies).
+    fn record_contribution(&mut self, client: usize, round: usize) {
+        let _ = (client, round);
+    }
+
+    /// Post-aggregation elastic mix λ: `new = λ·agg + (1−λ)·old`.
+    /// `1.0` skips the blend entirely (bit-identity contract).
+    fn elastic_lambda(&self) -> f64 {
+        1.0
+    }
+
+    /// Does this policy consume non-straggler delta observations on
+    /// calibration rounds (the invariant-dropout voter sweep)?
+    fn wants_delta_observations(&self) -> bool {
+        false
+    }
+
+    /// Feed the calibration voters' per-neuron deltas (invariant only).
+    fn observe_deltas(
+        &mut self,
+        per_client: &[Vec<Tensor>],
+        threads: usize,
+        scratch: &mut AggScratch,
+    ) {
+        let _ = (per_client, threads, scratch);
+    }
+
+    /// Fraction of neurons currently invariant (0.0 outside FLuID).
+    fn invariant_fraction(&self) -> f64 {
+        0.0
+    }
+
+    /// Export every piece of evolving policy state for a snapshot.
+    fn snapshot_state(&self) -> MitigationState;
+
+    /// Reinstall snapshot state. A state captured under a *different*
+    /// policy must fail with a clean fingerprint-style error, never
+    /// half-apply.
+    fn restore_state(&mut self, state: MitigationState) -> crate::Result<()>;
+}
+
+/// Construct the configured mitigation policy. The returned trait object
+/// borrows `cfg` (policies read their knobs live, like the engine does).
+pub fn build<'c>(
+    cfg: &'c ExperimentConfig,
+    spec: &ModelSpec,
+    n: usize,
+) -> Box<dyn MitigationPolicy + 'c> {
+    match cfg.mitigation {
+        Mitigation::Fluid => Box::new(FluidPolicy::new(cfg, spec, n)),
+        Mitigation::FedProx => Box::new(FedProxPolicy::new(cfg, n)),
+        Mitigation::Safa => Box::new(SafaPolicy::new(cfg, n)),
+        Mitigation::Helios => Box::new(HeliosPolicy::new(cfg, n)),
+    }
+}
+
+/// The paper's straggler-recalibration gate + pool filter, shared by
+/// every policy (the zoo reuses FLuID's detection machinery verbatim:
+/// they differ in what they *assign*, not in who they detect).
+///
+/// Fleet mode: a fresh cohort is mostly *unmeasured* (latency still
+/// 0.0) — zeros would both collapse t_target to 0 and flag every
+/// measured client as a straggler, so detection only reads clients with
+/// a real measurement. The classic path keeps the historic behavior
+/// bit-for-bit (zeros included), as pinned by tests/engine_regression.rs.
+pub(crate) fn recalibrate_detection(
+    controller: &mut crate::straggler::RateController,
+    detection: &mut Option<Detection>,
+    cfg: &ExperimentConfig,
+    ctx: &PlanCtx<'_>,
+) {
+    let recalibrate = ctx.round > 0
+        && ctx.round % cfg.recalibrate_every == 0
+        && !(cfg.static_stragglers && detection.is_some());
+    if !recalibrate {
+        return;
+    }
+    let pool: Vec<usize> = if ctx.fleet_mode {
+        ctx.selected
+            .iter()
+            .copied()
+            .filter(|&c| ctx.last_full_latencies[c] > 0.0)
+            .collect()
+    } else {
+        ctx.selected.to_vec()
+    };
+    if let Some(det) = controller.recalibrate(
+        &pool,
+        ctx.last_full_latencies,
+        cfg.straggler_fraction,
+        crate::straggler::detect::DETECT_MARGIN,
+        &cfg.rates_menu,
+    ) {
+        *detection = Some(det);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mitigation_names_and_policy_arg_parse() {
+        assert_eq!(Mitigation::Fluid.name(), "fluid");
+        assert_eq!(
+            parse_policy_arg("invariant"),
+            Some((PolicyKind::Invariant, Mitigation::Fluid))
+        );
+        assert_eq!(
+            parse_policy_arg("fluid"),
+            Some((PolicyKind::Invariant, Mitigation::Fluid))
+        );
+        assert_eq!(
+            parse_policy_arg("exclude"),
+            Some((PolicyKind::Exclude, Mitigation::Fluid))
+        );
+        assert_eq!(
+            parse_policy_arg("fedprox"),
+            Some((PolicyKind::None, Mitigation::FedProx))
+        );
+        assert_eq!(
+            parse_policy_arg("SAFA"),
+            Some((PolicyKind::None, Mitigation::Safa))
+        );
+        assert_eq!(
+            parse_policy_arg("helios"),
+            Some((PolicyKind::None, Mitigation::Helios))
+        );
+        assert_eq!(parse_policy_arg("bogus"), None);
+    }
+
+    #[test]
+    fn active_id_reports_the_dropout_policy_under_fluid() {
+        assert_eq!(active_id(Mitigation::Fluid, PolicyKind::Invariant), "invariant");
+        assert_eq!(active_id(Mitigation::Fluid, PolicyKind::Exclude), "exclude");
+        assert_eq!(active_id(Mitigation::FedProx, PolicyKind::None), "fedprox");
+        assert_eq!(active_id(Mitigation::Safa, PolicyKind::None), "safa");
+        assert_eq!(active_id(Mitigation::Helios, PolicyKind::None), "helios");
+    }
+}

@@ -1,0 +1,366 @@
+//! The policy zoo: straggler-mitigation alternatives from related work,
+//! hosted behind the same [`MitigationPolicy`] seam as FLuID.
+//!
+//! All three reuse FLuID's paper-mode detection (one-shot latency menu
+//! snap through [`recalibrate_detection`]) to decide *who* the
+//! stragglers are, but answer *what to do about them* differently:
+//!
+//! * [`FedProxPolicy`] — elastic aggregation: every client trains the
+//!   full model, and the aggregated proposal is blended toward the old
+//!   global parameters (`new = α·proposal + (1-α)·old`) to damp the
+//!   noise stragglers inject. α is `mitigation_trade_off`; α = 1.0 is
+//!   bit-identical to plain FedAvg.
+//! * [`SafaPolicy`] — lag-tolerant semi-async: stragglers miss the
+//!   round cut, but their stale updates are admitted as long as the
+//!   model-version lag is within `safa_lag` rounds, down-weighted by
+//!   `1/(1+staleness)` on top of the scheduler's maturity discount.
+//! * [`HeliosPolicy`] — soft-training: stragglers keep the full model
+//!   but run a reduced fraction of local steps, smoothed per client
+//!   (`frac ← (frac + desired)/2`) so the training budget converges to
+//!   the detected speedup rather than jumping.
+
+use super::{
+    recalibrate_detection, Assignments, MitigationPolicy, MitigationState, PlanCtx, UpdateCtx,
+};
+use crate::coordinator::ExperimentConfig;
+use crate::engine::plan::RateTable;
+use crate::snapshot::{PolicyState, ZooState};
+use crate::straggler::{Detection, RateController};
+
+/// FedProx-style elastic aggregation. No per-client state beyond the
+/// shared detection; the whole method lives in [`elastic_lambda`].
+///
+/// [`elastic_lambda`]: MitigationPolicy::elastic_lambda
+pub struct FedProxPolicy<'c> {
+    cfg: &'c ExperimentConfig,
+    controller: RateController,
+    detection: Option<Detection>,
+}
+
+impl<'c> FedProxPolicy<'c> {
+    pub fn new(cfg: &'c ExperimentConfig, n: usize) -> Self {
+        Self {
+            cfg,
+            controller: RateController::new(n, cfg.adapt_config()),
+            detection: None,
+        }
+    }
+}
+
+impl MitigationPolicy for FedProxPolicy<'_> {
+    fn id(&self) -> &'static str {
+        super::Mitigation::FedProx.name()
+    }
+
+    fn plan(&mut self, ctx: PlanCtx<'_>) -> Assignments {
+        recalibrate_detection(&mut self.controller, &mut self.detection, self.cfg, &ctx);
+        Assignments {
+            straggler_ids: self
+                .detection
+                .as_ref()
+                .map(|d| d.stragglers.clone())
+                .unwrap_or_default(),
+            t_target: self.detection.as_ref().map(|d| d.t_target),
+            ..Assignments::default()
+        }
+    }
+
+    fn observe(&mut self, client: usize, latency: f64, full_latency: f64, applied_rate: f64) {
+        self.controller.observe(client, latency, full_latency, applied_rate);
+    }
+
+    fn elastic_lambda(&self) -> f64 {
+        self.cfg.mitigation_trade_off
+    }
+
+    fn snapshot_state(&self) -> MitigationState {
+        MitigationState {
+            policy: PolicyState::Stateless,
+            detection: self.detection.clone(),
+            ctrl: self.controller.export_state(),
+            zoo: None,
+        }
+    }
+
+    fn restore_state(&mut self, state: MitigationState) -> crate::Result<()> {
+        anyhow::ensure!(
+            matches!(state.policy, PolicyState::Stateless),
+            "snapshot policy state does not match the configured mitigation fedprox"
+        );
+        anyhow::ensure!(
+            state.zoo.is_none(),
+            "snapshot zoo state does not match the configured mitigation fedprox"
+        );
+        self.detection = state.detection;
+        if let Some(ctrl) = state.ctrl {
+            self.controller.import_state(ctrl);
+        }
+        Ok(())
+    }
+}
+
+/// SAFA-style lag-tolerant semi-async admission over `Buffered` sync.
+/// Tracks the last global round each client contributed to; a stale
+/// update is admitted only while its version lag is within
+/// `cfg.safa_lag`.
+pub struct SafaPolicy<'c> {
+    cfg: &'c ExperimentConfig,
+    controller: RateController,
+    detection: Option<Detection>,
+    /// last round whose aggregate included this client's update
+    version: Vec<usize>,
+}
+
+impl<'c> SafaPolicy<'c> {
+    pub fn new(cfg: &'c ExperimentConfig, n: usize) -> Self {
+        Self {
+            cfg,
+            controller: RateController::new(n, cfg.adapt_config()),
+            detection: None,
+            version: vec![0; n],
+        }
+    }
+}
+
+impl MitigationPolicy for SafaPolicy<'_> {
+    fn id(&self) -> &'static str {
+        super::Mitigation::Safa.name()
+    }
+
+    fn plan(&mut self, ctx: PlanCtx<'_>) -> Assignments {
+        recalibrate_detection(&mut self.controller, &mut self.detection, self.cfg, &ctx);
+        Assignments {
+            straggler_ids: self
+                .detection
+                .as_ref()
+                .map(|d| d.stragglers.clone())
+                .unwrap_or_default(),
+            t_target: self.detection.as_ref().map(|d| d.t_target),
+            ..Assignments::default()
+        }
+    }
+
+    fn observe(&mut self, client: usize, latency: f64, full_latency: f64, applied_rate: f64) {
+        self.controller.observe(client, latency, full_latency, applied_rate);
+    }
+
+    fn weigh(&self, ctx: &UpdateCtx) -> f64 {
+        if ctx.staleness == 0 {
+            1.0
+        } else {
+            1.0 / (1.0 + ctx.staleness as f64)
+        }
+    }
+
+    fn admit_stale(&self, _client: usize, staleness: usize) -> bool {
+        staleness <= self.cfg.safa_lag
+    }
+
+    fn record_contribution(&mut self, client: usize, round: usize) {
+        self.version[client] = round;
+    }
+
+    fn snapshot_state(&self) -> MitigationState {
+        MitigationState {
+            policy: PolicyState::Stateless,
+            detection: self.detection.clone(),
+            ctrl: self.controller.export_state(),
+            zoo: Some(ZooState::Safa { version: self.version.clone() }),
+        }
+    }
+
+    fn restore_state(&mut self, state: MitigationState) -> crate::Result<()> {
+        anyhow::ensure!(
+            matches!(state.policy, PolicyState::Stateless),
+            "snapshot policy state does not match the configured mitigation safa"
+        );
+        match state.zoo {
+            Some(ZooState::Safa { version }) => {
+                anyhow::ensure!(
+                    version.len() == self.version.len(),
+                    "snapshot safa version table has {} clients, engine has {}",
+                    version.len(),
+                    self.version.len()
+                );
+                self.version = version;
+            }
+            // old-writer snapshot without a zoo section: start the
+            // version ledger fresh (admission only loosens for one lap)
+            None => {}
+            Some(other) => anyhow::bail!(
+                "snapshot zoo state {:?} does not match the configured mitigation safa",
+                other.tag_name()
+            ),
+        }
+        self.detection = state.detection;
+        if let Some(ctrl) = state.ctrl {
+            self.controller.import_state(ctrl);
+        }
+        Ok(())
+    }
+}
+
+/// Helios-style soft-training: stragglers run `frac · local_steps`
+/// local steps on the full model instead of a sub-model. The per-client
+/// fraction is smoothed toward the detected speedup requirement.
+pub struct HeliosPolicy<'c> {
+    cfg: &'c ExperimentConfig,
+    controller: RateController,
+    detection: Option<Detection>,
+    /// per-client soft-training fraction, 1.0 = full local epoch
+    frac: Vec<f64>,
+}
+
+impl<'c> HeliosPolicy<'c> {
+    pub fn new(cfg: &'c ExperimentConfig, n: usize) -> Self {
+        Self {
+            cfg,
+            controller: RateController::new(n, cfg.adapt_config()),
+            detection: None,
+            frac: vec![1.0; n],
+        }
+    }
+}
+
+impl MitigationPolicy for HeliosPolicy<'_> {
+    fn id(&self) -> &'static str {
+        super::Mitigation::Helios.name()
+    }
+
+    fn plan(&mut self, ctx: PlanCtx<'_>) -> Assignments {
+        recalibrate_detection(&mut self.controller, &mut self.detection, self.cfg, &ctx);
+        let mut rates = RateTable::new();
+        let mut train_frac: Vec<(usize, f64)> = Vec::new();
+        let mut straggler_ids: Vec<usize> = Vec::new();
+        if let Some(det) = &self.detection {
+            for (k, &c) in det.stragglers.iter().enumerate() {
+                let desired = self.cfg.fixed_rate.unwrap_or(det.rates[k]);
+                // smooth toward the requirement so one noisy calibration
+                // round can't halve a client's training budget outright
+                let smoothed = 0.5 * (self.frac[c] + desired);
+                self.frac[c] = smoothed;
+                // compute time scales with the step budget; comm stays at
+                // the full model (no mask override, comm_fraction 1.0)
+                rates.set(c, smoothed);
+                train_frac.push((c, smoothed));
+                straggler_ids.push(c);
+            }
+        }
+        Assignments {
+            straggler_ids,
+            rates,
+            masks: None,
+            train_frac,
+            t_target: self.detection.as_ref().map(|d| d.t_target),
+            exclude_stragglers: false,
+        }
+    }
+
+    fn observe(&mut self, client: usize, latency: f64, full_latency: f64, applied_rate: f64) {
+        self.controller.observe(client, latency, full_latency, applied_rate);
+    }
+
+    fn snapshot_state(&self) -> MitigationState {
+        MitigationState {
+            policy: PolicyState::Stateless,
+            detection: self.detection.clone(),
+            ctrl: self.controller.export_state(),
+            zoo: Some(ZooState::Helios { frac: self.frac.clone() }),
+        }
+    }
+
+    fn restore_state(&mut self, state: MitigationState) -> crate::Result<()> {
+        anyhow::ensure!(
+            matches!(state.policy, PolicyState::Stateless),
+            "snapshot policy state does not match the configured mitigation helios"
+        );
+        match state.zoo {
+            Some(ZooState::Helios { frac }) => {
+                anyhow::ensure!(
+                    frac.len() == self.frac.len(),
+                    "snapshot helios fraction table has {} clients, engine has {}",
+                    frac.len(),
+                    self.frac.len()
+                );
+                self.frac = frac;
+            }
+            None => {}
+            Some(other) => anyhow::bail!(
+                "snapshot zoo state {:?} does not match the configured mitigation helios",
+                other.tag_name()
+            ),
+        }
+        self.detection = state.detection;
+        if let Some(ctrl) = state.ctrl {
+            self.controller.import_state(ctrl);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::PolicyKind;
+    use crate::policy::Mitigation;
+
+    fn zoo_cfg(mit: Mitigation) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::mobile("femnist_cnn", PolicyKind::None);
+        cfg.mitigation = mit;
+        cfg
+    }
+
+    #[test]
+    fn safa_admits_within_lag_and_rejects_beyond() {
+        let mut cfg = zoo_cfg(Mitigation::Safa);
+        cfg.safa_lag = 2;
+        let p = SafaPolicy::new(&cfg, 8);
+        assert!(p.admit_stale(3, 1));
+        assert!(p.admit_stale(3, 2));
+        assert!(!p.admit_stale(3, 3));
+    }
+
+    #[test]
+    fn safa_weighs_stale_updates_down() {
+        let cfg = zoo_cfg(Mitigation::Safa);
+        let p = SafaPolicy::new(&cfg, 8);
+        let fresh = UpdateCtx { client: 0, staleness: 0, is_straggler: false };
+        let stale = UpdateCtx { client: 0, staleness: 3, is_straggler: true };
+        assert_eq!(p.weigh(&fresh), 1.0);
+        assert!((p.weigh(&stale) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fedprox_lambda_tracks_trade_off_knob() {
+        let mut cfg = zoo_cfg(Mitigation::FedProx);
+        cfg.mitigation_trade_off = 0.25;
+        let p = FedProxPolicy::new(&cfg, 8);
+        assert!((p.elastic_lambda() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn helios_smooths_fractions_and_round_trips_state() {
+        let cfg = zoo_cfg(Mitigation::Helios);
+        let mut p = HeliosPolicy::new(&cfg, 4);
+        p.frac = vec![1.0, 0.5, 1.0, 0.25];
+        let snap = p.snapshot_state();
+        let mut q = HeliosPolicy::new(&cfg, 4);
+        q.restore_state(snap).unwrap();
+        assert_eq!(q.frac, vec![1.0, 0.5, 1.0, 0.25]);
+    }
+
+    #[test]
+    fn zoo_restore_rejects_mismatched_variant() {
+        let cfg = zoo_cfg(Mitigation::Safa);
+        let mut p = SafaPolicy::new(&cfg, 4);
+        let err = p
+            .restore_state(MitigationState {
+                policy: PolicyState::Stateless,
+                detection: None,
+                ctrl: None,
+                zoo: Some(ZooState::Helios { frac: vec![1.0; 4] }),
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("safa"), "{err:#}");
+    }
+}

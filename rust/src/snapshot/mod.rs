@@ -75,6 +75,11 @@ mod section {
     /// absent means no client is quarantined (every zero-chaos run and
     /// every pre-chaos snapshot), so readers rebuild an empty ledger
     pub const QUAR: u32 = 10;
+    /// zoo mitigation-policy state (added with `policy/zoo.rs`);
+    /// optional — absent means the mitigation carries no zoo state
+    /// (every fluid run and every pre-zoo snapshot), so readers start
+    /// the per-policy ledger fresh
+    pub const ZOO: u32 = 11;
 }
 
 /// Evolving dropout-policy state. `Stateless` covers the policies whose
@@ -94,6 +99,28 @@ pub enum PolicyState {
     },
 }
 
+/// Evolving state of a zoo mitigation policy (`--policy safa|helios`).
+/// FedProx is stateless beyond the shared detection/controller state and
+/// fluid runs carry their dropout state in [`PolicyState`], so neither
+/// writes a ZOO section.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ZooState {
+    /// SAFA: last global round whose aggregate included each client.
+    Safa { version: Vec<usize> },
+    /// Helios: per-client soft-training fraction (1.0 = full epoch).
+    Helios { frac: Vec<f64> },
+}
+
+impl ZooState {
+    /// Stable name of the variant, for mismatch diagnostics.
+    pub fn tag_name(&self) -> &'static str {
+        match self {
+            ZooState::Safa { .. } => "safa",
+            ZooState::Helios { .. } => "helios",
+        }
+    }
+}
+
 /// One buffered semi-async update awaiting a future aggregation
 /// (`SyncMode::Buffered` late arrivals).
 #[derive(Clone, Debug)]
@@ -107,6 +134,9 @@ pub struct StaleEntry {
     pub mask: Vec<Tensor>,
     pub arrives_at: f64,
     pub born_round: usize,
+    /// the client that produced the update (staleness admission under
+    /// `--policy safa` is per-client)
+    pub client: usize,
 }
 
 /// The full resumable state of a run at a round boundary.
@@ -129,6 +159,9 @@ pub struct Snapshot {
     /// adaptive rate-controller state (`--adapt ewma` runs; `None` for
     /// paper mode and for snapshots written before the controller)
     pub ctrl: Option<CtrlState>,
+    /// zoo mitigation-policy state (`--policy safa|helios`; `None` for
+    /// fluid/fedprox runs and for snapshots written before the zoo)
+    pub zoo: Option<ZooState>,
     pub last_latencies: Vec<f64>,
     pub last_full_latencies: Vec<f64>,
     pub free_at: Vec<f64>,
@@ -166,7 +199,7 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
          |static={}|sample={:016x}|eval={}|agg={:?}|fused={}|th={:?}|mobile={}\
          |sync={:?}|fleet={:?}|k={}|sampler={}|scenario={:?}|seed={}\
          |adapt={}|again={:016x}|adb={:016x}|rmin={:016x}|compress={}\
-         |chaos={:?}",
+         |chaos={:?}|mit={}|mtto={:016x}|slag={}",
         cfg.model,
         cfg.policy.name(),
         cfg.rounds,
@@ -199,6 +232,9 @@ pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
         cfg.rate_min.to_bits(),
         cfg.compress.name(),
         cfg.chaos,
+        cfg.mitigation.name(),
+        cfg.mitigation_trade_off.to_bits(),
+        cfg.safa_lag,
     )
 }
 
@@ -264,6 +300,9 @@ fn put_record(w: &mut Writer, rec: &RoundRecord) {
     w.put_usize(rec.quarantined);
     w.put_usize(rec.shard_retries);
     w.put_f64(rec.quorum_fraction);
+    w.put_f64(rec.straggler_wait);
+    w.put_usize(rec.admitted_stale);
+    w.put_f64(rec.soft_fraction);
 }
 
 fn take_record(r: &mut Reader) -> Result<RoundRecord> {
@@ -290,6 +329,9 @@ fn take_record(r: &mut Reader) -> Result<RoundRecord> {
         quarantined: r.take_usize()?,
         shard_retries: r.take_usize()?,
         quorum_fraction: r.take_f64()?,
+        straggler_wait: r.take_f64()?,
+        admitted_stale: r.take_usize()?,
+        soft_fraction: r.take_f64()?,
     })
 }
 
@@ -371,6 +413,7 @@ impl Snapshot {
             put_tensors(w, &s.mask);
             w.put_f64(s.arrives_at);
             w.put_usize(s.born_round);
+            w.put_usize(s.client);
         }
     }
 
@@ -405,6 +448,22 @@ impl Snapshot {
         }
     }
 
+    fn enc_zoo(&self, w: &mut Writer) {
+        match &self.zoo {
+            None => w.put_bool(false),
+            Some(ZooState::Safa { version }) => {
+                w.put_bool(true);
+                w.put_u8(1);
+                w.put_usizes(version);
+            }
+            Some(ZooState::Helios { frac }) => {
+                w.put_bool(true);
+                w.put_u8(2);
+                w.put_f64s(frac);
+            }
+        }
+    }
+
     fn enc_quar(&self, w: &mut Writer) {
         w.put_usize(self.quarantine.len());
         for e in &self.quarantine {
@@ -420,7 +479,7 @@ impl Snapshot {
     /// Shared by both encode paths so section order can never drift.
     fn write_sections(&self, w: &mut Writer) -> Vec<(u32, usize, usize)> {
         type Enc = fn(&Snapshot, &mut Writer);
-        let sections: [(u32, Enc); 10] = [
+        let sections: [(u32, Enc); 11] = [
             (section::META, Snapshot::enc_meta),
             (section::ENGINE, Snapshot::enc_engine),
             (section::MODEL, Snapshot::enc_model),
@@ -431,6 +490,7 @@ impl Snapshot {
             (section::CTRL, Snapshot::enc_ctrl),
             (section::RESID, Snapshot::enc_resid),
             (section::QUAR, Snapshot::enc_quar),
+            (section::ZOO, Snapshot::enc_zoo),
         ];
         let base = w.len();
         let mut table = Vec::with_capacity(sections.len());
@@ -629,6 +689,7 @@ impl Snapshot {
                     .with_context(|| format!("stale update {i} mask"))?,
                 arrives_at: r.take_f64()?,
                 born_round: r.take_usize()?,
+                client: r.take_usize()?,
             });
         }
 
@@ -680,6 +741,27 @@ impl Snapshot {
             Vec::new()
         };
 
+        // ZOO — optional: absent means no zoo mitigation state (fluid
+        // and fedprox runs, plus every pre-zoo snapshot)
+        let zoo = if table.iter().any(|(id, _, _)| *id == section::ZOO) {
+            let mut r = Reader::new(get(section::ZOO)?);
+            if r.take_bool().context("ZOO section")? {
+                match r.take_u8().context("ZOO tag")? {
+                    1 => Some(ZooState::Safa {
+                        version: r.take_usizes().context("ZOO safa versions")?,
+                    }),
+                    2 => Some(ZooState::Helios {
+                        frac: r.take_f64s().context("ZOO helios fractions")?,
+                    }),
+                    other => bail!("unknown zoo state tag {other}"),
+                }
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+
         // QUAR — optional: absent means an empty quarantine ledger
         // (zero-chaos runs and every pre-chaos snapshot)
         let quarantine = if table.iter().any(|(id, _, _)| *id == section::QUAR) {
@@ -713,6 +795,7 @@ impl Snapshot {
             availability,
             detection,
             ctrl,
+            zoo,
             last_latencies,
             last_full_latencies,
             free_at,
@@ -922,6 +1005,7 @@ mod tests {
                 rates: vec![1.0, 1.0, 0.625],
                 t_target: 1.5,
             }),
+            zoo: Some(ZooState::Safa { version: vec![0, 5, 0, 6, 2] }),
             last_latencies: vec![1.0, 2.0, 3.0],
             last_full_latencies: vec![1.5, 2.5, 3.5],
             free_at: vec![0.0, 10.0, 0.0],
@@ -934,6 +1018,7 @@ mod tests {
                 mask: vec![Tensor::from_vec(&[2], vec![1.0, 0.0])],
                 arrives_at: 42.0,
                 born_round: 5,
+                client: 4,
             }],
             resid: vec![
                 (3, vec![vec![0.25, -0.5, 0.0, 1.0, -0.0, 2.5], vec![0.125, -0.125]]),
@@ -966,6 +1051,9 @@ mod tests {
                 quarantined: 1,
                 shard_retries: 1,
                 quorum_fraction: 0.625,
+                straggler_wait: 0.5,
+                admitted_stale: 1,
+                soft_fraction: 1.0,
             }],
         }
     }
@@ -993,6 +1081,7 @@ mod tests {
                 (section::CTRL, mk(Snapshot::enc_ctrl)),
                 (section::RESID, mk(Snapshot::enc_resid)),
                 (section::QUAR, mk(Snapshot::enc_quar)),
+                (section::ZOO, mk(Snapshot::enc_zoo)),
             ])
         };
         assert_eq!(snap.encode(), reference);
@@ -1071,6 +1160,7 @@ mod tests {
             (section::CTRL, enc(&snap, Snapshot::enc_ctrl)),
             (section::RESID, enc(&snap, Snapshot::enc_resid)),
             (section::QUAR, enc(&snap, Snapshot::enc_quar)),
+            (section::ZOO, enc(&snap, Snapshot::enc_zoo)),
         ]);
         let back = Snapshot::decode(&out).unwrap();
         assert_eq!(back.next_round, snap.next_round);
@@ -1100,13 +1190,30 @@ mod tests {
         // and so is QUAR: absent means an empty quarantine ledger, so
         // pre-chaos snapshots stay resumable
         assert!(back.quarantine.is_empty());
+        // ZOO too: absent means no zoo mitigation state, so pre-zoo
+        // snapshots stay resumable
+        assert!(back.zoo.is_none());
         assert_eq!(back.next_round, snap.next_round);
         assert_eq!(back.detection, snap.detection);
         // and a present-but-empty CTRL section is the same as none
         let mut empty = snap.clone();
         empty.ctrl = None;
+        empty.zoo = None;
         let back = Snapshot::decode(&empty.encode()).unwrap();
         assert!(back.ctrl.is_none());
+        assert!(back.zoo.is_none());
+    }
+
+    #[test]
+    fn zoo_state_round_trips_both_variants() {
+        let mut snap = sample_snapshot();
+        snap.zoo = Some(ZooState::Helios { frac: vec![1.0, 0.5, 0.8125] });
+        let back = Snapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back.zoo, snap.zoo);
+        snap.zoo = Some(ZooState::Safa { version: vec![9, 0, 3] });
+        let back = Snapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back.zoo, snap.zoo);
+        assert_eq!(back.stale[0].client, 4);
     }
 
     #[test]
@@ -1197,5 +1304,16 @@ mod tests {
         let mut g = a.clone();
         g.chaos = crate::engine::ChaosConfig::parse("storm").unwrap();
         assert_ne!(config_fingerprint(&a), config_fingerprint(&g));
+        // so do the mitigation-policy knobs: a safa run can never
+        // silently resume as a fluid run, nor under a different lag
+        let mut h = a.clone();
+        h.mitigation = crate::policy::Mitigation::Safa;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&h));
+        let mut i = a.clone();
+        i.mitigation_trade_off = 0.5;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&i));
+        let mut j = a.clone();
+        j.safa_lag = 5;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&j));
     }
 }

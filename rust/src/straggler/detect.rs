@@ -23,6 +23,11 @@ pub struct Detection {
 /// uses pre-defined sub-model sizes").
 pub const DEFAULT_RATES: &[f64] = &[0.5, 0.65, 0.75, 0.85, 0.95, 1.0];
 
+/// The engine's detection margin: a client is only flagged when it runs
+/// at least this much slower than `T_target` (shared by every
+/// mitigation policy so detection stays comparable across the zoo).
+pub const DETECT_MARGIN: f64 = 0.02;
+
 /// Snap a desired keep-rate to the closest available sub-model size.
 pub fn snap_rate(desired: f64, available: &[f64]) -> f64 {
     let mut best = 1.0;

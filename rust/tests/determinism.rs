@@ -70,6 +70,12 @@ fn assert_bit_identical(a: &ExperimentResult, b: &ExperimentResult, ctx: &str) {
         assert_eq!(x.aggregated, y.aggregated, "{rctx}: aggregated");
         assert_eq!(x.dropped_updates, y.dropped_updates, "{rctx}: dropped");
         assert_eq!(x.stale_folded, y.stale_folded, "{rctx}: stale");
+        assert!(
+            eq_f64(x.straggler_wait, y.straggler_wait),
+            "{rctx}: straggler_wait"
+        );
+        assert_eq!(x.admitted_stale, y.admitted_stale, "{rctx}: admitted_stale");
+        assert!(eq_f64(x.soft_fraction, y.soft_fraction), "{rctx}: soft_fraction");
     }
     assert!(eq_f64(a.final_test_acc, b.final_test_acc), "{ctx}");
     assert!(eq_f64(a.final_test_loss, b.final_test_loss), "{ctx}");
@@ -668,6 +674,165 @@ fn checkpoint_rotation_keeps_last_n() {
         "6-round run with keep=2"
     );
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- policy zoo (ISSUE 10) --------------------------------------------------
+
+/// A 2k-client storm fleet running one of the zoo mitigations. SAFA gets
+/// the Buffered sync mode its admission logic rides on (k = 48 of a
+/// 64-cohort forces ~16 buffered stragglers per round); FedProx gets a
+/// non-trivial λ so the elastic blend actually executes.
+fn zoo_cfg(mit: fluid::policy::Mitigation, seed: u64) -> ExperimentConfig {
+    use fluid::policy::Mitigation;
+    let mut cfg = ExperimentConfig::fleet("femnist_cnn", PolicyKind::None, 2000, 64);
+    cfg.rounds = 6;
+    cfg.samples_per_client = 4;
+    cfg.local_steps = 2;
+    cfg.eval_every = 3;
+    cfg.scenario = ScenarioConfig::parse("storm").unwrap();
+    cfg.seed = seed;
+    cfg.mitigation = mit;
+    match mit {
+        Mitigation::FedProx => cfg.mitigation_trade_off = 0.5,
+        Mitigation::Safa => cfg.sync_mode = fluid::engine::SyncMode::Buffered { k: 48 },
+        _ => {}
+    }
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Full-observation drift fleet for the zoo behavior assertions: every
+/// client participates every round, so detected stragglers are always in
+/// the cohort and the mitigation visibly acts each round.
+fn zoo_dense_cfg(mit: fluid::policy::Mitigation, seed: u64) -> ExperimentConfig {
+    let mut cfg = zoo_cfg(mit, seed);
+    cfg.fleet_size = Some(200);
+    cfg.sample_k = 200;
+    cfg.straggler_fraction = 0.25;
+    cfg.scenario = ScenarioConfig::parse("drift").unwrap();
+    if let fluid::engine::SyncMode::Buffered { .. } = cfg.sync_mode {
+        cfg.sync_mode = fluid::engine::SyncMode::Buffered { k: 160 };
+    }
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Every zoo mitigation is part of the thread- and shard-invariance
+/// contract: the storm-fleet history is bit-identical at any executor
+/// thread count and any aggregator shard count.
+#[test]
+fn zoo_policies_are_thread_and_shard_invariant() {
+    use fluid::policy::Mitigation;
+    for mit in [Mitigation::FedProx, Mitigation::Safa, Mitigation::Helios] {
+        let base = {
+            let mut cfg = zoo_cfg(mit, 19);
+            cfg.threads = 1;
+            coordinator::run_sim(&cfg).unwrap()
+        };
+        let threaded = {
+            let mut cfg = zoo_cfg(mit, 19);
+            cfg.threads = 8;
+            coordinator::run_sim(&cfg).unwrap()
+        };
+        assert_bit_identical(&base, &threaded, &format!("{} threads=8", mit.name()));
+        let sharded = {
+            let mut cfg = zoo_cfg(mit, 19);
+            cfg.shards = 3;
+            coordinator::run_sim(&cfg).unwrap()
+        };
+        assert_bit_identical(&base, &sharded, &format!("{} shards=3", mit.name()));
+    }
+}
+
+/// Kill/resume for the zoo: the ZOO snapshot section round-trips each
+/// mitigation's per-client state (SAFA versions, Helios fractions), so a
+/// resumed run matches the uninterrupted control bit for bit — and a
+/// pre-zoo snapshot (no ZOO section) still resumes cleanly with fresh
+/// zoo state.
+#[test]
+fn zoo_resume_is_bit_identical_and_pre_zoo_snapshots_still_resume() {
+    use fluid::policy::Mitigation;
+    for mit in [Mitigation::FedProx, Mitigation::Safa, Mitigation::Helios] {
+        let dir = ckpt_dir(&format!("zoo-{}", mit.name()));
+        let mut cfg = zoo_cfg(mit, 91);
+        cfg.checkpoint_every = 2;
+        cfg.checkpoint_keep = cfg.rounds;
+        cfg.checkpoint_dir = Some(dir.clone());
+        let control = coordinator::run_sim(&cfg).unwrap();
+        assert_eq!(control.records.len(), cfg.rounds);
+
+        let mut rcfg = cfg.clone();
+        rcfg.checkpoint_every = 0;
+        rcfg.checkpoint_dir = None;
+        for k in [2usize, 4] {
+            let mut r = rcfg.clone();
+            r.resume_from = Some(snap_path(&dir, k));
+            let resumed = coordinator::run_sim(&r).unwrap();
+            assert_bit_identical(&control, &resumed, &format!("{} resume@{k}", mit.name()));
+        }
+
+        // simulate an old-writer snapshot: strip the ZOO payload and
+        // re-encode — SAFA restarts its version ledger, Helios its
+        // fraction table, and the run still completes every round
+        let mut snap = fluid::snapshot::SnapshotStore::load_file(&snap_path(&dir, 4)).unwrap();
+        if mit != Mitigation::FedProx {
+            assert!(snap.zoo.is_some(), "{} snapshot must carry zoo state", mit.name());
+        }
+        snap.zoo = None;
+        let old = dir.join("pre-zoo.fluidsnap");
+        std::fs::write(&old, snap.encode()).unwrap();
+        let mut ocfg = rcfg.clone();
+        ocfg.resume_from = Some(old);
+        let resumed_old = coordinator::run_sim(&ocfg).unwrap();
+        assert_eq!(resumed_old.records.len(), cfg.rounds, "{}", mit.name());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The FedProx identity pin: λ = 1 turns the elastic blend into plain
+/// FedAvg, so a fedprox run at λ = 1 must be bit-identical to the `none`
+/// baseline under the fluid mitigation — the seam's zero-cost contract.
+#[test]
+fn fedprox_at_lambda_one_matches_the_none_baseline() {
+    use fluid::policy::Mitigation;
+    let mut prox = zoo_cfg(Mitigation::FedProx, 71);
+    prox.mitigation_trade_off = 1.0;
+    let baseline = {
+        let cfg = zoo_cfg(Mitigation::Fluid, 71);
+        coordinator::run_sim(&cfg).unwrap()
+    };
+    let elastic = coordinator::run_sim(&prox).unwrap();
+    assert_bit_identical(&baseline, &elastic, "fedprox λ=1 vs none");
+}
+
+/// The zoo behaviors are observable in the per-round metrics: Helios
+/// reduces the mean soft-training fraction below 1.0 once stragglers are
+/// detected, and SAFA's lag-tolerant admission folds stale updates back
+/// into later aggregations.
+#[test]
+fn helios_softens_training_and_safa_folds_stale_updates() {
+    use fluid::policy::Mitigation;
+    let helios = coordinator::run_sim(&zoo_dense_cfg(Mitigation::Helios, 13)).unwrap();
+    for r in &helios.records {
+        assert!(
+            r.soft_fraction > 0.0 && r.soft_fraction <= 1.0,
+            "round {}: soft_fraction {}",
+            r.round,
+            r.soft_fraction
+        );
+    }
+    assert!(
+        helios.records.iter().any(|r| r.soft_fraction < 1.0),
+        "helios never scheduled a reduced local epoch"
+    );
+
+    let safa = coordinator::run_sim(&zoo_dense_cfg(Mitigation::Safa, 13)).unwrap();
+    let admitted: usize = safa.records.iter().map(|r| r.admitted_stale).sum();
+    assert!(admitted > 0, "buffered drift run never admitted a stale update");
+    // fluid's full barrier on the same fleet admits none
+    let fluid_run = coordinator::run_sim(&zoo_dense_cfg(Mitigation::Fluid, 13)).unwrap();
+    let admitted_fluid: usize = fluid_run.records.iter().map(|r| r.admitted_stale).sum();
+    assert_eq!(admitted_fluid, 0);
 }
 
 /// Shard source wrapper that counts hydrations and tracks the largest

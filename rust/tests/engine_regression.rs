@@ -196,6 +196,7 @@ fn reference_run(sess: &Session, cfg: &ExperimentConfig) -> fluid::Result<Experi
             .map(|&c| last_latencies[c])
             .fold(0.0f64, f64::max);
         let t_target = detection.as_ref().map(|d| d.t_target).unwrap_or(round_time);
+        let straggler_wait = (straggler_time - t_target).max(0.0);
 
         let mean_loss = stats::mean(
             &updates.iter().map(|(_, u)| u.mean_loss).collect::<Vec<_>>(),
@@ -274,6 +275,10 @@ fn reference_run(sess: &Session, cfg: &ExperimentConfig) -> fluid::Result<Experi
             quarantined: 0,
             shard_retries: 0,
             quorum_fraction: 1.0,
+            straggler_wait,
+            admitted_stale: 0,
+            // no soft-training in the fluid family: full local epochs
+            soft_fraction: 1.0,
         });
     }
 
@@ -287,6 +292,7 @@ fn reference_run(sess: &Session, cfg: &ExperimentConfig) -> fluid::Result<Experi
     Ok(ExperimentResult {
         model: cfg.model.clone(),
         policy: cfg.policy,
+        mitigation: cfg.mitigation,
         records,
         final_test_acc: last_eval.1,
         final_test_loss: last_eval.0,
@@ -345,6 +351,14 @@ fn assert_history_identical(reference: &ExperimentResult, engine: &ExperimentRes
         assert_eq!(r.aggregated, e.aggregated, "{ctx}: aggregated");
         assert_eq!(r.dropped_updates, e.dropped_updates, "{ctx}");
         assert_eq!(r.stale_folded, e.stale_folded, "{ctx}");
+        assert!(
+            eq_f64(r.straggler_wait, e.straggler_wait),
+            "{ctx}: straggler_wait {} vs {}",
+            r.straggler_wait,
+            e.straggler_wait
+        );
+        assert_eq!(r.admitted_stale, e.admitted_stale, "{ctx}");
+        assert!(eq_f64(r.soft_fraction, e.soft_fraction), "{ctx}: soft_fraction");
     }
     assert!(eq_f64(reference.final_test_acc, engine.final_test_acc));
     assert!(eq_f64(reference.final_test_loss, engine.final_test_loss));
@@ -378,6 +392,8 @@ fn full_barrier_is_bit_identical_to_the_pre_engine_loop() {
     let configs = [
         quick_cfg(PolicyKind::Invariant),
         quick_cfg(PolicyKind::Exclude),
+        quick_cfg(PolicyKind::Random),
+        quick_cfg(PolicyKind::None),
         sampled,
     ];
     for mut cfg in configs {

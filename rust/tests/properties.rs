@@ -1044,6 +1044,9 @@ fn prop_snapshot_codec_round_trips() {
             quarantined: g.usize_in(0, 8),
             shard_retries: g.usize_in(0, 4),
             quorum_fraction: g.rng.next_f64(),
+            straggler_wait: g.rng.next_f64() * 10.0,
+            admitted_stale: g.usize_in(0, 8),
+            soft_fraction: g.rng.next_f64(),
         }
     }
 
@@ -1097,6 +1100,7 @@ fn prop_snapshot_codec_round_trips() {
             };
             let stale: Vec<StaleEntry> = (0..g.usize_in(0, 2))
                 .map(|_| StaleEntry {
+                    client: g.usize_in(0, n - 1),
                     params: (0..g.usize_in(1, 3)).map(|_| random_tensor(g)).collect(),
                     weight: g.rng.next_f64() * 60.0,
                     mean_loss: g.rng.next_f64(),
@@ -1145,6 +1149,17 @@ fn prop_snapshot_codec_round_trips() {
                         last_strike: g.usize_in(0, 100),
                     })
                     .collect(),
+                // the optional ZOO section: absent, per-client versions
+                // (safa), and per-client fractions (helios) all round-trip
+                zoo: match g.usize_in(0, 2) {
+                    0 => None,
+                    1 => Some(fluid::snapshot::ZooState::Safa {
+                        version: (0..n).map(|_| g.usize_in(0, 200)).collect(),
+                    }),
+                    _ => Some(fluid::snapshot::ZooState::Helios {
+                        frac: (0..n).map(|_| g.rng.next_f64()).collect(),
+                    }),
+                },
                 records: (0..rounds).map(|r| random_record(g, r)).collect(),
             }
         },
